@@ -1,0 +1,46 @@
+//! Quickstart: load an AOT autoencoder artifact, verify it against its
+//! golden vector, and score a handful of synthetic strain windows.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use gwlstm::config::Manifest;
+use gwlstm::gw::dataset::{StrainStream, DEFAULT_SNR};
+use gwlstm::runtime::Engine;
+
+fn main() -> gwlstm::Result<()> {
+    // 1. Artifacts are produced once by `make artifacts` (python AOT path);
+    //    from here on everything is rust + PJRT.
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Engine::cpu()?;
+    println!("PJRT platform : {}", engine.platform());
+
+    // 2. Compile the small autoencoder (Table II's Z-design model).
+    let exe = engine.load_variant(&manifest, "small_ts8")?;
+    println!(
+        "model         : {} (TS={}, compiled in {:.0} ms)",
+        exe.spec.name, exe.spec.ts, exe.compile_ms
+    );
+
+    // 3. Numeric check against the jnp oracle's golden vector.
+    let err = exe.verify_golden(&manifest)?;
+    println!("golden check  : max |err| = {err:.3e}");
+    assert!(err < 1e-3, "artifact numerics diverged from the oracle");
+
+    // 4. Score live synthetic strain windows (reconstruction MSE).
+    let mut stream = StrainStream::new(42, exe.spec.ts, DEFAULT_SNR, 0.5);
+    println!("\nscoring 8 windows from the synthetic detector stream:");
+    for _ in 0..8 {
+        let w = stream.next_window();
+        let t0 = std::time::Instant::now();
+        let score = exe.score(&w.samples)?;
+        println!(
+            "  label={} score={score:>8.5} ({:>6.0} us)",
+            w.label,
+            t0.elapsed().as_secs_f64() * 1e6
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,8 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX models + AOT lowering).
+
+Nothing in this package runs on the request path: ``make artifacts`` invokes
+``compile.aot`` once, which trains the autoencoders on synthetic LIGO-like
+data, quantizes, lowers every inference model to HLO text, and exports
+weights/test-set/metrics for the rust runtime. The rust binary is then
+self-contained.
+"""

@@ -1,0 +1,203 @@
+"""AOT build driver: train -> quantize -> lower to HLO text -> export.
+
+This is the ONLY python entry point on the build path (``make artifacts``).
+It produces everything the rust runtime needs, then python is out of the
+picture:
+
+  artifacts/
+    small_ts8.hlo.txt          small autoencoder  (Table II Z-designs shape)
+    nominal_ts8.hlo.txt        nominal autoencoder, TS=8 (Table II U-designs)
+    nominal_ts100.hlo.txt      nominal autoencoder, TS=100 (Fig. 9 accuracy)
+    nominal_ts100_q16.hlo.txt  16-bit-quantized weights variant
+    weights_small.json         trained weights (rust fixed-point model input)
+    weights_nominal.json
+    testset.bin / testset_meta.json   exported eval windows + labels
+    vectors_*.json             golden input/output pairs per artifact
+    metrics.json               Fig. 9 AUC/ROC per autoencoder type
+    manifest.json              index of all of the above (shapes, dtypes)
+
+HLO **text** is the interchange format (NOT ``.serialize()``): jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as gwdata
+from . import model as lstm_model
+from . import quant, train
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big weight literals as ``{...}``, which the consuming parser
+    silently reads back as zeros — the artifact would run but compute
+    garbage. (Caught by the rust golden-vector check, `gwlstm verify`.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_autoencoder(params, arch: str, ts: int) -> str:
+    """Lower the Pallas-backed forward with weights baked as constants."""
+    const = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(x):
+        return (lstm_model.forward(const, x, arch=arch, impl="pallas"),)
+
+    spec = jax.ShapeDtypeStruct((ts, 1), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def export_weights(params, arch: str, path: str) -> None:
+    """Weights as JSON for the rust fixed-point / f32 reference models."""
+    blob = {
+        "arch": arch,
+        "layers": [
+            {"name": name, "lx": lx, "lh": lh}
+            for name, lx, lh in lstm_model.layer_dims(arch)
+        ],
+        "tensors": {k: np.asarray(v).tolist() for k, v in params.items()},
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f)
+
+
+def export_testset(test_x: np.ndarray, test_y: np.ndarray, outdir: str) -> None:
+    """f32-LE window data + labels for the rust e2e AUC reproduction."""
+    flat = np.ascontiguousarray(test_x, dtype="<f4")
+    flat.tofile(os.path.join(outdir, "testset.bin"))
+    with open(os.path.join(outdir, "testset_meta.json"), "w") as f:
+        json.dump(
+            {
+                "n_events": int(test_x.shape[0]),
+                "ts": int(test_x.shape[1]),
+                "d_in": int(test_x.shape[2]),
+                "dtype": "f32le",
+                "labels": test_y.astype(int).tolist(),
+            },
+            f,
+        )
+
+
+def export_golden(params, arch: str, ts: int, window: np.ndarray, path: str) -> None:
+    """One golden (input, expected-output) pair — runtime numeric check."""
+    rec = lstm_model.forward(
+        {k: jnp.asarray(v) for k, v in params.items()},
+        jnp.asarray(window),
+        arch=arch,
+        impl="jnp",
+    )
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "arch": arch,
+                "ts": ts,
+                "input": window.astype(float).flatten().tolist(),
+                "expected": np.asarray(rec).astype(float).flatten().tolist(),
+            },
+            f,
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--events", type=int, default=800, help="total train events")
+    ap.add_argument("--test-events", type=int, default=400)
+    ap.add_argument("--steps", type=int, default=500, help="train steps per model")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--ts", type=int, default=100, help="nominal timesteps")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--quick", action="store_true", help="tiny run for CI smoke")
+    args = ap.parse_args()
+    if args.quick:
+        args.events, args.test_events, args.steps = 96, 64, 40
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    # ---- datasets -------------------------------------------------------
+    print(f"[data] generating {args.events} train + {args.test_events} test events (TS={args.ts})")
+    train_x_all, train_y = gwdata.make_dataset(args.seed, args.events, args.ts)
+    train_x = train_x_all[train_y == 0]  # unsupervised: background only
+    test_x, test_y = gwdata.make_dataset(args.seed + 1, args.test_events, args.ts)
+    small_train_all, small_y = gwdata.make_dataset(args.seed + 2, max(args.events // 2, 64), 8)
+    small_train = small_train_all[small_y == 0]
+
+    # ---- training (Fig. 9 zoo + small model) -----------------------------
+    zoo_params, metrics = train.train_zoo(
+        train_x, test_x, test_y, args.ts, args.steps, args.batch, args.seed
+    )
+    small_init = lambda k: lstm_model.init_params(k, "small")  # noqa: E731
+    small_fwd = lambda p, w: lstm_model.forward(p, w, arch="small", impl="jnp")  # noqa: E731
+    p_small, small_losses = train.train_model(
+        "small", small_init, small_fwd, small_train, max(args.steps // 2, 20), args.batch, args.seed
+    )
+
+    p_lstm = zoo_params["lstm"]
+    p_q16 = zoo_params["lstm_q16"]
+
+    # ---- AOT lowering ----------------------------------------------------
+    variants = [
+        ("small_ts8", p_small, "small", 8),
+        ("nominal_ts8", p_lstm, "nominal", 8),
+        (f"nominal_ts{args.ts}", p_lstm, "nominal", args.ts),
+        (f"nominal_ts{args.ts}_q16", p_q16, "nominal", args.ts),
+    ]
+    manifest = {"variants": [], "generated_unix": int(time.time())}
+    for name, params, arch, ts in variants:
+        print(f"[aot] lowering {name} (arch={arch}, TS={ts})")
+        hlo = lower_autoencoder(params, arch, ts)
+        hlo_path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        win = test_x[0] if ts == args.ts else small_train_all[0][:ts]
+        golden_path = os.path.join(args.out, f"vectors_{name}.json")
+        export_golden(params, arch, ts, np.asarray(win), golden_path)
+        manifest["variants"].append(
+            {
+                "name": name,
+                "arch": arch,
+                "ts": ts,
+                "d_in": 1,
+                "hlo": os.path.basename(hlo_path),
+                "golden": os.path.basename(golden_path),
+                "input_shape": [ts, 1],
+                "output_shape": [ts, 1],
+            }
+        )
+
+    # ---- exports ---------------------------------------------------------
+    export_weights(p_small, "small", os.path.join(args.out, "weights_small.json"))
+    export_weights(p_lstm, "nominal", os.path.join(args.out, "weights_nominal.json"))
+    export_testset(test_x, test_y, args.out)
+    metrics["small"] = {"auc": None, "final_loss": small_losses[-1], "roc": None}
+    metrics["_quant_max_abs_err"] = quant.max_abs_quant_error(p_lstm)
+    with open(os.path.join(args.out, "metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=1)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {args.out}")
+    for m in ("lstm", "lstm_q16", "gru", "cnn", "dnn"):
+        print(f"  AUC {m:8s} = {metrics[m]['auc']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

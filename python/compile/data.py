@@ -1,0 +1,209 @@
+"""Synthetic gravitational-wave data substrate (build-time python side).
+
+The paper trains on simulated LIGO strain built with GGWD + PyCBC (SEOBNRv4
+injections on PSD-shaped detector noise, whitened, band-passed, normalized).
+Neither library is available here, so this module implements the closest
+synthetic equivalent that exercises the same code path (DESIGN.md §2):
+
+  * ``aligo_psd``     — analytic fit to the aLIGO design sensitivity
+                        (Ajith-style broken power law: seismic wall + thermal
+                        + shot noise).
+  * ``colored_noise`` — Gaussian noise with that PSD, synthesized in the
+                        frequency domain.
+  * ``inspiral_chirp``— Newtonian-order compact-binary inspiral chirp
+                        h(t) ~ f(t)^{2/3} cos(phi(t)) with an exponential
+                        ringdown taper at coalescence (the SEOBNRv4 stand-in).
+  * ``whiten``        — frequency-domain whitening by the known ASD.
+  * ``bandpass``      — 30-400 Hz brick-wall band-pass (the rust substrate
+                        implements the IIR/biquad version).
+  * ``make_dataset``  — windows of TS samples, half noise-only, half with an
+                        injected chirp at a given SNR; z-score normalized.
+
+The rust crate has a from-scratch twin of this pipeline (``rust/src/gw``) for
+the live streaming path; ``tests/test_data.py`` and the rust integration test
+cross-check statistics between the two.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+FS = 2048.0  # raw sample rate [Hz]
+SEG_SECONDS = 1.0  # analysis segment length
+# Analysis band: the default event window decimates by 8 (effective fs =
+# 256 Hz), so the upper band edge sits at the decimated Nyquist to avoid
+# aliasing. Heavy-BBH inspiral+merger power lives below ~128 Hz anyway.
+F_LO, F_HI = 10.0, 128.0
+# Partial whitening exponent: real pipelines whiten with an *estimated* PSD,
+# leaving residual coloring; alpha=1 would be perfect whitening (information-
+# free white background the AE cannot learn), alpha=0 raw colored noise.
+WHITEN_ALPHA = 0.5
+# Residual spectral line (power-line/violin-mode stand-in, see DESIGN.md §2):
+# a narrowband carrier the autoencoder can learn to track; a chirp sweeping
+# through the band disrupts it. Frequency jitters per segment, phase random.
+LINE_FREQ_HZ = (12.6, 13.0)
+LINE_AMP = 3.0  # relative to the broadband floor's std
+DEFAULT_SNR = 22.0  # injection scale relative to the floor's std
+
+
+def aligo_psd(f: np.ndarray) -> np.ndarray:
+    """Analytic approximation of the aLIGO design-sensitivity PSD.
+
+    ``S_n(f) = S0 * ( x^-4.14 - 5 x^-2 + 111 (1 - x^2 + x^4/2)/(1 + x^2/2) )``
+    with ``x = f/215 Hz`` and ``S0 = 1e-49`` (Ajith & Bose 2009 fit). Clamped
+    below 20 Hz where the seismic wall diverges.
+    """
+    f = np.asarray(f, dtype=np.float64)
+    x = np.maximum(f, 20.0) / 215.0
+    s = x ** (-4.14) - 5.0 * x ** (-2.0) + 111.0 * (
+        1.0 - x**2 + 0.5 * x**4
+    ) / (1.0 + 0.5 * x**2)
+    return 1e-49 * np.maximum(s, 1e-6)
+
+
+def colored_noise(rng: np.random.Generator, n: int, fs: float = FS) -> np.ndarray:
+    """Gaussian noise with the aLIGO PSD, via frequency-domain synthesis.
+
+    Each rFFT bin gets an independent complex normal scaled by
+    ``sqrt(S_n(f_k) * fs * n / 4)`` so that the one-sided PSD of the output
+    matches ``S_n`` (DC and Nyquist real-valued).
+    """
+    freqs = np.fft.rfftfreq(n, d=1.0 / fs)
+    psd = aligo_psd(freqs)
+    scale = np.sqrt(psd * fs * n / 4.0)
+    re = rng.standard_normal(len(freqs))
+    im = rng.standard_normal(len(freqs))
+    spec = scale * (re + 1j * im)
+    spec[0] = 0.0
+    spec[-1] = spec[-1].real
+    return np.fft.irfft(spec, n=n)
+
+
+def inspiral_chirp(
+    n: int,
+    fs: float = FS,
+    mchirp_msun: float = 28.0,
+    t_coal_frac: float = 0.75,
+    f_start: float = 35.0,
+) -> np.ndarray:
+    """Newtonian-order inspiral chirp, peak amplitude 1, ringdown-tapered.
+
+    Frequency evolution ``f(t) = (256/5 * pi^{8/3} (G Mc/c^3)^{5/3})^{-3/8}
+    * (tc - t)^{-3/8} / pi`` truncated at the band edge; amplitude follows
+    ``f^{2/3}``. This is the standard quadrupole approximation — the same
+    time-frequency morphology SEOBNRv4 produces in band, which is what the
+    autoencoder sees after whitening.
+    """
+    g_msun = 4.925491025543576e-06  # G*Msun/c^3 [s]
+    mc = mchirp_msun * g_msun
+    tc = t_coal_frac * n / fs
+    t = np.arange(n) / fs
+    tau = np.maximum(tc - t, 1.0 / fs)
+    # Newtonian chirp: f(tau) = 1/pi * (5/(256 tau))^{3/8} * mc^{-5/8}
+    f_t = (5.0 / (256.0 * tau)) ** (3.0 / 8.0) * mc ** (-5.0 / 8.0) / np.pi
+    f_isco = 0.022 / mc / (2 * np.pi) * 2  # ~ 2*f_orb at ISCO, rough cutoff
+    f_t = np.minimum(f_t, max(f_isco, 2.0 * f_start))
+    phase = 2.0 * np.pi * np.cumsum(f_t) / fs
+    amp = (f_t / f_start) ** (2.0 / 3.0)
+    h = amp * np.cos(phase)
+    # kill the pre-band part and taper a short ringdown after coalescence
+    h[f_t < f_start] = 0.0
+    post = t > tc
+    if post.any():
+        f_ring = float(f_t.max())
+        damp = np.exp(-(t[post] - tc) * f_ring / 3.0)
+        h[post] = (
+            np.cos(2 * np.pi * f_ring * (t[post] - tc) + phase[~post][-1])
+            * damp
+            * amp[~post][-1]
+        )
+    peak = np.abs(h).max()
+    return h / peak if peak > 0 else h
+
+
+def whiten(x: np.ndarray, fs: float = FS, alpha: float = WHITEN_ALPHA) -> np.ndarray:
+    """Partially whiten by the analytic ASD raised to ``alpha``.
+
+    ``alpha < 1`` models whitening against an imperfectly-estimated PSD: the
+    residual spectrum is ``S_n^{1-alpha}``, keeping the low-frequency excess
+    that gives the detector background its learnable correlation structure.
+    """
+    n = len(x)
+    freqs = np.fft.rfftfreq(n, d=1.0 / fs)
+    asd = np.sqrt(aligo_psd(freqs)) ** alpha
+    spec = np.fft.rfft(x) / asd
+    return np.fft.irfft(spec, n=n)
+
+
+def bandpass(x: np.ndarray, fs: float = FS, f_lo: float = F_LO, f_hi: float = F_HI):
+    """Brick-wall band-pass in the frequency domain (python build side)."""
+    n = len(x)
+    freqs = np.fft.rfftfreq(n, d=1.0 / fs)
+    spec = np.fft.rfft(x)
+    spec[(freqs < f_lo) | (freqs > f_hi)] = 0.0
+    return np.fft.irfft(spec, n=n)
+
+
+def _normalize(w: np.ndarray) -> np.ndarray:
+    mu, sd = w.mean(), w.std()
+    return (w - mu) / (sd + 1e-12)
+
+
+def make_segment(
+    rng: np.random.Generator,
+    inject: bool,
+    snr: float = DEFAULT_SNR,
+    fs: float = FS,
+    seconds: float = SEG_SECONDS,
+) -> np.ndarray:
+    """One partially-whitened, line-enriched, band-passed, normalized segment.
+
+    Background = partially-whitened colored floor + a narrowband residual
+    line (random phase, jittered frequency). Injections add a chirp scaled to
+    ``snr`` relative to the floor's per-sample std (a matched-filter-ish
+    normalization: total chirp energy = snr * floor_std).
+    """
+    n = int(fs * seconds)
+    t = np.arange(n) / fs
+    floor = whiten(colored_noise(rng, n, fs), fs)
+    fstd = floor.std()
+    f0 = rng.uniform(*LINE_FREQ_HZ)
+    seg = floor + LINE_AMP * fstd * np.sin(2.0 * np.pi * f0 * t + rng.uniform(0, 2 * np.pi))
+    if inject:
+        mchirp = float(rng.uniform(15.0, 45.0))
+        h = inspiral_chirp(n, fs, mchirp_msun=mchirp) * 1e-21
+        wh_sig = whiten(h, fs)
+        sig_rms = np.sqrt((wh_sig**2).sum())
+        seg = seg + snr * fstd / (sig_rms + 1e-30) * wh_sig
+    return _normalize(bandpass(seg, fs))
+
+
+def make_dataset(
+    seed: int,
+    n_events: int,
+    ts: int,
+    snr: float = DEFAULT_SNR,
+    decim: int = 8,
+    fs: float = FS,
+):
+    """Build ``(windows, labels)``: shape (n_events, ts, 1) / (n_events,).
+
+    Half the events are noise-only (label 0), half contain a chirp (label 1).
+    Each event is a fresh 1 s segment; the window of ``ts`` samples (after
+    decimating by ``decim``) is centered on the coalescence region so the
+    chirp's loudest cycles fall inside — the GGWD-style "event window".
+    """
+    rng = np.random.default_rng(seed)
+    xs = np.empty((n_events, ts, 1), dtype=np.float32)
+    ys = np.empty((n_events,), dtype=np.int32)
+    n = int(fs * SEG_SECONDS)
+    center = int(0.72 * n)  # just before t_coal_frac=0.75
+    half = ts * decim // 2
+    lo = np.clip(center - half, 0, n - ts * decim)
+    for k in range(n_events):
+        label = k % 2
+        seg = make_segment(rng, inject=bool(label), snr=snr, fs=fs)
+        w = seg[lo : lo + ts * decim : decim]
+        xs[k, :, 0] = _normalize(w).astype(np.float32)
+        ys[k] = label
+    return xs, ys

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the paper's compute hot-spot + pure-jnp oracles.
+
+Modules:
+  * ``lstm_cell`` — tiled ``mvm_x`` batch kernel and the recurrent
+    ``lstm_step`` kernel (mvm_h + activations + tail), composed into
+    ``lstm_layer``.
+  * ``dense``     — TimeDistributed dense output kernel.
+  * ``ref``       — exact jnp twins of everything above (the test oracle).
+"""
+
+from . import dense, lstm_cell, ref  # noqa: F401

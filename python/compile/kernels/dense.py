@@ -1,0 +1,46 @@
+"""L1 Pallas kernel for the TimeDistributed dense output layer.
+
+The autoencoder ends with a TimeDistributed(Dense(1)) projecting every
+timestep's hidden vector back to strain space (paper Fig. 3). Time-distributed
+means the same (Lh, Dout) weights apply at each timestep, so the whole layer
+is a single ``(TS, Lh) @ (Lh, Dout)`` matmul — tiled over timestep blocks like
+``mvm_x``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .lstm_cell import _pick_block
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, out_ref):
+    out_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_ts",))
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, block_ts: int = 8):
+    """TimeDistributed dense: ``(TS, Lh) @ (Lh, Dout) + b``."""
+    ts, lh = x.shape
+    lh2, dout = w.shape
+    assert lh == lh2, f"dense shape mismatch: x {x.shape} w {w.shape}"
+    bt = _pick_block(ts, block_ts)
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=(ts // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, lh), lambda i: (i, 0)),
+            pl.BlockSpec((lh, dout), lambda i: (0, 0)),
+            pl.BlockSpec((1, dout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ts, dout), x.dtype),
+        interpret=True,
+    )(x, w, b.reshape(1, dout))

@@ -1,0 +1,157 @@
+"""L1 Pallas kernels for the LSTM hot path.
+
+The paper's FPGA architecture splits every LSTM layer into two sub-layers
+(Fig. 5):
+
+  * ``mvm_x`` — the input-side MVM of all four gates. No timestep
+    dependency, so on the FPGA it streams ahead of the recurrent loop; here
+    (TPU-shaped, see DESIGN.md §Hardware-Adaptation) it becomes one batched
+    ``(TS, Lx) @ (Lx, 4Lh)`` matmul kernel, tiled over timestep blocks so each
+    grid step touches one VMEM-resident tile — the MXU-friendly restatement
+    of "give mvm_x only as many multipliers as it needs" (reuse factor R_x).
+
+  * ``lstm_step`` — the recurrent sub-layer: ``mvm_h`` + gate activations +
+    elementwise tail. Its II is bound by the h_t -> h_{t+1} dependency, so it
+    runs once per timestep inside ``lax.scan`` with the whole (Lh, 4Lh) W_h
+    block pinned in VMEM (the BRAM analogue).
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is asserted against ``ref.py`` in
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= target (keeps grids exact)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# mvm_x: batched input-side gate MVM over all timesteps
+# ---------------------------------------------------------------------------
+
+
+def _mvm_x_kernel(xs_ref, wx_ref, out_ref):
+    # One (Bt, Lx) tile of timesteps against the full (Lx, 4Lh) gate matrix.
+    # preferred_element_type pins the MXU accumulator to f32.
+    out_ref[...] = jnp.dot(
+        xs_ref[...], wx_ref[...], preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_ts",))
+def mvm_x(xs: jnp.ndarray, wx: jnp.ndarray, block_ts: int = 8) -> jnp.ndarray:
+    """``(TS, Lx) @ (Lx, 4Lh)`` via a Pallas kernel tiled over timesteps.
+
+    ``block_ts`` is the timestep tile height — the software analogue of the
+    paper's R_x knob: smaller tiles = fewer "multipliers" in flight per grid
+    step. The grid is exact (block picked to divide TS).
+    """
+    ts, lx = xs.shape
+    lx2, l4h = wx.shape
+    assert lx == lx2, f"mvm_x shape mismatch: xs {xs.shape} wx {wx.shape}"
+    bt = _pick_block(ts, block_ts)
+    return pl.pallas_call(
+        _mvm_x_kernel,
+        grid=(ts // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, lx), lambda i: (i, 0)),
+            pl.BlockSpec((lx, l4h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, l4h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ts, l4h), xs.dtype),
+        interpret=True,
+    )(xs, wx)
+
+
+# ---------------------------------------------------------------------------
+# lstm_step: recurrent sub-layer (mvm_h + sigma/tanh + tail), one timestep
+# ---------------------------------------------------------------------------
+
+
+def _lstm_step_kernel(xw_ref, h_ref, c_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    # z = xw_t + h @ Wh + b   (the paper's mvm_h plus bias add)
+    z = (
+        xw_ref[...]
+        + jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    lh = h_ref.shape[-1]
+    zi = z[:, 0 * lh : 1 * lh]
+    zf = z[:, 1 * lh : 2 * lh]
+    zg = z[:, 2 * lh : 3 * lh]
+    zo = z[:, 3 * lh : 4 * lh]
+    # Gate activations (sigma twice-used; tanh for modulation) ...
+    i = 1.0 / (1.0 + jnp.exp(-zi))
+    f = 1.0 / (1.0 + jnp.exp(-zf))
+    g = jnp.tanh(zg)
+    o = 1.0 / (1.0 + jnp.exp(-zo))
+    # ... and the elementwise tail (the unit the paper prices at 4*Lh DSPs).
+    c_new = f * c_ref[...] + i * g
+    h_new = o * jnp.tanh(c_new)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@jax.jit
+def lstm_step(xw_t, h, c, wh, b):
+    """One recurrent step: ``(xw_t, h, c) -> (h', c')``.
+
+    Inputs are rank-1 ``(4Lh,)/(Lh,)`` vectors; internally lifted to (1, n)
+    rows so the MVM is a (1, Lh) x (Lh, 4Lh) matmul — the MXU-shaped form of
+    the FPGA's mvm_h unit. W_h and b live in one VMEM-resident block.
+    """
+    lh = h.shape[-1]
+    l4h = 4 * lh
+    h2, c2 = pl.pallas_call(
+        _lstm_step_kernel,
+        in_specs=[
+            pl.BlockSpec((1, l4h), lambda: (0, 0)),
+            pl.BlockSpec((1, lh), lambda: (0, 0)),
+            pl.BlockSpec((1, lh), lambda: (0, 0)),
+            pl.BlockSpec((lh, l4h), lambda: (0, 0)),
+            pl.BlockSpec((1, l4h), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lh), lambda: (0, 0)),
+            pl.BlockSpec((1, lh), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, lh), h.dtype),
+            jax.ShapeDtypeStruct((1, lh), c.dtype),
+        ],
+        interpret=True,
+    )(xw_t.reshape(1, l4h), h.reshape(1, lh), c.reshape(1, lh), wh, b.reshape(1, l4h))
+    return h2.reshape(lh), c2.reshape(lh)
+
+
+def lstm_layer(xs, wx, wh, b, h0=None, c0=None, block_ts: int = 8):
+    """Full LSTM layer: hoisted Pallas ``mvm_x`` + scanned Pallas ``lstm_step``.
+
+    Structurally identical to the hardware pipeline: sub-layer 1 runs for the
+    whole sequence as one tiled matmul; sub-layer 2 is the serial recurrence.
+    Returns the full hidden sequence ``(TS, Lh)``.
+    """
+    lh = wh.shape[0]
+    h0 = jnp.zeros((lh,), xs.dtype) if h0 is None else h0
+    c0 = jnp.zeros((lh,), xs.dtype) if c0 is None else c0
+    xw = mvm_x(xs, wx, block_ts=block_ts)
+
+    def step(carry, xw_t):
+        h, c = carry
+        h2, c2 = lstm_step(xw_t, h, c, wh, b)
+        return (h2, c2), h2
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xw)
+    return hs

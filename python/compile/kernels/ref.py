@@ -1,0 +1,100 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact functional twin here, written
+with plain ``jax.numpy`` ops only. ``python/tests/test_kernel.py`` sweeps
+shapes/dtypes with hypothesis and asserts ``allclose`` between kernel and
+oracle; the AOT path also cross-checks the full autoencoder against these.
+
+Gate order everywhere in this repo is ``i, f, g, o`` (input, forget,
+modulation, output), matching the paper's Section II equations:
+
+    i = sigma(W_i [x, h] + b_i)        f = sigma(W_f [x, h] + b_f)
+    g = tanh (W_g [x, h] + b_g)        o = sigma(W_o [x, h] + b_o)
+    c' = f * c + i * g                 h' = o * tanh(c')
+
+Weight layout: ``wx: (Lx, 4*Lh)``, ``wh: (Lh, 4*Lh)``, ``b: (4*Lh,)`` with the
+four gate blocks concatenated along the last axis in i|f|g|o order. This is
+the "combined W for [x, h]" of the paper, split into the paper's two sub-layer
+operands: the dependency-free ``mvm_x`` (x @ wx) and the recurrent ``mvm_h``
+(h @ wh) — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def sigmoid_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Textbook logistic sigmoid, written exactly as the kernel computes it."""
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def mvm_x_ref(xs: jnp.ndarray, wx: jnp.ndarray) -> jnp.ndarray:
+    """Batched input-side MVM for all timesteps: ``(TS, Lx) @ (Lx, 4Lh)``.
+
+    This is the paper's first sub-layer (Fig. 5): it has no timestep
+    dependency, so all TS rows are computed as one matmul.
+    """
+    return xs @ wx
+
+
+def lstm_tail_ref(z: jnp.ndarray, c: jnp.ndarray):
+    """Gate activations + elementwise tail of an LSTM cell.
+
+    ``z`` is the pre-activation ``x@wx + h@wh + b`` of shape (4*Lh,) or
+    (B, 4*Lh); ``c`` the previous cell state. Returns ``(h', c')``.
+    """
+    lh = z.shape[-1] // 4
+    zi = z[..., 0 * lh : 1 * lh]
+    zf = z[..., 1 * lh : 2 * lh]
+    zg = z[..., 2 * lh : 3 * lh]
+    zo = z[..., 3 * lh : 4 * lh]
+    i = sigmoid_ref(zi)
+    f = sigmoid_ref(zf)
+    g = jnp.tanh(zg)
+    o = sigmoid_ref(zo)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """One full LSTM step: (x, h, c) -> (h', c')."""
+    z = x @ wx + h @ wh + b
+    return lstm_tail_ref(z, c)
+
+
+def lstm_step_from_xw_ref(xw_t, h, c, wh, b):
+    """Recurrent sub-layer step given a precomputed ``xw_t = x_t @ wx`` row.
+
+    This mirrors the paper's second sub-layer (``mvm_h`` + sigma + tail), the
+    part whose II is bound by the h_t -> h_{t+1} dependency.
+    """
+    z = xw_t + h @ wh + b
+    return lstm_tail_ref(z, c)
+
+
+def lstm_layer_ref(xs, wx, wh, b, h0=None, c0=None):
+    """Full LSTM layer over a sequence. ``xs: (TS, Lx)`` -> ``hs: (TS, Lh)``.
+
+    Implemented exactly as the hardware does: hoist ``mvm_x`` for the whole
+    sequence, then scan the recurrent sub-layer.
+    """
+    lh = wh.shape[0]
+    h0 = jnp.zeros((lh,), xs.dtype) if h0 is None else h0
+    c0 = jnp.zeros((lh,), xs.dtype) if c0 is None else c0
+    xw = mvm_x_ref(xs, wx)
+
+    def step(carry, xw_t):
+        h, c = carry
+        h2, c2 = lstm_step_from_xw_ref(xw_t, h, c, wh, b)
+        return (h2, c2), h2
+
+    (_, _), hs = lax.scan(step, (h0, c0), xw)
+    return hs
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Dense layer oracle: ``x @ w + b`` (used TimeDistributed over TS)."""
+    return x @ w + b

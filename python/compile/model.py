@@ -1,0 +1,142 @@
+"""L2: the paper's LSTM autoencoder in JAX, calling the L1 Pallas kernels.
+
+Two architectures, exactly as evaluated in the paper (Sections III-A, V-C):
+
+  * ``small``   — encoder LSTM(9) -> repeat-vector -> decoder LSTM(9) ->
+                  TimeDistributed Dense(1). TS=8 on the FPGA (Table II Z1-Z3).
+  * ``nominal`` — LSTM(32, seq) -> LSTM(8, last) -> repeat -> LSTM(8, seq) ->
+                  LSTM(32, seq) -> TimeDistributed Dense(1).
+                  TS=100 for accuracy (Fig. 9), TS=8 at 300 MHz on U250
+                  (Table II U1-U3, Table III).
+
+Only the *last* timestep's hidden vector crosses the encoder->decoder
+boundary (paper: "LSTM2 can only start after the LSTM1 calculation is
+completed") — the repeat-vector feeds it to every decoder timestep.
+
+Two functionally identical forward implementations:
+
+  * ``forward(..., impl="jnp")``    — pure-jnp (fast under jit; used for
+                                      training, where pallas-interpret inside
+                                      grad/scan would be needlessly slow).
+  * ``forward(..., impl="pallas")`` — every MVM and recurrent step goes
+                                      through the L1 Pallas kernels; this is
+                                      what ``aot.py`` lowers to HLO for the
+                                      rust runtime.
+
+``tests/test_model.py`` asserts the two agree to float tolerance for both
+architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as kdense
+from .kernels import lstm_cell as klstm
+from .kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+
+# (name, hidden units, return_sequences) per LSTM layer, encoder then decoder.
+ARCHS: Dict[str, dict] = {
+    "small": {
+        "encoder": [("enc0", 9, False)],
+        "decoder": [("dec0", 9, True)],
+        "d_in": 1,
+        "d_out": 1,
+    },
+    "nominal": {
+        "encoder": [("enc0", 32, True), ("enc1", 8, False)],
+        "decoder": [("dec0", 8, True), ("dec1", 32, True)],
+        "d_in": 1,
+        "d_out": 1,
+    },
+}
+
+
+def layer_dims(arch: str) -> List[Tuple[str, int, int]]:
+    """(name, Lx, Lh) for every LSTM layer, in execution order.
+
+    These are the dimensions the DSE (rust ``hls::dse``) optimizes over; for
+    ``nominal`` this yields the paper's 32, 8, 8, 32 hidden-unit chain.
+    """
+    spec = ARCHS[arch]
+    out: List[Tuple[str, int, int]] = []
+    lx = spec["d_in"]
+    for name, lh, _seq in spec["encoder"]:
+        out.append((name, lx, lh))
+        lx = lh
+    # decoder input = repeated latent vector (last encoder Lh)
+    for name, lh, _seq in spec["decoder"]:
+        out.append((name, lx, lh))
+        lx = lh
+    return out
+
+
+def init_params(key: jax.Array, arch: str) -> Params:
+    """Glorot-uniform weights, forget-gate bias +1 (standard LSTM init)."""
+    spec = ARCHS[arch]
+    params: Params = {}
+    for name, lx, lh in layer_dims(arch):
+        k1, k2, key = jax.random.split(key, 3)
+        lim_x = jnp.sqrt(6.0 / (lx + 4 * lh))
+        lim_h = jnp.sqrt(6.0 / (lh + 4 * lh))
+        params[f"{name}_wx"] = jax.random.uniform(k1, (lx, 4 * lh), minval=-lim_x, maxval=lim_x)
+        params[f"{name}_wh"] = jax.random.uniform(k2, (lh, 4 * lh), minval=-lim_h, maxval=lim_h)
+        b = jnp.zeros((4 * lh,))
+        params[f"{name}_b"] = b.at[lh : 2 * lh].set(1.0)  # forget-gate bias
+    last_lh = spec["decoder"][-1][1]
+    k1, key = jax.random.split(key)
+    lim = jnp.sqrt(6.0 / (last_lh + spec["d_out"]))
+    params["out_w"] = jax.random.uniform(k1, (last_lh, spec["d_out"]), minval=-lim, maxval=lim)
+    params["out_b"] = jnp.zeros((spec["d_out"],))
+    return params
+
+
+def _lstm_layer(params: Params, name: str, xs: jnp.ndarray, impl: str) -> jnp.ndarray:
+    wx, wh, b = params[f"{name}_wx"], params[f"{name}_wh"], params[f"{name}_b"]
+    if impl == "pallas":
+        return klstm.lstm_layer(xs, wx, wh, b)
+    return ref.lstm_layer_ref(xs, wx, wh, b)
+
+
+def _dense(params: Params, xs: jnp.ndarray, impl: str) -> jnp.ndarray:
+    w, b = params["out_w"], params["out_b"]
+    if impl == "pallas":
+        return kdense.dense(xs, w, b)
+    return ref.dense_ref(xs, w, b)
+
+
+def forward(params: Params, xs: jnp.ndarray, arch: str = "nominal", impl: str = "jnp"):
+    """Autoencoder forward: ``xs (TS, d_in)`` -> reconstruction ``(TS, d_out)``."""
+    spec = ARCHS[arch]
+    ts = xs.shape[0]
+    h = xs
+    for name, _lh, seq in spec["encoder"]:
+        hs = _lstm_layer(params, name, h, impl)
+        h = hs if seq else hs[-1:]
+    # repeat-vector: broadcast the latent (1, Lh) row to every timestep
+    latent = h[-1]
+    h = jnp.broadcast_to(latent, (ts, latent.shape[-1]))
+    for name, _lh, _seq in spec["decoder"]:
+        h = _lstm_layer(params, name, h, impl)
+    return _dense(params, h, impl)
+
+
+def reconstruction_mse(params: Params, xs: jnp.ndarray, arch: str, impl: str = "jnp"):
+    """Per-window anomaly score: mean squared reconstruction error."""
+    rec = forward(params, xs, arch=arch, impl=impl)
+    return jnp.mean((rec - xs) ** 2)
+
+
+def batched_forward(params: Params, batch: jnp.ndarray, arch: str, impl: str = "jnp"):
+    """vmap over a batch of windows ``(B, TS, d_in)``."""
+    return jax.vmap(lambda w: forward(params, w, arch=arch, impl=impl))(batch)
+
+
+def batched_mse(params: Params, batch: jnp.ndarray, arch: str, impl: str = "jnp"):
+    rec = batched_forward(params, batch, arch, impl)
+    return jnp.mean((rec - batch) ** 2, axis=(1, 2))

@@ -1,0 +1,153 @@
+"""Autoencoder zoo for the Fig. 9 model-accuracy comparison.
+
+The paper compares unsupervised autoencoders built from different layer
+types — LSTM, GRU, CNN and DNN — and finds the LSTM-based one has the best
+AUC. The LSTM variant lives in ``model.py`` (it is the one we accelerate);
+this module provides the GRU/CNN/DNN contenders, pure-jnp (they exist only to
+regenerate the Fig. 9 ranking at build time and are never lowered to rust).
+
+All share the encoder -> bottleneck -> decoder shape and are scored by
+reconstruction MSE, exactly like the LSTM autoencoder.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _glorot(key, shape):
+    lim = jnp.sqrt(6.0 / (shape[0] + shape[-1]))
+    return jax.random.uniform(key, shape, minval=-lim, maxval=lim)
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+# ---------------------------------------------------------------------------
+# GRU autoencoder: GRU(32) -> GRU(8, last) -> repeat -> GRU(8) -> GRU(32) -> TD dense
+# ---------------------------------------------------------------------------
+
+
+def _gru_layer(xs, wx, wh, b):
+    """Standard GRU (update z, reset r, candidate n), gate order z|r|n."""
+    lh = wh.shape[0]
+
+    def step(h, x):
+        gx = x @ wx + b
+        gh = h @ wh
+        z = _sigmoid(gx[0 * lh : 1 * lh] + gh[0 * lh : 1 * lh])
+        r = _sigmoid(gx[1 * lh : 2 * lh] + gh[1 * lh : 2 * lh])
+        n = jnp.tanh(gx[2 * lh : 3 * lh] + r * gh[2 * lh : 3 * lh])
+        h2 = (1.0 - z) * n + z * h
+        return h2, h2
+
+    _, hs = lax.scan(step, jnp.zeros((lh,), xs.dtype), xs)
+    return hs
+
+
+GRU_LAYERS = [("enc0", 1, 32, True), ("enc1", 32, 8, False), ("dec0", 8, 8, True), ("dec1", 8, 32, True)]
+
+
+def init_gru(key: jax.Array) -> Params:
+    p: Params = {}
+    for name, lx, lh, _ in GRU_LAYERS:
+        k1, k2, key = jax.random.split(key, 3)
+        p[f"{name}_wx"] = _glorot(k1, (lx, 3 * lh))
+        p[f"{name}_wh"] = _glorot(k2, (lh, 3 * lh))
+        p[f"{name}_b"] = jnp.zeros((3 * lh,))
+    k1, _ = jax.random.split(key)
+    p["out_w"] = _glorot(k1, (32, 1))
+    p["out_b"] = jnp.zeros((1,))
+    return p
+
+
+def gru_forward(p: Params, xs: jnp.ndarray) -> jnp.ndarray:
+    ts = xs.shape[0]
+    h = xs
+    for name, _lx, _lh, seq in GRU_LAYERS[:2]:
+        hs = _gru_layer(h, p[f"{name}_wx"], p[f"{name}_wh"], p[f"{name}_b"])
+        h = hs if seq else hs[-1:]
+    h = jnp.broadcast_to(h[-1], (ts, h.shape[-1]))
+    for name, _lx, _lh, _seq in GRU_LAYERS[2:]:
+        h = _gru_layer(h, p[f"{name}_wx"], p[f"{name}_wh"], p[f"{name}_b"])
+    return h @ p["out_w"] + p["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# CNN autoencoder: Conv1D(16,k5,s2) -> Conv1D(8,k5,s2) -> deconv mirror
+# ---------------------------------------------------------------------------
+
+
+def init_cnn(key: jax.Array) -> Params:
+    keys = jax.random.split(key, 4)
+    return {
+        "c0": _glorot(keys[0], (5, 1, 16)),
+        "c1": _glorot(keys[1], (5, 16, 8)),
+        "d0": _glorot(keys[2], (5, 8, 16)),
+        "d1": _glorot(keys[3], (5, 16, 1)),
+    }
+
+
+def _conv1d(x, w, stride=1):
+    # x: (TS, Cin), w: (K, Cin, Cout) -> (TS/stride, Cout), SAME padding
+    out = lax.conv_general_dilated(
+        x[None], w, (stride,), "SAME", dimension_numbers=("NWC", "WIO", "NWC")
+    )
+    return out[0]
+
+
+def _deconv1d(x, w, stride=1):
+    out = lax.conv_transpose(
+        x[None], w, (stride,), "SAME", dimension_numbers=("NWC", "WIO", "NWC")
+    )
+    return out[0]
+
+
+def cnn_forward(p: Params, xs: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.tanh(_conv1d(xs, p["c0"], 2))
+    h = jnp.tanh(_conv1d(h, p["c1"], 2))
+    h = jnp.tanh(_deconv1d(h, p["d0"], 2))
+    h = _deconv1d(h, p["d1"], 2)
+    return h[: xs.shape[0]]
+
+
+# ---------------------------------------------------------------------------
+# DNN autoencoder: flatten -> 64 -> 16 -> 64 -> TS (per-window MLP)
+# ---------------------------------------------------------------------------
+
+
+def init_dnn(key: jax.Array, ts: int) -> Params:
+    keys = jax.random.split(key, 4)
+    return {
+        "w0": _glorot(keys[0], (ts, 64)),
+        "b0": jnp.zeros((64,)),
+        "w1": _glorot(keys[1], (64, 16)),
+        "b1": jnp.zeros((16,)),
+        "w2": _glorot(keys[2], (16, 64)),
+        "b2": jnp.zeros((64,)),
+        "w3": _glorot(keys[3], (64, ts)),
+        "b3": jnp.zeros((ts,)),
+    }
+
+
+def dnn_forward(p: Params, xs: jnp.ndarray) -> jnp.ndarray:
+    v = xs[:, 0]
+    h = jnp.tanh(v @ p["w0"] + p["b0"])
+    h = jnp.tanh(h @ p["w1"] + p["b1"])
+    h = jnp.tanh(h @ p["w2"] + p["b2"])
+    out = h @ p["w3"] + p["b3"]
+    return out[:, None]
+
+
+ZOO = {
+    "gru": (init_gru, gru_forward),
+    "cnn": (init_cnn, cnn_forward),
+    "dnn": (init_dnn, dnn_forward),
+}

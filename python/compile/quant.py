@@ -1,0 +1,56 @@
+"""QKeras-style 16-bit fixed-point fake quantization (paper Section V-B).
+
+The paper quantizes the LSTM autoencoder to 16 bits with QKeras and finds the
+effect on AUC negligible; the hardware keeps weights/inputs at 16 bits and
+bias/cell state at 32 bits (Section V-C). We mirror that numerically:
+
+  * weights & activations  -> Q(I.F) with 16 total bits,
+  * bias & cell state      -> 32-bit fixed point (quantization error of the
+    32-bit path is below f32 resolution for these ranges, so the fake-quant
+    model only rounds the 16-bit tensors — same as QKeras' default flow).
+
+``quantize_params`` rounds every weight tensor to the grid; the quantized
+model is then just the ordinary forward pass over rounded weights, which is
+exactly what "fake quantization" means. The rust ``model::fixed`` module
+implements the true integer datapath (LUT sigmoid, piecewise tanh) and is
+cross-checked against these grids in the integration tests.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+TOTAL_BITS = 16
+INT_BITS = 6  # Q6.10: weights/activations in this model live well inside ±32
+FRAC_BITS = TOTAL_BITS - INT_BITS  # 10 fractional bits -> lsb = 1/1024
+
+
+def quantize_tensor(x: jnp.ndarray, frac_bits: int = FRAC_BITS, total_bits: int = TOTAL_BITS):
+    """Round to the signed fixed-point grid Q(total-frac).frac, saturating."""
+    scale = float(1 << frac_bits)
+    lo = -float(1 << (total_bits - 1)) / scale
+    hi = (float(1 << (total_bits - 1)) - 1.0) / scale
+    return jnp.clip(jnp.round(x * scale) / scale, lo, hi)
+
+
+def quantize_params(params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """16-bit fake-quantize all weight matrices; biases stay 32-bit."""
+    out = {}
+    for k, v in params.items():
+        if k.endswith("_b") or k == "out_b":
+            out[k] = v  # 32-bit path in hardware; f32 here
+        else:
+            out[k] = quantize_tensor(v)
+    return out
+
+
+def max_abs_quant_error(params: Dict[str, jnp.ndarray]) -> float:
+    """Largest |w - q(w)| across all quantized tensors (test hook)."""
+    q = quantize_params(params)
+    err = 0.0
+    for k in params:
+        if not (k.endswith("_b") or k == "out_b"):
+            err = max(err, float(jnp.max(jnp.abs(params[k] - q[k]))))
+    return err

@@ -1,0 +1,195 @@
+"""Build-time training of the autoencoder zoo on synthetic GW data (Fig. 9).
+
+Pure-JAX training loop with a hand-rolled Adam (optax is not available in
+this image). Training is *unsupervised*: the autoencoders only ever see
+noise-only windows (label 0) and learn to reconstruct detector background;
+at test time, windows containing a chirp reconstruct poorly and their MSE
+spikes — the paper's anomaly-detection mechanism.
+
+Outputs feed two places:
+  * ``aot.py`` bakes the trained LSTM weights into the AOT-lowered HLO,
+  * ``artifacts/metrics.json`` records per-model AUC (the Fig. 9 numbers),
+    including the 16-bit-quantized LSTM variant.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as lstm_model
+from . import models_zoo, quant
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(grads, state, params, lr=1e-2, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# ROC / AUC (python twin of rust eval::roc)
+# ---------------------------------------------------------------------------
+
+
+def roc_auc(scores: np.ndarray, labels: np.ndarray) -> float:
+    """AUC by the rank statistic (Mann-Whitney U), ties handled by midrank."""
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty(len(scores), dtype=np.float64)
+    sorted_scores = scores[order]
+    i = 0
+    while i < len(scores):
+        j = i
+        while j + 1 < len(scores) and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        ranks[order[i : j + 1]] = 0.5 * (i + j) + 1.0
+        i = j + 1
+    pos = labels == 1
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    u = ranks[pos].sum() - n_pos * (n_pos + 1) / 2.0
+    return float(u / (n_pos * n_neg))
+
+
+def roc_curve(scores: np.ndarray, labels: np.ndarray, n_points: int = 50):
+    """(fpr, tpr) arrays at evenly spaced score thresholds."""
+    thresholds = np.quantile(scores, np.linspace(0.0, 1.0, n_points))
+    pos = labels == 1
+    fpr, tpr = [], []
+    for th in thresholds[::-1]:
+        flag = scores >= th
+        tpr.append(float((flag & pos).sum() / max(pos.sum(), 1)))
+        fpr.append(float((flag & ~pos).sum() / max((~pos).sum(), 1)))
+    return np.array(fpr), np.array(tpr)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+def train_model(
+    name: str,
+    init_fn: Callable,
+    fwd_fn: Callable,
+    train_x: np.ndarray,
+    steps: int,
+    batch: int,
+    seed: int,
+    lr: float = 1e-2,
+) -> Tuple[Params, list]:
+    """Train one autoencoder with MSE on noise-only windows."""
+    key = jax.random.key(seed)
+    params = init_fn(key)
+    opt = adam_init(params)
+    xs = jnp.asarray(train_x)
+
+    def loss_fn(p, b):
+        rec = jax.vmap(lambda w: fwd_fn(p, w))(b)
+        return jnp.mean((rec - b) ** 2)
+
+    @jax.jit
+    def step_fn(p, o, b):
+        loss, grads = jax.value_and_grad(loss_fn)(p, b)
+        p2, o2 = adam_update(grads, o, p, lr=lr)
+        return p2, o2, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, xs.shape[0], size=batch)
+        params, opt, loss = step_fn(params, opt, xs[idx])
+        if s % 25 == 0 or s == steps - 1:
+            losses.append(float(loss))
+    dt = time.time() - t0
+    print(f"[train] {name}: {steps} steps in {dt:.1f}s, loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return params, losses
+
+
+def score_model(fwd_fn: Callable, params: Params, x: np.ndarray, chunk: int = 256) -> np.ndarray:
+    """Reconstruction-MSE anomaly score per window."""
+    xs = jnp.asarray(x)
+
+    @jax.jit
+    def scores(b):
+        rec = jax.vmap(lambda w: fwd_fn(params, w))(b)
+        return jnp.mean((rec - b) ** 2, axis=(1, 2))
+
+    out = []
+    for i in range(0, xs.shape[0], chunk):
+        out.append(np.asarray(scores(xs[i : i + chunk])))
+    return np.concatenate(out)
+
+
+def train_zoo(train_x, test_x, test_y, ts: int, steps: int, batch: int, seed: int):
+    """Train LSTM/GRU/CNN/DNN autoencoders; return params + Fig. 9 metrics.
+
+    ``train_x`` must be noise-only windows. Returns
+    ``(lstm_params, metrics)`` where metrics maps model name ->
+    {auc, roc: {fpr, tpr}, final_loss}; includes the quantized LSTM.
+    """
+    metrics: Dict[str, dict] = {}
+    results: Dict[str, Params] = {}
+
+    # --- the LSTM autoencoder we accelerate (nominal arch) ---
+    lstm_init = lambda k: lstm_model.init_params(k, "nominal")  # noqa: E731
+    lstm_fwd = lambda p, w: lstm_model.forward(p, w, arch="nominal", impl="jnp")  # noqa: E731
+    p_lstm, losses = train_model("lstm", lstm_init, lstm_fwd, train_x, steps, batch, seed)
+    s = score_model(lstm_fwd, p_lstm, test_x)
+    fpr, tpr = roc_curve(s, test_y)
+    metrics["lstm"] = {
+        "auc": roc_auc(s, test_y),
+        "final_loss": losses[-1],
+        "roc": {"fpr": fpr.tolist(), "tpr": tpr.tolist()},
+    }
+    results["lstm"] = p_lstm
+
+    # --- quantized LSTM (paper: negligible AUC effect at 16 bits) ---
+    p_q = quant.quantize_params(p_lstm)
+    sq = score_model(lstm_fwd, p_q, test_x)
+    fpr, tpr = roc_curve(sq, test_y)
+    metrics["lstm_q16"] = {
+        "auc": roc_auc(sq, test_y),
+        "final_loss": losses[-1],
+        "roc": {"fpr": fpr.tolist(), "tpr": tpr.tolist()},
+    }
+    results["lstm_q16"] = p_q
+
+    # --- contenders (Fig. 9 ranking) ---
+    for name, (init_fn, fwd_fn) in models_zoo.ZOO.items():
+        init = (lambda f: (lambda k: f(k, ts)))(init_fn) if name == "dnn" else init_fn
+        p, losses = train_model(name, init, fwd_fn, train_x, steps, batch, seed + 1)
+        s = score_model(fwd_fn, p, test_x)
+        fpr, tpr = roc_curve(s, test_y)
+        metrics[name] = {
+            "auc": roc_auc(s, test_y),
+            "final_loss": losses[-1],
+            "roc": {"fpr": fpr.tolist(), "tpr": tpr.tolist()},
+        }
+        results[name] = p
+
+    return results, metrics

@@ -1,0 +1,121 @@
+"""GW data substrate: PSD shape, noise statistics, chirp morphology,
+whitening/bandpass behaviour, dataset invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import data
+
+
+def test_psd_positive_and_bowl_shaped():
+    f = np.linspace(10, 1000, 512)
+    s = data.aligo_psd(f)
+    assert np.all(s > 0)
+    # seismic wall below ~50 Hz, shot-noise rise at high f: min in between
+    i_min = np.argmin(s)
+    assert 20 < f[i_min] < 400
+
+
+def test_psd_monotone_wall():
+    f = np.array([25.0, 35.0, 50.0])
+    s = data.aligo_psd(f)
+    assert s[0] > s[1] > s[2]
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_colored_noise_spectrum(seed):
+    """Per-bin periodogram should track the target PSD (order of magnitude)."""
+    rng = np.random.default_rng(seed)
+    n = 4096
+    x = data.colored_noise(rng, n)
+    freqs = np.fft.rfftfreq(n, 1 / data.FS)
+    per = np.abs(np.fft.rfft(x)) ** 2 * 2.0 / (data.FS * n)
+    band = (freqs > 40) & (freqs < 300)
+    ratio = per[band].mean() / data.aligo_psd(freqs[band]).mean()
+    assert 0.3 < ratio < 3.0
+
+
+def test_colored_noise_zero_mean():
+    rng = np.random.default_rng(0)
+    x = data.colored_noise(rng, 8192)
+    assert abs(x.mean()) < 5 * x.std() / np.sqrt(len(x))
+
+
+def test_chirp_frequency_increases():
+    """Instantaneous frequency must sweep upward until coalescence."""
+    h = data.inspiral_chirp(2048, mchirp_msun=28.0)
+    nz = np.nonzero(h)[0]
+    assert len(nz) > 100
+    # zero-crossing spacing shrinks over the active region
+    seg = h[nz[0] : int(0.74 * 2048)]
+    zc = np.where(np.diff(np.signbit(seg)))[0]
+    first_gaps = np.diff(zc[:5]).mean()
+    last_gaps = np.diff(zc[-5:]).mean()
+    assert last_gaps < first_gaps
+
+
+def test_chirp_peak_normalized():
+    h = data.inspiral_chirp(2048)
+    assert abs(np.abs(h).max() - 1.0) < 1e-9
+
+
+def test_chirp_silent_before_band():
+    h = data.inspiral_chirp(2048, f_start=35.0)
+    assert np.all(h[:50] == 0.0)  # early samples below f_start
+
+
+def test_whiten_partial_flattens():
+    """Partial whitening must reduce (not eliminate) spectral tilt."""
+    rng = np.random.default_rng(3)
+    n = 8192
+    x = data.colored_noise(rng, n)
+    w = data.whiten(x)
+    freqs = np.fft.rfftfreq(n, 1 / data.FS)
+
+    def tilt(sig):
+        p = np.abs(np.fft.rfft(sig)) ** 2
+        lo = p[(freqs > 20) & (freqs < 60)].mean()
+        hi = p[(freqs > 200) & (freqs < 400)].mean()
+        return lo / hi
+
+    assert tilt(w) < tilt(x)  # flatter after whitening
+    assert tilt(w) > 1.0  # but residual coloring remains (alpha < 1)
+
+
+def test_bandpass_kills_out_of_band():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(4096)
+    y = data.bandpass(x)
+    freqs = np.fft.rfftfreq(4096, 1 / data.FS)
+    spec = np.abs(np.fft.rfft(y))
+    assert spec[freqs < data.F_LO - 1].max() < 1e-9
+    assert spec[freqs > data.F_HI + 1].max() < 1e-9
+
+
+@pytest.mark.parametrize("ts", [8, 100])
+def test_make_dataset_invariants(ts):
+    xs, ys = data.make_dataset(0, 12, ts)
+    assert xs.shape == (12, ts, 1) and ys.shape == (12,)
+    assert xs.dtype == np.float32
+    assert set(ys.tolist()) == {0, 1}
+    assert (ys == 1).sum() == 6  # alternating labels
+    # per-window z-scoring
+    flat = xs[:, :, 0]
+    np.testing.assert_allclose(flat.mean(axis=1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(flat.std(axis=1), 1.0, atol=1e-3)
+
+
+def test_make_dataset_deterministic():
+    a, ya = data.make_dataset(7, 6, 16)
+    b, yb = data.make_dataset(7, 6, 16)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(ya, yb)
+
+
+def test_make_dataset_seed_sensitivity():
+    a, _ = data.make_dataset(7, 6, 16)
+    b, _ = data.make_dataset(8, 6, 16)
+    assert not np.allclose(a, b)

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and the block-size knob) and asserts allclose —
+this is the CORE correctness signal for the compute hot-spot that ends up
+inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import dense as kdense
+from compile.kernels import lstm_cell as klstm
+from compile.kernels import ref
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(key, shape, scale=0.5):
+    return scale * jax.random.normal(jax.random.key(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mvm_x
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ts=st.integers(1, 24),
+    lx=st.integers(1, 16),
+    lh=st.integers(1, 16),
+    block=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_mvm_x_matches_ref(ts, lx, lh, block, seed):
+    xs = _rand(seed, (ts, lx))
+    wx = _rand(seed + 1, (lx, 4 * lh))
+    got = klstm.mvm_x(xs, wx, block_ts=block)
+    want = ref.mvm_x_ref(xs, wx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_mvm_x_block_invariance():
+    """Result must not depend on the tiling knob (paper: R_x changes cost,
+    never values)."""
+    xs, wx = _rand(0, (16, 4)), _rand(1, (4, 36))
+    outs = [np.asarray(klstm.mvm_x(xs, wx, block_ts=b)) for b in (1, 2, 4, 8, 16)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lstm_step / lstm_layer
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(lh=st.integers(1, 24), seed=st.integers(0, 2**16))
+def test_lstm_step_matches_ref(lh, seed):
+    xw = _rand(seed, (4 * lh,))
+    h = _rand(seed + 1, (lh,))
+    c = _rand(seed + 2, (lh,))
+    wh = _rand(seed + 3, (lh, 4 * lh))
+    b = _rand(seed + 4, (4 * lh,), scale=0.1)
+    h2, c2 = klstm.lstm_step(xw, h, c, wh, b)
+    h2r, c2r = ref.lstm_step_from_xw_ref(xw, h, c, wh, b)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h2r), **TOL)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(c2r), **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ts=st.integers(1, 16),
+    lx=st.integers(1, 8),
+    lh=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_lstm_layer_matches_ref(ts, lx, lh, seed):
+    xs = _rand(seed, (ts, lx))
+    wx = _rand(seed + 1, (lx, 4 * lh))
+    wh = _rand(seed + 2, (lh, 4 * lh))
+    b = _rand(seed + 3, (4 * lh,), scale=0.1)
+    got = klstm.lstm_layer(xs, wx, wh, b)
+    want = ref.lstm_layer_ref(xs, wx, wh, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_lstm_cell_ref_consistency():
+    """Full-cell oracle == hoisted-mvm_x oracle (the paper's Fig. 5 split is
+    exact, not approximate)."""
+    lx, lh = 3, 7
+    x = _rand(0, (lx,))
+    h = _rand(1, (lh,))
+    c = _rand(2, (lh,))
+    wx = _rand(3, (lx, 4 * lh))
+    wh = _rand(4, (lh, 4 * lh))
+    b = _rand(5, (4 * lh,))
+    h_a, c_a = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+    h_b, c_b = ref.lstm_step_from_xw_ref(x @ wx, h, c, wh, b)
+    np.testing.assert_allclose(np.asarray(h_a), np.asarray(h_b), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c_a), np.asarray(c_b), rtol=1e-6, atol=1e-6)
+
+
+def test_lstm_gate_ranges():
+    """Cell-state/hidden stay bounded: |h| <= 1 by construction (o*tanh)."""
+    lh = 8
+    xs = _rand(0, (32, 4), scale=3.0)
+    wx = _rand(1, (4, 4 * lh), scale=2.0)
+    wh = _rand(2, (lh, 4 * lh), scale=2.0)
+    b = _rand(3, (4 * lh,), scale=2.0)
+    hs = np.asarray(klstm.lstm_layer(xs, wx, wh, b))
+    assert np.all(np.abs(hs) <= 1.0 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ts=st.integers(1, 24),
+    lh=st.integers(1, 16),
+    dout=st.integers(1, 4),
+    block=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_matches_ref(ts, lh, dout, block, seed):
+    x = _rand(seed, (ts, lh))
+    w = _rand(seed + 1, (lh, dout))
+    b = _rand(seed + 2, (dout,))
+    got = kdense.dense(x, w, b, block_ts=block)
+    want = ref.dense_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_pick_block_divides():
+    for n in range(1, 40):
+        for t in range(1, 12):
+            b = klstm._pick_block(n, t)
+            assert n % b == 0 and 1 <= b <= max(t, 1) or b <= n
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        klstm.mvm_x(jnp.zeros((4, 3)), jnp.zeros((5, 8)))
+    with pytest.raises(AssertionError):
+        kdense.dense(jnp.zeros((4, 3)), jnp.zeros((5, 1)), jnp.zeros((1,)))

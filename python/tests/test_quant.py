@@ -1,0 +1,67 @@
+"""16-bit fixed-point quantization: grid properties + accuracy preservation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model, quant
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(-30.0, 30.0, allow_nan=False, width=32), min_size=1, max_size=64)
+)
+def test_quantize_on_grid(vals):
+    x = jnp.asarray(np.array(vals, dtype=np.float32))
+    q = np.asarray(quant.quantize_tensor(x))
+    scaled = q * (1 << quant.FRAC_BITS)
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-30.0, 30.0, allow_nan=False, width=32))
+def test_quantize_error_bound(v):
+    q = float(quant.quantize_tensor(jnp.float32(v)))
+    lsb = 1.0 / (1 << quant.FRAC_BITS)
+    assert abs(q - v) <= lsb / 2 + 1e-7
+
+
+def test_quantize_saturates():
+    lsb = 1.0 / (1 << quant.FRAC_BITS)
+    hi = float(quant.quantize_tensor(jnp.float32(1e6)))
+    lo = float(quant.quantize_tensor(jnp.float32(-1e6)))
+    assert hi == (2 ** (quant.TOTAL_BITS - 1) - 1) * lsb
+    assert lo == -(2 ** (quant.TOTAL_BITS - 1)) * lsb
+
+
+def test_quantize_idempotent():
+    x = jnp.asarray(np.linspace(-3, 3, 101, dtype=np.float32))
+    q1 = quant.quantize_tensor(x)
+    q2 = quant.quantize_tensor(q1)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_params_bias_untouched():
+    p = model.init_params(jax.random.key(0), "small")
+    q = quant.quantize_params(p)
+    np.testing.assert_array_equal(np.asarray(p["enc0_b"]), np.asarray(q["enc0_b"]))
+    np.testing.assert_array_equal(np.asarray(p["out_b"]), np.asarray(q["out_b"]))
+
+
+def test_quantized_forward_close():
+    """Paper Section V-B: 16-bit precision has negligible effect — on a
+    single forward pass the divergence must stay small."""
+    p = model.init_params(jax.random.key(0), "nominal")
+    q = quant.quantize_params(p)
+    x = jax.random.normal(jax.random.key(1), (20, 1))
+    a = np.asarray(model.forward(p, x, arch="nominal"))
+    b = np.asarray(model.forward(q, x, arch="nominal"))
+    assert np.max(np.abs(a - b)) < 0.05
+
+
+def test_max_abs_quant_error_reported():
+    p = model.init_params(jax.random.key(0), "small")
+    err = quant.max_abs_quant_error(p)
+    assert 0.0 <= err <= 1.0 / (1 << quant.FRAC_BITS)

@@ -1,0 +1,106 @@
+//! Bench target: **ablation** of the paper's architectural mechanisms, each
+//! switched off independently on the Table II designs:
+//!
+//! * timestep overlap between cascaded layers (Fig. 7) — off reverts to the
+//!   Fig. 1 naive schedule where a layer waits for its producer's full
+//!   sequence;
+//! * loop rewind (Eq. 1) — off pays the `LT_N - ii_N` pipeline drain per
+//!   inference per layer;
+//! * balanced II (Eq. 7) — "unbalanced" gives layer 0 heavy reuse and layer
+//!   1 full unroll at the *same total DSP budget shape* (the Fig. 1 story);
+//! * micro-batching vs batch-1 is covered by `e2e_serving`.
+//!
+//! Run: `cargo bench --bench ablation`
+
+use gwlstm::hls::device::Device;
+use gwlstm::hls::perf_model::{model_perf, DesignPoint, LayerDims};
+use gwlstm::sim::{simulate, SimConfig};
+use gwlstm::util::bench::Table;
+
+fn run(point: &DesignPoint, dev: &Device, rewind: bool, overlap: bool) -> (u64, f64) {
+    let r = simulate(&SimConfig {
+        point: point.clone(),
+        device: *dev,
+        inferences: 48,
+        arrival_interval: None,
+        rewind,
+        overlap,
+    });
+    (r.latencies[0], r.steady_ii)
+}
+
+fn main() {
+    let z = Device::by_name("zynq7045").unwrap();
+    let u = Device::by_name("u250").unwrap();
+
+    println!("=== ablation: rewind x overlap (cycle simulator, 48 inferences) ===\n");
+    let mut t = Table::new(&[
+        "design",
+        "rewind",
+        "overlap",
+        "latency (cycles)",
+        "steady II (cycles)",
+        "II penalty",
+    ]);
+    for (label, point, dev) in [
+        ("Z3 (small, balanced)", DesignPoint::small_autoencoder(9, 1, 8), z),
+        ("U2 (nominal, balanced)", DesignPoint::nominal_autoencoder(9, 1, 8), u),
+    ] {
+        let (_, base_ii) = run(&point, dev, true, true);
+        for (rw, ov) in [(true, true), (false, true), (true, false), (false, false)] {
+            let (lat, ii) = run(&point, dev, rw, ov);
+            t.row(&[
+                label.into(),
+                rw.to_string(),
+                ov.to_string(),
+                lat.to_string(),
+                format!("{ii:.1}"),
+                format!("{:+.0}%", 100.0 * (ii / base_ii - 1.0)),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n=== ablation: balanced vs unbalanced layer IIs at similar DSPs (Fig. 1/4) ===\n");
+    let layers = vec![LayerDims::new(1, 9), LayerDims::new(9, 9)];
+    // balanced: both layers rh=2 (ii=10 each)
+    let balanced = DesignPoint {
+        layers: layers.clone(),
+        rx: vec![10, 10],
+        rh: vec![2, 2],
+        ts: 8,
+        dense_out: 1,
+    };
+    // unbalanced: layer0 starved (rh=6), layer1 over-provisioned (rh=1)
+    let unbalanced = DesignPoint {
+        layers,
+        rx: vec![10, 10],
+        rh: vec![6, 1],
+        ts: 8,
+        dense_out: 1,
+    };
+    let mut t = Table::new(&["config", "DSPs", "II_sys (sim)", "layer0 ii", "layer1 ii"]);
+    for (name, p) in [("balanced", &balanced), ("unbalanced", &unbalanced)] {
+        let m = model_perf(z, p);
+        let r = simulate(&SimConfig {
+            point: p.clone(),
+            device: *z,
+            inferences: 48,
+            arrival_interval: None,
+            rewind: true,
+            overlap: true,
+        });
+        t.row(&[
+            name.into(),
+            m.dsp_model.to_string(),
+            format!("{:.1}", r.steady_ii),
+            m.per_layer[0].ii.to_string(),
+            m.per_layer[1].ii.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nthe unbalanced design spends comparable DSPs but its system II is set\n\
+         by the starved layer (Fig. 1); balancing equalizes layer IIs (Fig. 4)."
+    );
+}

@@ -1,0 +1,35 @@
+//! Bench target: regenerate **Fig. 10** — initiation intervals and DSP
+//! counts of the small autoencoder on the Zynq 7045 as the reuse factor
+//! R_h sweeps 1..10 (balanced R_x per Eq. 7), cross-checked by the cycle
+//! simulator.
+//!
+//! Run: `cargo bench --bench fig10_sweep`
+
+use gwlstm::report::{fig10_rows, render_fig10};
+use gwlstm::util::bench::Bench;
+
+fn main() {
+    println!("=== Fig. 10: II and DSPs vs R_h (small model, Zynq 7045, TS=8) ===\n");
+    render_fig10().print();
+
+    println!("\n--- CSV (rh,rx,dsp,ii_model,ii_sim) ---");
+    for (rh, rx, dsp, ii, sim_ii) in fig10_rows() {
+        println!("{rh},{rx},{dsp},{ii},{sim_ii:.1}");
+    }
+
+    let rows = fig10_rows();
+    let first = &rows[0];
+    let fits_at = rows.iter().find(|r| r.2 <= 900);
+    println!(
+        "\nat R_h=1 the balanced design needs {} DSPs; the first R_h fitting the\n\
+         Zynq's 900 DSPs is R_h={} — the paper's trade-off: 'one can choose\n\
+         between using less resources but increasing latency and vice versa'",
+        first.2,
+        fits_at.map_or(0, |r| r.0)
+    );
+
+    println!("\n--- timing ---");
+    Bench::new("full fig10 sweep (10 designs + sims)").iters(30).run(|| {
+        let _ = fig10_rows();
+    });
+}

@@ -1,0 +1,51 @@
+//! Bench target: regenerate **Fig. 8** — the (DSP, II) Pareto frontier of a
+//! single LSTM layer (Lx = Lh = 32), naive `R_x = R_h` family vs the
+//! balanced family of Eq. 7. Emits the series as CSV for plotting.
+//!
+//! Run: `cargo bench --bench fig8_pareto`
+
+use gwlstm::hls::pareto::{frontier, max_saving_same_ii};
+use gwlstm::report::{fig8_series, render_fig8};
+use gwlstm::util::bench::Bench;
+
+fn main() {
+    println!("=== Fig. 8: Pareto frontier, naive vs balanced II ===\n");
+    render_fig8().print();
+
+    let (naive, balanced) = fig8_series();
+    println!("\n--- CSV (family,rh,rx,dsp,ii) ---");
+    for p in &naive {
+        println!("naive,{},{},{},{}", p.rh, p.rx, p.dsp, p.ii);
+    }
+    for p in &balanced {
+        println!("balanced,{},{},{},{}", p.rh, p.rx, p.dsp, p.ii);
+    }
+
+    let mut all = naive.clone();
+    all.extend(balanced.iter().cloned());
+    let front = frontier(&all);
+    let balanced_on_front = front.iter().filter(|p| p.rx != p.rh).count();
+    println!(
+        "\nfrontier: {} points, {} from the balanced family — balancing moves\n\
+         the frontier (paper: red line -> blue line); max same-II DSP saving {:.0}%",
+        front.len(),
+        balanced_on_front,
+        100.0 * max_saving_same_ii(&naive, &balanced)
+    );
+    // A -> C and A -> B anchors from the paper's narrative
+    let a = &naive[0];
+    let c = &balanced[0];
+    println!(
+        "A(naive r=1: {} DSP, II {}) -> C(balanced rh=1: {} DSP, II {}): same II, {:.0}% fewer DSPs",
+        a.dsp,
+        a.ii,
+        c.dsp,
+        c.ii,
+        100.0 * (1.0 - c.dsp as f64 / a.dsp as f64)
+    );
+
+    println!("\n--- timing ---");
+    Bench::new("full fig8 sweep (20 design points)").iters(100).run(|| {
+        let _ = fig8_series();
+    });
+}

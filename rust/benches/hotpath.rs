@@ -1,0 +1,135 @@
+//! Bench target: hot-path microbenchmarks — the §Perf iteration harness.
+//!
+//! Covers every layer the perf pass optimizes:
+//!   L3 rust: PJRT inference (small + nominal), pure-rust f32 forward,
+//!            fixed-point forward, cycle-simulator throughput, DSE speed,
+//!            window generation (FFT + filters), router dispatch.
+//!
+//! Run: `make artifacts && cargo bench --bench hotpath`
+
+use gwlstm::config::Manifest;
+use gwlstm::coordinator::router::{Job, Router};
+use gwlstm::gw::dataset::{StrainStream, DEFAULT_SNR};
+use gwlstm::gw::fft::Plan;
+use gwlstm::gw::psd::colored_noise;
+use gwlstm::hls::device::Device;
+use gwlstm::hls::dse::partition_model;
+use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
+use gwlstm::model::{forward_f32, AutoencoderWeights, FixedAutoencoder};
+use gwlstm::runtime::Engine;
+use gwlstm::sim::{simulate, SimConfig};
+use gwlstm::util::bench::Bench;
+use gwlstm::util::rng::Rng;
+
+fn main() {
+    // ---- simulator & DSE (no artifacts needed) ----
+    let u250 = Device::by_name("u250").unwrap();
+    let point = DesignPoint::nominal_autoencoder(9, 1, 8);
+    let st = Bench::new("cycle-sim: nominal x128 inferences")
+        .iters(50)
+        .run(|| {
+            let r = simulate(&SimConfig {
+                point: point.clone(),
+                device: *u250,
+                inferences: 128,
+                arrival_interval: None,
+                rewind: true,
+                overlap: true,
+            });
+            std::hint::black_box(r.makespan);
+        });
+    // simulated-cycles per wall-second (the §Perf L3 target metric)
+    let sim_cycles = {
+        let r = simulate(&SimConfig {
+            point: point.clone(),
+            device: *u250,
+            inferences: 128,
+            arrival_interval: None,
+            rewind: true,
+            overlap: true,
+        });
+        r.makespan as f64
+    };
+    println!(
+        "  -> simulator speed: {:.1} M simulated cycles / s",
+        sim_cycles / (st.median_ns / 1e9) / 1e6
+    );
+
+    let layers = vec![
+        LayerDims::new(1, 32),
+        LayerDims::new(32, 8),
+        LayerDims::new(8, 8),
+        LayerDims::new(8, 32),
+    ];
+    Bench::new("DSE: partition nominal @ 2800 DSPs")
+        .iters(200)
+        .run(|| {
+            let p = partition_model(u250, &layers, 8, 1, 2_800);
+            std::hint::black_box(p.perf.dsp_model);
+        });
+
+    // ---- GW substrate ----
+    let plan = Plan::new(2048);
+    let mut rng = Rng::new(0);
+    Bench::new("gw: colored_noise 2048 samples").iters(100).run(|| {
+        std::hint::black_box(colored_noise(&mut rng, &plan, 2048.0));
+    });
+    let mut stream = StrainStream::new(1, 100, DEFAULT_SNR, 0.3);
+    Bench::new("gw: StrainStream next_window (TS=100)")
+        .iters(100)
+        .run(|| {
+            std::hint::black_box(stream.next_window());
+        });
+
+    // ---- router dispatch (queue cost only) ----
+    Bench::new("router: dispatch+drain 1024 jobs x4 workers")
+        .iters(50)
+        .run(|| {
+            let (router, queues) = Router::new(4, 512);
+            for seq in 0..1024u64 {
+                let _ = router.route(Job { seq, payload: seq });
+            }
+            router.shutdown();
+            let mut got = 0;
+            for q in &queues {
+                while q.recv().is_some() {
+                    got += 1;
+                }
+            }
+            std::hint::black_box(got);
+        });
+
+    // ---- model datapaths (artifacts required) ----
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("artifacts/ missing — model datapath benches skipped");
+        return;
+    };
+    let engine = Engine::cpu().expect("PJRT");
+    let small = engine.load_variant(&manifest, "small_ts8").expect("small");
+    let nominal = engine
+        .load_variant(&manifest, "nominal_ts100")
+        .expect("nominal");
+    let weights = AutoencoderWeights::load("artifacts/weights_nominal.json").expect("weights");
+    let fixed = FixedAutoencoder::from_weights(&weights);
+
+    let mut s8 = StrainStream::new(2, 8, DEFAULT_SNR, 0.0);
+    let w8 = s8.next_window();
+    let mut s100 = StrainStream::new(3, 100, DEFAULT_SNR, 0.0);
+    let w100 = s100.next_window();
+
+    Bench::new("PJRT: small_ts8 batch-1 infer").warmup(10).iters(200).run(|| {
+        std::hint::black_box(small.infer(&w8.samples).unwrap());
+    });
+    Bench::new("PJRT: nominal_ts100 batch-1 infer")
+        .warmup(10)
+        .iters(100)
+        .run(|| {
+            std::hint::black_box(nominal.infer(&w100.samples).unwrap());
+        });
+    Bench::new("rust f32: nominal_ts100 forward").iters(100).run(|| {
+        std::hint::black_box(forward_f32(&weights, &w100.samples));
+    });
+    Bench::new("rust q16: nominal_ts100 forward").iters(100).run(|| {
+        std::hint::black_box(fixed.forward(&w100.samples));
+    });
+}

@@ -1,0 +1,50 @@
+//! Bench target: regenerate **Table II** (the six FPGA design points) and
+//! time the evaluation machinery (analytical model + 32-inference cycle
+//! simulation per design).
+//!
+//! Run: `cargo bench --bench table2_designs`
+
+use gwlstm::report::{evaluate_design, render_table2, table2_designs};
+use gwlstm::util::bench::Bench;
+
+fn main() {
+    println!("=== Table II: FPGA design points (paper vs model vs simulator) ===\n");
+    render_table2().print();
+
+    println!("\n--- headline checks ---");
+    let designs = table2_designs();
+    let z1 = evaluate_design(&designs[0]);
+    let z3 = evaluate_design(&designs[2]);
+    println!(
+        "Z1 -> Z3: same II ({} == {}), DSPs {} -> {} ({:.0}% saved), fits Zynq: {} -> {}",
+        z1.perf.ii_sys,
+        z3.perf.ii_sys,
+        z1.perf.dsp_model,
+        z3.perf.dsp_model,
+        100.0 * (1.0 - z3.perf.dsp_model as f64 / z1.perf.dsp_model as f64),
+        z1.perf.dsp_model <= 900,
+        z3.perf.dsp_model <= 900,
+    );
+    let u1 = evaluate_design(&designs[3]);
+    let u2 = evaluate_design(&designs[4]);
+    let u3 = evaluate_design(&designs[5]);
+    println!(
+        "U1 -> U2: same II, {} DSPs saved (paper: 2102)",
+        u1.perf.dsp_model - u2.perf.dsp_model
+    );
+    println!(
+        "U3 vs U2/U1: {:.1}x / {:.1}x fewer DSPs (paper: 3.3x / 4.1x)",
+        u2.perf.dsp_model as f64 / u3.perf.dsp_model as f64,
+        u1.perf.dsp_model as f64 / u3.perf.dsp_model as f64
+    );
+
+    println!("\n--- timing ---");
+    for d in &designs {
+        Bench::new(&format!("evaluate {}", d.label))
+            .warmup(2)
+            .iters(20)
+            .run(|| {
+                let _ = evaluate_design(d);
+            });
+    }
+}

@@ -1,0 +1,59 @@
+//! Bench target: regenerate **Table IV** — comparison with prior published
+//! FPGA LSTM designs, with our designs executed by the cycle simulator.
+//!
+//! Run: `cargo bench --bench table4_prior_work`
+
+use gwlstm::hls::device::Device;
+use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
+use gwlstm::hls::prior_work::PRIOR;
+use gwlstm::report::render_table4;
+use gwlstm::sim::{simulate, SimConfig};
+use gwlstm::util::bench::Bench;
+
+fn main() {
+    println!("=== Table IV: vs prior FPGA-based LSTM designs ===\n");
+    render_table4().print();
+
+    // headline speedups from our *simulated* latencies
+    let u = Device::by_name("u250").unwrap();
+    let single = DesignPoint {
+        layers: vec![LayerDims::new(32, 32)],
+        rx: vec![9],
+        rh: vec![1],
+        ts: 8,
+        dense_out: 0,
+    };
+    let four = DesignPoint::nominal_autoencoder(9, 1, 8);
+    let lat = |p: &DesignPoint| {
+        let s = simulate(&SimConfig {
+            point: p.clone(),
+            device: *u,
+            inferences: 1,
+            arrival_interval: None,
+            rewind: true,
+            overlap: true,
+        });
+        u.cycles_to_us(s.latencies[0])
+    };
+    let (l1, l4) = (lat(&single), lat(&four));
+    println!("\n--- headline speedups (simulated) ---");
+    println!(
+        "vs [28] {:.2} us: single-layer {:.2}x (paper 12.4x), four-layer {:.2}x (paper 4.92x)",
+        PRIOR[0].latency_us,
+        PRIOR[0].latency_us / l1,
+        PRIOR[0].latency_us / l4
+    );
+    println!(
+        "vs [27] {:.2} us: single-layer {:.2}x (paper 3.9x)",
+        PRIOR[1].latency_us,
+        PRIOR[1].latency_us / l1
+    );
+
+    println!("\n--- timing ---");
+    Bench::new("simulate single-layer design").iters(50).run(|| {
+        let _ = lat(&single);
+    });
+    Bench::new("simulate four-layer design").iters(50).run(|| {
+        let _ = lat(&four);
+    });
+}

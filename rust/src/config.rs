@@ -1,0 +1,260 @@
+//! Run configuration: artifact manifest + model/run specs.
+//!
+//! The serving system is configured from two JSON sources:
+//! * `artifacts/manifest.json` (written by `aot.py`) — which AOT model
+//!   variants exist, their shapes and golden-vector files;
+//! * an optional user run-config (`--config run.json`) overriding serving
+//!   parameters (model choice, FPR target, stream SNR, batching policy).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+/// One AOT model variant from the manifest.
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub arch: String,
+    pub ts: usize,
+    pub d_in: usize,
+    /// Path to the HLO text file, relative to the artifacts dir.
+    pub hlo: String,
+    /// Path to the golden input/output vector file.
+    pub golden: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub variants: Vec<VariantSpec>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Manifest> {
+        let path = format!("{artifacts_dir}/manifest.json");
+        let v = Value::from_file(&path).with_context(|| "loading manifest (run `make artifacts` first)")?;
+        let mut variants = Vec::new();
+        for m in v.get("variants")?.as_arr()? {
+            variants.push(VariantSpec {
+                name: m.get("name")?.as_str()?.to_string(),
+                arch: m.get("arch")?.as_str()?.to_string(),
+                ts: m.get("ts")?.as_usize()?,
+                d_in: m.get("d_in")?.as_usize()?,
+                hlo: m.get("hlo")?.as_str()?.to_string(),
+                golden: m.get("golden")?.as_str()?.to_string(),
+            });
+        }
+        Ok(Manifest {
+            dir: artifacts_dir.to_string(),
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "model variant {name:?} not in manifest (have: {})",
+                    self.variants
+                        .iter()
+                        .map(|v| v.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, v: &VariantSpec) -> String {
+        format!("{}/{}", self.dir, v.hlo)
+    }
+
+    pub fn golden_path(&self, v: &VariantSpec) -> String {
+        format!("{}/{}", self.dir, v.golden)
+    }
+}
+
+/// Serving configuration (defaults + JSON override).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Model variant name (manifest key).
+    pub model: String,
+    /// Target false-positive rate for threshold calibration.
+    pub target_fpr: f64,
+    /// Background windows used for calibration.
+    pub calib_windows: usize,
+    /// Injection probability of the synthetic stream.
+    pub inject_prob: f64,
+    /// Injection SNR.
+    pub snr: f64,
+    /// Windows to serve (0 = unbounded).
+    pub max_windows: usize,
+    /// Worker threads executing inference.
+    pub workers: usize,
+    /// Bounded queue depth between stream and workers (backpressure).
+    pub queue_depth: usize,
+    /// Producer pacing in microseconds between windows (0 = stress mode,
+    /// admit as fast as the stream synthesizes). A real detector feed has a
+    /// fixed cadence; pacing reproduces that and keeps queueing delay out
+    /// of the latency measurement (see EXPERIMENTS.md §Perf).
+    pub pace_us: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "nominal_ts100".to_string(),
+            target_fpr: 0.01,
+            calib_windows: 256,
+            inject_prob: 0.25,
+            snr: crate::gw::dataset::DEFAULT_SNR,
+            max_windows: 2_000,
+            workers: 1,
+            queue_depth: 64,
+            pace_us: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply overrides from a JSON object (unknown keys rejected).
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (k, val) in v.as_obj()? {
+            match k.as_str() {
+                "model" => self.model = val.as_str()?.to_string(),
+                "target_fpr" => self.target_fpr = val.as_f64()?,
+                "calib_windows" => self.calib_windows = val.as_usize()?,
+                "inject_prob" => self.inject_prob = val.as_f64()?,
+                "snr" => self.snr = val.as_f64()?,
+                "max_windows" => self.max_windows = val.as_usize()?,
+                "workers" => self.workers = val.as_usize()?,
+                "queue_depth" => self.queue_depth = val.as_usize()?,
+                "pace_us" => self.pace_us = val.as_usize()? as u64,
+                other => return Err(anyhow!("unknown serve-config key {other:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn from_file(path: &str) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Value::from_file(path)?)?;
+        Ok(cfg)
+    }
+}
+
+/// Load the exported evaluation set (`testset.bin` + `testset_meta.json`,
+/// written by `aot.export_testset`): f32-LE windows + labels.
+pub fn load_testset(artifacts_dir: &str) -> Result<(Vec<Vec<f32>>, Vec<u8>)> {
+    let meta = Value::from_file(&format!("{artifacts_dir}/testset_meta.json"))?;
+    let n_events = meta.get("n_events")?.as_usize()?;
+    let ts = meta.get("ts")?.as_usize()?;
+    let d_in = meta.get("d_in")?.as_usize()?;
+    let labels: Vec<u8> = meta
+        .get("labels")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_usize().map(|u| u as u8))
+        .collect::<Result<_>>()?;
+    let bytes = std::fs::read(format!("{artifacts_dir}/testset.bin"))?;
+    let want = n_events * ts * d_in * 4;
+    if bytes.len() != want {
+        return Err(anyhow!(
+            "testset.bin is {} bytes, expected {want} ({n_events}x{ts}x{d_in} f32)",
+            bytes.len()
+        ));
+    }
+    let per = ts * d_in;
+    let mut windows = Vec::with_capacity(n_events);
+    for e in 0..n_events {
+        let mut w = Vec::with_capacity(per);
+        for i in 0..per {
+            let off = (e * per + i) * 4;
+            w.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+        }
+        windows.push(w);
+    }
+    Ok((windows, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_testset_roundtrip() {
+        let dir = std::env::temp_dir().join("gwlstm_testset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = dir.to_str().unwrap();
+        // 2 events x ts=3 x d_in=1
+        let data: Vec<f32> = vec![1.0, -2.0, 0.5, 4.0, 5.0, -6.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(format!("{d}/testset.bin"), bytes).unwrap();
+        std::fs::write(
+            format!("{d}/testset_meta.json"),
+            r#"{"n_events": 2, "ts": 3, "d_in": 1, "dtype": "f32le", "labels": [0, 1]}"#,
+        )
+        .unwrap();
+        let (w, l) = load_testset(d).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], vec![1.0, -2.0, 0.5]);
+        assert_eq!(w[1], vec![4.0, 5.0, -6.0]);
+        assert_eq!(l, vec![0, 1]);
+    }
+
+    #[test]
+    fn load_testset_size_guard() {
+        let dir = std::env::temp_dir().join("gwlstm_testset_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = dir.to_str().unwrap();
+        std::fs::write(format!("{d}/testset.bin"), [0u8; 7]).unwrap();
+        std::fs::write(
+            format!("{d}/testset_meta.json"),
+            r#"{"n_events": 1, "ts": 3, "d_in": 1, "dtype": "f32le", "labels": [0]}"#,
+        )
+        .unwrap();
+        assert!(load_testset(d).is_err());
+    }
+
+    #[test]
+    fn serve_config_overrides() {
+        let mut cfg = ServeConfig::default();
+        let v = Value::parse(r#"{"model": "small_ts8", "target_fpr": 0.05, "workers": 2}"#).unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.model, "small_ts8");
+        assert_eq!(cfg.target_fpr, 0.05);
+        assert_eq!(cfg.workers, 2);
+        // untouched fields keep defaults
+        assert_eq!(cfg.calib_windows, 256);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = ServeConfig::default();
+        let v = Value::parse(r#"{"modle": "typo"}"#).unwrap();
+        assert!(cfg.apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn manifest_parse_inline() {
+        // emulate a manifest file without touching artifacts/
+        let dir = std::env::temp_dir().join("gwlstm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"variants": [{"name": "m1", "arch": "small", "ts": 8, "d_in": 1,
+                 "hlo": "m1.hlo.txt", "golden": "vectors_m1.json",
+                 "input_shape": [8, 1], "output_shape": [8, 1]}],
+                "generated_unix": 0}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        let v = m.variant("m1").unwrap();
+        assert_eq!(v.ts, 8);
+        assert!(m.hlo_path(v).ends_with("m1.hlo.txt"));
+        assert!(m.variant("nope").is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Dispatch batching policy.
+//!
+//! The paper serves batch = 1: "We are processing each inference
+//! sequentially (batch 1) since requests need to be processed as soon as
+//! they arrive", and argues batching (used by [30]-[33]) trades latency for
+//! throughput. Both policies are implemented so the e2e bench can reproduce
+//! that trade-off:
+//!
+//! * [`Policy::Immediate`] — every window dispatches alone (the paper's
+//!   mode; minimal latency).
+//! * [`Policy::MicroBatch`] — collect up to `max_batch` windows or until
+//!   `max_wait` elapses, then dispatch together (amortizes dispatch
+//!   overhead, adds queueing latency).
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Immediate,
+    MicroBatch {
+        max_batch: usize,
+        max_wait: Duration,
+    },
+}
+
+/// A window queued for dispatch.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued: Instant,
+}
+
+/// Accumulates pending work and decides when a batch is ready.
+pub struct Batcher<T> {
+    policy: Policy,
+    queue: Vec<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: Policy) -> Batcher<T> {
+        Batcher {
+            policy,
+            queue: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push(Pending {
+            item,
+            enqueued: Instant::now(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Take a ready batch, if any. `now` is injected for testability.
+    pub fn take_ready(&mut self, now: Instant) -> Option<Vec<Pending<T>>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        match self.policy {
+            Policy::Immediate => Some(self.queue.drain(..).collect()),
+            Policy::MicroBatch {
+                max_batch,
+                max_wait,
+            } => {
+                let oldest = self.queue[0].enqueued;
+                if self.queue.len() >= max_batch || now.duration_since(oldest) >= max_wait {
+                    let take = self.queue.len().min(max_batch);
+                    Some(self.queue.drain(..take).collect())
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn immediate_dispatches_every_item() {
+        let mut b = Batcher::new(Policy::Immediate);
+        b.push(1);
+        b.push(2);
+        let batch = b.take_ready(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.is_empty());
+        assert!(b.take_ready(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn microbatch_waits_for_fill() {
+        let mut b = Batcher::new(Policy::MicroBatch {
+            max_batch: 3,
+            max_wait: Duration::from_secs(3600),
+        });
+        b.push(1);
+        b.push(2);
+        assert!(b.take_ready(Instant::now()).is_none(), "not full, not timed out");
+        b.push(3);
+        let batch = b.take_ready(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn microbatch_flushes_on_deadline() {
+        let mut b = Batcher::new(Policy::MicroBatch {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(42);
+        let later = Instant::now() + Duration::from_millis(5);
+        let batch = b.take_ready(later).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].item, 42);
+    }
+
+    #[test]
+    fn microbatch_caps_batch_size() {
+        let mut b = Batcher::new(Policy::MicroBatch {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+        });
+        for i in 0..5 {
+            b.push(i);
+        }
+        let batch = b.take_ready(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+}

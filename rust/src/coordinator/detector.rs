@@ -1,0 +1,139 @@
+//! Anomaly decision stage: threshold calibration + flagging.
+//!
+//! Paper Section V-B: the operating threshold is set by fixing a false-
+//! positive rate on *noise-only* events; the TPR then follows. The detector
+//! owns that calibrated threshold and classifies scored windows.
+
+use crate::eval::roc::calibrate_threshold;
+
+/// Calibrated anomaly detector.
+#[derive(Debug, Clone)]
+pub struct Detector {
+    pub threshold: f64,
+    pub target_fpr: f64,
+}
+
+/// Outcome for one served window.
+#[derive(Debug, Clone, Copy)]
+pub struct Detection {
+    pub seq: u64,
+    pub score: f64,
+    pub flagged: bool,
+    /// Ground-truth label when known (synthetic streams carry it).
+    pub label: Option<u8>,
+}
+
+impl Detector {
+    /// Calibrate from background-only scores at `target_fpr`.
+    pub fn calibrate(background_scores: &[f64], target_fpr: f64) -> Detector {
+        Detector {
+            threshold: calibrate_threshold(background_scores, target_fpr),
+            target_fpr,
+        }
+    }
+
+    #[inline]
+    pub fn classify(&self, seq: u64, score: f64, label: Option<u8>) -> Detection {
+        Detection {
+            seq,
+            score,
+            flagged: score >= self.threshold,
+            label,
+        }
+    }
+}
+
+/// Aggregate detection quality over a run (computed by the leader at the
+/// end; not on the hot path).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DetectionSummary {
+    pub n: usize,
+    pub true_pos: usize,
+    pub false_pos: usize,
+    pub true_neg: usize,
+    pub false_neg: usize,
+}
+
+impl DetectionSummary {
+    pub fn from_detections(ds: &[Detection]) -> DetectionSummary {
+        let mut s = DetectionSummary {
+            n: ds.len(),
+            ..Default::default()
+        };
+        for d in ds {
+            match (d.flagged, d.label) {
+                (true, Some(1)) => s.true_pos += 1,
+                (true, Some(0)) => s.false_pos += 1,
+                (false, Some(0)) => s.true_neg += 1,
+                (false, Some(1)) => s.false_neg += 1,
+                _ => {}
+            }
+        }
+        s
+    }
+
+    pub fn tpr(&self) -> f64 {
+        let p = self.true_pos + self.false_neg;
+        if p == 0 {
+            f64::NAN
+        } else {
+            self.true_pos as f64 / p as f64
+        }
+    }
+
+    pub fn fpr(&self) -> f64 {
+        let n = self.false_pos + self.true_neg;
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.false_pos as f64 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn calibration_respects_fpr() {
+        let mut rng = Rng::new(0);
+        let bg: Vec<f64> = (0..5000).map(|_| rng.gaussian().abs()).collect();
+        let det = Detector::calibrate(&bg, 0.02);
+        let fp = bg.iter().filter(|&&s| s >= det.threshold).count();
+        assert!(fp as f64 / bg.len() as f64 <= 0.025);
+    }
+
+    #[test]
+    fn classify_flags_above_threshold() {
+        let det = Detector {
+            threshold: 1.0,
+            target_fpr: 0.01,
+        };
+        assert!(det.classify(0, 1.5, None).flagged);
+        assert!(!det.classify(1, 0.5, None).flagged);
+        assert!(det.classify(2, 1.0, None).flagged); // inclusive
+    }
+
+    #[test]
+    fn summary_counts() {
+        let det = Detector {
+            threshold: 0.5,
+            target_fpr: 0.1,
+        };
+        let ds = vec![
+            det.classify(0, 0.9, Some(1)), // TP
+            det.classify(1, 0.9, Some(0)), // FP
+            det.classify(2, 0.1, Some(0)), // TN
+            det.classify(3, 0.1, Some(1)), // FN
+        ];
+        let s = DetectionSummary::from_detections(&ds);
+        assert_eq!(
+            (s.true_pos, s.false_pos, s.true_neg, s.false_neg),
+            (1, 1, 1, 1)
+        );
+        assert!((s.tpr() - 0.5).abs() < 1e-12);
+        assert!((s.fpr() - 0.5).abs() < 1e-12);
+    }
+}

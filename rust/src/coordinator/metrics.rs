@@ -1,0 +1,175 @@
+//! Serving metrics: log-bucketed latency histogram + throughput counters.
+//!
+//! Lock-free on the hot path (atomics only); snapshots are taken by the
+//! reporting thread. Buckets are powers of sqrt(2) over [1 us, ~4 s], which
+//! gives < 5% quantile error — plenty for p50/p99 reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+const BUCKETS: usize = 64;
+
+/// Latency histogram in nanoseconds.
+pub struct LatencyHistogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+    n: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+fn bucket_of(ns: u64) -> usize {
+    // bucket = log_sqrt2(ns / 1000), clamped
+    if ns < 1_000 {
+        return 0;
+    }
+    let x = (ns as f64 / 1_000.0).log2() * 2.0;
+    (x as usize).min(BUCKETS - 1)
+}
+
+fn bucket_upper_ns(b: usize) -> f64 {
+    1_000.0 * 2f64.powf((b + 1) as f64 / 2.0)
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let n = self.n.load(Ordering::Relaxed);
+        let quantile = |q: f64| -> f64 {
+            if n == 0 {
+                return 0.0;
+            }
+            let target = (q * n as f64).ceil() as u64;
+            let mut acc = 0;
+            for (b, &c) in counts.iter().enumerate() {
+                acc += c;
+                if acc >= target {
+                    return bucket_upper_ns(b);
+                }
+            }
+            bucket_upper_ns(BUCKETS - 1)
+        };
+        LatencySnapshot {
+            n,
+            mean_ns: if n == 0 {
+                0.0
+            } else {
+                self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+            },
+            p50_ns: quantile(0.50),
+            p99_ns: quantile(0.99),
+            max_ns: self.max_ns.load(Ordering::Relaxed) as f64,
+        }
+    }
+}
+
+/// Point-in-time view of a histogram.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySnapshot {
+    pub n: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub max_ns: f64,
+}
+
+/// Whole-server metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    /// End-to-end (enqueue -> scored) latency.
+    pub e2e: LatencyHistogram,
+    /// Pure inference (execute call) latency.
+    pub infer: LatencyHistogram,
+    pub windows_in: AtomicU64,
+    pub windows_done: AtomicU64,
+    pub flagged: AtomicU64,
+    pub dropped: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn throughput_per_s(&self, since: Instant) -> f64 {
+        let secs = since.elapsed().as_secs_f64().max(1e-9);
+        self.windows_done.load(Ordering::Relaxed) as f64 / secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_monotone() {
+        let mut last = 0;
+        for ns in [500u64, 1_500, 10_000, 100_000, 1_000_000, 500_000_000] {
+            let b = bucket_of(ns);
+            assert!(b >= last);
+            last = b;
+        }
+    }
+
+    #[test]
+    fn quantiles_reasonable() {
+        let h = LatencyHistogram::new();
+        // 99 fast + 1 slow
+        for _ in 0..99 {
+            h.record_ns(10_000);
+        }
+        h.record_ns(10_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.n, 100);
+        assert!(s.p50_ns < 20_000.0, "p50 {}", s.p50_ns);
+        assert!(s.p99_ns >= 10_000.0);
+        assert!(s.max_ns == 10_000_000.0);
+        // mean dominated by the outlier: ~110 us
+        assert!((100_000.0..130_000.0).contains(&s.mean_ns), "{}", s.mean_ns);
+    }
+
+    #[test]
+    fn quantile_error_bounded() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1_000);
+        }
+        let s = h.snapshot();
+        // p50 true = 500 us; bucketed estimate within a bucket (x sqrt2)
+        assert!((350_000.0..750_000.0).contains(&s.p50_ns), "p50 {}", s.p50_ns);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let h = LatencyHistogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean_ns, 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 serving coordinator: real-time anomaly detection on the strain feed.
+//!
+//! The paper's motivating deployment — "accelerating RNN inference ... would
+//! enable sophisticated processing, such as anomaly detection, to run in
+//! real time on the data stream from the detector" — realized as a
+//! thread-per-stage pipeline with bounded queues:
+//!
+//! * [`router`]   — least-outstanding dispatch over bounded worker queues
+//!   (backpressure sheds stale windows instead of buffering a live feed).
+//! * [`batcher`]  — batch-1 immediate dispatch (the paper's latency mode)
+//!   plus a micro-batching policy for the latency/throughput ablation.
+//! * [`detector`] — FPR-calibrated thresholding (paper Section V-B).
+//! * [`metrics`]  — lock-free latency histograms + counters.
+//! * [`server`]   — the leader wiring everything to the PJRT runtime.
+
+pub mod batcher;
+pub mod detector;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::Policy;
+pub use detector::{Detection, DetectionSummary, Detector};
+pub use server::{run_serving, run_serving_with_policy, ServeReport};

@@ -1,0 +1,254 @@
+//! The serving leader: stream -> router -> PJRT workers -> detector.
+//!
+//! Thread topology (all std threads; the AOT executable is the only
+//! compute, so the paper's "python never on the request path" holds — the
+//! leader is pure rust):
+//!
+//! ```text
+//!   [producer]  synthetic StrainStream (or replayed testset)
+//!       |  bounded queues (backpressure: real-time feeds drop, not buffer)
+//!   [worker x N]  own PJRT engine each; score = reconstruction MSE
+//!       |  collector channel
+//!   [leader]  detector (FPR-calibrated threshold), metrics, AUC report
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::batcher::{Batcher, Policy};
+use super::detector::{Detection, DetectionSummary, Detector};
+use super::metrics::{LatencySnapshot, Metrics};
+use super::router::{Job, RouteResult, Router};
+use crate::config::{Manifest, ServeConfig};
+use crate::eval::roc::auc;
+use crate::gw::dataset::StrainStream;
+use crate::runtime::Engine;
+
+/// One unit of work travelling leader -> worker.
+struct WorkItem {
+    samples: Vec<f32>,
+    label: u8,
+    enqueued: Instant,
+}
+
+/// Scored result travelling worker -> leader.
+struct Scored {
+    seq: u64,
+    label: u8,
+    score: f64,
+    enqueued: Instant,
+    infer_ns: u64,
+}
+
+/// Final serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub model: String,
+    pub platform: String,
+    pub windows: usize,
+    pub dropped: u64,
+    pub threshold: f64,
+    pub auc: f64,
+    pub summary: DetectionSummary,
+    pub e2e: LatencySnapshot,
+    pub infer: LatencySnapshot,
+    pub throughput_per_s: f64,
+    pub compile_ms: f64,
+}
+
+impl ServeReport {
+    pub fn print(&self) {
+        println!("=== gwlstm serving report ===");
+        println!("model          : {} on {}", self.model, self.platform);
+        println!("windows served : {} (dropped {})", self.windows, self.dropped);
+        println!("threshold      : {:.6} (target FPR calibrated)", self.threshold);
+        println!("AUC            : {:.4}", self.auc);
+        println!(
+            "TPR / FPR      : {:.3} / {:.3}",
+            self.summary.tpr(),
+            self.summary.fpr()
+        );
+        println!(
+            "infer latency  : p50 {:.1} us, p99 {:.1} us, mean {:.1} us",
+            self.infer.p50_ns / 1e3,
+            self.infer.p99_ns / 1e3,
+            self.infer.mean_ns / 1e3
+        );
+        println!(
+            "e2e latency    : p50 {:.1} us, p99 {:.1} us",
+            self.e2e.p50_ns / 1e3,
+            self.e2e.p99_ns / 1e3
+        );
+        println!("throughput     : {:.0} windows/s", self.throughput_per_s);
+        println!("compile (once) : {:.0} ms", self.compile_ms);
+    }
+}
+
+/// Run the full serving pipeline on the synthetic live stream.
+pub fn run_serving(manifest: &Manifest, cfg: &ServeConfig) -> Result<ServeReport> {
+    run_serving_with_policy(manifest, cfg, Policy::Immediate)
+}
+
+/// Same, with an explicit batching policy (the e2e bench sweeps this).
+pub fn run_serving_with_policy(
+    manifest: &Manifest,
+    cfg: &ServeConfig,
+    policy: Policy,
+) -> Result<ServeReport> {
+    let metrics = Arc::new(Metrics::new());
+    let spec = manifest.variant(&cfg.model)?.clone();
+    let ts = spec.ts;
+
+    // ---- calibration (leader-side, before serving starts) ----
+    let engine = Engine::cpu()?;
+    let platform = engine.platform();
+    let executor = engine.load_variant(manifest, &cfg.model)?;
+    let compile_ms = executor.compile_ms;
+    let mut calib_stream = StrainStream::new(0xCA11B, ts, cfg.snr, 0.0);
+    let mut bg_scores = Vec::with_capacity(cfg.calib_windows);
+    for _ in 0..cfg.calib_windows {
+        let w = calib_stream.next_window();
+        bg_scores.push(executor.score(&w.samples)? as f64);
+    }
+    let detector = Detector::calibrate(&bg_scores, cfg.target_fpr);
+
+    // ---- topology ----
+    let n_workers = cfg.workers.max(1);
+    let (router, queues) = Router::<WorkItem>::new(n_workers, cfg.queue_depth);
+    let (result_tx, result_rx) = channel::<Scored>();
+    // Readiness barrier: workers compile their executable (hundreds of ms)
+    // before the producer is allowed to admit traffic — otherwise the
+    // bounded queues shed the entire warmup burst.
+    let ready = Arc::new(std::sync::Barrier::new(n_workers + 1));
+
+    let mut worker_handles = Vec::new();
+    for q in queues {
+        let tx = result_tx.clone();
+        let m = metrics.clone();
+        let manifest_dir = manifest.dir.clone();
+        let model = cfg.model.clone();
+        let ready = ready.clone();
+        worker_handles.push(std::thread::spawn(move || -> Result<()> {
+            // Each worker owns its engine/executable (PJRT handles are not
+            // shared across threads).
+            let manifest = Manifest::load(&manifest_dir)?;
+            let engine = Engine::cpu()?;
+            let exe = engine.load_variant(&manifest, &model)?;
+            ready.wait();
+            while let Some(job) = q.recv() {
+                let t0 = Instant::now();
+                let score = exe.score(&job.payload.samples)? as f64;
+                let infer_ns = t0.elapsed().as_nanos() as u64;
+                m.infer.record_ns(infer_ns);
+                let _ = tx.send(Scored {
+                    seq: job.seq,
+                    label: job.payload.label,
+                    score,
+                    enqueued: job.payload.enqueued,
+                    infer_ns,
+                });
+            }
+            Ok(())
+        }));
+    }
+    drop(result_tx);
+
+    // ---- producer ----
+    let max_windows = cfg.max_windows.max(1);
+    let producer_metrics = metrics.clone();
+    let snr = cfg.snr;
+    let inject_prob = cfg.inject_prob;
+    let pace = std::time::Duration::from_micros(cfg.pace_us);
+    let producer_ready = ready.clone();
+    let producer = std::thread::spawn(move || {
+        producer_ready.wait(); // admit traffic only once all workers compiled
+        let mut stream = StrainStream::new(0x57EA4, ts, snr, inject_prob);
+        let mut next_due = Instant::now();
+        let mut batcher = Batcher::new(policy);
+        let mut seq = 0u64;
+        let mut sent = 0usize;
+        while sent < max_windows {
+            if !pace.is_zero() {
+                // fixed-cadence admission (real-time detector feed)
+                let now = Instant::now();
+                if next_due > now {
+                    std::thread::sleep(next_due - now);
+                }
+                next_due += pace;
+            }
+            let w = stream.next_window();
+            producer_metrics.windows_in.fetch_add(1, Ordering::Relaxed);
+            batcher.push(WorkItem {
+                samples: w.samples,
+                label: w.label,
+                enqueued: Instant::now(),
+            });
+            if let Some(batch) = batcher.take_ready(Instant::now()) {
+                for pending in batch {
+                    if sent >= max_windows {
+                        break;
+                    }
+                    match router.route(Job {
+                        seq,
+                        payload: pending.item,
+                    }) {
+                        RouteResult::Sent(_) => {
+                            sent += 1;
+                        }
+                        RouteResult::Backpressure => {
+                            // real-time feed: shed stale work, count it
+                            producer_metrics.dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                        RouteResult::Closed => return,
+                    }
+                    seq += 1;
+                }
+            }
+        }
+        router.shutdown();
+    });
+
+    // ---- leader: collect, classify, account ----
+    let started = Instant::now();
+    let mut detections: Vec<Detection> = Vec::with_capacity(max_windows);
+    let mut scores = Vec::with_capacity(max_windows);
+    let mut labels = Vec::with_capacity(max_windows);
+    while let Ok(s) = result_rx.recv() {
+        metrics.windows_done.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .e2e
+            .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+        let det = detector.classify(s.seq, s.score, Some(s.label));
+        if det.flagged {
+            metrics.flagged.fetch_add(1, Ordering::Relaxed);
+        }
+        scores.push(s.score);
+        labels.push(s.label);
+        let _ = s.infer_ns;
+        detections.push(det);
+    }
+    let throughput = metrics.throughput_per_s(started);
+
+    producer.join().expect("producer panicked");
+    for h in worker_handles {
+        h.join().expect("worker panicked").context("worker failed")?;
+    }
+
+    Ok(ServeReport {
+        model: cfg.model.clone(),
+        platform,
+        windows: detections.len(),
+        dropped: metrics.dropped.load(Ordering::Relaxed),
+        threshold: detector.threshold,
+        auc: auc(&scores, &labels),
+        summary: DetectionSummary::from_detections(&detections),
+        e2e: metrics.e2e.snapshot(),
+        infer: metrics.infer.snapshot(),
+        throughput_per_s: throughput,
+        compile_ms,
+    })
+}

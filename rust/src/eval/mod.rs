@@ -1,0 +1,9 @@
+//! Evaluation metrics: ROC curves, AUC, threshold calibration (Fig. 9).
+//!
+//! Rust twin of `python/compile/train.py`'s metric functions — the same
+//! midrank Mann-Whitney AUC, so numbers are directly comparable between the
+//! build-time (python) and serving-time (rust) evaluations.
+
+pub mod roc;
+
+pub use roc::{auc, calibrate_threshold, roc_curve, RocPoint};

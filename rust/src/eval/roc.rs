@@ -1,0 +1,175 @@
+//! ROC / AUC / threshold machinery for anomaly scores.
+
+/// One operating point on the ROC curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RocPoint {
+    pub threshold: f64,
+    pub fpr: f64,
+    pub tpr: f64,
+}
+
+/// AUC via the rank statistic (Mann-Whitney U), midrank tie handling —
+/// identical to the python twin in `compile/train.py`.
+pub fn auc(scores: &[f64], labels: &[u8]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let mid = 0.5 * (i + j) as f64 + 1.0;
+        for k in i..=j {
+            ranks[order[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l == 1).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return f64::NAN;
+    }
+    let rank_sum: f64 = (0..n).filter(|&k| labels[k] == 1).map(|k| ranks[k]).sum();
+    let u = rank_sum - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos * n_neg) as f64
+}
+
+/// ROC curve at `n_points` score-quantile thresholds (descending
+/// thresholds -> ascending FPR), matching the python twin's construction.
+pub fn roc_curve(scores: &[f64], labels: &[u8], n_points: usize) -> Vec<RocPoint> {
+    assert_eq!(scores.len(), labels.len());
+    let mut sorted = scores.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n_pos = labels.iter().filter(|&&l| l == 1).count().max(1);
+    let n_neg = (labels.len() - labels.iter().filter(|&&l| l == 1).count()).max(1);
+    let q = |p: f64| -> f64 {
+        let idx = (p * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    };
+    (0..n_points)
+        .map(|i| {
+            // descending thresholds
+            let p = 1.0 - i as f64 / (n_points - 1).max(1) as f64;
+            let th = q(p);
+            let mut tp = 0usize;
+            let mut fp = 0usize;
+            for (s, &l) in scores.iter().zip(labels) {
+                if *s >= th {
+                    if l == 1 {
+                        tp += 1;
+                    } else {
+                        fp += 1;
+                    }
+                }
+            }
+            RocPoint {
+                threshold: th,
+                fpr: fp as f64 / n_neg as f64,
+                tpr: tp as f64 / n_pos as f64,
+            }
+        })
+        .collect()
+}
+
+/// Threshold calibration at a target false-positive rate on *background*
+/// scores (paper Section V-B: "The threshold for flagging an anomaly ...
+/// can be calculated by setting a false positive rate on noise events").
+pub fn calibrate_threshold(background_scores: &[f64], target_fpr: f64) -> f64 {
+    assert!(!background_scores.is_empty());
+    let mut s = background_scores.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = (1.0 - target_fpr).clamp(0.0, 1.0);
+    let idx = (q * (s.len() - 1) as f64).ceil() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn auc_perfect() {
+        let s = [0.1, 0.2, 0.9, 1.0];
+        let l = [0, 0, 1, 1];
+        assert_eq!(auc(&s, &l), 1.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        let mut rng = Rng::new(0);
+        let n = 4000;
+        let s: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let l: Vec<u8> = (0..n).map(|i| (i % 2) as u8).collect();
+        let a = auc(&s, &l);
+        assert!((a - 0.5).abs() < 0.03, "auc {a}");
+    }
+
+    #[test]
+    fn auc_matches_bruteforce() {
+        let mut rng = Rng::new(1);
+        let n = 80;
+        let s: Vec<f64> = (0..n).map(|_| (rng.below(20) as f64) / 4.0).collect(); // with ties
+        let l: Vec<u8> = (0..n).map(|_| rng.bool(0.5) as u8).collect();
+        if l.iter().all(|&x| x == 0) || l.iter().all(|&x| x == 1) {
+            return;
+        }
+        let brute = {
+            let pos: Vec<f64> = s.iter().zip(&l).filter(|(_, &y)| y == 1).map(|(x, _)| *x).collect();
+            let neg: Vec<f64> = s.iter().zip(&l).filter(|(_, &y)| y == 0).map(|(x, _)| *x).collect();
+            let mut wins = 0.0;
+            for p in &pos {
+                for q in &neg {
+                    wins += if p > q {
+                        1.0
+                    } else if p == q {
+                        0.5
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            wins / (pos.len() * neg.len()) as f64
+        };
+        assert!((auc(&s, &l) - brute).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roc_monotone() {
+        let mut rng = Rng::new(2);
+        let n = 500;
+        let l: Vec<u8> = (0..n).map(|i| (i % 2) as u8).collect();
+        let s: Vec<f64> = l
+            .iter()
+            .map(|&y| rng.gaussian() + if y == 1 { 1.0 } else { 0.0 })
+            .collect();
+        let curve = roc_curve(&s, &l, 30);
+        for w in curve.windows(2) {
+            assert!(w[1].fpr >= w[0].fpr - 1e-12);
+            assert!(w[1].tpr >= w[0].tpr - 1e-12);
+        }
+        assert!(curve.first().unwrap().fpr <= 0.05);
+        assert!(curve.last().unwrap().fpr >= 0.95);
+    }
+
+    #[test]
+    fn threshold_hits_target_fpr() {
+        let mut rng = Rng::new(3);
+        let bg: Vec<f64> = (0..10_000).map(|_| rng.gaussian()).collect();
+        let th = calibrate_threshold(&bg, 0.01);
+        let fp = bg.iter().filter(|&&s| s >= th).count() as f64 / bg.len() as f64;
+        assert!(fp <= 0.012, "fpr {fp}");
+        assert!(fp >= 0.005, "threshold too conservative: fpr {fp}");
+    }
+
+    #[test]
+    fn threshold_extreme_fprs() {
+        let bg: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(calibrate_threshold(&bg, 0.0), 99.0);
+        assert_eq!(calibrate_threshold(&bg, 1.0), 0.0);
+    }
+}

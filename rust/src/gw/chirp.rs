@@ -1,0 +1,150 @@
+//! Compact-binary inspiral chirp waveform (Newtonian quadrupole order).
+//!
+//! Rust twin of `python/compile/data.py::inspiral_chirp` — the SEOBNRv4
+//! stand-in (DESIGN.md §2): frequency sweeps as `(tc - t)^{-3/8}`, amplitude
+//! as `f^{2/3}`, with an exponential ringdown taper after coalescence.
+
+/// G * Msun / c^3 in seconds.
+pub const G_MSUN_S: f64 = 4.925491025543576e-06;
+
+/// Parameters of one injection.
+#[derive(Debug, Clone, Copy)]
+pub struct ChirpParams {
+    /// Chirp mass in solar masses.
+    pub mchirp_msun: f64,
+    /// Coalescence time as a fraction of the segment.
+    pub t_coal_frac: f64,
+    /// Frequency at which the waveform enters the band (Hz).
+    pub f_start: f64,
+}
+
+impl Default for ChirpParams {
+    fn default() -> Self {
+        ChirpParams {
+            mchirp_msun: 28.0,
+            t_coal_frac: 0.75,
+            f_start: 35.0,
+        }
+    }
+}
+
+/// Generate `n` samples at rate `fs`, peak amplitude 1.
+pub fn inspiral_chirp(n: usize, fs: f64, p: ChirpParams) -> Vec<f64> {
+    let mc = p.mchirp_msun * G_MSUN_S;
+    let tc = p.t_coal_frac * n as f64 / fs;
+    // instantaneous frequency f(tau) = (5/(256 tau))^{3/8} mc^{-5/8} / pi
+    let mut f_t = vec![0.0f64; n];
+    for (i, f) in f_t.iter_mut().enumerate() {
+        let t = i as f64 / fs;
+        let tau = (tc - t).max(1.0 / fs);
+        *f = (5.0 / (256.0 * tau)).powf(3.0 / 8.0) * mc.powf(-5.0 / 8.0)
+            / std::f64::consts::PI;
+    }
+    let f_isco = 0.022 / mc / (2.0 * std::f64::consts::PI) * 2.0;
+    let f_cap = f_isco.max(2.0 * p.f_start);
+    for f in f_t.iter_mut() {
+        *f = f.min(f_cap);
+    }
+    // phase by trapezoid-free cumulative sum (matches numpy cumsum twin)
+    let mut phase = vec![0.0f64; n];
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += f_t[i];
+        phase[i] = 2.0 * std::f64::consts::PI * acc / fs;
+    }
+    let mut h = vec![0.0f64; n];
+    let mut last_inband: Option<usize> = None;
+    for i in 0..n {
+        let t = i as f64 / fs;
+        if t <= tc {
+            if f_t[i] >= p.f_start {
+                let amp = (f_t[i] / p.f_start).powf(2.0 / 3.0);
+                h[i] = amp * phase[i].cos();
+                last_inband = Some(i);
+            }
+        }
+    }
+    // ringdown taper after coalescence
+    if let Some(li) = last_inband {
+        let f_ring = f_t.iter().cloned().fold(0.0, f64::max);
+        let amp0 = (f_t[li] / p.f_start).powf(2.0 / 3.0);
+        let phase0 = phase[li];
+        for i in 0..n {
+            let t = i as f64 / fs;
+            if t > tc {
+                let dt = t - tc;
+                let damp = (-dt * f_ring / 3.0).exp();
+                h[i] = (2.0 * std::f64::consts::PI * f_ring * dt + phase0).cos() * damp * amp0;
+            }
+        }
+    }
+    let peak = h.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    if peak > 0.0 {
+        for v in h.iter_mut() {
+            *v /= peak;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_normalized() {
+        let h = inspiral_chirp(2048, 2048.0, ChirpParams::default());
+        let peak = h.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        assert!((peak - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn silent_before_band_entry() {
+        let h = inspiral_chirp(2048, 2048.0, ChirpParams::default());
+        assert!(h[..50].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn frequency_sweeps_up() {
+        // zero-crossing gaps must shrink toward coalescence
+        let n = 2048;
+        let h = inspiral_chirp(n, 2048.0, ChirpParams::default());
+        let active: Vec<usize> = (1..(0.74 * n as f64) as usize)
+            .filter(|&i| h[i - 1].signum() != h[i].signum() && h[i - 1] != 0.0)
+            .collect();
+        assert!(active.len() > 10, "need enough zero crossings");
+        let first: f64 =
+            active[1..4].windows(2).map(|w| (w[1] - w[0]) as f64).sum::<f64>() / 2.0;
+        let last_w = &active[active.len() - 4..];
+        let last: f64 = last_w.windows(2).map(|w| (w[1] - w[0]) as f64).sum::<f64>() / 2.0;
+        assert!(last < first, "gaps: first {first} last {last}");
+    }
+
+    #[test]
+    fn heavier_system_merges_lower() {
+        // frequency cap (ISCO) decreases with mass
+        let light = ChirpParams {
+            mchirp_msun: 15.0,
+            ..Default::default()
+        };
+        let heavy = ChirpParams {
+            mchirp_msun: 45.0,
+            ..Default::default()
+        };
+        let mc_l = light.mchirp_msun * G_MSUN_S;
+        let mc_h = heavy.mchirp_msun * G_MSUN_S;
+        let isco_l = 0.022 / mc_l;
+        let isco_h = 0.022 / mc_h;
+        assert!(isco_h < isco_l);
+    }
+
+    #[test]
+    fn ringdown_decays() {
+        let n = 2048;
+        let h = inspiral_chirp(n, 2048.0, ChirpParams::default());
+        let tc_idx = (0.75 * n as f64) as usize;
+        let early: f64 = h[tc_idx + 10..tc_idx + 40].iter().map(|v| v.abs()).sum();
+        let late: f64 = h[n - 40..n - 10].iter().map(|v| v.abs()).sum();
+        assert!(late < early * 0.5, "ringdown should decay: {early} -> {late}");
+    }
+}

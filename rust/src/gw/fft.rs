@@ -1,0 +1,263 @@
+//! From-scratch radix-2 FFT (iterative Cooley-Tukey) + real-signal helpers.
+//!
+//! The GW substrate needs forward/inverse transforms for noise synthesis,
+//! whitening and brick-wall filtering. Sizes are powers of two (the stream
+//! segmenter guarantees it), so radix-2 suffices. Plans precompute twiddles
+//! and the bit-reversal permutation; `rfft`/`irfft` pack real signals the
+//! numpy way (DC..Nyquist, length n/2+1).
+
+use std::f64::consts::PI;
+
+/// Complex number (no external crates available offline).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+
+    pub fn conj(self) -> C64 {
+        C64::new(self.re, -self.im)
+    }
+
+    pub fn scale(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
+    }
+
+    pub fn abs2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+}
+
+impl std::ops::Add for C64 {
+    type Output = C64;
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl std::ops::Sub for C64 {
+    type Output = C64;
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl std::ops::Mul for C64 {
+    type Output = C64;
+    fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+/// Precomputed FFT plan for size n (power of two).
+pub struct Plan {
+    n: usize,
+    /// Twiddles for the forward transform, w[k] = exp(-2 pi i k / n).
+    twiddle: Vec<C64>,
+    /// Bit-reversal permutation.
+    rev: Vec<u32>,
+}
+
+impl Plan {
+    pub fn new(n: usize) -> Plan {
+        assert!(n.is_power_of_two(), "FFT size must be a power of two: {n}");
+        let mut twiddle = Vec::with_capacity(n / 2);
+        for k in 0..n / 2 {
+            let ang = -2.0 * PI * k as f64 / n as f64;
+            twiddle.push(C64::new(ang.cos(), ang.sin()));
+        }
+        let bits = n.trailing_zeros();
+        let rev = (0..n as u32)
+            .map(|i| i.reverse_bits() >> (32 - bits.max(1)))
+            .collect::<Vec<_>>();
+        Plan { n, twiddle, rev }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place forward FFT.
+    pub fn fft(&self, data: &mut [C64]) {
+        assert_eq!(data.len(), self.n);
+        let n = self.n;
+        if n <= 1 {
+            return;
+        }
+        // bit-reversal reorder
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+        // butterflies
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            for start in (0..n).step_by(len) {
+                for k in 0..half {
+                    let w = self.twiddle[k * step];
+                    let a = data[start + k];
+                    let b = data[start + k + half] * w;
+                    data[start + k] = a + b;
+                    data[start + k + half] = a - b;
+                }
+            }
+            len <<= 1;
+        }
+    }
+
+    /// In-place inverse FFT (normalized by 1/n).
+    pub fn ifft(&self, data: &mut [C64]) {
+        for v in data.iter_mut() {
+            *v = v.conj();
+        }
+        self.fft(data);
+        let s = 1.0 / self.n as f64;
+        for v in data.iter_mut() {
+            *v = v.conj().scale(s);
+        }
+    }
+
+    /// Real-input FFT: returns n/2+1 bins (DC..Nyquist).
+    pub fn rfft(&self, x: &[f64]) -> Vec<C64> {
+        assert_eq!(x.len(), self.n);
+        let mut buf: Vec<C64> = x.iter().map(|&v| C64::new(v, 0.0)).collect();
+        self.fft(&mut buf);
+        buf.truncate(self.n / 2 + 1);
+        buf
+    }
+
+    /// Inverse of [`Plan::rfft`]: reconstructs the real signal from n/2+1
+    /// bins, enforcing Hermitian symmetry.
+    pub fn irfft(&self, spec: &[C64]) -> Vec<f64> {
+        assert_eq!(spec.len(), self.n / 2 + 1);
+        let n = self.n;
+        let mut full = vec![C64::default(); n];
+        full[..spec.len()].copy_from_slice(spec);
+        for k in 1..n / 2 {
+            full[n - k] = spec[k].conj();
+        }
+        // force real DC/Nyquist
+        full[0].im = 0.0;
+        full[n / 2].im = 0.0;
+        self.ifft(&mut full);
+        full.iter().map(|c| c.re).collect()
+    }
+}
+
+/// rFFT bin frequencies for sample rate `fs`.
+pub fn rfft_freqs(n: usize, fs: f64) -> Vec<f64> {
+    (0..=n / 2).map(|k| k as f64 * fs / n as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let plan = Plan::new(8);
+        let mut d = vec![C64::default(); 8];
+        d[0] = C64::new(1.0, 0.0);
+        plan.fft(&mut d);
+        for c in &d {
+            assert_close(c.re, 1.0, 1e-12);
+            assert_close(c.im, 0.0, 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_single_tone() {
+        // x[n] = cos(2 pi 3 n / 32) -> bins 3 and 29 each n/2
+        let n = 32;
+        let plan = Plan::new(n);
+        let x: Vec<C64> = (0..n)
+            .map(|i| C64::new((2.0 * PI * 3.0 * i as f64 / n as f64).cos(), 0.0))
+            .collect();
+        let mut d = x;
+        plan.fft(&mut d);
+        assert_close(d[3].re, n as f64 / 2.0, 1e-9);
+        assert_close(d[29].re, n as f64 / 2.0, 1e-9);
+        for (k, c) in d.iter().enumerate() {
+            if k != 3 && k != 29 {
+                assert!(c.abs2() < 1e-18, "leakage at bin {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn ifft_roundtrip() {
+        let mut rng = Rng::new(1);
+        let n = 256;
+        let plan = Plan::new(n);
+        let orig: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.gaussian(), rng.gaussian()))
+            .collect();
+        let mut d = orig.clone();
+        plan.fft(&mut d);
+        plan.ifft(&mut d);
+        for (a, b) in orig.iter().zip(&d) {
+            assert_close(a.re, b.re, 1e-9);
+            assert_close(a.im, b.im, 1e-9);
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip() {
+        let mut rng = Rng::new(2);
+        let n = 1024;
+        let plan = Plan::new(n);
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let spec = plan.rfft(&x);
+        assert_eq!(spec.len(), n / 2 + 1);
+        let back = plan.irfft(&spec);
+        for (a, b) in x.iter().zip(&back) {
+            assert_close(*a, *b, 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Rng::new(3);
+        let n = 512;
+        let plan = Plan::new(n);
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let time_energy: f64 = x.iter().map(|v| v * v).sum();
+        let mut d: Vec<C64> = x.iter().map(|&v| C64::new(v, 0.0)).collect();
+        plan.fft(&mut d);
+        let freq_energy: f64 = d.iter().map(|c| c.abs2()).sum::<f64>() / n as f64;
+        assert_close(time_energy, freq_energy, 1e-6 * time_energy.abs());
+    }
+
+    #[test]
+    fn freqs_layout() {
+        let f = rfft_freqs(8, 256.0);
+        assert_eq!(f, vec![0.0, 32.0, 64.0, 96.0, 128.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_rejected() {
+        Plan::new(12);
+    }
+}

@@ -1,0 +1,231 @@
+//! Streaming IIR filters: biquad sections + Butterworth band-pass.
+//!
+//! The batch (build-time) path brick-walls in the frequency domain; the
+//! *streaming* path (live detector feed in the coordinator) cannot — it
+//! needs causal sample-by-sample filtering. This module implements Direct
+//! Form II transposed biquads and a Butterworth band-pass built as a
+//! cascade of RBJ-cookbook sections, plus a simple decimator.
+
+use std::f64::consts::PI;
+
+/// One second-order section, Direct Form II transposed.
+#[derive(Debug, Clone)]
+pub struct Biquad {
+    pub b0: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub a1: f64,
+    pub a2: f64,
+    z1: f64,
+    z2: f64,
+}
+
+impl Biquad {
+    pub fn new(b0: f64, b1: f64, b2: f64, a1: f64, a2: f64) -> Biquad {
+        Biquad {
+            b0,
+            b1,
+            b2,
+            a1,
+            a2,
+            z1: 0.0,
+            z2: 0.0,
+        }
+    }
+
+    /// RBJ cookbook low-pass.
+    pub fn lowpass(fs: f64, fc: f64, q: f64) -> Biquad {
+        let w0 = 2.0 * PI * fc / fs;
+        let alpha = w0.sin() / (2.0 * q);
+        let cw = w0.cos();
+        let a0 = 1.0 + alpha;
+        Biquad::new(
+            (1.0 - cw) / 2.0 / a0,
+            (1.0 - cw) / a0,
+            (1.0 - cw) / 2.0 / a0,
+            -2.0 * cw / a0,
+            (1.0 - alpha) / a0,
+        )
+    }
+
+    /// RBJ cookbook high-pass.
+    pub fn highpass(fs: f64, fc: f64, q: f64) -> Biquad {
+        let w0 = 2.0 * PI * fc / fs;
+        let alpha = w0.sin() / (2.0 * q);
+        let cw = w0.cos();
+        let a0 = 1.0 + alpha;
+        Biquad::new(
+            (1.0 + cw) / 2.0 / a0,
+            -(1.0 + cw) / a0,
+            (1.0 + cw) / 2.0 / a0,
+            -2.0 * cw / a0,
+            (1.0 - alpha) / a0,
+        )
+    }
+
+    #[inline]
+    pub fn step(&mut self, x: f64) -> f64 {
+        let y = self.b0 * x + self.z1;
+        self.z1 = self.b1 * x - self.a1 * y + self.z2;
+        self.z2 = self.b2 * x - self.a2 * y;
+        y
+    }
+
+    pub fn reset(&mut self) {
+        self.z1 = 0.0;
+        self.z2 = 0.0;
+    }
+}
+
+/// Butterworth band-pass: cascade of `order` high-pass + `order` low-pass
+/// sections with Butterworth Q spacing.
+#[derive(Debug, Clone)]
+pub struct Bandpass {
+    sections: Vec<Biquad>,
+}
+
+impl Bandpass {
+    /// `order` is the number of second-order sections per edge (order 2 =>
+    /// 4th-order high-pass + 4th-order low-pass).
+    pub fn butterworth(fs: f64, f_lo: f64, f_hi: f64, order: usize) -> Bandpass {
+        assert!(f_lo < f_hi && f_hi < fs / 2.0, "bad band [{f_lo},{f_hi}] at fs {fs}");
+        let mut sections = Vec::new();
+        // Butterworth pole Qs for a cascade of n second-order sections
+        let n = order.max(1);
+        for k in 0..n {
+            let theta = PI * (2.0 * k as f64 + 1.0) / (4.0 * n as f64);
+            let q = 1.0 / (2.0 * theta.cos());
+            sections.push(Biquad::highpass(fs, f_lo, q));
+            sections.push(Biquad::lowpass(fs, f_hi, q));
+        }
+        Bandpass { sections }
+    }
+
+    #[inline]
+    pub fn step(&mut self, x: f64) -> f64 {
+        self.sections.iter_mut().fold(x, |acc, s| s.step(acc))
+    }
+
+    pub fn process(&mut self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.step(x)).collect()
+    }
+
+    pub fn reset(&mut self) {
+        for s in &mut self.sections {
+            s.reset();
+        }
+    }
+}
+
+/// Causal decimator: running anti-alias low-pass + keep-every-Nth.
+#[derive(Debug, Clone)]
+pub struct Decimator {
+    lp: Biquad,
+    lp2: Biquad,
+    factor: usize,
+    phase: usize,
+}
+
+impl Decimator {
+    pub fn new(fs: f64, factor: usize) -> Decimator {
+        let fc = 0.45 * fs / factor as f64;
+        Decimator {
+            lp: Biquad::lowpass(fs, fc, 0.541),
+            lp2: Biquad::lowpass(fs, fc, 1.307),
+            factor,
+            phase: 0,
+        }
+    }
+
+    /// Push one input sample; returns Some(decimated sample) every `factor`
+    /// inputs.
+    #[inline]
+    pub fn push(&mut self, x: f64) -> Option<f64> {
+        let y = self.lp2.step(self.lp.step(x));
+        self.phase += 1;
+        if self.phase == self.factor {
+            self.phase = 0;
+            Some(y)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tone(fs: f64, f: f64, n: usize) -> Vec<f64> {
+        (0..n).map(|i| (2.0 * PI * f * i as f64 / fs).sin()).collect()
+    }
+
+    fn rms(x: &[f64]) -> f64 {
+        (x.iter().map(|v| v * v).sum::<f64>() / x.len() as f64).sqrt()
+    }
+
+    #[test]
+    fn bandpass_passes_in_band() {
+        let fs = 2048.0;
+        let mut bp = Bandpass::butterworth(fs, 10.0, 128.0, 2);
+        let x = tone(fs, 50.0, 8192);
+        let y = bp.process(&x);
+        // skip transient, compare steady-state RMS
+        let r = rms(&y[2048..]) / rms(&x[2048..]);
+        assert!((0.8..1.1).contains(&r), "in-band gain {r}");
+    }
+
+    #[test]
+    fn bandpass_rejects_out_of_band() {
+        let fs = 2048.0;
+        let mut bp = Bandpass::butterworth(fs, 10.0, 128.0, 2);
+        for f in [2.0, 400.0, 900.0] {
+            bp.reset();
+            let x = tone(fs, f, 8192);
+            let y = bp.process(&x);
+            let r = rms(&y[2048..]) / rms(&x[2048..]);
+            assert!(r < 0.15, "{f} Hz leaked with gain {r}");
+        }
+    }
+
+    #[test]
+    fn biquad_stable_on_noise() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0);
+        let mut bp = Bandpass::butterworth(2048.0, 10.0, 128.0, 2);
+        let mut peak = 0.0f64;
+        for _ in 0..100_000 {
+            let y = bp.step(rng.gaussian());
+            peak = peak.max(y.abs());
+            assert!(y.is_finite());
+        }
+        assert!(peak < 100.0, "filter blew up: {peak}");
+    }
+
+    #[test]
+    fn decimator_rate_and_antialias() {
+        let fs = 2048.0;
+        let mut d = Decimator::new(fs, 8);
+        // high-frequency tone above decimated Nyquist must be attenuated
+        let x = tone(fs, 500.0, 16384);
+        let out: Vec<f64> = x.iter().filter_map(|&v| d.push(v)).collect();
+        assert_eq!(out.len(), 16384 / 8);
+        assert!(rms(&out[256..]) < 0.2 * rms(&x), "alias energy leaked");
+        // low-frequency tone survives
+        let mut d2 = Decimator::new(fs, 8);
+        let x2 = tone(fs, 30.0, 16384);
+        let out2: Vec<f64> = x2.iter().filter_map(|&v| d2.push(v)).collect();
+        assert!(rms(&out2[256..]) > 0.7 * rms(&x2));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut bp = Bandpass::butterworth(2048.0, 10.0, 128.0, 2);
+        for i in 0..100 {
+            bp.step(i as f64);
+        }
+        bp.reset();
+        let y = bp.step(0.0);
+        assert_eq!(y, 0.0);
+    }
+}

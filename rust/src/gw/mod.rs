@@ -1,0 +1,20 @@
+//! Synthetic gravitational-wave data substrate (rust side).
+//!
+//! Standing in for GGWD + PyCBC + LIGO strain (DESIGN.md §2): analytic
+//! aLIGO-like PSD noise, Newtonian inspiral chirps, partial whitening,
+//! band-pass, decimation and window assembly — everything the serving
+//! coordinator needs to run on a *live* detector-like feed without python.
+//!
+//! * [`fft`]     — from-scratch radix-2 FFT (the only transform we need).
+//! * [`psd`]     — PSD model, colored-noise synthesis, whitening.
+//! * [`chirp`]   — compact-binary inspiral waveform.
+//! * [`filter`]  — streaming biquads: Butterworth band-pass, decimator.
+//! * [`dataset`] — batch event windows + the endless [`dataset::StrainStream`].
+
+pub mod chirp;
+pub mod dataset;
+pub mod fft;
+pub mod filter;
+pub mod psd;
+
+pub use dataset::{make_dataset, StrainStream, Window};

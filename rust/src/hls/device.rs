@@ -1,0 +1,122 @@
+//! FPGA device catalog + HLS timing characteristics.
+//!
+//! Resource counts are the public Xilinx numbers the paper quotes (Table II:
+//! ZYNQ 7045 has 900 DSP48s, U250 has 12,288). Timing parameters are the
+//! unit latencies the paper uses in its model: `LT_sigma = 3`, `LT_tail = 5`
+//! (Fig. 8 caption: "system dependent"), and a multiplier latency `LT_mult`
+//! that grows with the clock target — 1 cycle at the Zynq's 100 MHz, 4
+//! cycles at the U250's 300 MHz (both calibrated so the model reproduces the
+//! paper's measured `ii_layer`: 9 on Z1, 12 on U1).
+
+/// Static description of an FPGA target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    /// Total DSP slices.
+    pub dsp_total: u32,
+    /// Total LUTs.
+    pub lut_total: u32,
+    /// Total 36kb BRAM blocks.
+    pub bram_total: u32,
+    /// Design clock frequency in MHz (the paper's operating point).
+    pub freq_mhz: f64,
+    /// Pipelined multiplier latency in cycles at this clock (Eq. 5 LT_mult).
+    pub lt_mult: u32,
+    /// Sigmoid LUT latency in cycles (paper Fig. 8 uses 3).
+    pub lt_sigma: u32,
+    /// LSTM tail unit latency in cycles (paper Fig. 8 uses 5).
+    pub lt_tail: u32,
+}
+
+impl Device {
+    /// Clock period in nanoseconds.
+    pub fn period_ns(&self) -> f64 {
+        1000.0 / self.freq_mhz
+    }
+
+    /// Cycles -> microseconds at this device's clock.
+    pub fn cycles_to_us(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.period_ns() / 1000.0
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static Device> {
+        DEVICES.iter().find(|d| d.name.eq_ignore_ascii_case(name))
+    }
+}
+
+/// The catalog. ZYNQ 7045 and U250 are the paper's two evaluation targets;
+/// K410T and KU115 host the prior-work designs of Table IV.
+pub static DEVICES: &[Device] = &[
+    Device {
+        name: "zynq7045",
+        dsp_total: 900,
+        lut_total: 218_600,
+        bram_total: 545,
+        freq_mhz: 100.0,
+        lt_mult: 1,
+        lt_sigma: 3,
+        lt_tail: 5,
+    },
+    Device {
+        name: "u250",
+        dsp_total: 12_288,
+        lut_total: 1_728_000,
+        bram_total: 2_688,
+        freq_mhz: 300.0,
+        lt_mult: 4,
+        lt_sigma: 3,
+        lt_tail: 5,
+    },
+    Device {
+        name: "k410t",
+        dsp_total: 1_540,
+        lut_total: 254_200,
+        bram_total: 795,
+        freq_mhz: 155.0,
+        lt_mult: 2,
+        lt_sigma: 3,
+        lt_tail: 5,
+    },
+    Device {
+        name: "ku115",
+        dsp_total: 5_520,
+        lut_total: 663_360,
+        bram_total: 2_160,
+        freq_mhz: 200.0,
+        lt_mult: 3,
+        lt_sigma: 3,
+        lt_tail: 5,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(Device::by_name("u250").unwrap().dsp_total, 12_288);
+        assert_eq!(Device::by_name("ZYNQ7045").unwrap().dsp_total, 900);
+        assert!(Device::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn paper_operating_points() {
+        // Table II: Zynq at 100 MHz, U250 at 300 MHz.
+        let z = Device::by_name("zynq7045").unwrap();
+        let u = Device::by_name("u250").unwrap();
+        assert_eq!(z.freq_mhz, 100.0);
+        assert_eq!(u.freq_mhz, 300.0);
+        // model calibration: ii = lt_mult + lt_sigma + lt_tail must equal
+        // the paper's measured minimum ii (9 on Zynq, 12 on U250)
+        assert_eq!(z.lt_mult + z.lt_sigma + z.lt_tail, 9);
+        assert_eq!(u.lt_mult + u.lt_sigma + u.lt_tail, 12);
+    }
+
+    #[test]
+    fn cycle_conversion() {
+        let u = Device::by_name("u250").unwrap();
+        // 120 cycles at 300 MHz = 0.4 us (the paper's Table III headline)
+        assert!((u.cycles_to_us(120) - 0.4).abs() < 1e-12);
+    }
+}

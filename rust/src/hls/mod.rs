@@ -1,0 +1,31 @@
+//! The paper's contribution: balanced-II analysis + design-space exploration.
+//!
+//! This module is the software embodiment of Sections III-IV of the paper:
+//!
+//! * [`device`]     — FPGA resource catalog (ZYNQ 7045, U250, ... ) and HLS
+//!   timing characteristics (multiplier latency at a clock target, sigma/tail
+//!   unit latencies).
+//! * [`perf_model`] — the analytical performance model, Eqs. (1)-(7):
+//!   per-layer DSP cost, sub-layer latencies, loop II, layer II, system II.
+//! * [`dse`]        — the optimization algorithm: given layer dimensions and
+//!   a DSP budget, compute balanced reuse factors (the quadratic-in-R_h
+//!   solve) and full heterogeneous partitions ("runs in seconds" — here,
+//!   microseconds).
+//! * [`pareto`]     — Pareto frontiers over (DSP, II) for Fig. 8/10.
+//! * [`platforms`]  — CPU/GPU latency reference models for Table III.
+//! * [`prior_work`] — published prior FPGA designs for Table IV.
+//!
+//! The cycle-level simulator in [`crate::sim`] executes the same designs
+//! event-by-event and is cross-checked against this model in
+//! `rust/tests/integration_dse_sim.rs`.
+
+pub mod device;
+pub mod dse;
+pub mod pareto;
+pub mod perf_model;
+pub mod platforms;
+pub mod prior_work;
+
+pub use device::{Device, DEVICES};
+pub use dse::{balance_layer, partition_model, BalancedChoice};
+pub use perf_model::{DesignPoint, LayerDims, LayerPerf, ModelPerf};

@@ -1,0 +1,167 @@
+//! Pareto frontiers over (DSP, II) — the machinery behind Fig. 8 and Fig. 10.
+//!
+//! Fig. 8 contrasts two design families for a single LSTM layer
+//! (Lx = Lh = 32, reuse factors 1..10, LT_sigma = 3, LT_tail = 5):
+//!
+//! * naive (red): `R_x = R_h` — both sub-layers get the same reuse factor;
+//! * balanced (blue): `R_x = R_h + LT_sigma + LT_tail` (Eq. 7) — the mvm_x
+//!   sub-layer gives up multipliers it cannot use.
+//!
+//! Balancing moves the whole frontier left: same II at fewer DSPs (paper's
+//! A -> C) or better II at the same DSPs (A -> B).
+
+use super::device::Device;
+use super::dse::balanced_rx;
+use super::perf_model::{layer_perf, LayerDims};
+
+/// One explored design point in (DSP, II) space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParetoPoint {
+    pub rh: u32,
+    pub rx: u32,
+    pub dsp: u64,
+    /// Timestep-loop II in cycles.
+    pub ii: u32,
+}
+
+/// Sweep the naive family `R_x = R_h = r` for r in 1..=r_max.
+pub fn naive_family(dev: &Device, dims: LayerDims, ts: u32, r_max: u32) -> Vec<ParetoPoint> {
+    (1..=r_max)
+        .map(|r| {
+            let lp = layer_perf(dev, dims, r, r, ts);
+            ParetoPoint {
+                rh: r,
+                rx: r,
+                dsp: lp.dsp_total(),
+                ii: lp.ii,
+            }
+        })
+        .collect()
+}
+
+/// Sweep the balanced family (Eq. 7) for R_h in 1..=r_max.
+pub fn balanced_family(dev: &Device, dims: LayerDims, ts: u32, r_max: u32) -> Vec<ParetoPoint> {
+    (1..=r_max)
+        .map(|rh| {
+            let rx = balanced_rx(dev, rh);
+            let lp = layer_perf(dev, dims, rx, rh, ts);
+            ParetoPoint {
+                rh,
+                rx,
+                dsp: lp.dsp_total(),
+                ii: lp.ii,
+            }
+        })
+        .collect()
+}
+
+/// Non-dominated subset: a point survives if no other point has both fewer
+/// (or equal) DSPs and lower (or equal) II with at least one strict.
+pub fn frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut out: Vec<ParetoPoint> = Vec::new();
+    for &p in points {
+        let dominated = points.iter().any(|&q| {
+            (q.dsp <= p.dsp && q.ii < p.ii) || (q.dsp < p.dsp && q.ii <= p.ii)
+        });
+        if !dominated {
+            out.push(p);
+        }
+    }
+    out.sort_by_key(|p| (p.ii, p.dsp));
+    out.dedup();
+    out
+}
+
+/// Fig. 8 headline comparisons: at every II reachable by both families,
+/// the balanced family needs no more DSPs; report the largest saving.
+pub fn max_saving_same_ii(naive: &[ParetoPoint], balanced: &[ParetoPoint]) -> f64 {
+    let mut best = 0.0f64;
+    for n in naive {
+        if let Some(b) = balanced.iter().filter(|b| b.ii <= n.ii).min_by_key(|b| b.dsp) {
+            let saving = 1.0 - b.dsp as f64 / n.dsp as f64;
+            best = best.max(saving);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::device::Device;
+
+    fn fig8_dev() -> &'static Device {
+        // Fig. 8's stated parameters (LT_sigma=3, LT_tail=5, LT_mult=1)
+        // match the Zynq entry.
+        Device::by_name("zynq7045").unwrap()
+    }
+
+    fn fig8_dims() -> LayerDims {
+        LayerDims::new(32, 32)
+    }
+
+    #[test]
+    fn balanced_dominates_naive() {
+        // The Fig. 8 claim: the blue frontier is never above the red one.
+        let n = naive_family(fig8_dev(), fig8_dims(), 1, 10);
+        let b = balanced_family(fig8_dev(), fig8_dims(), 1, 10);
+        for np in &n {
+            let best_b = b
+                .iter()
+                .filter(|bp| bp.ii <= np.ii)
+                .map(|bp| bp.dsp)
+                .min();
+            if let Some(bd) = best_b {
+                assert!(
+                    bd <= np.dsp,
+                    "balanced {bd} DSPs should beat naive {} at ii<={}",
+                    np.dsp,
+                    np.ii
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn a_to_c_same_ii_fewer_dsps() {
+        // Point A: naive r=1 (ii=9). Point C: balanced rh=1 (ii=9, fewer DSPs).
+        let a = naive_family(fig8_dev(), fig8_dims(), 1, 1)[0];
+        let c = balanced_family(fig8_dev(), fig8_dims(), 1, 1)[0];
+        assert_eq!(a.ii, c.ii);
+        assert!(c.dsp < a.dsp);
+        // 4*32*32 = 4096 input mults drop to ceil(4096/9) = 456
+        assert_eq!(a.dsp - c.dsp, 4096 - 456);
+    }
+
+    #[test]
+    fn frontier_is_nondominated_and_sorted() {
+        let mut pts = naive_family(fig8_dev(), fig8_dims(), 1, 10);
+        pts.extend(balanced_family(fig8_dev(), fig8_dims(), 1, 10));
+        let f = frontier(&pts);
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[0].ii <= w[1].ii);
+            assert!(w[0].dsp >= w[1].dsp, "frontier must trade DSP for II");
+        }
+        // every frontier point is one of the inputs
+        for p in &f {
+            assert!(pts.contains(p));
+        }
+    }
+
+    #[test]
+    fn naive_ii_grows_with_r() {
+        let n = naive_family(fig8_dev(), fig8_dims(), 1, 10);
+        for w in n.windows(2) {
+            assert_eq!(w[1].ii, w[0].ii + 1);
+        }
+    }
+
+    #[test]
+    fn saving_is_substantial() {
+        let n = naive_family(fig8_dev(), fig8_dims(), 1, 10);
+        let b = balanced_family(fig8_dev(), fig8_dims(), 1, 10);
+        let s = max_saving_same_ii(&n, &b);
+        assert!(s > 0.3, "Fig. 8 saving should be >30%, got {s}");
+    }
+}

@@ -1,0 +1,428 @@
+//! The analytical performance model — Eqs. (1)-(7) of the paper.
+//!
+//! Given LSTM layer dimensions, per-layer reuse factors `(R_x, R_h)` and a
+//! target [`Device`], this module computes:
+//!
+//! * DSP cost per layer (Eq. 3) and per model (Eq. 4),
+//! * sub-layer latencies via the pipelined-multiplier model (Eq. 5),
+//! * the timestep-loop initiation interval `ii_N` of the recurrent
+//!   sub-layer (the paper's `LT_mvm_h + LT_sigma + LT_tail` path),
+//! * layer II (Eq. 1, with `rewind` so the `LT_N - ii_N` drain vanishes)
+//!   and system II (Eq. 2),
+//! * a LUT estimate calibrated on the six Table II design points,
+//! * end-to-end latency including the encoder->decoder barrier (Section
+//!   III-D: the decoder only starts once the encoder's last timestep is
+//!   done, because only the final hidden vector crosses the bottleneck).
+
+use super::device::Device;
+
+/// Dimensions of one LSTM layer: input width and hidden width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerDims {
+    pub lx: u32,
+    pub lh: u32,
+}
+
+impl LayerDims {
+    pub fn new(lx: u32, lh: u32) -> Self {
+        LayerDims { lx, lh }
+    }
+
+    /// Multiplications in the input-side gate MVM (all four gates).
+    pub fn mults_x(&self) -> u64 {
+        4 * self.lx as u64 * self.lh as u64
+    }
+
+    /// Multiplications in the recurrent gate MVM.
+    pub fn mults_h(&self) -> u64 {
+        4 * (self.lh as u64) * (self.lh as u64)
+    }
+
+    /// DSPs of the elementwise tail: `4*Lh` (the `f*c` product runs on the
+    /// 32-bit cell state and needs 2 DSPs per multiplier; R_t = 1 — paper
+    /// Section IV-A).
+    pub fn dsps_tail(&self) -> u64 {
+        4 * self.lh as u64
+    }
+}
+
+/// A fully specified accelerator configuration for one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    pub layers: Vec<LayerDims>,
+    /// Per-layer reuse factor for mvm_x.
+    pub rx: Vec<u32>,
+    /// Per-layer reuse factor for mvm_h.
+    pub rh: Vec<u32>,
+    /// Timesteps per inference.
+    pub ts: u32,
+    /// Output (TimeDistributed dense) width, 0 if absent.
+    pub dense_out: u32,
+}
+
+impl DesignPoint {
+    /// Uniform reuse factors across all layers (the paper's Z1/Z2/U1 style).
+    pub fn uniform(layers: Vec<LayerDims>, rx: u32, rh: u32, ts: u32, dense_out: u32) -> Self {
+        let n = layers.len();
+        DesignPoint {
+            layers,
+            rx: vec![rx; n],
+            rh: vec![rh; n],
+            ts,
+            dense_out,
+        }
+    }
+
+    /// The small 2-layer autoencoder of Table II (enc LSTM(9) -> dec LSTM(9)).
+    pub fn small_autoencoder(rx: u32, rh: u32, ts: u32) -> Self {
+        DesignPoint::uniform(
+            vec![LayerDims::new(1, 9), LayerDims::new(9, 9)],
+            rx,
+            rh,
+            ts,
+            1,
+        )
+    }
+
+    /// The nominal 4-layer autoencoder (32, 8, 8, 32 hidden units).
+    pub fn nominal_autoencoder(rx: u32, rh: u32, ts: u32) -> Self {
+        DesignPoint::uniform(
+            vec![
+                LayerDims::new(1, 32),
+                LayerDims::new(32, 8),
+                LayerDims::new(8, 8),
+                LayerDims::new(8, 32),
+            ],
+            rx,
+            rh,
+            ts,
+            1,
+        )
+    }
+
+    /// Index of the first decoder layer (the encoder->decoder barrier sits
+    /// in front of it). For the symmetric autoencoders here: halfway.
+    pub fn decoder_start(&self) -> usize {
+        self.layers.len() / 2
+    }
+}
+
+/// Per-layer analytical results.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerPerf {
+    /// DSPs for mvm_x after reuse (ceil division).
+    pub dsp_x: u64,
+    /// DSPs for mvm_h after reuse.
+    pub dsp_h: u64,
+    /// DSPs for the tail unit.
+    pub dsp_tail: u64,
+    /// Latency of the mvm_x sub-layer for one timestep (Eq. 5).
+    pub lt_mvm_x: u32,
+    /// Latency of the mvm_h unit (Eq. 5).
+    pub lt_mvm_h: u32,
+    /// Timestep-loop II of the recurrent sub-layer (paper's ii_N).
+    pub ii: u32,
+    /// Layer II = ii * TS (Eq. 1, rewind active).
+    pub ii_layer: u64,
+}
+
+impl LayerPerf {
+    pub fn dsp_total(&self) -> u64 {
+        self.dsp_x + self.dsp_h + self.dsp_tail
+    }
+}
+
+/// Whole-model analytical results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelPerf {
+    pub per_layer: Vec<LayerPerf>,
+    /// DSPs of the TimeDistributed dense output layer.
+    pub dsp_dense: u64,
+    /// Total DSPs (Eq. 4 left-hand side).
+    pub dsp_model: u64,
+    /// Estimated LUTs.
+    pub lut_model: u64,
+    /// System II in cycles (Eq. 2).
+    pub ii_sys: u64,
+    /// End-to-end single-inference latency in cycles (with the
+    /// encoder->decoder barrier and cascaded-layer overlap of Fig. 7).
+    pub latency_cycles: u64,
+}
+
+impl ModelPerf {
+    pub fn latency_us(&self, dev: &Device) -> f64 {
+        dev.cycles_to_us(self.latency_cycles)
+    }
+
+    /// Throughput in inferences/s when pipelined at the system II.
+    pub fn throughput_per_s(&self, dev: &Device) -> f64 {
+        dev.freq_mhz * 1e6 / self.ii_sys as f64
+    }
+}
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Eq. 5: latency of a reuse-R MVM on pipelined multipliers (II_mult = 1).
+pub fn lt_mvm(dev: &Device, r: u32) -> u32 {
+    dev.lt_mult + (r.max(1) - 1)
+}
+
+/// Analyze one LSTM layer at reuse factors (rx, rh) on `dev`.
+pub fn layer_perf(dev: &Device, dims: LayerDims, rx: u32, rh: u32, ts: u32) -> LayerPerf {
+    let rx = rx.max(1);
+    let rh = rh.max(1);
+    let lt_mvm_x = lt_mvm(dev, rx);
+    let lt_mvm_h = lt_mvm(dev, rh);
+    // The recurrent dependence cycle: mvm_h -> sigma -> tail -> (h feeds back).
+    let ii_loop = lt_mvm_h + dev.lt_sigma + dev.lt_tail;
+    // The mvm_x sub-layer must keep up: it accepts a new timestep every rx
+    // cycles (one multiplier bank re-used rx times). If rx > ii_loop the
+    // input side becomes the bottleneck (the paper's balanced point is
+    // exactly rx == ii_loop, Eq. 6/7).
+    let ii = ii_loop.max(rx);
+    LayerPerf {
+        dsp_x: ceil_div(dims.mults_x(), rx as u64),
+        dsp_h: ceil_div(dims.mults_h(), rh as u64),
+        dsp_tail: dims.dsps_tail(),
+        lt_mvm_x,
+        lt_mvm_h,
+        ii,
+        ii_layer: ii as u64 * ts as u64,
+    }
+}
+
+/// LUT estimate, calibrated on the six Table II points. Two terms dominate:
+/// datapath width (scales with the number of *logical* multiplications, not
+/// DSPs) and reuse sequencing/muxing (scales with reuse factors times lanes).
+pub fn lut_estimate(point: &DesignPoint) -> u64 {
+    let mut ops: u64 = 0;
+    let mut mux: u64 = 0;
+    for (i, l) in point.layers.iter().enumerate() {
+        ops += l.mults_x() + l.mults_h() + 4 * l.lh as u64;
+        let lanes_x = ceil_div(l.mults_x(), point.rx[i] as u64);
+        let lanes_h = ceil_div(l.mults_h(), point.rh[i] as u64);
+        mux += lanes_x * (point.rx[i] as u64 - 1) + lanes_h * (point.rh[i] as u64 - 1);
+    }
+    // per-op datapath cost + per-mux-input cost + fixed control overhead
+    30 * ops + 35 * mux + 8_000 * point.layers.len() as u64
+}
+
+/// Analyze a whole design point (Eqs. 1-4 + the latency composition).
+pub fn model_perf(dev: &Device, point: &DesignPoint) -> ModelPerf {
+    assert_eq!(point.layers.len(), point.rx.len());
+    assert_eq!(point.layers.len(), point.rh.len());
+    let per_layer: Vec<LayerPerf> = point
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, &dims)| layer_perf(dev, dims, point.rx[i], point.rh[i], point.ts))
+        .collect();
+
+    // Dense output layer: fully unrolled (R_t = 1), one DSP per mult.
+    let dsp_dense = if point.dense_out > 0 {
+        point.layers.last().map_or(0, |l| l.lh as u64) * point.dense_out as u64
+    } else {
+        0
+    };
+    let dsp_model: u64 = per_layer.iter().map(|l| l.dsp_total()).sum::<u64>() + dsp_dense;
+
+    // Eq. 2: the pipeline's steady-state II is the max layer II.
+    let ii_sys = per_layer.iter().map(|l| l.ii_layer).max().unwrap_or(0);
+
+    // Latency composition (Section III-D / Fig. 7):
+    //  * within encoder/decoder, cascaded sequence-returning layers overlap:
+    //    layer j+1 starts once layer j emits its first hidden vector, so it
+    //    adds only its own ii (plus its pipeline depth) if it is not slower,
+    //    otherwise it dominates;
+    //  * the encoder->decoder barrier forbids overlap (only the last h
+    //    crosses), so latencies of the two halves add.
+    // Pipeline depth of one layer for its *first* timestep: the input must
+    // traverse mvm_x (Eq. 5 latency) before the recurrent path runs once.
+    let depth =
+        |lp: &LayerPerf| (lp.lt_mvm_x + lp.lt_mvm_h + dev.lt_sigma + dev.lt_tail) as u64;
+    let half_latency = |layers: &[LayerPerf], ts: u64| -> u64 {
+        let mut finish: u64 = 0; // finish time of the *last* timestep of prev layer
+        let mut first_ready: u64 = 0; // when prev layer emits its first h
+        for lp in layers {
+            let start = first_ready;
+            // the layer can step only as fast as its input arrives; its own
+            // stepping rate is lp.ii
+            let step = lp.ii as u64;
+            let prev_rate = if finish > first_ready {
+                (finish - first_ready) / ts.max(1)
+            } else {
+                0
+            };
+            let rate = step.max(prev_rate);
+            let this_finish = start + rate * (ts - 1) + depth(lp);
+            first_ready = start + depth(lp);
+            finish = this_finish;
+        }
+        finish
+    };
+    let ts = point.ts as u64;
+    let split = point.decoder_start();
+    let enc = half_latency(&per_layer[..split], ts);
+    let dec = half_latency(&per_layer[split..], ts);
+    // dense output is fully pipelined behind the last decoder layer
+    let dense_lat = if point.dense_out > 0 {
+        dev.lt_mult as u64 + 2
+    } else {
+        0
+    };
+    let latency_cycles = enc + dec + dense_lat;
+
+    ModelPerf {
+        per_layer,
+        dsp_dense,
+        dsp_model,
+        lut_model: lut_estimate(point),
+        ii_sys,
+        latency_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::device::Device;
+
+    fn zynq() -> &'static Device {
+        Device::by_name("zynq7045").unwrap()
+    }
+
+    fn u250() -> &'static Device {
+        Device::by_name("u250").unwrap()
+    }
+
+    #[test]
+    fn eq3_dsp_layer_fully_unrolled() {
+        // Eq. 3 with R=1 on the small model's second layer (Lx=Lh=9):
+        // 4*81 + 4*81 + 4*9 = 684.
+        let lp = layer_perf(zynq(), LayerDims::new(9, 9), 1, 1, 8);
+        assert_eq!(lp.dsp_total(), 684);
+    }
+
+    #[test]
+    fn eq5_mvm_latency() {
+        assert_eq!(lt_mvm(zynq(), 1), 1);
+        assert_eq!(lt_mvm(zynq(), 4), 4);
+        assert_eq!(lt_mvm(u250(), 1), 4);
+        assert_eq!(lt_mvm(u250(), 12), 15);
+    }
+
+    #[test]
+    fn table2_z1_reproduction() {
+        // Z1: full unroll on Zynq; paper: 1058 DSPs (our model 1089, the
+        // delta is Vivado const-folding), ii=9, II_layer=72.
+        let p = DesignPoint::small_autoencoder(1, 1, 8);
+        let m = model_perf(zynq(), &p);
+        assert_eq!(m.per_layer[0].ii, 9);
+        assert_eq!(m.per_layer[1].ii, 9);
+        assert_eq!(m.ii_sys, 72);
+        assert!((1000..1150).contains(&m.dsp_model), "dsp={}", m.dsp_model);
+        // exceeds the Zynq's 900 DSPs, exactly the paper's point
+        assert!(m.dsp_model > zynq().dsp_total as u64);
+    }
+
+    #[test]
+    fn table2_z2_reproduction() {
+        // Z2: R=2 everywhere; paper: 578 DSPs, ii=10, II=80.
+        let p = DesignPoint::small_autoencoder(2, 2, 8);
+        let m = model_perf(zynq(), &p);
+        assert_eq!(m.ii_sys, 80);
+        assert!((560..610).contains(&m.dsp_model), "dsp={}", m.dsp_model);
+        assert!(m.dsp_model < zynq().dsp_total as u64);
+    }
+
+    #[test]
+    fn table2_z3_reproduction() {
+        // Z3 (balanced): Rx=9, Rh=1; paper: 744 DSPs, ii=9 — same II as full
+        // unroll, fits the device. THE headline mechanism.
+        let p = DesignPoint::small_autoencoder(9, 1, 8);
+        let m = model_perf(zynq(), &p);
+        assert_eq!(m.ii_sys, 72);
+        assert!((730..800).contains(&m.dsp_model), "dsp={}", m.dsp_model);
+        assert!(m.dsp_model < zynq().dsp_total as u64);
+    }
+
+    #[test]
+    fn table2_u1_u2_reproduction() {
+        // U1: full unroll, paper 11123 DSPs, ii=12, II=96.
+        let u1 = model_perf(u250(), &DesignPoint::nominal_autoencoder(1, 1, 8));
+        assert_eq!(u1.ii_sys, 96);
+        assert!((11_100..11_700).contains(&u1.dsp_model), "dsp={}", u1.dsp_model);
+        // U2: balanced Rx=9: same II, ~2k fewer DSPs (paper saves 2102).
+        let u2 = model_perf(u250(), &DesignPoint::nominal_autoencoder(9, 1, 8));
+        assert_eq!(u2.ii_sys, 96);
+        let saved = u1.dsp_model - u2.dsp_model;
+        assert!((1900..2400).contains(&saved), "saved={saved}");
+    }
+
+    #[test]
+    fn table2_u3_reproduction() {
+        // U3: (Rh, Rx) = (4, 12); paper: 2713 DSPs. Our Eq. 3 gives 2733.
+        let m = model_perf(u250(), &DesignPoint::nominal_autoencoder(12, 4, 8));
+        assert!((2650..2800).contains(&m.dsp_model), "dsp={}", m.dsp_model);
+        // 3.3x / 4.1x fewer DSPs than U2 / U1 (paper Section V-C)
+        let u1 = model_perf(u250(), &DesignPoint::nominal_autoencoder(1, 1, 8));
+        let u2 = model_perf(u250(), &DesignPoint::nominal_autoencoder(9, 1, 8));
+        let r1 = u1.dsp_model as f64 / m.dsp_model as f64;
+        let r2 = u2.dsp_model as f64 / m.dsp_model as f64;
+        assert!((3.8..4.5).contains(&r1), "r1={r1}");
+        assert!((3.0..3.6).contains(&r2), "r2={r2}");
+    }
+
+    #[test]
+    fn rx_beyond_balance_hurts_ii() {
+        // Once rx exceeds the recurrent loop II, mvm_x dominates.
+        let lp = layer_perf(zynq(), LayerDims::new(9, 9), 20, 1, 8);
+        assert_eq!(lp.ii, 20);
+    }
+
+    #[test]
+    fn latency_monotone_in_rh() {
+        let dev = u250();
+        let mut last = 0;
+        for rh in 1..6 {
+            let m = model_perf(dev, &DesignPoint::nominal_autoencoder(1, rh, 8));
+            assert!(m.latency_cycles >= last);
+            last = m.latency_cycles;
+        }
+    }
+
+    #[test]
+    fn encoder_decoder_barrier_adds() {
+        // A 4-layer model must be slower than 2x a 1-layer model would
+        // suggest by at least the barrier (no overlap across the bottleneck).
+        let dev = u250();
+        let four = model_perf(dev, &DesignPoint::nominal_autoencoder(1, 1, 8));
+        // paper: single layer 0.343us (~103 cycles), four layers 0.867us
+        // (~260 cycles) at 300 MHz
+        let us = four.latency_us(dev);
+        assert!((0.6..1.2).contains(&us), "four-layer latency {us} us");
+    }
+
+    #[test]
+    fn throughput_from_ii() {
+        let dev = zynq();
+        let m = model_perf(dev, &DesignPoint::small_autoencoder(9, 1, 8));
+        // 100 MHz / 72 cycles
+        let t = m.throughput_per_s(dev);
+        assert!((1.38e6..1.40e6).contains(&t), "throughput {t}");
+    }
+
+    #[test]
+    fn lut_estimate_table2_shape() {
+        // Z-designs ~45k, U-designs 450-520k; U3 (heavy reuse) > U1.
+        let z1 = lut_estimate(&DesignPoint::small_autoencoder(1, 1, 8));
+        assert!((25_000..70_000).contains(&z1), "z1 lut={z1}");
+        let u1 = lut_estimate(&DesignPoint::nominal_autoencoder(1, 1, 8));
+        let u3 = lut_estimate(&DesignPoint::nominal_autoencoder(12, 4, 8));
+        assert!((300_000..700_000).contains(&u1), "u1 lut={u1}");
+        assert!(u3 > u1, "muxing must grow LUTs: u3={u3} u1={u1}");
+    }
+}

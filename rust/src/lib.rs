@@ -1,0 +1,44 @@
+//! # gwlstm — balanced-II multi-layer LSTM acceleration for gravitational-wave experiments
+//!
+//! Reproduction of Que et al., *"Accelerating Recurrent Neural Networks for
+//! Gravitational Wave Experiments"* (ASAP 2021). The paper's contribution —
+//! balancing initiation intervals (II) across the layers of a coarse-grained
+//! pipelined multi-layer LSTM accelerator by optimizing per-layer reuse
+//! factors — lives in [`hls`] (analytical model + DSE) and is validated by
+//! the cycle-level simulator in [`sim`]. Around it sits everything a
+//! downstream user needs to run the paper's end-to-end use-case:
+//!
+//! * [`gw`] — synthetic LIGO-like strain substrate (PSD-shaped noise, chirp
+//!   injections, whitening, band-pass, windowing) with a from-scratch FFT.
+//! * [`model`] — pure-rust reference LSTM autoencoder, both f32 and the
+//!   paper's 16-bit fixed-point datapath (LUT sigmoid, piecewise tanh).
+//! * [`runtime`] — PJRT CPU executor loading the AOT artifacts emitted by
+//!   `python/compile/aot.py` (HLO text; python never runs at request time).
+//! * [`coordinator`] — low-latency anomaly-detection serving: stream
+//!   assembly, batch-1 routing, threshold calibration, metrics.
+//! * [`eval`] — ROC/AUC machinery for the Fig. 9 accuracy reproduction.
+//! * [`hls`]/[`sim`] — the FPGA substitute: device catalog, Eqs. (1)–(7)
+//!   performance model, reuse-factor DSE, Pareto frontiers, and an
+//!   event-driven cycle simulator of the proposed architecture plus the
+//!   single-engine (Brainwave-like) baseline.
+//! * [`util`] — in-tree substrates for the offline build: JSON, CLI args,
+//!   bench harness, property-testing mini-framework, splittable RNG.
+//!
+//! Entry points: the `gwlstm` binary (`rust/src/main.rs`) exposes
+//! `table2|table3|table4|fig8|fig9|fig10|dse|simulate|serve|infer`
+//! subcommands; `examples/` hosts the runnable scenarios.
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod gw;
+pub mod hls;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type (anyhow is the only error dependency available
+/// offline, and it is what the `xla` crate itself returns).
+pub type Result<T> = anyhow::Result<T>;

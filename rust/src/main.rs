@@ -1,0 +1,354 @@
+//! gwlstm CLI — leader entrypoint.
+//!
+//! Subcommands (every paper table/figure has one, plus serving):
+//!
+//! ```text
+//! gwlstm table2                    Table II  design points (model + sim)
+//! gwlstm table3 [--measure]        Table III CPU/GPU/FPGA latency
+//! gwlstm table4                    Table IV  vs prior FPGA designs
+//! gwlstm fig8                      Fig. 8    Pareto frontier series
+//! gwlstm fig9 [--rescore]          Fig. 9    autoencoder AUC comparison
+//! gwlstm fig10                     Fig. 10   II & DSP vs R_h sweep
+//! gwlstm dse --device u250 --budget 2800 [--model nominal --ts 8]
+//! gwlstm simulate [--arch layer-pipeline|single-engine] [--design Z3|U2|..]
+//! gwlstm verify                    golden-vector check of every artifact
+//! gwlstm infer --model small_ts8   one-shot inference demo
+//! gwlstm serve [--model m] [--windows n] [--workers k] [--config f.json]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use gwlstm::config::{Manifest, ServeConfig};
+use gwlstm::coordinator::run_serving;
+use gwlstm::gw::dataset::DEFAULT_SNR;
+use gwlstm::hls::device::Device;
+use gwlstm::hls::dse::partition_model;
+use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
+use gwlstm::report;
+use gwlstm::runtime::Engine;
+use gwlstm::sim::{simulate, simulate_single_engine, SimConfig, SingleEngineConfig};
+use gwlstm::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("table2") => {
+            println!("Table II — FPGA design points (paper vs model vs simulator)\n");
+            report::render_table2().print();
+            args.finish()
+        }
+        Some("table3") => {
+            let measured = if args.flag("measure") {
+                Some(measure_cpu_latency(args)?)
+            } else {
+                None
+            };
+            println!("Table III — batch-1 latency across platforms\n");
+            report::render_table3(measured).print();
+            args.finish()
+        }
+        Some("table4") => {
+            println!("Table IV — vs prior FPGA LSTM designs\n");
+            report::render_table4().print();
+            args.finish()
+        }
+        Some("fig8") => {
+            println!("Fig. 8 — Pareto frontier, naive (Rx=Rh) vs balanced (Eq. 7)\n");
+            report::render_fig8().print();
+            let (n, b) = report::fig8_series();
+            let saving = gwlstm::hls::pareto::max_saving_same_ii(&n, &b);
+            println!("\nmax same-II DSP saving: {:.0}%", saving * 100.0);
+            args.finish()
+        }
+        Some("fig9") => {
+            let dir = artifacts_dir(args);
+            println!("Fig. 9 — autoencoder AUC comparison (build-time training)\n");
+            report::render_fig9(&dir)?.print();
+            if args.flag("rescore") {
+                rescore_testset(&dir)?;
+            }
+            args.finish()
+        }
+        Some("fig10") => {
+            println!("Fig. 10 — II and DSPs vs reuse factor R_h (small model, Zynq 7045)\n");
+            report::render_fig10().print();
+            args.finish()
+        }
+        Some("dse") => cmd_dse(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("verify") => cmd_verify(args),
+        Some("runhlo") => cmd_runhlo(args),
+        Some("infer") => cmd_infer(args),
+        Some("serve") => cmd_serve(args),
+        Some(other) => bail!("unknown subcommand {other:?} (see --help in the binary doc)"),
+        None => {
+            println!("usage: gwlstm <table2|table3|table4|fig8|fig9|fig10|dse|simulate|verify|infer|serve> [flags]");
+            Ok(())
+        }
+    }
+}
+
+fn model_layers(name: &str) -> Result<(Vec<LayerDims>, u32)> {
+    match name {
+        "small" => Ok((vec![LayerDims::new(1, 9), LayerDims::new(9, 9)], 1)),
+        "nominal" => Ok((
+            vec![
+                LayerDims::new(1, 32),
+                LayerDims::new(32, 8),
+                LayerDims::new(8, 8),
+                LayerDims::new(8, 32),
+            ],
+            1,
+        )),
+        other => Err(anyhow!("unknown model {other:?} (small|nominal)")),
+    }
+}
+
+fn design_by_name(name: &str) -> Result<(DesignPoint, &'static Device)> {
+    for d in report::table2_designs() {
+        if d.label.eq_ignore_ascii_case(name) {
+            return Ok((d.point, d.device));
+        }
+    }
+    bail!("unknown design {name:?} (Z1|Z2|Z3|U1|U2|U3)")
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let dev_name = args.str_or("device", "u250");
+    let dev = Device::by_name(&dev_name).ok_or_else(|| anyhow!("unknown device {dev_name}"))?;
+    let budget = args.usize_or("budget", dev.dsp_total as usize)? as u64;
+    let (layers, dense) = model_layers(&args.str_or("model", "nominal"))?;
+    let ts = args.usize_or("ts", 8)? as u32;
+    args.finish()?;
+    let t0 = std::time::Instant::now();
+    let p = partition_model(dev, &layers, ts, dense, budget);
+    let dt = t0.elapsed();
+    println!(
+        "DSE on {} (budget {budget} DSPs, TS={ts}): {} in {:.1} us",
+        dev.name,
+        if p.feasible { "feasible" } else { "INFEASIBLE" },
+        dt.as_secs_f64() * 1e6
+    );
+    for (i, c) in p.choices.iter().enumerate() {
+        println!(
+            "  layer {i}: (Lx={:>2}, Lh={:>2})  R_h={} R_x={}  ii={}  DSPs={}",
+            layers[i].lx, layers[i].lh, c.rh, c.rx, c.ii, c.dsp
+        );
+    }
+    println!(
+        "  total DSPs {} / {}   II_sys {} cycles   latency {:.3} us   throughput {:.0}/s",
+        p.perf.dsp_model,
+        budget,
+        p.perf.ii_sys,
+        p.perf.latency_us(dev),
+        p.perf.throughput_per_s(dev)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let arch = args.str_or("arch", "layer-pipeline");
+    let (point, dev) = design_by_name(&args.str_or("design", "U2"))?;
+    let inferences = args.usize_or("inferences", 32)?;
+    match arch.as_str() {
+        "layer-pipeline" => {
+            args.finish()?;
+            let r = simulate(&SimConfig {
+                point,
+                device: *dev,
+                inferences,
+                arrival_interval: None,
+                rewind: true,
+                overlap: true,
+            });
+            println!(
+                "layer-pipeline on {}: latency {} cycles ({:.3} us), steady II {:.1} cycles, makespan {}",
+                dev.name,
+                r.latencies[0],
+                dev.cycles_to_us(r.latencies[0]),
+                r.steady_ii,
+                r.makespan
+            );
+            for (i, u) in r.units.iter().enumerate() {
+                let kind = if i == r.units.len() - 1 {
+                    "dense".to_string()
+                } else if i % 2 == 0 {
+                    format!("L{} mvm_x", i / 2)
+                } else {
+                    format!("L{} recur", i / 2)
+                };
+                println!(
+                    "  {kind:<10} dsps {:>6}  occupancy {:>5.1}%",
+                    u.dsps,
+                    100.0 * u.occupancy(r.makespan)
+                );
+            }
+            println!("  DSP-level utilization {:.1}%", 100.0 * r.dsp_utilization);
+        }
+        "single-engine" => {
+            let lanes = args.usize_or("lanes", 96_000)? as u64;
+            args.finish()?;
+            let r = simulate_single_engine(
+                &SingleEngineConfig {
+                    lanes,
+                    ..Default::default()
+                },
+                &point,
+                dev,
+            );
+            println!(
+                "single-engine ({} lanes): latency {} cycles ({:.3} us), utilization {:.2}% — the paper's Section I starvation claim",
+                lanes,
+                r.latency_cycles,
+                dev.cycles_to_us(r.latency_cycles),
+                100.0 * r.utilization
+            );
+        }
+        other => bail!("unknown arch {other:?} (layer-pipeline|single-engine)"),
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    args.finish()?;
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    let mut worst = 0.0f32;
+    for v in &manifest.variants {
+        let exe = engine.load_variant(&manifest, &v.name)?;
+        let err = exe.verify_golden(&manifest)?;
+        worst = worst.max(err);
+        println!(
+            "  {:<24} compile {:>7.0} ms   golden max |err| = {:.3e}  {}",
+            v.name,
+            exe.compile_ms,
+            err,
+            if err < 1e-3 { "OK" } else { "MISMATCH" }
+        );
+    }
+    if worst >= 1e-3 {
+        bail!("golden vector mismatch (max err {worst})");
+    }
+    println!("all artifacts verified against jnp oracle vectors");
+    Ok(())
+}
+
+/// Low-level escape hatch: run any HLO-text file with an inline JSON input
+/// vector (debugging aid for artifact authors).
+fn cmd_runhlo(args: &Args) -> Result<()> {
+    let path = args.str_req("hlo")?;
+    let input: Vec<f32> = gwlstm::util::json::Value::parse(&args.str_req("input")?)?.as_f32_flat()?;
+    let rows = args.usize_or("rows", input.len())?;
+    let cols = args.usize_or("cols", 1)?;
+    args.finish()?;
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e}"))?;
+    let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| anyhow!("{e}"))?;
+    let exe = client
+        .compile(&xla::XlaComputation::from_proto(&proto))
+        .map_err(|e| anyhow!("{e}"))?;
+    let lit = xla::Literal::vec1(&input).reshape(&[rows as i64, cols as i64])?;
+    let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+    let out = result.to_tuple1()?;
+    println!("{:?}", out.to_vec::<f32>()?);
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let model = args.str_or("model", "small_ts8");
+    args.finish()?;
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let exe = engine.load_variant(&manifest, &model)?;
+    let ts = exe.spec.ts;
+    let mut stream = gwlstm::gw::dataset::StrainStream::new(1, ts, DEFAULT_SNR, 0.5);
+    for _ in 0..4 {
+        let w = stream.next_window();
+        let t0 = std::time::Instant::now();
+        let score = exe.score(&w.samples)?;
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        println!(
+            "window label={} -> reconstruction MSE {score:.5} ({us:.0} us)",
+            w.label
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mut cfg = if let Some(path) = args.get("config") {
+        ServeConfig::from_file(path)?
+    } else {
+        ServeConfig::default()
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    cfg.max_windows = args.usize_or("windows", cfg.max_windows)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.target_fpr = args.f64_or("fpr", cfg.target_fpr)?;
+    cfg.inject_prob = args.f64_or("inject-prob", cfg.inject_prob)?;
+    cfg.pace_us = args.usize_or("pace-us", cfg.pace_us as usize)? as u64;
+    args.finish()?;
+    let manifest = Manifest::load(&dir)?;
+    let report = run_serving(&manifest, &cfg)?;
+    report.print();
+    Ok(())
+}
+
+/// Re-score the exported python test set through the AOT artifact on PJRT
+/// and report AUC — the rust-side reproduction of the Fig. 9 headline row.
+fn rescore_testset(dir: &str) -> Result<()> {
+    let (windows, labels) = gwlstm::config::load_testset(dir)?;
+    let manifest = Manifest::load(dir)?;
+    let engine = Engine::cpu()?;
+    let exe = engine.load_variant(&manifest, "nominal_ts100")?;
+    let mut scores = Vec::with_capacity(windows.len());
+    for w in &windows {
+        scores.push(exe.score(w)? as f64);
+    }
+    let auc = gwlstm::eval::auc(&scores, &labels);
+    println!("\nrust-side rescore over exported test set ({} events):", windows.len());
+    println!("  LSTM autoencoder via PJRT artifact: AUC = {auc:.4}");
+    Ok(())
+}
+
+/// Measured batch-1 latency of the nominal autoencoder through the PJRT
+/// CPU runtime (the Table III "CPU" role).
+fn measure_cpu_latency(args: &Args) -> Result<f64> {
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let exe = engine.load_variant(&manifest, "nominal_ts100")?;
+    let mut stream = gwlstm::gw::dataset::StrainStream::new(3, exe.spec.ts, DEFAULT_SNR, 0.0);
+    let w = stream.next_window();
+    // warmup
+    for _ in 0..3 {
+        exe.infer(&w.samples)?;
+    }
+    let iters = 50;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        exe.infer(&w.samples)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() * 1e6 / iters as f64)
+}

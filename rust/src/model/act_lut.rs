@@ -1,0 +1,165 @@
+//! Hardware activation functions: BRAM-LUT sigmoid + piecewise-linear tanh.
+//!
+//! Paper Section IV-A: "The activation function sigmoid is implemented
+//! using BRAM-based lookup tables with a range of precomputed input values.
+//! The hyperbolic tangent function is implemented as piecewise linear
+//! function to reduce the latency." This module is the bit-level mirror of
+//! those units, used by the fixed-point datapath in [`super::fixed`].
+
+/// Sigmoid lookup table: `ENTRIES` precomputed values over [-RANGE, RANGE],
+/// nearest-entry indexing (what a BRAM with a truncated address does),
+/// saturating outside.
+pub struct SigmoidLut {
+    table: Vec<f32>,
+    range: f32,
+}
+
+impl SigmoidLut {
+    /// Default hardware sizing: 1024 entries over [-8, 8] — one 36kb BRAM
+    /// at 16-bit output width holds 2048 entries, so this is conservative.
+    pub fn new(entries: usize, range: f32) -> SigmoidLut {
+        let table = (0..entries)
+            .map(|i| {
+                let x = -range + 2.0 * range * (i as f32 + 0.5) / entries as f32;
+                1.0 / (1.0 + (-x).exp())
+            })
+            .collect();
+        SigmoidLut { table, range }
+    }
+
+    #[inline]
+    pub fn eval(&self, x: f32) -> f32 {
+        if x <= -self.range {
+            return self.table[0];
+        }
+        if x >= self.range {
+            return *self.table.last().unwrap();
+        }
+        let n = self.table.len() as f32;
+        let idx = ((x + self.range) / (2.0 * self.range) * n) as usize;
+        self.table[idx.min(self.table.len() - 1)]
+    }
+}
+
+impl Default for SigmoidLut {
+    fn default() -> Self {
+        // 4096 entries x 16-bit output = two 36kb BRAMs; step 2^-8 over
+        // [-8, 8] keeps the lookup error below 1e-3 — the sizing needed for
+        // the paper's "quantization has negligible effect" to hold through
+        // the full fixed-point datapath (see anomaly_campaign).
+        SigmoidLut::new(4096, 8.0)
+    }
+}
+
+/// Piecewise-linear tanh (the low-latency hardware unit, cf. paper refs
+/// [21, 22]): chord interpolation between precomputed knots — endpoint
+/// values and slopes live in a small ROM, evaluation is one multiply + one
+/// add after a range decode (2-3 cycles, vs a LUT's BRAM access).
+///
+/// Knots every 0.25 up to |x| = 4 (17 ROM entries), saturating beyond;
+/// since tanh is convex for x > 0 the chord error is largest mid-segment —
+/// max error ~6e-3 (mid-segment near x=0.6 where curvature peaks), with
+/// saturation error 1 - tanh(4) = 6.7e-4. This is the sizing at which the
+/// fixed-point datapath preserves detection AUC (negligible-effect claim).
+const PWL_KNOT_STEP: f32 = 0.25;
+const PWL_Y: [f32; 17] = [
+    0.0, 0.244919, 0.462117, 0.635149, 0.761594, 0.848284, 0.905148, 0.941376, 0.964028,
+    0.978026, 0.986614, 0.991868, 0.995055, 0.996993, 0.998178, 0.998894, 0.999329,
+];
+
+#[inline]
+pub fn pwl_tanh(x: f32) -> f32 {
+    let a = x.abs();
+    let seg = (a / PWL_KNOT_STEP) as usize;
+    let y = if seg >= PWL_Y.len() - 1 {
+        PWL_Y[PWL_Y.len() - 1]
+    } else {
+        let x0 = seg as f32 * PWL_KNOT_STEP;
+        let slope = (PWL_Y[seg + 1] - PWL_Y[seg]) / PWL_KNOT_STEP;
+        PWL_Y[seg] + slope * (a - x0)
+    };
+    y.copysign(x)
+}
+
+/// Maximum absolute error of the PWL tanh against libm over a dense grid
+/// (documented accuracy of the hardware unit).
+pub fn pwl_tanh_max_err() -> f32 {
+    let mut worst = 0.0f32;
+    let mut x = -6.0f32;
+    while x <= 6.0 {
+        worst = worst.max((pwl_tanh(x) - x.tanh()).abs());
+        x += 1e-3;
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_matches_sigmoid() {
+        let lut = SigmoidLut::default();
+        let mut x = -10.0f32;
+        while x <= 10.0 {
+            let want = 1.0 / (1.0 + (-x).exp());
+            let got = lut.eval(x);
+            assert!(
+                (got - want).abs() < 0.01,
+                "sigmoid LUT err at {x}: {got} vs {want}"
+            );
+            x += 0.037;
+        }
+    }
+
+    #[test]
+    fn lut_saturates() {
+        let lut = SigmoidLut::default();
+        assert!(lut.eval(100.0) > 0.999);
+        assert!(lut.eval(-100.0) < 0.001);
+    }
+
+    #[test]
+    fn lut_monotone() {
+        let lut = SigmoidLut::default();
+        let mut last = -1.0f32;
+        let mut x = -9.0f32;
+        while x <= 9.0 {
+            let y = lut.eval(x);
+            assert!(y >= last - 1e-6, "non-monotone at {x}");
+            last = y;
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn pwl_tanh_accuracy() {
+        // the finer chord PWL stays within ~0.6% of true tanh
+        let err = pwl_tanh_max_err();
+        assert!(err < 0.0065, "pwl tanh max err {err}");
+    }
+
+    #[test]
+    fn pwl_tanh_odd_symmetry() {
+        for x in [-3.0f32, -1.2, -0.4, 0.0, 0.7, 2.1, 5.0] {
+            assert_eq!(pwl_tanh(x), -pwl_tanh(-x));
+        }
+    }
+
+    #[test]
+    fn pwl_tanh_bounded() {
+        for i in -600..600 {
+            let x = i as f32 / 100.0;
+            assert!(pwl_tanh(x).abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn pwl_tanh_continuous_at_knees() {
+        for knee in [0.25f32, 1.5, 3.75] {
+            let below = pwl_tanh(knee - 1e-4);
+            let above = pwl_tanh(knee + 1e-4);
+            assert!((below - above).abs() < 1e-3, "jump at {knee}");
+        }
+    }
+}

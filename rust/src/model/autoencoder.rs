@@ -1,0 +1,221 @@
+//! The LSTM autoencoder, composed from layers (f32 and fixed-point paths).
+//!
+//! Structure (paper Fig. 3): encoder LSTM chain -> latent bottleneck (only
+//! the *last* hidden vector of the last encoder layer) -> repeat-vector ->
+//! decoder LSTM chain -> TimeDistributed dense. Encoder = first half of the
+//! weight file's layer list, decoder = second half — matching both the
+//! `small` (1+1) and `nominal` (2+2) architectures.
+
+use super::act_lut::SigmoidLut;
+use super::fixed::{q16_to_f32, to_q16, FixedLstm};
+use super::lstm::lstm_layer;
+use super::weights::AutoencoderWeights;
+
+/// f32 reference forward pass: `window` has `ts` samples (d_in = 1).
+/// Returns the reconstruction (ts values).
+pub fn forward_f32(w: &AutoencoderWeights, window: &[f32]) -> Vec<f32> {
+    let ts = window.len();
+    let split = w.layers.len() / 2;
+    // encoder
+    let mut seq: Vec<f32> = window.to_vec();
+    let mut width = 1usize;
+    for l in &w.layers[..split] {
+        assert_eq!(width, l.lx, "layer {} input width", l.name);
+        seq = lstm_layer(l, &seq, ts);
+        width = l.lh;
+    }
+    // bottleneck: keep last h, repeat over ts
+    let latent = seq[(ts - 1) * width..].to_vec();
+    let mut dec: Vec<f32> = Vec::with_capacity(ts * width);
+    for _ in 0..ts {
+        dec.extend_from_slice(&latent);
+    }
+    seq = dec;
+    for l in &w.layers[split..] {
+        assert_eq!(width, l.lx, "layer {} input width", l.name);
+        seq = lstm_layer(l, &seq, ts);
+        width = l.lh;
+    }
+    // TimeDistributed dense
+    let mut out = vec![0.0f32; ts * w.d_out];
+    for t in 0..ts {
+        for o in 0..w.d_out {
+            let mut acc = w.out_b[o];
+            for j in 0..width {
+                acc += seq[t * width + j] * w.out_w[j * w.d_out + o];
+            }
+            out[t * w.d_out + o] = acc;
+        }
+    }
+    out
+}
+
+/// Reconstruction MSE (the anomaly score).
+pub fn score_f32(w: &AutoencoderWeights, window: &[f32]) -> f32 {
+    let rec = forward_f32(w, window);
+    let n = window.len() as f32;
+    window
+        .iter()
+        .zip(&rec)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        / n
+}
+
+/// The fixed-point autoencoder (the hardware datapath end-to-end).
+pub struct FixedAutoencoder {
+    layers: Vec<FixedLstm>,
+    out_w: Vec<f32>,
+    out_b: Vec<f32>,
+    d_out: usize,
+    lut: SigmoidLut,
+}
+
+impl FixedAutoencoder {
+    pub fn from_weights(w: &AutoencoderWeights) -> FixedAutoencoder {
+        FixedAutoencoder {
+            layers: w.layers.iter().map(FixedLstm::from_weights).collect(),
+            out_w: w.out_w.clone(),
+            out_b: w.out_b.clone(),
+            d_out: w.d_out,
+            lut: SigmoidLut::default(),
+        }
+    }
+
+    /// Forward through the 16-bit datapath; reconstruction in f32.
+    pub fn forward(&self, window: &[f32]) -> Vec<f32> {
+        let ts = window.len();
+        let split = self.layers.len() / 2;
+        let mut seq: Vec<i16> = window.iter().map(|&v| to_q16(v)).collect();
+        let mut width = 1usize;
+        for l in &self.layers[..split] {
+            seq = l.run(&self.lut, &seq, ts);
+            width = l.lh;
+        }
+        let latent = seq[(ts - 1) * width..].to_vec();
+        let mut dec = Vec::with_capacity(ts * width);
+        for _ in 0..ts {
+            dec.extend_from_slice(&latent);
+        }
+        seq = dec;
+        for l in &self.layers[split..] {
+            seq = l.run(&self.lut, &seq, ts);
+            width = l.lh;
+        }
+        let mut out = vec![0.0f32; ts * self.d_out];
+        for t in 0..ts {
+            for o in 0..self.d_out {
+                let mut acc = self.out_b[o];
+                for j in 0..width {
+                    acc += q16_to_f32(seq[t * width + j]) * self.out_w[j * self.d_out + o];
+                }
+                out[t * self.d_out + o] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn score(&self, window: &[f32]) -> f32 {
+        let rec = self.forward(window);
+        let n = window.len() as f32;
+        window
+            .iter()
+            .zip(&rec)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::LstmWeights;
+    use crate::util::rng::Rng;
+
+    fn synthetic_weights(seed: u64, arch: &str) -> AutoencoderWeights {
+        let dims: Vec<(usize, usize)> = match arch {
+            "small" => vec![(1, 9), (9, 9)],
+            _ => vec![(1, 32), (32, 8), (8, 8), (8, 32)],
+        };
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for (i, &(lx, lh)) in dims.iter().enumerate() {
+            let scale_x = (6.0 / (lx + 4 * lh) as f64).sqrt();
+            let scale_h = (6.0 / (lh + 4 * lh) as f64).sqrt();
+            layers.push(LstmWeights {
+                name: format!("l{i}"),
+                lx,
+                lh,
+                wx: (0..lx * 4 * lh)
+                    .map(|_| (rng.range(-scale_x, scale_x)) as f32)
+                    .collect(),
+                wh: (0..lh * 4 * lh)
+                    .map(|_| (rng.range(-scale_h, scale_h)) as f32)
+                    .collect(),
+                b: vec![0.0; 4 * lh],
+            });
+        }
+        let lh_last = dims.last().unwrap().1;
+        AutoencoderWeights {
+            arch: arch.into(),
+            layers,
+            out_w: (0..lh_last).map(|_| rng.range(-0.4, 0.4) as f32).collect(),
+            out_b: vec![0.0],
+            d_out: 1,
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let w = synthetic_weights(0, "small");
+        let win: Vec<f32> = (0..8).map(|i| (i as f32 / 4.0).sin()).collect();
+        let rec = forward_f32(&w, &win);
+        assert_eq!(rec.len(), 8);
+        assert!(rec.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn nominal_arch_runs() {
+        let w = synthetic_weights(1, "nominal");
+        let win: Vec<f32> = (0..100).map(|i| (i as f32 / 10.0).sin()).collect();
+        let rec = forward_f32(&w, &win);
+        assert_eq!(rec.len(), 100);
+    }
+
+    #[test]
+    fn score_nonnegative_and_deterministic() {
+        let w = synthetic_weights(2, "small");
+        let win: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        let s1 = score_f32(&w, &win);
+        let s2 = score_f32(&w, &win);
+        assert!(s1 >= 0.0);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn latent_bottleneck_semantics() {
+        // Two windows identical except in early samples produce different
+        // latents in general, but a window equal to another must map equal.
+        let w = synthetic_weights(3, "small");
+        let a: Vec<f32> = (0..8).map(|i| (i as f32).cos()).collect();
+        assert_eq!(forward_f32(&w, &a), forward_f32(&w, &a));
+    }
+
+    #[test]
+    fn fixed_tracks_f32_autoencoder() {
+        let w = synthetic_weights(4, "small");
+        let fx = FixedAutoencoder::from_weights(&w);
+        let win: Vec<f32> = (0..8).map(|i| ((i * 7 % 5) as f32 - 2.0) / 2.0).collect();
+        let a = forward_f32(&w, &win);
+        let b = fx.forward(&win);
+        let rms: f32 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            .sqrt()
+            / a.len() as f32;
+        assert!(rms < 0.05, "fixed vs f32 rms {rms}");
+    }
+}

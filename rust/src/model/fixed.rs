@@ -1,0 +1,232 @@
+//! The paper's 16-bit fixed-point hardware datapath, bit-level in software.
+//!
+//! Number formats (paper Sections IV-A, V-C):
+//! * weights & activations: **Q6.10** signed 16-bit (what QKeras quantized
+//!   to; `python/compile/quant.py` uses the same grid),
+//! * bias & cell state: **Q12.20** signed 32-bit ("the bias and LSTM cell
+//!   status are both 32 bits to keep the accuracy"),
+//! * gate MVMs accumulate exactly in i64 (a DSP48 cascade does the same),
+//! * sigmoid via the BRAM LUT, tanh via the piecewise-linear unit
+//!   ([`super::act_lut`]),
+//! * the `f_t * c_{t-1}` tail product is a 16x32 multiply — the unit the
+//!   paper prices at 2 DSPs per multiplier.
+
+use super::act_lut::{pwl_tanh, SigmoidLut};
+use super::weights::LstmWeights;
+
+/// Fractional bits of the 16-bit format (Q6.10).
+pub const FRAC16: i32 = 10;
+/// Fractional bits of the 32-bit format (Q12.20).
+pub const FRAC32: i32 = 20;
+
+/// Quantize f32 -> Q6.10 with saturation.
+#[inline]
+pub fn to_q16(x: f32) -> i16 {
+    let v = (x * (1 << FRAC16) as f32).round();
+    v.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+}
+
+/// Quantize f32 -> Q12.20 with saturation.
+#[inline]
+pub fn to_q32(x: f32) -> i32 {
+    let v = (x as f64 * (1u32 << FRAC32) as f64).round();
+    v.clamp(i32::MIN as f64, i32::MAX as f64) as i32
+}
+
+#[inline]
+pub fn q16_to_f32(x: i16) -> f32 {
+    x as f32 / (1 << FRAC16) as f32
+}
+
+#[inline]
+pub fn q32_to_f32(x: i32) -> f32 {
+    (x as f64 / (1u32 << FRAC32) as f64) as f32
+}
+
+/// One LSTM layer with quantized weights.
+pub struct FixedLstm {
+    pub lx: usize,
+    pub lh: usize,
+    /// Q6.10, (Lx, 4Lh) row-major.
+    wx: Vec<i16>,
+    /// Q6.10, (Lh, 4Lh) row-major.
+    wh: Vec<i16>,
+    /// Q12.20.
+    b: Vec<i32>,
+}
+
+/// Fixed-point sequence state.
+pub struct FixedState {
+    /// Hidden vector, Q6.10 (the 16-bit activation path).
+    pub h: Vec<i16>,
+    /// Cell state, Q12.20 (the 32-bit path).
+    pub c: Vec<i32>,
+}
+
+impl FixedState {
+    pub fn zeros(lh: usize) -> FixedState {
+        FixedState {
+            h: vec![0; lh],
+            c: vec![0; lh],
+        }
+    }
+}
+
+impl FixedLstm {
+    pub fn from_weights(w: &LstmWeights) -> FixedLstm {
+        FixedLstm {
+            lx: w.lx,
+            lh: w.lh,
+            wx: w.wx.iter().map(|&v| to_q16(v)).collect(),
+            wh: w.wh.iter().map(|&v| to_q16(v)).collect(),
+            b: w.b.iter().map(|&v| to_q32(v)).collect(),
+        }
+    }
+
+    /// One timestep. `x` is the Q6.10 input vector.
+    pub fn step(&self, lut: &SigmoidLut, x: &[i16], st: &mut FixedState) {
+        let lh = self.lh;
+        let l4 = 4 * lh;
+        debug_assert_eq!(x.len(), self.lx);
+        // gate pre-activations accumulated exactly: Q6.10 x Q6.10 = Q12.20
+        let mut z = vec![0i64; l4];
+        for (i, &xv) in x.iter().enumerate() {
+            let row = &self.wx[i * l4..(i + 1) * l4];
+            for (zv, &wv) in z.iter_mut().zip(row) {
+                *zv += xv as i64 * wv as i64;
+            }
+        }
+        for (i, &hv) in st.h.iter().enumerate() {
+            let row = &self.wh[i * l4..(i + 1) * l4];
+            for (zv, &wv) in z.iter_mut().zip(row) {
+                *zv += hv as i64 * wv as i64;
+            }
+        }
+        for (zv, &bv) in z.iter_mut().zip(&self.b) {
+            *zv += bv as i64; // bias already Q12.20
+        }
+        for j in 0..lh {
+            // activations evaluated at Q12.20 -> f32 (the LUT address is a
+            // truncation of the fixed-point value; same granularity)
+            let zi = q32_sat(z[j]);
+            let zf = q32_sat(z[lh + j]);
+            let zg = q32_sat(z[2 * lh + j]);
+            let zo = q32_sat(z[3 * lh + j]);
+            let i_g = lut.eval(q32_to_f32(zi));
+            let f_g = lut.eval(q32_to_f32(zf));
+            let g_g = pwl_tanh(q32_to_f32(zg));
+            let o_g = lut.eval(q32_to_f32(zo));
+            // tail in fixed point: gates as Q1.20 (range (-1, 1])
+            let i_q = (i_g * (1 << 20) as f32) as i64;
+            let f_q = (f_g * (1 << 20) as f32) as i64;
+            let g_q = (g_g * (1 << 20) as f32) as i64;
+            // f*c: Q1.20 x Q12.20 >> 20 = Q12.20 (the 2-DSP product)
+            let fc = (f_q * st.c[j] as i64) >> 20;
+            // i*g: Q1.20 x Q1.20 = Q2.40 -> Q12.20
+            let ig = (i_q * g_q) >> 20;
+            let c_new = sat_i32(fc + ig);
+            st.c[j] = c_new;
+            let h_f = o_g * pwl_tanh(q32_to_f32(c_new));
+            st.h[j] = to_q16(h_f);
+        }
+    }
+
+    /// Full sequence; returns hidden vectors as Q6.10, (TS, Lh) row-major.
+    pub fn run(&self, lut: &SigmoidLut, xs: &[i16], ts: usize) -> Vec<i16> {
+        assert_eq!(xs.len(), ts * self.lx);
+        let mut st = FixedState::zeros(self.lh);
+        let mut out = vec![0i16; ts * self.lh];
+        for t in 0..ts {
+            self.step(lut, &xs[t * self.lx..(t + 1) * self.lx], &mut st);
+            out[t * self.lh..(t + 1) * self.lh].copy_from_slice(&st.h);
+        }
+        out
+    }
+}
+
+#[inline]
+fn q32_sat(v: i64) -> i32 {
+    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+#[inline]
+fn sat_i32(v: i64) -> i32 {
+    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lstm::lstm_layer;
+    use crate::model::weights::LstmWeights as W;
+    use crate::util::rng::Rng;
+
+    fn random_weights(seed: u64, lx: usize, lh: usize) -> W {
+        let mut rng = Rng::new(seed);
+        let mut gen = |n: usize, s: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.gaussian() * s) as f32).collect()
+        };
+        W {
+            name: "r".into(),
+            lx,
+            lh,
+            wx: gen(lx * 4 * lh, 0.4),
+            wh: gen(lh * 4 * lh, 0.4),
+            b: gen(4 * lh, 0.2),
+        }
+    }
+
+    #[test]
+    fn quantization_grid() {
+        assert_eq!(to_q16(0.5), 512);
+        assert_eq!(q16_to_f32(512), 0.5);
+        assert_eq!(to_q16(40.0), i16::MAX); // saturation at ~32
+        assert_eq!(to_q16(-40.0), i16::MIN);
+        assert!((q32_to_f32(to_q32(1.2345)) - 1.2345).abs() < 1e-5);
+    }
+
+    #[test]
+    fn fixed_tracks_float_reference() {
+        // The paper's claim: 16-bit quantization has negligible effect.
+        // Bit-level datapath vs f32 reference on the same weights must stay
+        // within a few percent RMS on realistic sequences.
+        let w = random_weights(3, 2, 8);
+        let f = FixedLstm::from_weights(&w);
+        let lut = SigmoidLut::default();
+        let ts = 20;
+        let mut rng = Rng::new(9);
+        let xs_f: Vec<f32> = (0..ts * 2).map(|_| rng.gaussian() as f32).collect();
+        let xs_q: Vec<i16> = xs_f.iter().map(|&v| to_q16(v)).collect();
+        let hf = lstm_layer(&w, &xs_f, ts);
+        let hq = f.run(&lut, &xs_q, ts);
+        let mut err2 = 0.0f64;
+        let mut ref2 = 0.0f64;
+        for (a, &b) in hf.iter().zip(&hq) {
+            let d = (*a - q16_to_f32(b)) as f64;
+            err2 += d * d;
+            ref2 += (*a as f64) * (*a as f64);
+        }
+        let rel = (err2 / ref2.max(1e-12)).sqrt();
+        assert!(rel < 0.08, "fixed vs float rel RMS err {rel}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = random_weights(1, 1, 4);
+        let f = FixedLstm::from_weights(&w);
+        let lut = SigmoidLut::default();
+        let xs: Vec<i16> = (0..8).map(|i| to_q16((i as f32 - 4.0) / 4.0)).collect();
+        assert_eq!(f.run(&lut, &xs, 8), f.run(&lut, &xs, 8));
+    }
+
+    #[test]
+    fn no_overflow_on_extremes() {
+        let w = random_weights(2, 1, 4);
+        let f = FixedLstm::from_weights(&w);
+        let lut = SigmoidLut::default();
+        let xs = vec![i16::MAX; 16];
+        let out = f.run(&lut, &xs, 16);
+        // |h| <= 1 in Q6.10 (1024), plus LUT slack
+        assert!(out.iter().all(|&v| v.unsigned_abs() <= 1100), "{out:?}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Pure-rust f32 LSTM layer (the software reference datapath).
+//!
+//! Same gate order (i|f|g|o) and same sub-layer split as the python oracle
+//! and the hardware: `mvm_x` hoisted over the whole sequence, then the
+//! recurrent loop. This implementation is the numeric bridge between the
+//! AOT artifacts (checked via golden vectors) and the fixed-point datapath
+//! in [`super::fixed`].
+
+use super::weights::LstmWeights;
+
+/// Mutable per-sequence LSTM state.
+#[derive(Debug, Clone)]
+pub struct LstmState {
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+impl LstmState {
+    pub fn zeros(lh: usize) -> LstmState {
+        LstmState {
+            h: vec![0.0; lh],
+            c: vec![0.0; lh],
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The paper's first sub-layer: `xs (TS, Lx) @ wx (Lx, 4Lh)` for all
+/// timesteps at once.
+pub fn mvm_x(w: &LstmWeights, xs: &[f32], ts: usize) -> Vec<f32> {
+    assert_eq!(xs.len(), ts * w.lx);
+    let l4 = 4 * w.lh;
+    let mut out = vec![0.0f32; ts * l4];
+    for t in 0..ts {
+        let x_row = &xs[t * w.lx..(t + 1) * w.lx];
+        let o_row = &mut out[t * l4..(t + 1) * l4];
+        for (i, &xv) in x_row.iter().enumerate() {
+            let w_row = &w.wx[i * l4..(i + 1) * l4];
+            for (o, &wv) in o_row.iter_mut().zip(w_row) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// The recurrent sub-layer for one timestep: consumes `xw_t` (4Lh), updates
+/// state in place.
+pub fn step_from_xw(w: &LstmWeights, xw_t: &[f32], st: &mut LstmState) {
+    let lh = w.lh;
+    let l4 = 4 * lh;
+    debug_assert_eq!(xw_t.len(), l4);
+    // z = xw + h @ wh + b
+    let mut z: Vec<f32> = xw_t.iter().zip(&w.b).map(|(a, b)| a + b).collect();
+    for (i, &hv) in st.h.iter().enumerate() {
+        let w_row = &w.wh[i * l4..(i + 1) * l4];
+        for (zv, &wv) in z.iter_mut().zip(w_row) {
+            *zv += hv * wv;
+        }
+    }
+    for j in 0..lh {
+        let i_g = sigmoid(z[j]);
+        let f_g = sigmoid(z[lh + j]);
+        let g_g = z[2 * lh + j].tanh();
+        let o_g = sigmoid(z[3 * lh + j]);
+        let c_new = f_g * st.c[j] + i_g * g_g;
+        st.c[j] = c_new;
+        st.h[j] = o_g * c_new.tanh();
+    }
+}
+
+/// Full layer over a sequence; returns all hidden vectors `(TS, Lh)`.
+pub fn lstm_layer(w: &LstmWeights, xs: &[f32], ts: usize) -> Vec<f32> {
+    let xw = mvm_x(w, xs, ts);
+    let mut st = LstmState::zeros(w.lh);
+    let mut hs = vec![0.0f32; ts * w.lh];
+    let l4 = 4 * w.lh;
+    for t in 0..ts {
+        step_from_xw(w, &xw[t * l4..(t + 1) * l4], &mut st);
+        hs[t * w.lh..(t + 1) * w.lh].copy_from_slice(&st.h);
+    }
+    hs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> LstmWeights {
+        // lx=1, lh=2; hand-pickable numbers
+        LstmWeights {
+            name: "t".into(),
+            lx: 1,
+            lh: 2,
+            wx: vec![0.5, -0.5, 1.0, 0.0, 0.25, 0.25, -1.0, 1.0],
+            wh: vec![
+                0.1, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, //
+                0.0, 0.1, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+            ],
+            b: vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn single_step_hand_computed() {
+        let w = tiny();
+        let mut st = LstmState::zeros(2);
+        let xw = mvm_x(&w, &[1.0], 1);
+        // xw = wx row for x=1
+        assert_eq!(xw, w.wx);
+        step_from_xw(&w, &xw, &mut st);
+        // z = xw + b (h=0): i gates sigmoid(0.5), sigmoid(-0.5);
+        // f: sigmoid(1+1)=sigmoid(2), sigmoid(0+1); g: tanh(.25) x2;
+        // o: sigmoid(-1), sigmoid(1)
+        let i0 = sigmoid(0.5);
+        let g0 = 0.25f32.tanh();
+        let c0 = i0 * g0; // f*0 + i*g
+        let h0 = sigmoid(-1.0) * c0.tanh();
+        assert!((st.c[0] - c0).abs() < 1e-6);
+        assert!((st.h[0] - h0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bounded_outputs() {
+        let w = tiny();
+        let xs: Vec<f32> = (0..32).map(|i| ((i * 37) % 11) as f32 - 5.0).collect();
+        let hs = lstm_layer(&w, &xs, 32);
+        assert!(hs.iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn zero_input_zero_bias_stays_small() {
+        let mut w = tiny();
+        w.b = vec![0.0; 8];
+        let hs = lstm_layer(&w, &[0.0; 8], 8);
+        // with x=0, h grows only through the recurrent leak; must stay tiny
+        assert!(hs.iter().all(|v| v.abs() < 0.1));
+    }
+
+    #[test]
+    fn state_carries_between_steps() {
+        let w = tiny();
+        let hs2 = lstm_layer(&w, &[1.0, 1.0], 2);
+        let hs1 = lstm_layer(&w, &[1.0], 1);
+        // second step differs from first (state evolved)
+        assert_ne!(hs2[2..4], hs1[0..2]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Pure-rust reference implementations of the neural datapath.
+//!
+//! Mirrors the hardware at two precisions:
+//! * [`lstm`]/[`autoencoder`] — f32 reference (checked against the AOT
+//!   artifacts' golden vectors in the runtime integration test),
+//! * [`fixed`] + [`act_lut`] — the paper's 16-bit datapath bit-for-bit:
+//!   Q6.10 weights/activations, Q12.20 bias/cell state, BRAM-LUT sigmoid,
+//!   piecewise-linear tanh (Section IV-A).
+//!
+//! [`weights`] loads the trained parameters exported by `aot.py`.
+
+pub mod act_lut;
+pub mod autoencoder;
+pub mod fixed;
+pub mod lstm;
+pub mod weights;
+
+pub use autoencoder::{forward_f32, score_f32, FixedAutoencoder};
+pub use weights::AutoencoderWeights;

@@ -1,0 +1,137 @@
+//! Trained-weights loading (artifacts/weights_*.json emitted by aot.py).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// One LSTM layer's weights in the i|f|g|o packed layout.
+#[derive(Debug, Clone)]
+pub struct LstmWeights {
+    pub name: String,
+    pub lx: usize,
+    pub lh: usize,
+    /// (Lx, 4*Lh) row-major.
+    pub wx: Vec<f32>,
+    /// (Lh, 4*Lh) row-major.
+    pub wh: Vec<f32>,
+    /// (4*Lh,)
+    pub b: Vec<f32>,
+}
+
+/// Whole autoencoder weights.
+#[derive(Debug, Clone)]
+pub struct AutoencoderWeights {
+    pub arch: String,
+    pub layers: Vec<LstmWeights>,
+    /// (Lh_last, d_out) row-major.
+    pub out_w: Vec<f32>,
+    pub out_b: Vec<f32>,
+    pub d_out: usize,
+}
+
+impl AutoencoderWeights {
+    /// Load from the JSON schema `aot.export_weights` writes.
+    pub fn load(path: &str) -> Result<AutoencoderWeights> {
+        let v = Value::from_file(path)?;
+        let arch = v.get("arch")?.as_str()?.to_string();
+        let tensors = v.get("tensors")?;
+        let mut layers = Vec::new();
+        for l in v.get("layers")?.as_arr()? {
+            let name = l.get("name")?.as_str()?.to_string();
+            let lx = l.get("lx")?.as_usize()?;
+            let lh = l.get("lh")?.as_usize()?;
+            let wx = tensors
+                .get(&format!("{name}_wx"))
+                .with_context(|| format!("{name}_wx"))?
+                .as_f32_flat()?;
+            let wh = tensors.get(&format!("{name}_wh"))?.as_f32_flat()?;
+            let b = tensors.get(&format!("{name}_b"))?.as_f32_flat()?;
+            if wx.len() != lx * 4 * lh || wh.len() != lh * 4 * lh || b.len() != 4 * lh {
+                bail!(
+                    "layer {name} shape mismatch: wx {} wh {} b {} for lx={lx} lh={lh}",
+                    wx.len(),
+                    wh.len(),
+                    b.len()
+                );
+            }
+            layers.push(LstmWeights {
+                name,
+                lx,
+                lh,
+                wx,
+                wh,
+                b,
+            });
+        }
+        let out_w = tensors.get("out_w")?.as_f32_flat()?;
+        let out_b = tensors.get("out_b")?.as_f32_flat()?;
+        let d_out = out_b.len();
+        let lh_last = layers.last().map(|l| l.lh).unwrap_or(0);
+        if out_w.len() != lh_last * d_out {
+            bail!("out_w shape {} != {lh_last}x{d_out}", out_w.len());
+        }
+        Ok(AutoencoderWeights {
+            arch,
+            layers,
+            out_w,
+            out_b,
+            d_out,
+        })
+    }
+
+    /// Layer dims as the DSE wants them.
+    pub fn layer_dims(&self) -> Vec<crate::hls::LayerDims> {
+        self.layers
+            .iter()
+            .map(|l| crate::hls::LayerDims::new(l.lx as u32, l.lh as u32))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tiny_json() -> String {
+        // 1-layer "autoencoder": lx=1, lh=2
+        r#"{
+          "arch": "tiny",
+          "layers": [{"name": "enc0", "lx": 1, "lh": 2}],
+          "tensors": {
+            "enc0_wx": [[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]],
+            "enc0_wh": [[1, 0, 0, 0, 0, 0, 0, 0], [0, 0, 0, 0, 0, 0, 0, 1]],
+            "enc0_b":  [0, 0, 1, 1, 0, 0, 0, 0],
+            "out_w":   [[0.5], [-0.5]],
+            "out_b":   [0.25]
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("gwlstm_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.json");
+        write!(std::fs::File::create(&path).unwrap(), "{}", tiny_json()).unwrap();
+        let w = AutoencoderWeights::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(w.arch, "tiny");
+        assert_eq!(w.layers.len(), 1);
+        assert_eq!(w.layers[0].lh, 2);
+        assert_eq!(w.layers[0].wx.len(), 8);
+        assert_eq!(w.out_w, vec![0.5, -0.5]);
+        assert_eq!(w.d_out, 1);
+        assert_eq!(w.layer_dims()[0], crate::hls::LayerDims::new(1, 2));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("gwlstm_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        let bad = tiny_json().replace("\"lh\": 2", "\"lh\": 3");
+        write!(std::fs::File::create(&path).unwrap(), "{}", bad).unwrap();
+        assert!(AutoencoderWeights::load(path.to_str().unwrap()).is_err());
+    }
+}

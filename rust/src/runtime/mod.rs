@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute on
+//! the request path.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API) following the
+//! pattern of `/opt/xla-example/load_hlo.rs`:
+//!
+//! ```text
+//! PjRtClient::cpu() -> HloModuleProto::from_text_file -> XlaComputation
+//!     -> client.compile -> executable.execute
+//! ```
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Python never runs
+//! here — artifacts are produced once by `make artifacts`.
+
+pub mod executor;
+
+pub use executor::{Engine, ModelExecutor};

@@ -1,0 +1,29 @@
+//! Cycle-level simulation of the proposed accelerator (the FPGA substitute).
+//!
+//! The paper's performance numbers are cycle counts from Vivado HLS RTL
+//! co-simulation. We replace that with an event-timed simulator that
+//! executes a [`crate::hls::DesignPoint`] job-by-job with exact cycle
+//! timestamps, honouring:
+//!
+//! * the two-sub-layer split of every LSTM layer (`mvm_x` unit with service
+//!   interval `R_x`, recurrent unit whose step occupies the full dependence
+//!   path `LT_mvm_h + LT_sigma + LT_tail`),
+//! * `rewind` (back-to-back loop iterations, no drain between inferences),
+//! * timestep overlapping between cascaded sequence-returning layers
+//!   (Fig. 7),
+//! * the encoder->decoder barrier (only the last hidden vector crosses the
+//!   bottleneck, Section III-D),
+//! * the TimeDistributed dense output.
+//!
+//! [`single_engine`] models the contrasting architecture the paper argues
+//! against: one big shared compute engine (Brainwave-like) that runs layers
+//! sequentially and starves on small models.
+//!
+//! `rust/tests/integration_dse_sim.rs` cross-checks the simulator against
+//! the analytical model (Eqs. 1-7) across the whole Table II design grid.
+
+pub mod pipeline;
+pub mod single_engine;
+
+pub use pipeline::{simulate, SimConfig, SimResult, UnitStats};
+pub use single_engine::{simulate_single_engine, SingleEngineConfig, SingleEngineResult};

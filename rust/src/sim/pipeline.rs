@@ -1,0 +1,433 @@
+//! Event-timed simulation of the coarse-grained pipelined LSTM accelerator.
+//!
+//! Every (inference, layer, timestep) job gets exact start/complete cycle
+//! timestamps derived from unit occupancy and data dependencies — the same
+//! quantities HLS RTL co-simulation reports, produced here in microseconds
+//! per design instead of hours.
+
+use crate::hls::device::Device;
+use crate::hls::perf_model::{lt_mvm, DesignPoint};
+
+/// Simulation input.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub point: DesignPoint,
+    pub device: Device,
+    /// Number of back-to-back inferences to push through the pipeline.
+    pub inferences: usize,
+    /// Arrival interval in cycles (None = all available at cycle 0, i.e.
+    /// fully backlogged — the steady-state-II measurement mode).
+    pub arrival_interval: Option<u64>,
+    /// Loop rewind (Vivado `#pragma pipeline rewind`): back-to-back loop
+    /// iterations across inference boundaries. Off = each inference pays the
+    /// pipeline drain `LT_N - ii_N` per layer (paper, Eq. 1 discussion).
+    pub rewind: bool,
+    /// Timestep overlapping between cascaded sequence-returning layers
+    /// (Fig. 7). Off = a layer starts only after its producer finished the
+    /// whole sequence (the naive schedule of Fig. 1).
+    pub overlap: bool,
+}
+
+impl SimConfig {
+    /// The paper's architecture: rewind + overlap on.
+    pub fn paper(point: DesignPoint, device: Device, inferences: usize) -> SimConfig {
+        SimConfig {
+            point,
+            device,
+            inferences,
+            arrival_interval: None,
+            rewind: true,
+            overlap: true,
+        }
+    }
+}
+
+/// Busy-cycle accounting for one hardware unit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UnitStats {
+    pub busy_cycles: u64,
+    pub jobs: u64,
+    /// DSPs this unit instantiates.
+    pub dsps: u64,
+}
+
+impl UnitStats {
+    /// Fraction of the makespan this unit was occupied.
+    pub fn occupancy(&self, makespan: u64) -> f64 {
+        if makespan == 0 {
+            0.0
+        } else {
+            self.busy_cycles as f64 / makespan as f64
+        }
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Per-inference completion cycle.
+    pub completions: Vec<u64>,
+    /// Per-inference latency (completion - arrival).
+    pub latencies: Vec<u64>,
+    /// Total cycles until the last inference completes.
+    pub makespan: u64,
+    /// Steady-state initiation interval: mean completion spacing over the
+    /// second half of the run (the pipeline's II_sys, Eq. 2).
+    pub steady_ii: f64,
+    /// Per-layer [mvm_x, recurrent] unit stats, then one dense entry.
+    pub units: Vec<UnitStats>,
+    /// Aggregate DSP-level utilization: executed mult-ops / (DSPs x makespan).
+    pub dsp_utilization: f64,
+}
+
+impl SimResult {
+    pub fn latency_us(&self, dev: &Device) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        dev.cycles_to_us(self.latencies[0])
+    }
+}
+
+/// Run the simulation.
+pub fn simulate(cfg: &SimConfig) -> SimResult {
+    let p = &cfg.point;
+    let dev = &cfg.device;
+    let n_layers = p.layers.len();
+    let ts = p.ts as usize;
+    let split = p.decoder_start();
+
+    // Per-layer unit timing parameters.
+    let rx: Vec<u64> = p.rx.iter().map(|&r| r.max(1) as u64).collect();
+    let lt_x: Vec<u64> = p.rx.iter().map(|&r| lt_mvm(dev, r) as u64).collect();
+    let ii_loop: Vec<u64> = p
+        .rh
+        .iter()
+        .map(|&r| (lt_mvm(dev, r) + dev.lt_sigma + dev.lt_tail) as u64)
+        .collect();
+
+    // Unit occupancy clocks.
+    let mut mvmx_free = vec![0u64; n_layers];
+    let mut rec_free = vec![0u64; n_layers];
+    let mut dense_free = 0u64;
+    let dense_lat = dev.lt_mult as u64 + 2;
+
+    // Stats: per layer two units + dense.
+    let mut units = vec![UnitStats::default(); 2 * n_layers + 1];
+    for (l, dims) in p.layers.iter().enumerate() {
+        units[2 * l].dsps = dims.mults_x().div_ceil(rx[l]);
+        units[2 * l + 1].dsps = dims.mults_h().div_ceil(p.rh[l].max(1) as u64) + dims.dsps_tail();
+    }
+    units[2 * n_layers].dsps = p.layers.last().map_or(0, |l| l.lh as u64) * p.dense_out as u64;
+
+    let mut completions = Vec::with_capacity(cfg.inferences);
+    let mut latencies = Vec::with_capacity(cfg.inferences);
+    let mut total_ops: u64 = 0;
+
+    // h_done[l][t]: completion cycle of hidden vector t of layer l for the
+    // *current inference* (recomputed per inference; pipelining across
+    // inferences is carried by the unit-occupancy clocks).
+    let mut h_done = vec![vec![0u64; ts]; n_layers];
+
+    for k in 0..cfg.inferences {
+        let arrival = cfg.arrival_interval.map_or(0, |iv| iv * k as u64);
+
+        for l in 0..n_layers {
+            // When is this layer's input for timestep t available?
+            //  - layer 0: whole window at arrival;
+            //  - first decoder layer: repeated latent, available when the
+            //    encoder's last timestep finishes (the barrier);
+            //  - otherwise: previous layer's h_t (timestep overlap, Fig. 7).
+            let latent_ready = if l == split && l > 0 {
+                Some(h_done[l - 1][ts - 1])
+            } else {
+                None
+            };
+            for t in 0..ts {
+                let input_ready = if l == 0 {
+                    arrival
+                } else if let Some(lr) = latent_ready {
+                    lr
+                } else if cfg.overlap {
+                    h_done[l - 1][t] // Fig. 7: consume h_t as it appears
+                } else {
+                    h_done[l - 1][ts - 1] // naive: wait for the full sequence
+                };
+                // mvm_x unit: service interval rx, latency lt_x.
+                let xs = input_ready.max(mvmx_free[l]);
+                mvmx_free[l] = xs + rx[l];
+                let xw_ready = xs + lt_x[l];
+                units[2 * l].busy_cycles += rx[l];
+                units[2 * l].jobs += 1;
+                // recurrent unit: serialized by the h dependence; with
+                // rewind it accepts the next job the cycle it finishes.
+                let prev_h = if t > 0 { h_done[l][t - 1] } else { 0 };
+                let rs = xw_ready.max(rec_free[l]).max(prev_h);
+                h_done[l][t] = rs + ii_loop[l];
+                rec_free[l] = rs + ii_loop[l];
+                if !cfg.rewind && t == ts - 1 {
+                    // pipeline drain between inferences: LT_N - ii_N, with
+                    // LT_N the full timestep-loop body (mvm_x + recurrence)
+                    rec_free[l] += lt_x[l];
+                }
+                units[2 * l + 1].busy_cycles += ii_loop[l];
+                units[2 * l + 1].jobs += 1;
+            }
+            total_ops += (p.layers[l].mults_x() + p.layers[l].mults_h() + 4 * p.layers[l].lh as u64)
+                * ts as u64;
+        }
+
+        // dense head: fully pipelined (II=1), one job per timestep.
+        let mut done = h_done[n_layers - 1][ts - 1];
+        if p.dense_out > 0 {
+            for t in 0..ts {
+                let ds = h_done[n_layers - 1][t].max(dense_free);
+                dense_free = ds + 1;
+                done = ds + dense_lat;
+                units[2 * n_layers].busy_cycles += 1;
+                units[2 * n_layers].jobs += 1;
+            }
+            total_ops += (p.layers[n_layers - 1].lh as u64 * p.dense_out as u64) * ts as u64;
+        }
+
+        completions.push(done);
+        latencies.push(done - arrival);
+    }
+
+    let makespan = *completions.last().unwrap_or(&0);
+    // steady-state II over the back half of the run
+    let steady_ii = if completions.len() >= 4 {
+        let half = completions.len() / 2;
+        let span = completions[completions.len() - 1] - completions[half - 1];
+        span as f64 / (completions.len() - half) as f64
+    } else {
+        f64::NAN
+    };
+    let total_dsps: u64 = units.iter().map(|u| u.dsps).sum();
+    let dsp_utilization = if makespan > 0 && total_dsps > 0 {
+        total_ops as f64 / (total_dsps as f64 * makespan as f64)
+    } else {
+        0.0
+    };
+
+    SimResult {
+        completions,
+        latencies,
+        makespan,
+        steady_ii,
+        units,
+        dsp_utilization,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::device::Device;
+    use crate::hls::perf_model::{model_perf, DesignPoint};
+
+    fn zynq() -> Device {
+        *Device::by_name("zynq7045").unwrap()
+    }
+
+    fn u250() -> Device {
+        *Device::by_name("u250").unwrap()
+    }
+
+    fn run(point: DesignPoint, dev: Device, n: usize) -> SimResult {
+        simulate(&SimConfig {
+            point,
+            device: dev,
+            inferences: n,
+            arrival_interval: None,
+            rewind: true,
+            overlap: true,
+        })
+    }
+
+    #[test]
+    fn steady_ii_matches_eq1_eq2_small() {
+        // Z3: ii=9, TS=8 -> II_sys = 72 cycles between completions.
+        let r = run(DesignPoint::small_autoencoder(9, 1, 8), zynq(), 32);
+        assert!(
+            (r.steady_ii - 72.0).abs() < 1.0,
+            "steady ii {} vs 72",
+            r.steady_ii
+        );
+    }
+
+    #[test]
+    fn steady_ii_matches_analytical_grid() {
+        // Across a (rx, rh) grid, the simulator's steady-state II equals the
+        // analytical max-layer II (the paper's Eq. 2).
+        let dev = zynq();
+        for rh in [1u32, 2, 3, 5] {
+            for rx in [1u32, 2, 9, 12] {
+                let p = DesignPoint::small_autoencoder(rx, rh, 8);
+                let m = model_perf(&dev, &p);
+                let r = run(p, dev, 40);
+                assert!(
+                    (r.steady_ii - m.ii_sys as f64).abs() < 1.0,
+                    "rx={rx} rh={rh}: sim {} vs model {}",
+                    r.steady_ii,
+                    m.ii_sys
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_latency_close_to_model() {
+        let dev = u250();
+        let p = DesignPoint::nominal_autoencoder(1, 1, 8);
+        let m = model_perf(&dev, &p);
+        let r = run(p, dev, 1);
+        let sim = r.latencies[0] as f64;
+        let model = m.latency_cycles as f64;
+        assert!(
+            (sim - model).abs() / model < 0.15,
+            "sim {sim} vs model {model}"
+        );
+    }
+
+    #[test]
+    fn paper_four_layer_latency_band() {
+        // Paper Table IV: four-layer autoencoder at 300 MHz = 0.867 us
+        // (260 cycles). Our simulated U2-configuration should land nearby.
+        let dev = u250();
+        let r = run(DesignPoint::nominal_autoencoder(9, 1, 8), dev, 1);
+        let us = dev.cycles_to_us(r.latencies[0]);
+        assert!((0.6..1.2).contains(&us), "latency {us} us");
+    }
+
+    #[test]
+    fn pipelining_beats_serial() {
+        // 16 pipelined inferences must finish far sooner than 16x the
+        // single-inference latency (the coarse-grained pipelining claim).
+        let dev = zynq();
+        let p = DesignPoint::small_autoencoder(9, 1, 8);
+        let one = run(p.clone(), dev, 1).latencies[0];
+        let many = run(p, dev, 16);
+        assert!(
+            many.makespan < one * 16 / 2,
+            "makespan {} vs serial {}",
+            many.makespan,
+            one * 16
+        );
+    }
+
+    #[test]
+    fn arrival_interval_respected() {
+        let dev = zynq();
+        let p = DesignPoint::small_autoencoder(9, 1, 8);
+        let r = simulate(&SimConfig {
+            point: p,
+            device: dev,
+            inferences: 8,
+            arrival_interval: Some(1_000), // slower than II: no queueing
+            rewind: true,
+            overlap: true,
+        });
+        // every inference should see the unloaded latency
+        let l0 = r.latencies[0];
+        for &l in &r.latencies {
+            assert_eq!(l, l0);
+        }
+    }
+
+    #[test]
+    fn barrier_serializes_encoder_decoder() {
+        // Decoder work must start only after the encoder's last timestep:
+        // first-inference latency ~ enc + dec, not max(enc, dec).
+        let dev = zynq();
+        let two_layer = run(DesignPoint::small_autoencoder(1, 1, 8), dev, 1).latencies[0];
+        // one-layer version of the same shape, no barrier
+        let one_layer = run(
+            DesignPoint {
+                layers: vec![crate::hls::perf_model::LayerDims::new(1, 9)],
+                rx: vec![1],
+                rh: vec![1],
+                ts: 8,
+                dense_out: 1,
+            },
+            dev,
+            1,
+        )
+        .latencies[0];
+        assert!(
+            two_layer as f64 > 1.8 * one_layer as f64 - 20.0,
+            "two {two_layer} one {one_layer}"
+        );
+    }
+
+    #[test]
+    fn unbalanced_ii_wastes_occupancy() {
+        // The Fig. 1 phenomenon: with wildly unbalanced layer IIs, the fast
+        // layer's recurrent unit idles most of the time.
+        let dev = zynq();
+        let p = DesignPoint {
+            layers: vec![
+                crate::hls::perf_model::LayerDims::new(1, 9),
+                crate::hls::perf_model::LayerDims::new(9, 9),
+            ],
+            rx: vec![1, 1],
+            rh: vec![20, 1], // layer0 slow, layer1 fast
+            ts: 8,
+            dense_out: 1,
+        };
+        let r = run(p, dev, 32);
+        let occ_fast = r.units[3].occupancy(r.makespan); // layer1 recurrent
+        let occ_slow = r.units[1].occupancy(r.makespan); // layer0 recurrent
+        assert!(
+            occ_fast < 0.55 * occ_slow,
+            "fast {occ_fast} slow {occ_slow}"
+        );
+    }
+
+    #[test]
+    fn no_overlap_hurts_latency() {
+        // Fig. 7 ablation: disabling timestep overlap must not improve and
+        // should typically worsen single-inference latency.
+        let dev = u250();
+        let p = DesignPoint::nominal_autoencoder(9, 1, 8);
+        let with = simulate(&SimConfig::paper(p.clone(), dev, 1)).latencies[0];
+        let without = simulate(&SimConfig {
+            point: p,
+            device: dev,
+            inferences: 1,
+            arrival_interval: None,
+            rewind: true,
+            overlap: false,
+        })
+        .latencies[0];
+        assert!(without > with, "overlap off {without} <= on {with}");
+    }
+
+    #[test]
+    fn no_rewind_hurts_steady_ii() {
+        // Eq. 1 ablation: without rewind every inference pays the pipeline
+        // drain, so the steady-state II grows by about LT_N - ii_N.
+        let dev = zynq();
+        let p = DesignPoint::small_autoencoder(9, 1, 8);
+        let with = simulate(&SimConfig::paper(p.clone(), dev, 48)).steady_ii;
+        let without = simulate(&SimConfig {
+            point: p,
+            device: dev,
+            inferences: 48,
+            arrival_interval: None,
+            rewind: false,
+            overlap: true,
+        })
+        .steady_ii;
+        assert!(without > with, "rewind off {without} <= on {with}");
+        // drain is lt_x = 9 cycles on this design
+        assert!((without - with - 9.0).abs() < 2.0, "drain {}", without - with);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let dev = zynq();
+        let r = run(DesignPoint::small_autoencoder(9, 1, 8), dev, 16);
+        assert!(r.dsp_utilization > 0.0 && r.dsp_utilization <= 1.0);
+    }
+}

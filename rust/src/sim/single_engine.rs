@@ -1,0 +1,158 @@
+//! The single-computational-engine baseline (Brainwave/NPU-style).
+//!
+//! Section I of the paper: "when the size of the targeted LSTM layer is
+//! small, these hardware resources will not be fully utilized, e.g., ...
+//! the Brainwave hardware utilization is lower than 1%, while the
+//! utilization of the NPU can be lower than 15%". This module models that
+//! architecture — one big bank of MAC lanes that every layer time-shares —
+//! so the utilization contrast against the layer-wise pipeline can be
+//! regenerated (`gwlstm simulate --arch single-engine`).
+
+use crate::hls::device::Device;
+use crate::hls::perf_model::DesignPoint;
+
+/// Configuration of the shared engine.
+#[derive(Debug, Clone, Copy)]
+pub struct SingleEngineConfig {
+    /// Parallel MAC lanes (Brainwave: 96,000 PEs).
+    pub lanes: u64,
+    /// Pipeline fill/drain overhead per layer invocation, cycles.
+    pub layer_overhead: u64,
+    /// Per-timestep scheduling overhead (instruction issue), cycles.
+    pub step_overhead: u64,
+}
+
+impl Default for SingleEngineConfig {
+    fn default() -> Self {
+        SingleEngineConfig {
+            lanes: 96_000,
+            layer_overhead: 20,
+            step_overhead: 4,
+        }
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone, Copy)]
+pub struct SingleEngineResult {
+    /// Cycles for one inference.
+    pub latency_cycles: u64,
+    /// Executed MAC ops.
+    pub ops: u64,
+    /// ops / (lanes * latency) — the utilization the paper quotes.
+    pub utilization: f64,
+}
+
+/// Run the whole network through one shared engine, layer by layer,
+/// timestep by timestep (the recurrent dependence forbids batching steps of
+/// the same sequence; batch = 1 as in the paper's latency context).
+pub fn simulate_single_engine(
+    cfg: &SingleEngineConfig,
+    point: &DesignPoint,
+    _dev: &Device,
+) -> SingleEngineResult {
+    let mut cycles: u64 = 0;
+    let mut ops: u64 = 0;
+    for dims in &point.layers {
+        cycles += cfg.layer_overhead;
+        let step_ops = dims.mults_x() + dims.mults_h() + 4 * dims.lh as u64;
+        for _t in 0..point.ts {
+            // the engine processes one timestep's MVMs at `lanes`-wide
+            // parallelism; the recurrence forces full serialization of steps
+            cycles += step_ops.div_ceil(cfg.lanes) + cfg.step_overhead;
+            ops += step_ops;
+        }
+    }
+    if point.dense_out > 0 {
+        cycles += cfg.layer_overhead;
+        let dense_ops = point.layers.last().map_or(0, |l| l.lh as u64) * point.dense_out as u64;
+        for _t in 0..point.ts {
+            cycles += dense_ops.div_ceil(cfg.lanes) + cfg.step_overhead;
+            ops += dense_ops;
+        }
+    }
+    SingleEngineResult {
+        latency_cycles: cycles,
+        ops,
+        utilization: ops as f64 / (cfg.lanes as f64 * cycles as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::device::Device;
+
+    #[test]
+    fn brainwave_utilization_below_one_percent() {
+        // The paper's Section I claim, reproduced on the nominal model.
+        let dev = Device::by_name("u250").unwrap();
+        let r = simulate_single_engine(
+            &SingleEngineConfig::default(),
+            &DesignPoint::nominal_autoencoder(1, 1, 8),
+            dev,
+        );
+        assert!(
+            r.utilization < 0.01,
+            "Brainwave-class engine on a small LSTM should sit under 1%, got {}",
+            r.utilization
+        );
+    }
+
+    #[test]
+    fn npu_scale_engine_below_fifteen_percent() {
+        // A smaller NPU-class engine (2,400 lanes, cf. [6]) still starves.
+        let dev = Device::by_name("u250").unwrap();
+        let cfg = SingleEngineConfig {
+            lanes: 2_400,
+            ..Default::default()
+        };
+        let r = simulate_single_engine(&cfg, &DesignPoint::nominal_autoencoder(1, 1, 8), dev);
+        assert!(r.utilization < 0.15, "utilization {}", r.utilization);
+    }
+
+    #[test]
+    fn ops_accounting_exact() {
+        let dev = Device::by_name("zynq7045").unwrap();
+        let p = DesignPoint::small_autoencoder(1, 1, 8);
+        let r = simulate_single_engine(&SingleEngineConfig::default(), &p, dev);
+        // layer1: (4*1*9 + 4*81 + 36) = 396; layer2: (324+324+36) = 684;
+        // dense: 9. All x TS=8.
+        assert_eq!(r.ops, (396 + 684 + 9) * 8);
+    }
+
+    #[test]
+    fn more_lanes_never_slower() {
+        let dev = Device::by_name("u250").unwrap();
+        let p = DesignPoint::nominal_autoencoder(1, 1, 8);
+        let small = simulate_single_engine(
+            &SingleEngineConfig {
+                lanes: 256,
+                ..Default::default()
+            },
+            &p,
+            dev,
+        );
+        let big = simulate_single_engine(&SingleEngineConfig::default(), &p, dev);
+        assert!(big.latency_cycles <= small.latency_cycles);
+    }
+
+    #[test]
+    fn single_engine_slower_than_layer_pipeline_throughput() {
+        // Even with huge lane counts the serial engine cannot pipeline
+        // across layers: its per-inference occupancy of the whole engine
+        // bounds throughput at 1/latency, worse than the layer-wise II.
+        let dev = *Device::by_name("zynq7045").unwrap();
+        let p = DesignPoint::small_autoencoder(9, 1, 8);
+        let se = simulate_single_engine(&SingleEngineConfig::default(), &p, &dev);
+        let pipe = crate::sim::pipeline::simulate(&crate::sim::pipeline::SimConfig {
+            point: p,
+            device: dev,
+            inferences: 32,
+            arrival_interval: None,
+            rewind: true,
+            overlap: true,
+        });
+        assert!(pipe.steady_ii < se.latency_cycles as f64);
+    }
+}

@@ -1,0 +1,241 @@
+//! Bench harness for the `cargo bench` targets (criterion replacement).
+//!
+//! Every paper table/figure bench is a `harness = false` binary that uses
+//! [`Bench`] for wall-clock measurement (warmup + measured iterations,
+//! median / mean / p99) and [`Table`] for aligned text rendering of the
+//! paper-shaped rows. Statistics are intentionally simple: these benches
+//! regenerate *tables*, they are not micro-benchmarks — but the harness is
+//! also what the §Perf hot-path iteration uses, so p-quantiles matter.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+/// Summary statistics over measured iterations (nanoseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let q = |p: f64| ns[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean_ns: ns.iter().sum::<f64>() / n as f64,
+            median_ns: q(0.5),
+            p99_ns: q(0.99),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+        }
+    }
+}
+
+/// Human-friendly duration rendering.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            iters: 30,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Bench {
+        self.iters = n;
+        self
+    }
+
+    /// Run `f` warmup+iters times; print and return stats.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let st = Stats::from_samples(samples);
+        println!(
+            "{:<40} median {:>12}  mean {:>12}  p99 {:>12}  (n={})",
+            self.name,
+            fmt_ns(st.median_ns),
+            fmt_ns(st.mean_ns),
+            fmt_ns(st.p99_ns),
+            st.n
+        );
+        st
+    }
+
+    /// Run until at least `budget` has elapsed (for very fast bodies),
+    /// reporting per-iteration time.
+    pub fn run_for<F: FnMut()>(&self, budget: Duration, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < budget || samples.len() < self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if samples.len() > 1_000_000 {
+                break;
+            }
+        }
+        let st = Stats::from_samples(samples);
+        println!(
+            "{:<40} median {:>12}  mean {:>12}  p99 {:>12}  (n={})",
+            self.name,
+            fmt_ns(st.median_ns),
+            fmt_ns(st.mean_ns),
+            fmt_ns(st.p99_ns),
+            st.n
+        );
+        st
+    }
+}
+
+/// Aligned text table (for paper-shaped output).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("| {:<width$} ", c, width = w[i]));
+            }
+            line.push('|');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        let mut sep = String::new();
+        for width in &w {
+            sep.push_str(&format!("|{}", "-".repeat(width + 2)));
+        }
+        sep.push('|');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let st = Stats::from_samples((1..=100).map(|x| x as f64).collect());
+        assert_eq!(st.n, 100);
+        assert_eq!(st.min_ns, 1.0);
+        assert_eq!(st.max_ns, 100.0);
+        assert!((st.median_ns - 50.0).abs() <= 1.0);
+        assert!(st.p99_ns >= 98.0);
+        assert!((st.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20 s");
+    }
+
+    #[test]
+    fn bench_runs_body() {
+        let mut count = 0;
+        let st = Bench::new("t").warmup(1).iters(5).run(|| count += 1);
+        assert_eq!(count, 6);
+        assert_eq!(st.n, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["design", "DSP", "II"]);
+        t.row(&["Z1".into(), "1058".into(), "72".into()]);
+        t.row(&["U3-long".into(), "2713".into(), "104".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert!(lines[0].contains("design"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_guard() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Tiny CLI argument parser: `binary <subcommand> [--flag value] [--switch]`.
+//!
+//! Replaces clap for the offline build. Flags are declared by lookup, not
+//! registration: `args.get("model")` returns the value of `--model`, with
+//! typed helpers and defaults. Unknown-flag detection is supported via
+//! [`Args::finish`], which callers invoke after reading all flags they know.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit token stream (used heavily in tests).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--flag value` unless the next token is another flag,
+                    // in which case it's a boolean switch.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// Raw flag lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Required string flag.
+    pub fn str_req(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    /// Integer flag with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Float flag with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Boolean switch (present or `--flag true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on any flag that no caller ever looked up (typo guard).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse(toks("serve --model nominal_ts100 --port 8080")).unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.str_or("model", "x"), "nominal_ts100");
+        assert_eq!(a.usize_or("port", 0).unwrap(), 8080);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(toks("x --k=v --n=3")).unwrap();
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn boolean_switch() {
+        let a = Args::parse(toks("x --verbose --out file")).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("file"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(toks("x --quick")).unwrap();
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn positional() {
+        let a = Args::parse(toks("run a b")).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = Args::parse(toks("x --good 1 --typo 2")).unwrap();
+        let _ = a.usize_or("good", 0);
+        assert!(a.finish().is_err());
+        let _ = a.get("typo");
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn required_missing() {
+        let a = Args::parse(toks("x")).unwrap();
+        assert!(a.str_req("model").is_err());
+    }
+
+    #[test]
+    fn bad_int() {
+        let a = Args::parse(toks("x --n abc")).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

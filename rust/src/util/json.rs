@@ -1,0 +1,432 @@
+//! Minimal JSON: recursive-descent parser and compact writer.
+//!
+//! Supports the full JSON grammar (objects, arrays, strings with escapes,
+//! numbers, booleans, null). Numbers are held as `f64` — every consumer in
+//! this crate (weights, manifests, metrics) is numeric float data or small
+//! integers, both exact in f64 up to 2^53.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Parse a JSON document from text.
+    pub fn parse(text: &str) -> Result<Value> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { b: bytes, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != bytes.len() {
+            bail!("trailing garbage at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    /// Read + parse a file.
+    pub fn from_file(path: &str) -> Result<Value> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Value::parse(&text).with_context(|| format!("parsing {path}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            other => Err(anyhow!("expected number, got {other:?}")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("expected non-negative integer, got {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(anyhow!("expected string, got {other:?}")),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            other => Err(anyhow!("expected array, got {other:?}")),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            other => Err(anyhow!("expected object, got {other:?}")),
+        }
+    }
+
+    /// `obj["key"]` with a useful error.
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    /// Flatten a (possibly nested) numeric array into f32s.
+    pub fn as_f32_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        fn rec(v: &Value, out: &mut Vec<f32>) -> Result<()> {
+            match v {
+                Value::Num(n) => out.push(*n as f32),
+                Value::Arr(a) => {
+                    for x in a {
+                        rec(x, out)?;
+                    }
+                }
+                other => bail!("expected numeric array, got {other:?}"),
+            }
+            Ok(())
+        }
+        rec(self, &mut out)?;
+        Ok(out)
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        write_value(self, &mut s);
+        s
+    }
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Value::Str(s) => write_string(s, out),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(x, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, x)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek()? as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected {:?} at byte {}", c as char, self.i),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(map));
+                }
+                c => bail!("expected ',' or '}}', found {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.eat(b'[')?;
+        let mut arr = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(arr));
+        }
+        loop {
+            self.ws();
+            arr.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(arr));
+                }
+                c => bail!("expected ',' or ']', found {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            // Surrogate pairs: join high+low.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    let lo_hex =
+                                        std::str::from_utf8(&self.b[self.i + 2..self.i + 6])?;
+                                    let lo = u32::from_str_radix(lo_hex, 16)?;
+                                    self.i += 6;
+                                    let joined =
+                                        0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(joined)
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            s.push(ch.ok_or_else(|| anyhow!("bad \\u escape"))?);
+                        }
+                        c => bail!("bad escape \\{:?}", c as char),
+                    }
+                }
+                c if c < 0x80 => s.push(c as char),
+                _ => {
+                    // multi-byte UTF-8: find the full char in the source
+                    let start = self.i - 1;
+                    let text = std::str::from_utf8(&self.b[start..])
+                        .map_err(|e| anyhow!("bad utf8 in string: {e}"))?;
+                    let ch = text.chars().next().unwrap();
+                    s.push(ch);
+                    self.i = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Value::Num(text.parse::<f64>()?))
+    }
+}
+
+/// Convenience constructors for building documents programmatically.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+
+pub fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+pub fn arr_f64(v: &[f64]) -> Value {
+    Value::Arr(v.iter().map(|x| Value::Num(*x)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse(" -12.5e2 ").unwrap(), Value::Num(-1250.0));
+        assert_eq!(Value::parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = Value::parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[1], Value::Num(2.0));
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn parse_escapes() {
+        let v = Value::parse(r#""a\n\t\"\\ A 😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\n\t\"\\ A 😀");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"w":[[0.5,-1.25],[3,4]],"name":"enc0","n":2,"ok":true,"z":null}"#;
+        let v = Value::parse(src).unwrap();
+        let v2 = Value::parse(&v.to_string()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn flat_f32() {
+        let v = Value::parse("[[1, 2], [3, 4.5]]").unwrap();
+        assert_eq!(v.as_f32_flat().unwrap(), vec![1.0, 2.0, 3.0, 4.5]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Value::parse("{").is_err());
+        assert!(Value::parse("[1,]").is_err());
+        assert!(Value::parse("12 34").is_err());
+        assert!(Value::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Value::parse("\"héllo ✓\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo ✓");
+    }
+
+    #[test]
+    fn as_usize_guards() {
+        assert_eq!(Value::Num(5.0).as_usize().unwrap(), 5);
+        assert!(Value::Num(-1.0).as_usize().is_err());
+        assert!(Value::Num(1.5).as_usize().is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! In-tree substrates for the fully-offline build.
+//!
+//! The image vendors only the `xla` crate's dependency closure, so the usual
+//! ecosystem crates (serde_json, clap, criterion, proptest, rand) are not
+//! available. Each submodule is a small, tested, from-scratch replacement:
+//!
+//! * [`json`]  — recursive-descent JSON parser + writer (artifact manifests,
+//!   weights, golden vectors, run configs).
+//! * [`cli`]   — subcommand + `--flag value` argument parsing.
+//! * [`bench`] — timing harness used by every `cargo bench` target
+//!   (median/p99 over warmup+measured iterations, table rendering).
+//! * [`prop`]  — property-testing mini-framework (seeded generators +
+//!   counterexample reporting) used by `rust/tests/prop_invariants.rs`.
+//! * [`rng`]   — splittable xoshiro256** PRNG + Box-Muller gaussians (the
+//!   statistical workhorse of the `gw` substrate).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

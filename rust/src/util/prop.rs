@@ -1,0 +1,182 @@
+//! Property-testing mini-framework (proptest replacement for the offline
+//! build).
+//!
+//! A property is a closure over values drawn from a [`Gen`]; [`check`] runs
+//! it for N seeded cases and, on failure, retries with simpler values drawn
+//! from the same generator at lower "size" (a budget-bounded shrink pass),
+//! then panics with the smallest failing case's debug rendering and the
+//! reproducing seed. Used by `rust/tests/prop_invariants.rs` for coordinator
+//! routing/batching and DSE/simulator invariants.
+
+use crate::util::rng::Rng;
+
+/// Draw context handed to generators: RNG + size hint (grows over the run
+/// so early cases are small, like proptest's sizing).
+pub struct Draw<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Draw<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// A vec whose length scales with the current size.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Draw) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len.min(self.size.max(1)));
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            let mut d = Draw {
+                rng: self.rng,
+                size: self.size,
+            };
+            out.push(f(&mut d));
+        }
+        out
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be pinned for reproduction via GWLSTM_PROP_SEED.
+        let seed = std::env::var("GWLSTM_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config {
+            cases: 128,
+            seed,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases. `gen` produces a value from a
+/// draw; `prop` returns Err(reason) on violation.
+pub fn check_with<T: std::fmt::Debug>(
+    cfg: Config,
+    name: &str,
+    mut gen: impl FnMut(&mut Draw) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.split(case as u64);
+        // sizes ramp from 1 to max_size across the run
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut d = Draw {
+            rng: &mut rng,
+            size,
+        };
+        let value = gen(&mut d);
+        if let Err(reason) = prop(&value) {
+            // shrink-lite: try up to 200 smaller draws, keep smallest failure
+            let mut smallest: (usize, T, String) = (size, value, reason);
+            for attempt in 0..200u64 {
+                let shrink_size = 1 + (attempt as usize % smallest.0.max(1));
+                if shrink_size >= smallest.0 {
+                    continue;
+                }
+                let mut srng = root.split(0xDEAD_0000 ^ attempt);
+                let mut sd = Draw {
+                    rng: &mut srng,
+                    size: shrink_size,
+                };
+                let sv = gen(&mut sd);
+                if let Err(r) = prop(&sv) {
+                    smallest = (shrink_size, sv, r);
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}):\n  value: {:?}\n  reason: {}\n  reproduce with GWLSTM_PROP_SEED={seed}",
+                smallest.1,
+                smallest.2,
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Default-config shorthand.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Draw) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check_with(Config::default(), name, gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "reverse-involutive",
+            |d| d.vec(16, |dd| dd.usize_in(0, 100)),
+            |v| {
+                let mut r = v.clone();
+                r.reverse();
+                r.reverse();
+                if r == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-small\" failed")]
+    fn failing_property_reports() {
+        check(
+            "always-small",
+            |d| d.usize_in(0, d.size * 4),
+            |&v| {
+                if v < 2 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 2"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sizes_ramp() {
+        let mut max_seen = 0;
+        check_with(
+            Config {
+                cases: 50,
+                seed: 1,
+                max_size: 32,
+            },
+            "size-ramp",
+            |d| {
+                max_seen = max_seen.max(d.size);
+                d.size
+            },
+            |_| Ok(()),
+        );
+        assert!(max_seen >= 16);
+    }
+}

@@ -1,0 +1,99 @@
+//! Integration: the full serving coordinator over the live synthetic
+//! stream (artifacts required; skips gracefully otherwise).
+
+use gwlstm::config::{Manifest, ServeConfig};
+use gwlstm::coordinator::{run_serving, run_serving_with_policy, Policy};
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load("artifacts").ok()
+}
+
+fn small_cfg(windows: usize) -> ServeConfig {
+    ServeConfig {
+        model: "small_ts8".into(),
+        calib_windows: 48,
+        max_windows: windows,
+        inject_prob: 0.4,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn serves_all_windows_and_reports() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let report = run_serving(&m, &small_cfg(120)).unwrap();
+    assert_eq!(report.windows, 120);
+    assert_eq!(report.dropped, 0, "no backpressure expected at this rate");
+    assert!(report.infer.n >= 120);
+    assert!(report.infer.p50_ns > 0.0);
+    assert!(report.throughput_per_s > 0.0);
+    // labels flow through: the summary must have both classes
+    assert!(report.summary.true_pos + report.summary.false_neg > 0);
+    assert!(report.summary.true_neg + report.summary.false_pos > 0);
+}
+
+#[test]
+fn fpr_calibration_respected_on_served_traffic() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut cfg = small_cfg(400);
+    cfg.target_fpr = 0.05;
+    cfg.calib_windows = 128;
+    let report = run_serving(&m, &cfg).unwrap();
+    // served FPR within a loose statistical band of the target
+    let fpr = report.summary.fpr();
+    assert!(fpr <= 0.18, "served FPR {fpr} vs target 0.05");
+}
+
+#[test]
+fn detection_quality_on_stream() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    // the nominal TS=100 model on its native window size
+    let cfg = ServeConfig {
+        model: "nominal_ts100".into(),
+        calib_windows: 32,
+        max_windows: 80,
+        inject_prob: 0.5,
+        ..Default::default()
+    };
+    let report = run_serving(&m, &cfg).unwrap();
+    assert!(report.auc > 0.85, "stream AUC {}", report.auc);
+}
+
+#[test]
+fn microbatch_policy_serves_everything_too() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let report = run_serving_with_policy(
+        &m,
+        &small_cfg(90),
+        Policy::MicroBatch {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+    )
+    .unwrap();
+    assert_eq!(report.windows, 90);
+}
+
+#[test]
+fn two_workers_complete() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut cfg = small_cfg(100);
+    cfg.workers = 2;
+    let report = run_serving(&m, &cfg).unwrap();
+    assert_eq!(report.windows, 100);
+}

@@ -1,0 +1,162 @@
+//! Integration: the rust GW data substrate against the python twin's
+//! exported statistics, plus the streaming (IIR) vs batch (FFT) paths.
+
+use gwlstm::gw::dataset::{make_dataset, StrainStream, DECIM, DEFAULT_SNR, FS};
+use gwlstm::gw::fft::Plan;
+use gwlstm::gw::filter::{Bandpass, Decimator};
+use gwlstm::gw::psd::{aligo_psd, colored_noise};
+use gwlstm::util::rng::Rng;
+
+#[test]
+fn rust_windows_statistically_match_python_export() {
+    // The python test set (if built) and rust windows come from the same
+    // physics: compare per-window std of sample-to-sample differences — a
+    // spectrum-sensitive statistic — between the two generators.
+    let Ok((py_windows, py_labels)) = gwlstm::config::load_testset("artifacts") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let ts = py_windows[0].len();
+    let rust_ws = make_dataset(99, 200, ts, DEFAULT_SNR);
+
+    let diff_std = |w: &[f32]| -> f64 {
+        let d: Vec<f64> = w.windows(2).map(|p| (p[1] - p[0]) as f64).collect();
+        let mu = d.iter().sum::<f64>() / d.len() as f64;
+        (d.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / d.len() as f64).sqrt()
+    };
+    let mean_for = |ws: &[Vec<f32>], labels: &[u8], want: u8| -> f64 {
+        let sel: Vec<f64> = ws
+            .iter()
+            .zip(labels)
+            .filter(|(_, &l)| l == want)
+            .map(|(w, _)| diff_std(w))
+            .collect();
+        sel.iter().sum::<f64>() / sel.len() as f64
+    };
+    let py_noise = mean_for(&py_windows, &py_labels, 0);
+    let rust_labels: Vec<u8> = rust_ws.iter().map(|w| w.label).collect();
+    let rust_vecs: Vec<Vec<f32>> = rust_ws.iter().map(|w| w.samples.clone()).collect();
+    let rust_noise = mean_for(&rust_vecs, &rust_labels, 0);
+    let ratio = rust_noise / py_noise;
+    assert!(
+        (0.8..1.25).contains(&ratio),
+        "noise diff-std ratio rust/python = {ratio}"
+    );
+}
+
+#[test]
+fn noise_generator_matches_target_psd_in_band() {
+    let mut rng = Rng::new(1);
+    let n = 4096;
+    let plan = Plan::new(n);
+    let reps = 6;
+    let mut ratio_acc = 0.0;
+    let mut count = 0;
+    for _ in 0..reps {
+        let x = colored_noise(&mut rng, &plan, FS);
+        let spec = plan.rfft(&x);
+        for (k, c) in spec.iter().enumerate() {
+            let f = k as f64 * FS / n as f64;
+            if f > 40.0 && f < 300.0 {
+                let per = c.abs2() * 2.0 / (FS * n as f64);
+                ratio_acc += per / aligo_psd(f);
+                count += 1;
+            }
+        }
+    }
+    let mean_ratio = ratio_acc / count as f64;
+    assert!((0.7..1.4).contains(&mean_ratio), "PSD ratio {mean_ratio}");
+}
+
+#[test]
+fn streaming_iir_path_approximates_batch_fft_path() {
+    // The serving path filters causally (biquads + decimator); the build
+    // path brick-walls in frequency. Band-limited energy must agree within
+    // filter-rolloff tolerance on the same input.
+    let mut rng = Rng::new(7);
+    let n = 1 << 14;
+    let plan = Plan::new(n);
+    let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+
+    let batch = gwlstm::gw::psd::bandpass_fd(&x, &plan, FS, 10.0, 128.0);
+    let mut bp = Bandpass::butterworth(FS, 10.0, 128.0, 2);
+    let stream: Vec<f64> = x.iter().map(|&v| bp.step(v)).collect();
+
+    let energy = |v: &[f64]| v[4096..].iter().map(|s| s * s).sum::<f64>();
+    let ratio = energy(&stream) / energy(&batch);
+    assert!((0.7..1.3).contains(&ratio), "IIR vs FFT band energy ratio {ratio}");
+}
+
+#[test]
+fn decimator_matches_stride_sampling_in_band() {
+    // For signals already inside the decimated Nyquist, the anti-aliased
+    // decimator and plain striding agree closely.
+    let n = 1 << 14;
+    let f0 = 20.0; // well inside 128 Hz
+    let x: Vec<f64> = (0..n)
+        .map(|i| (2.0 * std::f64::consts::PI * f0 * i as f64 / FS).sin())
+        .collect();
+    let mut d = Decimator::new(FS, DECIM);
+    let dec: Vec<f64> = x.iter().filter_map(|&v| d.push(v)).collect();
+    let strided: Vec<f64> = x.iter().step_by(DECIM).cloned().collect();
+    // compare RMS (phase differs due to filter delay)
+    let rms = |v: &[f64]| (v[256..].iter().map(|s| s * s).sum::<f64>() / (v.len() - 256) as f64).sqrt();
+    let ratio = rms(&dec) / rms(&strided[..dec.len()]);
+    assert!((0.85..1.15).contains(&ratio), "decimator rms ratio {ratio}");
+}
+
+#[test]
+fn stream_and_batch_windows_same_distribution() {
+    let ts = 64;
+    let mut stream = StrainStream::new(5, ts, DEFAULT_SNR, 0.0);
+    let stream_ws: Vec<Vec<f32>> = (0..50).map(|_| stream.next_window().samples).collect();
+    let batch_ws = make_dataset(6, 100, ts, DEFAULT_SNR);
+    let batch_noise: Vec<&Vec<f32>> = batch_ws
+        .iter()
+        .filter(|w| w.label == 0)
+        .map(|w| &w.samples)
+        .collect();
+    // both are z-scored; compare lag-1 autocorrelation (structure check)
+    let lag1 = |w: &[f32]| -> f64 {
+        let n = w.len() - 1;
+        (0..n).map(|i| (w[i] * w[i + 1]) as f64).sum::<f64>() / n as f64
+    };
+    let s_mean = stream_ws.iter().map(|w| lag1(w)).sum::<f64>() / stream_ws.len() as f64;
+    let b_mean = batch_noise.iter().map(|w| lag1(w)).sum::<f64>() / batch_noise.len() as f64;
+    assert!(
+        (s_mean - b_mean).abs() < 0.15,
+        "lag-1 autocorr: stream {s_mean} vs batch {b_mean}"
+    );
+}
+
+#[test]
+fn injected_windows_raise_reference_model_scores() {
+    // End-of-pipe sanity without artifacts: the *fixed-point* reference
+    // model trained... no wait, untrained weights won't separate. Use the
+    // trained weights when available; otherwise skip.
+    let Ok(weights) = gwlstm::model::AutoencoderWeights::load("artifacts/weights_nominal.json")
+    else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let ws = make_dataset(11, 60, 100, DEFAULT_SNR);
+    let mut sig = 0.0;
+    let mut noi = 0.0;
+    let (mut ns, mut nn) = (0, 0);
+    for w in &ws {
+        let s = gwlstm::model::score_f32(&weights, &w.samples) as f64;
+        if w.label == 1 {
+            sig += s;
+            ns += 1;
+        } else {
+            noi += s;
+            nn += 1;
+        }
+    }
+    assert!(
+        sig / ns as f64 > noi / nn as f64,
+        "injections should score higher: sig {} vs noise {}",
+        sig / ns as f64,
+        noi / nn as f64
+    );
+}

@@ -1,0 +1,135 @@
+//! Integration: PJRT runtime x AOT artifacts x rust reference models.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! stays runnable in a fresh checkout).
+
+use gwlstm::config::{load_testset, Manifest};
+use gwlstm::eval::auc;
+use gwlstm::model::{forward_f32, AutoencoderWeights, FixedAutoencoder};
+use gwlstm::runtime::Engine;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load("artifacts").ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match manifest() {
+            Some(m) => m,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn all_artifacts_verify_against_oracle() {
+    let m = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    for v in &m.variants {
+        let exe = engine.load_variant(&m, &v.name).unwrap();
+        let err = exe.verify_golden(&m).unwrap();
+        assert!(err < 1e-3, "{}: golden max err {err}", v.name);
+    }
+}
+
+#[test]
+fn artifact_matches_rust_reference_model() {
+    // The AOT artifact and the pure-rust f32 model run the same trained
+    // weights: reconstructions must agree to float tolerance.
+    let m = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_variant(&m, "nominal_ts100").unwrap();
+    let weights = AutoencoderWeights::load("artifacts/weights_nominal.json").unwrap();
+    let (windows, _) = load_testset("artifacts").unwrap();
+    for w in windows.iter().take(5) {
+        let a = exe.infer(w).unwrap();
+        let b = forward_f32(&weights, w);
+        let max_err = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "PJRT vs rust reference: {max_err}");
+    }
+}
+
+#[test]
+fn small_artifact_matches_small_weights() {
+    let m = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_variant(&m, "small_ts8").unwrap();
+    let weights = AutoencoderWeights::load("artifacts/weights_small.json").unwrap();
+    let win: Vec<f32> = (0..8).map(|i| ((i as f32) / 3.0).sin()).collect();
+    let a = exe.infer(&win).unwrap();
+    let b = forward_f32(&weights, &win);
+    let max_err = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "small: PJRT vs reference {max_err}");
+}
+
+#[test]
+fn served_auc_reproduces_training_auc() {
+    // Rust-side AUC over the exported test set must match the python
+    // training-side AUC (metrics.json) within a small band.
+    let m = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_variant(&m, "nominal_ts100").unwrap();
+    let (windows, labels) = load_testset("artifacts").unwrap();
+    let scores: Vec<f64> = windows.iter().map(|w| exe.score(w).unwrap() as f64).collect();
+    let rust_auc = auc(&scores, &labels);
+    let metrics = gwlstm::util::json::Value::from_file("artifacts/metrics.json").unwrap();
+    let py_auc = metrics.get("lstm").unwrap().get("auc").unwrap().as_f64().unwrap();
+    assert!(
+        (rust_auc - py_auc).abs() < 0.02,
+        "rust AUC {rust_auc} vs python AUC {py_auc}"
+    );
+}
+
+#[test]
+fn quantized_artifact_close_to_f32_artifact() {
+    // Fig. 9 quantization claim through the full AOT path.
+    let m = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let f32_exe = engine.load_variant(&m, "nominal_ts100").unwrap();
+    let q16_exe = engine.load_variant(&m, "nominal_ts100_q16").unwrap();
+    let (windows, labels) = load_testset("artifacts").unwrap();
+    let s_f: Vec<f64> = windows.iter().map(|w| f32_exe.score(w).unwrap() as f64).collect();
+    let s_q: Vec<f64> = windows.iter().map(|w| q16_exe.score(w).unwrap() as f64).collect();
+    let delta = (auc(&s_f, &labels) - auc(&s_q, &labels)).abs();
+    assert!(delta < 0.02, "quantization AUC delta {delta}");
+}
+
+#[test]
+fn fixed_point_datapath_detects_too() {
+    // The bit-level FPGA datapath must preserve detection quality.
+    let _ = require_artifacts!();
+    let weights = AutoencoderWeights::load("artifacts/weights_nominal.json").unwrap();
+    let fixed = FixedAutoencoder::from_weights(&weights);
+    let (windows, labels) = load_testset("artifacts").unwrap();
+    let n = windows.len().min(120);
+    let scores: Vec<f64> = windows[..n].iter().map(|w| fixed.score(w) as f64).collect();
+    let a = auc(&scores, &labels[..n]);
+    assert!(a > 0.85, "fixed-point AUC {a}");
+}
+
+#[test]
+fn wrong_input_shape_rejected() {
+    let m = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_variant(&m, "small_ts8").unwrap();
+    assert!(exe.infer(&[0.0; 7]).is_err());
+    assert!(exe.infer(&[0.0; 9]).is_err());
+}
+
+#[test]
+fn unknown_variant_rejected() {
+    let m = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    assert!(engine.load_variant(&m, "does_not_exist").is_err());
+}

@@ -1,0 +1,380 @@
+//! Property-based tests (via the in-tree `util::prop` framework — proptest
+//! itself is not vendored in this offline image) over the system's core
+//! invariants: DSE/perf-model algebra, Pareto dominance, simulator
+//! causality, router/batcher behaviour, ROC/AUC laws, fixed-point bounds.
+
+use gwlstm::coordinator::batcher::{Batcher, Policy};
+use gwlstm::coordinator::router::{Job, RouteResult, Router};
+use gwlstm::eval::roc::{auc, calibrate_threshold};
+use gwlstm::hls::device::{Device, DEVICES};
+use gwlstm::hls::dse::{balance_layer, partition_model};
+use gwlstm::hls::pareto::{balanced_family, frontier, naive_family};
+use gwlstm::hls::perf_model::{layer_perf, model_perf, DesignPoint, LayerDims};
+use gwlstm::model::fixed::{q16_to_f32, to_q16};
+use gwlstm::sim::{simulate, SimConfig};
+use gwlstm::util::prop::{check, Draw};
+
+fn any_device(d: &mut Draw) -> &'static Device {
+    &DEVICES[d.usize_in(0, DEVICES.len() - 1)]
+}
+
+fn any_dims(d: &mut Draw) -> LayerDims {
+    LayerDims::new(d.usize_in(1, 64) as u32, d.usize_in(1, 64) as u32)
+}
+
+#[test]
+fn prop_eq3_dsp_cost_monotone_in_reuse() {
+    // Increasing either reuse factor never increases DSP cost.
+    check(
+        "dsp-monotone-in-reuse",
+        |d| {
+            let dev = any_device(d);
+            let dims = any_dims(d);
+            let rx = d.usize_in(1, 20) as u32;
+            let rh = d.usize_in(1, 20) as u32;
+            (dev, dims, rx, rh)
+        },
+        |&(dev, dims, rx, rh)| {
+            let base = layer_perf(dev, dims, rx, rh, 8).dsp_total();
+            let more_rx = layer_perf(dev, dims, rx + 1, rh, 8).dsp_total();
+            let more_rh = layer_perf(dev, dims, rx, rh + 1, 8).dsp_total();
+            if more_rx <= base && more_rh <= base {
+                Ok(())
+            } else {
+                Err(format!("base {base}, rx+1 {more_rx}, rh+1 {more_rh}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_eq1_layer_ii_scales_with_ts() {
+    check(
+        "layer-ii-linear-in-ts",
+        |d| {
+            let dev = any_device(d);
+            let dims = any_dims(d);
+            let rh = d.usize_in(1, 10) as u32;
+            let ts = d.usize_in(1, 64) as u32;
+            (dev, dims, rh, ts)
+        },
+        |&(dev, dims, rh, ts)| {
+            let a = layer_perf(dev, dims, 1, rh, ts);
+            let b = layer_perf(dev, dims, 1, rh, 2 * ts);
+            if b.ii_layer == 2 * a.ii_layer {
+                Ok(())
+            } else {
+                Err(format!("{} vs 2x{}", b.ii_layer, a.ii_layer))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_balanced_choice_satisfies_eq7_and_same_ii() {
+    check(
+        "balanced-eq7",
+        |d| {
+            let dev = any_device(d);
+            let dims = any_dims(d);
+            let rh = d.usize_in(1, 16) as u32;
+            (dev, dims, rh)
+        },
+        |&(dev, dims, rh)| {
+            let c = balance_layer(dev, dims, rh, 8);
+            if c.rx != rh + dev.lt_sigma + dev.lt_tail {
+                return Err(format!("rx {} violates Eq. 7", c.rx));
+            }
+            // balanced rx never dominates the loop: ii set by the recurrence
+            let expect_ii = dev.lt_mult + (rh - 1) + dev.lt_sigma + dev.lt_tail;
+            if c.ii != expect_ii {
+                return Err(format!("ii {} vs {}", c.ii, expect_ii));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dse_fits_budget_and_monotone() {
+    check(
+        "dse-budget",
+        |d| {
+            let dev = any_device(d);
+            let n_layers = d.usize_in(1, 4);
+            let layers: Vec<LayerDims> = (0..n_layers).map(|_| any_dims(d)).collect();
+            let budget = d.usize_in(50, 20_000) as u64;
+            (dev, layers, budget)
+        },
+        |(dev, layers, budget)| {
+            let p = partition_model(dev, layers, 8, 1, *budget);
+            if p.feasible && p.perf.dsp_model > *budget {
+                return Err(format!("used {} > budget {budget}", p.perf.dsp_model));
+            }
+            // doubling the budget can only improve (or keep) the II
+            let p2 = partition_model(dev, layers, 8, 1, budget * 2);
+            if p.feasible && p2.feasible && p2.perf.ii_sys > p.perf.ii_sys {
+                return Err("more budget made II worse".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pareto_frontier_nondominated() {
+    check(
+        "pareto-nondominated",
+        |d| {
+            let dev = any_device(d);
+            let dims = any_dims(d);
+            let r_max = d.usize_in(2, 12) as u32;
+            (dev, dims, r_max)
+        },
+        |&(dev, dims, r_max)| {
+            let mut pts = naive_family(dev, dims, 1, r_max);
+            pts.extend(balanced_family(dev, dims, 1, r_max));
+            let f = frontier(&pts);
+            for a in &f {
+                for b in &f {
+                    if (b.dsp < a.dsp && b.ii <= a.ii) || (b.dsp <= a.dsp && b.ii < a.ii) {
+                        return Err(format!("{a:?} dominated by {b:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_steady_ii_equals_model() {
+    check(
+        "sim-matches-model",
+        |d| {
+            let dev = any_device(d);
+            let rh = d.usize_in(1, 6) as u32;
+            let rx = d.usize_in(1, 18) as u32;
+            let small = d.bool();
+            (dev, rx, rh, small)
+        },
+        |&(dev, rx, rh, small)| {
+            let point = if small {
+                DesignPoint::small_autoencoder(rx, rh, 8)
+            } else {
+                DesignPoint::nominal_autoencoder(rx, rh, 8)
+            };
+            let m = model_perf(dev, &point);
+            let s = simulate(&SimConfig {
+                point,
+                device: *dev,
+                inferences: 40,
+                arrival_interval: None,
+                rewind: true,
+                overlap: true,
+            });
+            if (s.steady_ii - m.ii_sys as f64).abs() <= 1.0 {
+                Ok(())
+            } else {
+                Err(format!("sim {} vs model {}", s.steady_ii, m.ii_sys))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sim_completions_monotone_and_causal() {
+    check(
+        "sim-causality",
+        |d| {
+            let rx = d.usize_in(1, 12) as u32;
+            let rh = d.usize_in(1, 6) as u32;
+            let interval = if d.bool() {
+                None
+            } else {
+                Some(d.usize_in(1, 400) as u64)
+            };
+            (rx, rh, interval)
+        },
+        |&(rx, rh, interval)| {
+            let dev = Device::by_name("zynq7045").unwrap();
+            let s = simulate(&SimConfig {
+                point: DesignPoint::small_autoencoder(rx, rh, 8),
+                device: *dev,
+                inferences: 12,
+                arrival_interval: interval,
+                rewind: true,
+                overlap: true,
+            });
+            for (k, w) in s.completions.windows(2).enumerate() {
+                if w[1] < w[0] {
+                    return Err(format!("completion order violated at {k}"));
+                }
+            }
+            for (k, &l) in s.latencies.iter().enumerate() {
+                let arrival = interval.map_or(0, |iv| iv * k as u64);
+                if s.completions[k] != arrival + l {
+                    return Err("latency bookkeeping broken".into());
+                }
+                if l == 0 {
+                    return Err("zero-latency inference".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_router_conserves_jobs() {
+    check(
+        "router-conservation",
+        |d| {
+            let workers = d.usize_in(1, 4);
+            let depth = d.usize_in(1, 8);
+            let jobs = d.usize_in(0, 40);
+            (workers, depth, jobs)
+        },
+        |&(workers, depth, jobs)| {
+            let (router, queues) = Router::new(workers, depth);
+            let mut sent = 0usize;
+            let mut shed = 0usize;
+            for seq in 0..jobs as u64 {
+                match router.route(Job { seq, payload: seq }) {
+                    RouteResult::Sent(_) => sent += 1,
+                    RouteResult::Backpressure => shed += 1,
+                    RouteResult::Closed => return Err("closed unexpectedly".into()),
+                }
+            }
+            router.shutdown();
+            let mut received = 0usize;
+            for q in &queues {
+                while q.recv().is_some() {
+                    received += 1;
+                }
+            }
+            if sent != received {
+                return Err(format!("sent {sent} != received {received}"));
+            }
+            if sent + shed != jobs {
+                return Err("job accounting leak".into());
+            }
+            // capacity law: backpressure only once all queues are full
+            if shed > 0 && sent < workers * depth {
+                return Err(format!("shed with spare capacity: sent {sent} < {}", workers * depth));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_never_loses_or_reorders() {
+    check(
+        "batcher-fifo",
+        |d| {
+            let policy = if d.bool() {
+                Policy::Immediate
+            } else {
+                Policy::MicroBatch {
+                    max_batch: d.usize_in(1, 6),
+                    max_wait: std::time::Duration::from_secs(0), // always flush
+                }
+            };
+            let items = d.vec(32, |dd| dd.usize_in(0, 1000));
+            (policy, items)
+        },
+        |(policy, items)| {
+            let mut b = Batcher::new(*policy);
+            let mut out = Vec::new();
+            for &it in items {
+                b.push(it);
+                while let Some(batch) = b.take_ready(std::time::Instant::now()) {
+                    out.extend(batch.into_iter().map(|p| p.item));
+                }
+            }
+            while let Some(batch) = b.take_ready(std::time::Instant::now()) {
+                out.extend(batch.into_iter().map(|p| p.item));
+            }
+            if &out != items {
+                return Err(format!("order/loss: {out:?} vs {items:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_auc_invariances() {
+    check(
+        "auc-laws",
+        |d| {
+            let n = d.usize_in(4, 60);
+            let scores: Vec<f64> = (0..n).map(|_| d.f64_in(-3.0, 3.0)).collect();
+            let labels: Vec<u8> = (0..n).map(|_| d.bool() as u8).collect();
+            (scores, labels)
+        },
+        |(scores, labels)| {
+            let has_both = labels.contains(&0) && labels.contains(&1);
+            if !has_both {
+                return Ok(());
+            }
+            let a = auc(scores, labels);
+            if !(0.0..=1.0).contains(&a) {
+                return Err(format!("AUC {a} out of range"));
+            }
+            // monotone transform invariance
+            let warped: Vec<f64> = scores.iter().map(|s| s.exp()).collect();
+            let aw = auc(&warped, labels);
+            if (a - aw).abs() > 1e-9 {
+                return Err(format!("not rank-invariant: {a} vs {aw}"));
+            }
+            // label flip symmetry: AUC -> 1 - AUC
+            let flipped: Vec<u8> = labels.iter().map(|&l| 1 - l).collect();
+            let af = auc(scores, &flipped);
+            if (a + af - 1.0).abs() > 1e-9 {
+                return Err(format!("flip law broken: {a} + {af}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_threshold_calibration_bound() {
+    check(
+        "calibration-bound",
+        |d| {
+            let n = d.usize_in(10, 400);
+            let scores: Vec<f64> = (0..n).map(|_| d.f64_in(0.0, 10.0)).collect();
+            let fpr = d.f64_in(0.0, 0.5);
+            (scores, fpr)
+        },
+        |(scores, fpr)| {
+            let th = calibrate_threshold(scores, *fpr);
+            let actual = scores.iter().filter(|&&s| s >= th).count() as f64 / scores.len() as f64;
+            // conservative calibration: actual FPR <= target + one sample
+            if actual <= fpr + 1.0 / scores.len() as f64 + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("actual {actual} > target {fpr}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_q16_roundtrip_error_bounded() {
+    check(
+        "q16-roundtrip",
+        |d| d.f64_in(-31.0, 31.0) as f32,
+        |&x| {
+            let q = q16_to_f32(to_q16(x));
+            if (q - x).abs() <= 0.5 / 1024.0 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("{x} -> {q}"))
+            }
+        },
+    );
+}
