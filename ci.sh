@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Repo CI: rust tier-1 (build + tests + bench smoke) and python tests.
+#
+#   ./ci.sh            run everything available in the environment
+#   SKIP_BENCH=1 ./ci.sh   skip the bench smoke pass
+#
+# The bench smoke pass runs the two perf-tracking bench binaries with tiny
+# iteration counts (GWLSTM_BENCH_SMOKE=1) so the bench code cannot silently
+# rot between PRs; hotpath also refreshes rust/BENCH_hotpath.json, the
+# machine-readable perf baseline.
+set -u
+
+cd "$(dirname "$0")"
+failures=0
+
+note() { printf '\n=== %s ===\n' "$*"; }
+
+if command -v cargo >/dev/null 2>&1; then
+    note "rust: cargo build --release"
+    (cd rust && cargo build --release) || failures=$((failures + 1))
+
+    note "rust: cargo test -q"
+    (cd rust && cargo test -q) || failures=$((failures + 1))
+
+    if [ "${SKIP_BENCH:-0}" != "1" ]; then
+        note "rust: bench smoke (tiny iteration counts)"
+        (cd rust && GWLSTM_BENCH_SMOKE=1 cargo bench --bench hotpath) \
+            || failures=$((failures + 1))
+        (cd rust && GWLSTM_BENCH_SMOKE=1 cargo bench --bench e2e_serving) \
+            || failures=$((failures + 1))
+    fi
+else
+    echo "WARNING: cargo not found in PATH — rust tier-1 skipped" >&2
+fi
+
+if command -v python >/dev/null 2>&1 && python -c 'import pytest' 2>/dev/null; then
+    note "python: pytest python/tests -q"
+    python -m pytest python/tests -q || failures=$((failures + 1))
+else
+    echo "WARNING: python/pytest not available — python tests skipped" >&2
+fi
+
+note "ci.sh done: $failures failing stage(s)"
+exit "$failures"

@@ -1,0 +1,125 @@
+"""Test bootstrap: import path + an offline `hypothesis` fallback.
+
+1. Puts ``python/`` on ``sys.path`` so ``from compile import ...`` works no
+   matter which directory pytest is invoked from (repo root, python/, ...).
+
+2. If the real `hypothesis` package is unavailable (this offline image does
+   not ship it and nothing may be pip-installed), registers a minimal
+   API-compatible stub covering the subset these tests use:
+   ``@given`` with positional/keyword strategies, ``@settings(max_examples,
+   deadline)``, and the ``integers`` / ``floats`` / ``lists`` /
+   ``sampled_from`` / ``booleans`` strategies. The stub draws a fixed,
+   seeded set of examples per test (deterministic across runs). When the
+   real package is installed it is used untouched.
+"""
+
+import os
+import random
+import sys
+import types
+
+_PYROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _PYROOT not in sys.path:
+    sys.path.insert(0, _PYROOT)
+
+try:
+    import hypothesis  # noqa: F401  (real package present: nothing to do)
+except ModuleNotFoundError:
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    def integers(min_value=0, max_value=100):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def floats(min_value=0.0, max_value=1.0, allow_nan=None, allow_infinity=None, width=None):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    def lists(elements, min_size=0, max_size=10):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elements._draw(r) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def just(value):
+        return _Strategy(lambda r: value)
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            # NOTE: deliberately no functools.wraps — the wrapper must
+            # present a ZERO-argument signature, otherwise pytest treats the
+            # strategy-filled parameters as missing fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for case in range(n):
+                    rnd = random.Random(_SEED + case)
+                    drawn = [s._draw(rnd) for s in arg_strategies]
+                    named = {k: s._draw(rnd) for k, s in kw_strategies.items()}
+                    try:
+                        fn(*drawn, **named)
+                    except _Unsatisfied:
+                        continue
+
+            wrapper.__name__ = getattr(fn, "__name__", "stub_given")
+            wrapper.__doc__ = getattr(fn, "__doc__", None)
+            wrapper.__module__ = getattr(fn, "__module__", wrapper.__module__)
+            # honour a @settings applied BELOW @given (it decorated fn
+            # first); a @settings applied above overwrites this afterwards
+            wrapper._stub_max_examples = getattr(
+                fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            wrapper.hypothesis_stub = True
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        def decorate(fn):
+            # works whether applied above or below @given
+            fn._stub_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied()
+
+    class _Unsatisfied(Exception):
+        pass
+
+    class HealthCheck:
+        all = staticmethod(lambda: [])
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name, _obj in [
+        ("integers", integers),
+        ("floats", floats),
+        ("booleans", booleans),
+        ("sampled_from", sampled_from),
+        ("lists", lists),
+        ("just", just),
+    ]:
+        setattr(_st, _name, _obj)
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.assume = assume
+    _hyp.HealthCheck = HealthCheck
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

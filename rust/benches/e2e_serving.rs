@@ -2,28 +2,24 @@
 //! live synthetic stream, batch-1 (the paper's mode) vs micro-batching
 //! (the related-work mode whose latency penalty the paper calls out).
 //!
-//! Run: `make artifacts && cargo bench --bench e2e_serving`
+//! Two backends:
+//! * **native batched** (always runs, no artifacts): micro-batches execute
+//!   as single lockstep engine calls, so the sweep shows the real
+//!   latency/throughput trade-off of batching the batched engine;
+//! * **PJRT artifacts** (requires `make artifacts`): the paper's AOT path.
+//!
+//! Run: `cargo bench --bench e2e_serving`. Set `GWLSTM_BENCH_SMOKE=1` for
+//! the ci.sh smoke invocation (tiny window counts).
 
 use std::time::Duration;
 
 use gwlstm::config::{Manifest, ServeConfig};
-use gwlstm::coordinator::{run_serving_with_policy, Policy};
+use gwlstm::coordinator::{run_serving_native, run_serving_with_policy, Policy, ServeReport};
+use gwlstm::model::AutoencoderWeights;
 use gwlstm::util::bench::Table;
 
-fn main() {
-    let Ok(manifest) = Manifest::load("artifacts") else {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        return;
-    };
-    let cfg = ServeConfig {
-        model: "small_ts8".into(),
-        calib_windows: 64,
-        max_windows: 600,
-        inject_prob: 0.25,
-        ..Default::default()
-    };
-
-    let policies: Vec<(&str, Policy)> = vec![
+fn policies() -> Vec<(&'static str, Policy)> {
+    vec![
         ("batch-1 (paper)", Policy::Immediate),
         (
             "micro-batch 4 / 1ms",
@@ -39,22 +35,27 @@ fn main() {
                 max_wait: Duration::from_millis(5),
             },
         ),
-    ];
+    ]
+}
 
+fn table_for(rows: Vec<(&str, ServeReport)>) -> Table {
     let mut t = Table::new(&[
         "policy",
         "windows",
+        "batches",
+        "mean B",
         "AUC",
         "infer p50 (us)",
         "e2e p50 (us)",
         "e2e p99 (us)",
         "throughput (win/s)",
     ]);
-    for (name, policy) in policies {
-        let r = run_serving_with_policy(&manifest, &cfg, policy).expect("serving run");
+    for (name, r) in rows {
         t.row(&[
             name.into(),
             r.windows.to_string(),
+            r.batches.to_string(),
+            format!("{:.2}", r.mean_batch),
             format!("{:.3}", r.auc),
             format!("{:.1}", r.infer.p50_ns / 1e3),
             format!("{:.1}", r.e2e.p50_ns / 1e3),
@@ -62,8 +63,54 @@ fn main() {
             format!("{:.0}", r.throughput_per_s),
         ]);
     }
-    println!("=== e2e serving: batching policy latency/throughput trade-off ===\n");
-    t.print();
+    t
+}
+
+fn main() {
+    let smoke = std::env::var("GWLSTM_BENCH_SMOKE").is_ok();
+    let windows = if smoke { 120 } else { 600 };
+
+    // ---- native batched backend (always available) ----
+    let weights = AutoencoderWeights::synthetic(0x5E4E, "small");
+    let cfg = ServeConfig {
+        model: "small_native".into(),
+        calib_windows: if smoke { 32 } else { 64 },
+        max_windows: windows,
+        inject_prob: 0.25,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    for (name, policy) in policies() {
+        let r = run_serving_native(&weights, 8, &cfg, policy).expect("native serving run");
+        rows.push((name, r));
+    }
+    println!("=== e2e serving (native batched engine): policy trade-off ===\n");
+    table_for(rows).print();
+
+    // ---- PJRT artifact backend ----
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("\nartifacts/ missing — PJRT e2e sweep skipped (run `make artifacts`)");
+        return;
+    };
+    let cfg = ServeConfig {
+        model: "small_ts8".into(),
+        calib_windows: if smoke { 32 } else { 64 },
+        max_windows: windows,
+        inject_prob: 0.25,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    for (name, policy) in policies() {
+        match run_serving_with_policy(&manifest, &cfg, policy) {
+            Ok(r) => rows.push((name, r)),
+            Err(e) => {
+                eprintln!("\nPJRT serving unavailable ({e}) — PJRT e2e sweep skipped");
+                return;
+            }
+        }
+    }
+    println!("\n=== e2e serving (PJRT artifacts): policy trade-off ===\n");
+    table_for(rows).print();
     println!(
         "\npaper (Section V-C / VI): batch-1 because 'a newly arrived request\n\
          has to wait until the batch is formed, which imposes a significant\n\

@@ -1,11 +1,21 @@
 //! Bench target: hot-path microbenchmarks — the §Perf iteration harness.
 //!
 //! Covers every layer the perf pass optimizes:
-//!   L3 rust: PJRT inference (small + nominal), pure-rust f32 forward,
-//!            fixed-point forward, cycle-simulator throughput, DSE speed,
-//!            window generation (FFT + filters), router dispatch.
+//!   L3 rust: batched multi-stream engine (streams/sec at B ∈ {1,4,8,32}
+//!            vs the seed's naive batch-1 scalar loop), PJRT inference
+//!            (small + nominal), pure-rust f32 forward, fixed-point
+//!            forward, cycle-simulator throughput, DSE speed, window
+//!            generation (FFT + filters), router dispatch.
 //!
-//! Run: `make artifacts && cargo bench --bench hotpath`
+//! Every measurement is also written to `BENCH_hotpath.json`
+//! (name -> median ns/op, plus derived per-stream throughput keys) so later
+//! PRs have a machine-readable perf baseline to diff against.
+//!
+//! Run: `cargo bench --bench hotpath` (artifact-dependent sections skip
+//! gracefully). Set `GWLSTM_BENCH_SMOKE=1` for a tiny-iteration smoke run
+//! (used by ci.sh so the bench code can't silently rot).
+
+use std::collections::BTreeMap;
 
 use gwlstm::config::Manifest;
 use gwlstm::coordinator::router::{Job, Router};
@@ -15,18 +25,132 @@ use gwlstm::gw::psd::colored_noise;
 use gwlstm::hls::device::Device;
 use gwlstm::hls::dse::partition_model;
 use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
-use gwlstm::model::{forward_f32, AutoencoderWeights, FixedAutoencoder};
-use gwlstm::runtime::Engine;
+use gwlstm::model::{
+    forward_f32, AutoencoderWeights, FixedAutoencoder, PackedAutoencoder,
+};
+use gwlstm::runtime::{Engine, ModelExecutor};
 use gwlstm::sim::{simulate, SimConfig};
 use gwlstm::util::bench::Bench;
+use gwlstm::util::json::Value;
 use gwlstm::util::rng::Rng;
 
+/// Collected results: bench name -> median ns per op.
+struct Recorder {
+    out: BTreeMap<String, Value>,
+    smoke: bool,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder {
+            out: BTreeMap::new(),
+            smoke: std::env::var("GWLSTM_BENCH_SMOKE").is_ok(),
+        }
+    }
+
+    /// Scale iteration counts down to a smoke-test budget when asked.
+    fn iters(&self, n: usize) -> usize {
+        if self.smoke {
+            2
+        } else {
+            n
+        }
+    }
+
+    fn put(&mut self, name: &str, median_ns: f64) {
+        self.out.insert(name.to_string(), Value::Num(median_ns));
+    }
+
+    fn flush(&self) {
+        let doc = Value::Obj(self.out.clone());
+        let path = "BENCH_hotpath.json";
+        match std::fs::write(path, doc.to_string()) {
+            Ok(()) => println!("\nwrote {} entries to {path}", self.out.len()),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
 fn main() {
+    let mut rec = Recorder::new();
+
+    // ---- batched multi-stream engine (no artifacts needed) ----
+    // The tentpole measurement: per-stream throughput of the packed/tiled
+    // lockstep engine at B ∈ {1, 4, 8, 32} against the seed's batch-1
+    // scalar loop (naive triple-loop weight walk per stream).
+    let ts = 100usize;
+    let weights = AutoencoderWeights::synthetic(0xBA7C, "nominal");
+    let packed = PackedAutoencoder::from_weights(&weights);
+    let mut stream = StrainStream::new(9, ts, DEFAULT_SNR, 0.3);
+    let max_b = 32usize;
+    let mut pool: Vec<f32> = Vec::with_capacity(max_b * ts);
+    for _ in 0..max_b {
+        pool.extend_from_slice(&stream.next_window().samples);
+    }
+
+    let seq = Bench::new("batched: scalar batch-1 loop x8 (seed engine)")
+        .iters(rec.iters(30))
+        .run(|| {
+            for b in 0..8 {
+                std::hint::black_box(forward_f32(&weights, &pool[b * ts..(b + 1) * ts]));
+            }
+        });
+    let seq_per_stream = seq.median_ns / 8.0;
+    rec.put("batched/scalar_seq_x8_per_stream", seq_per_stream);
+    println!(
+        "  -> scalar batch-1 loop: {:.0} ns/stream ({:.0} streams/s)",
+        seq_per_stream,
+        1e9 / seq_per_stream
+    );
+
+    let mut b8_per_stream = f64::NAN;
+    for &b in &[1usize, 4, 8, 32] {
+        let st = Bench::new(&format!("batched: packed lockstep B={b}"))
+            .iters(rec.iters(30))
+            .run(|| {
+                std::hint::black_box(packed.forward_batch(&pool[..b * ts], b));
+            });
+        let per_stream = st.median_ns / b as f64;
+        rec.put(&format!("batched/packed_b{b}_per_stream"), per_stream);
+        println!(
+            "  -> B={b}: {:.0} ns/stream ({:.0} streams/s)",
+            per_stream,
+            1e9 / per_stream
+        );
+        if b == 8 {
+            b8_per_stream = per_stream;
+        }
+    }
+    let speedup = seq_per_stream / b8_per_stream;
+    rec.put("batched/speedup_b8_vs_scalar_seq", speedup);
+    println!(
+        "  -> per-stream speedup @ B=8 vs seed batch-1 loop: {speedup:.2}x \
+         (acceptance floor 1.5x)"
+    );
+
+    // Executor-level dispatch cost: the serving coordinator's view (one
+    // score_batch call vs a loop of score calls, native backend).
+    let exe = ModelExecutor::native_from_weights(&weights, "nominal_synth", ts);
+    let st = Bench::new("executor: score() x8 batch-1 loop")
+        .iters(rec.iters(20))
+        .run(|| {
+            for b in 0..8 {
+                std::hint::black_box(exe.score(&pool[b * ts..(b + 1) * ts]).unwrap());
+            }
+        });
+    rec.put("executor/score_x8_per_stream", st.median_ns / 8.0);
+    let st = Bench::new("executor: score_batch(B=8) one call")
+        .iters(rec.iters(20))
+        .run(|| {
+            std::hint::black_box(exe.score_batch(&pool[..8 * ts], 8).unwrap());
+        });
+    rec.put("executor/score_batch_b8_per_stream", st.median_ns / 8.0);
+
     // ---- simulator & DSE (no artifacts needed) ----
     let u250 = Device::by_name("u250").unwrap();
     let point = DesignPoint::nominal_autoencoder(9, 1, 8);
     let st = Bench::new("cycle-sim: nominal x128 inferences")
-        .iters(50)
+        .iters(rec.iters(50))
         .run(|| {
             let r = simulate(&SimConfig {
                 point: point.clone(),
@@ -38,6 +162,7 @@ fn main() {
             });
             std::hint::black_box(r.makespan);
         });
+    rec.put("sim/nominal_x128", st.median_ns);
     // simulated-cycles per wall-second (the §Perf L3 target metric)
     let sim_cycles = {
         let r = simulate(&SimConfig {
@@ -61,29 +186,34 @@ fn main() {
         LayerDims::new(8, 8),
         LayerDims::new(8, 32),
     ];
-    Bench::new("DSE: partition nominal @ 2800 DSPs")
-        .iters(200)
+    let st = Bench::new("DSE: partition nominal @ 2800 DSPs")
+        .iters(rec.iters(200))
         .run(|| {
             let p = partition_model(u250, &layers, 8, 1, 2_800);
             std::hint::black_box(p.perf.dsp_model);
         });
+    rec.put("dse/partition_nominal", st.median_ns);
 
     // ---- GW substrate ----
     let plan = Plan::new(2048);
     let mut rng = Rng::new(0);
-    Bench::new("gw: colored_noise 2048 samples").iters(100).run(|| {
-        std::hint::black_box(colored_noise(&mut rng, &plan, 2048.0));
-    });
+    let st = Bench::new("gw: colored_noise 2048 samples")
+        .iters(rec.iters(100))
+        .run(|| {
+            std::hint::black_box(colored_noise(&mut rng, &plan, 2048.0));
+        });
+    rec.put("gw/colored_noise_2048", st.median_ns);
     let mut stream = StrainStream::new(1, 100, DEFAULT_SNR, 0.3);
-    Bench::new("gw: StrainStream next_window (TS=100)")
-        .iters(100)
+    let st = Bench::new("gw: StrainStream next_window (TS=100)")
+        .iters(rec.iters(100))
         .run(|| {
             std::hint::black_box(stream.next_window());
         });
+    rec.put("gw/next_window_ts100", st.median_ns);
 
     // ---- router dispatch (queue cost only) ----
-    Bench::new("router: dispatch+drain 1024 jobs x4 workers")
-        .iters(50)
+    let st = Bench::new("router: dispatch+drain 1024 jobs x4 workers")
+        .iters(rec.iters(50))
         .run(|| {
             let (router, queues) = Router::new(4, 512);
             for seq in 0..1024u64 {
@@ -98,38 +228,68 @@ fn main() {
             }
             std::hint::black_box(got);
         });
+    rec.put("router/dispatch_drain_1024x4", st.median_ns);
 
-    // ---- model datapaths (artifacts required) ----
-    let Ok(manifest) = Manifest::load("artifacts") else {
-        eprintln!("artifacts/ missing — model datapath benches skipped");
-        return;
-    };
-    let engine = Engine::cpu().expect("PJRT");
-    let small = engine.load_variant(&manifest, "small_ts8").expect("small");
-    let nominal = engine
-        .load_variant(&manifest, "nominal_ts100")
-        .expect("nominal");
-    let weights = AutoencoderWeights::load("artifacts/weights_nominal.json").expect("weights");
+    // ---- fixed-point datapath (no artifacts needed) ----
     let fixed = FixedAutoencoder::from_weights(&weights);
-
-    let mut s8 = StrainStream::new(2, 8, DEFAULT_SNR, 0.0);
-    let w8 = s8.next_window();
-    let mut s100 = StrainStream::new(3, 100, DEFAULT_SNR, 0.0);
-    let w100 = s100.next_window();
-
-    Bench::new("PJRT: small_ts8 batch-1 infer").warmup(10).iters(200).run(|| {
-        std::hint::black_box(small.infer(&w8.samples).unwrap());
-    });
-    Bench::new("PJRT: nominal_ts100 batch-1 infer")
-        .warmup(10)
-        .iters(100)
+    let st = Bench::new("rust q16: nominal_ts100 forward")
+        .iters(rec.iters(50))
         .run(|| {
-            std::hint::black_box(nominal.infer(&w100.samples).unwrap());
+            std::hint::black_box(fixed.forward(&pool[..ts]));
         });
-    Bench::new("rust f32: nominal_ts100 forward").iters(100).run(|| {
-        std::hint::black_box(forward_f32(&weights, &w100.samples));
-    });
-    Bench::new("rust q16: nominal_ts100 forward").iters(100).run(|| {
-        std::hint::black_box(fixed.forward(&w100.samples));
-    });
+    rec.put("model/q16_forward_ts100", st.median_ns);
+    let st = Bench::new("rust q16: lockstep forward_batch B=8")
+        .iters(rec.iters(20))
+        .run(|| {
+            std::hint::black_box(fixed.forward_batch(&pool[..8 * ts], 8));
+        });
+    rec.put("model/q16_forward_batch_b8_per_stream", st.median_ns / 8.0);
+
+    // ---- PJRT datapath (artifacts required) ----
+    'pjrt: {
+        let Ok(manifest) = Manifest::load("artifacts") else {
+            eprintln!("artifacts/ missing — PJRT datapath benches skipped");
+            break 'pjrt;
+        };
+        let Ok(engine) = Engine::cpu() else {
+            eprintln!("PJRT client unavailable — PJRT benches skipped");
+            break 'pjrt;
+        };
+        let (Ok(small), Ok(nominal)) = (
+            engine.load_variant(&manifest, "small_ts8"),
+            engine.load_variant(&manifest, "nominal_ts100"),
+        ) else {
+            eprintln!("PJRT compile unavailable (offline xla shim) — PJRT benches skipped");
+            break 'pjrt;
+        };
+
+        let mut s8 = StrainStream::new(2, 8, DEFAULT_SNR, 0.0);
+        let w8 = s8.next_window();
+        let mut s100 = StrainStream::new(3, 100, DEFAULT_SNR, 0.0);
+        let w100 = s100.next_window();
+
+        let st = Bench::new("PJRT: small_ts8 batch-1 infer")
+            .warmup(10)
+            .iters(rec.iters(200))
+            .run(|| {
+                std::hint::black_box(small.infer(&w8.samples).unwrap());
+            });
+        rec.put("pjrt/small_ts8_infer", st.median_ns);
+        let st = Bench::new("PJRT: nominal_ts100 batch-1 infer")
+            .warmup(10)
+            .iters(rec.iters(100))
+            .run(|| {
+                std::hint::black_box(nominal.infer(&w100.samples).unwrap());
+            });
+        rec.put("pjrt/nominal_ts100_infer", st.median_ns);
+    }
+
+    let st = Bench::new("rust f32: nominal_ts100 forward (scalar)")
+        .iters(rec.iters(100))
+        .run(|| {
+            std::hint::black_box(forward_f32(&weights, &pool[..ts]));
+        });
+    rec.put("model/f32_forward_ts100", st.median_ns);
+
+    rec.flush();
 }

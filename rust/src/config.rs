@@ -74,6 +74,13 @@ impl Manifest {
     pub fn golden_path(&self, v: &VariantSpec) -> String {
         format!("{}/{}", self.dir, v.golden)
     }
+
+    /// Trained-weights JSON for a variant (`aot.export_weights` convention:
+    /// one file per architecture). The native batched backend loads this
+    /// instead of the HLO artifact.
+    pub fn weights_path(&self, v: &VariantSpec) -> String {
+        format!("{}/weights_{}.json", self.dir, v.arch)
+    }
 }
 
 /// Serving configuration (defaults + JSON override).

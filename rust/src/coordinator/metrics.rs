@@ -110,6 +110,9 @@ pub struct Metrics {
     pub windows_done: AtomicU64,
     pub flagged: AtomicU64,
     pub dropped: AtomicU64,
+    /// Micro-batches dispatched through the batched engine (one
+    /// `score_batch` call each; == windows_done under batch-1 policy).
+    pub batches: AtomicU64,
 }
 
 impl Metrics {

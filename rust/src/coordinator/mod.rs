@@ -6,12 +6,18 @@
 //! thread-per-stage pipeline with bounded queues:
 //!
 //! * [`router`]   — least-outstanding dispatch over bounded worker queues
-//!   (backpressure sheds stale windows instead of buffering a live feed).
+//!   (backpressure sheds stale micro-batches instead of buffering a live
+//!   feed).
 //! * [`batcher`]  — batch-1 immediate dispatch (the paper's latency mode)
 //!   plus a micro-batching policy for the latency/throughput ablation.
 //! * [`detector`] — FPR-calibrated thresholding (paper Section V-B).
 //! * [`metrics`]  — lock-free latency histograms + counters.
-//! * [`server`]   — the leader wiring everything to the PJRT runtime.
+//! * [`server`]   — the leader wiring everything to the runtime. Drained
+//!   micro-batches route as single jobs and execute as ONE batched engine
+//!   call each (`ModelExecutor::score_batch`): all streams of a batch
+//!   advance in lockstep sharing each weight traversal. Backends: PJRT
+//!   artifacts ([`run_serving`]) or the artifact-less native batched engine
+//!   ([`run_serving_native`]).
 
 pub mod batcher;
 pub mod detector;
@@ -21,4 +27,4 @@ pub mod server;
 
 pub use batcher::Policy;
 pub use detector::{Detection, DetectionSummary, Detector};
-pub use server::{run_serving, run_serving_with_policy, ServeReport};
+pub use server::{run_serving, run_serving_native, run_serving_with_policy, ServeReport};

@@ -1,21 +1,28 @@
-//! The serving leader: stream -> router -> PJRT workers -> detector.
+//! The serving leader: stream -> batcher -> router -> workers -> detector.
 //!
-//! Thread topology (all std threads; the AOT executable is the only
+//! Thread topology (all std threads; the model executor is the only
 //! compute, so the paper's "python never on the request path" holds — the
 //! leader is pure rust):
 //!
 //! ```text
 //!   [producer]  synthetic StrainStream (or replayed testset)
+//!       |  micro-batches (Policy::Immediate => batches of 1)
 //!       |  bounded queues (backpressure: real-time feeds drop, not buffer)
-//!   [worker x N]  own PJRT engine each; score = reconstruction MSE
+//!   [worker x N]  own executor each; one `score_batch` call per routed
+//!       |         micro-batch — the whole batch advances in lockstep
+//!       |         through the batched engine (no internal batch-1 loop)
 //!       |  collector channel
 //!   [leader]  detector (FPR-calibrated threshold), metrics, AUC report
 //! ```
+//!
+//! The executor is produced per worker by a cloneable factory, so the same
+//! pipeline serves the PJRT artifact backend ([`run_serving`]) and the
+//! artifact-less native batched backend ([`run_serving_native`]).
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -26,10 +33,12 @@ use super::router::{Job, RouteResult, Router};
 use crate::config::{Manifest, ServeConfig};
 use crate::eval::roc::auc;
 use crate::gw::dataset::StrainStream;
-use crate::runtime::Engine;
+use crate::model::AutoencoderWeights;
+use crate::runtime::{Engine, ModelExecutor};
 
-/// One unit of work travelling leader -> worker.
+/// One window travelling leader -> worker (inside a micro-batch).
 struct WorkItem {
+    seq: u64,
     samples: Vec<f32>,
     label: u8,
     enqueued: Instant,
@@ -51,6 +60,10 @@ pub struct ServeReport {
     pub platform: String,
     pub windows: usize,
     pub dropped: u64,
+    /// Micro-batches dispatched to workers (== windows under batch-1).
+    pub batches: u64,
+    /// Mean dispatched batch size (1.0 under Policy::Immediate).
+    pub mean_batch: f64,
     pub threshold: f64,
     pub auc: f64,
     pub summary: DetectionSummary,
@@ -65,6 +78,10 @@ impl ServeReport {
         println!("=== gwlstm serving report ===");
         println!("model          : {} on {}", self.model, self.platform);
         println!("windows served : {} (dropped {})", self.windows, self.dropped);
+        println!(
+            "dispatches     : {} micro-batches, mean batch {:.2}",
+            self.batches, self.mean_batch
+        );
         println!("threshold      : {:.6} (target FPR calibrated)", self.threshold);
         println!("AUC            : {:.4}", self.auc);
         println!(
@@ -88,69 +105,132 @@ impl ServeReport {
     }
 }
 
-/// Run the full serving pipeline on the synthetic live stream.
+/// Run the full serving pipeline on the synthetic live stream, PJRT
+/// artifact backend, batch-1 policy (the paper's mode).
 pub fn run_serving(manifest: &Manifest, cfg: &ServeConfig) -> Result<ServeReport> {
     run_serving_with_policy(manifest, cfg, Policy::Immediate)
 }
 
-/// Same, with an explicit batching policy (the e2e bench sweeps this).
+/// PJRT artifact backend with an explicit batching policy (the e2e bench
+/// sweeps this).
 pub fn run_serving_with_policy(
     manifest: &Manifest,
     cfg: &ServeConfig,
     policy: Policy,
 ) -> Result<ServeReport> {
-    let metrics = Arc::new(Metrics::new());
     let spec = manifest.variant(&cfg.model)?.clone();
-    let ts = spec.ts;
+    let dir = manifest.dir.clone();
+    let model = cfg.model.clone();
+    // Each worker owns its engine/executable (PJRT handles are not shared
+    // across threads), so the factory reloads per call.
+    let factory = move || -> Result<ModelExecutor> {
+        let manifest = Manifest::load(&dir)?;
+        let engine = Engine::cpu()?;
+        engine.load_variant(&manifest, &model)
+    };
+    serve_core(factory, spec.ts, cfg, policy)
+}
+
+/// Artifact-less serving: the native batched engine packed straight from
+/// `weights` (trained or [`AutoencoderWeights::synthetic`]). This is the
+/// path integration tests and benches exercise without `make artifacts`.
+pub fn run_serving_native(
+    weights: &AutoencoderWeights,
+    ts: usize,
+    cfg: &ServeConfig,
+    policy: Policy,
+) -> Result<ServeReport> {
+    let w = weights.clone();
+    let name = cfg.model.clone();
+    let factory = move || -> Result<ModelExecutor> {
+        Ok(ModelExecutor::native_from_weights(&w, &name, ts))
+    };
+    serve_core(factory, ts, cfg, policy)
+}
+
+/// The backend-generic pipeline: calibration, worker fan-out, paced
+/// admission through the batcher, micro-batch routing, detection, report.
+fn serve_core<F>(factory: F, ts: usize, cfg: &ServeConfig, policy: Policy) -> Result<ServeReport>
+where
+    F: Fn() -> Result<ModelExecutor> + Send + Clone + 'static,
+{
+    let metrics = Arc::new(Metrics::new());
 
     // ---- calibration (leader-side, before serving starts) ----
-    let engine = Engine::cpu()?;
-    let platform = engine.platform();
-    let executor = engine.load_variant(manifest, &cfg.model)?;
+    // Background windows are scored through the batched path in chunks:
+    // calibration is exactly a micro-batch workload.
+    let executor = factory()?;
+    let platform = executor.platform().to_string();
     let compile_ms = executor.compile_ms;
     let mut calib_stream = StrainStream::new(0xCA11B, ts, cfg.snr, 0.0);
     let mut bg_scores = Vec::with_capacity(cfg.calib_windows);
-    for _ in 0..cfg.calib_windows {
-        let w = calib_stream.next_window();
-        bg_scores.push(executor.score(&w.samples)? as f64);
+    const CALIB_CHUNK: usize = 32;
+    let mut pending = Vec::with_capacity(CALIB_CHUNK * ts);
+    let mut pending_n = 0usize;
+    for i in 0..cfg.calib_windows {
+        pending.extend_from_slice(&calib_stream.next_window().samples);
+        pending_n += 1;
+        if pending_n == CALIB_CHUNK || i + 1 == cfg.calib_windows {
+            for s in executor.score_batch(&pending, pending_n)? {
+                bg_scores.push(s as f64);
+            }
+            pending.clear();
+            pending_n = 0;
+        }
     }
     let detector = Detector::calibrate(&bg_scores, cfg.target_fpr);
 
     // ---- topology ----
     let n_workers = cfg.workers.max(1);
-    let (router, queues) = Router::<WorkItem>::new(n_workers, cfg.queue_depth);
+    let (router, queues) = Router::<Vec<WorkItem>>::new(n_workers, cfg.queue_depth);
     let (result_tx, result_rx) = channel::<Scored>();
-    // Readiness barrier: workers compile their executable (hundreds of ms)
-    // before the producer is allowed to admit traffic — otherwise the
-    // bounded queues shed the entire warmup burst.
+    // Readiness barrier: workers build their executor (PJRT compile is
+    // hundreds of ms) before the producer is allowed to admit traffic —
+    // otherwise the bounded queues shed the entire warmup burst.
     let ready = Arc::new(std::sync::Barrier::new(n_workers + 1));
 
     let mut worker_handles = Vec::new();
     for q in queues {
         let tx = result_tx.clone();
         let m = metrics.clone();
-        let manifest_dir = manifest.dir.clone();
-        let model = cfg.model.clone();
+        let make_exec = factory.clone();
         let ready = ready.clone();
         worker_handles.push(std::thread::spawn(move || -> Result<()> {
-            // Each worker owns its engine/executable (PJRT handles are not
-            // shared across threads).
-            let manifest = Manifest::load(&manifest_dir)?;
-            let engine = Engine::cpu()?;
-            let exe = engine.load_variant(&manifest, &model)?;
+            // Build the executor BEFORE the barrier but only `?` it AFTER:
+            // a worker that errored out must still release the barrier, or
+            // the producer (and the whole serve call) deadlocks instead of
+            // surfacing the error at join time.
+            let exe = make_exec();
             ready.wait();
+            let exe = exe?;
+            let mut flat: Vec<f32> = Vec::new();
             while let Some(job) = q.recv() {
+                let batch = job.payload;
+                let bsz = batch.len();
+                if bsz == 0 {
+                    continue;
+                }
+                flat.clear();
+                for item in &batch {
+                    flat.extend_from_slice(&item.samples);
+                }
+                // ONE batched call per micro-batch: every stream advances
+                // in lockstep through the engine.
                 let t0 = Instant::now();
-                let score = exe.score(&job.payload.samples)? as f64;
-                let infer_ns = t0.elapsed().as_nanos() as u64;
-                m.infer.record_ns(infer_ns);
-                let _ = tx.send(Scored {
-                    seq: job.seq,
-                    label: job.payload.label,
-                    score,
-                    enqueued: job.payload.enqueued,
-                    infer_ns,
-                });
+                let scores = exe.score_batch(&flat, bsz)?;
+                let batch_ns = t0.elapsed().as_nanos() as u64;
+                let per_ns = batch_ns / bsz as u64;
+                m.batches.fetch_add(1, Ordering::Relaxed);
+                for (item, score) in batch.into_iter().zip(scores) {
+                    m.infer.record_ns(per_ns);
+                    let _ = tx.send(Scored {
+                        seq: item.seq,
+                        label: item.label,
+                        score: score as f64,
+                        enqueued: item.enqueued,
+                        infer_ns: per_ns,
+                    });
+                }
             }
             Ok(())
         }));
@@ -162,7 +242,7 @@ pub fn run_serving_with_policy(
     let producer_metrics = metrics.clone();
     let snr = cfg.snr;
     let inject_prob = cfg.inject_prob;
-    let pace = std::time::Duration::from_micros(cfg.pace_us);
+    let pace = Duration::from_micros(cfg.pace_us);
     let producer_ready = ready.clone();
     let producer = std::thread::spawn(move || {
         producer_ready.wait(); // admit traffic only once all workers compiled
@@ -183,29 +263,34 @@ pub fn run_serving_with_policy(
             let w = stream.next_window();
             producer_metrics.windows_in.fetch_add(1, Ordering::Relaxed);
             batcher.push(WorkItem {
+                seq,
                 samples: w.samples,
                 label: w.label,
                 enqueued: Instant::now(),
             });
+            seq += 1;
             if let Some(batch) = batcher.take_ready(Instant::now()) {
-                for pending in batch {
-                    if sent >= max_windows {
-                        break;
+                let mut items: Vec<WorkItem> = batch.into_iter().map(|p| p.item).collect();
+                items.truncate(max_windows - sent);
+                let bsz = items.len();
+                if bsz == 0 {
+                    continue;
+                }
+                let job_seq = items[0].seq;
+                match router.route(Job {
+                    seq: job_seq,
+                    payload: items,
+                }) {
+                    RouteResult::Sent(_) => {
+                        sent += bsz;
                     }
-                    match router.route(Job {
-                        seq,
-                        payload: pending.item,
-                    }) {
-                        RouteResult::Sent(_) => {
-                            sent += 1;
-                        }
-                        RouteResult::Backpressure => {
-                            // real-time feed: shed stale work, count it
-                            producer_metrics.dropped.fetch_add(1, Ordering::Relaxed);
-                        }
-                        RouteResult::Closed => return,
+                    RouteResult::Backpressure => {
+                        // real-time feed: shed the stale micro-batch, count it
+                        producer_metrics
+                            .dropped
+                            .fetch_add(bsz as u64, Ordering::Relaxed);
                     }
-                    seq += 1;
+                    RouteResult::Closed => return,
                 }
             }
         }
@@ -238,11 +323,14 @@ pub fn run_serving_with_policy(
         h.join().expect("worker panicked").context("worker failed")?;
     }
 
+    let batches = metrics.batches.load(Ordering::Relaxed);
     Ok(ServeReport {
         model: cfg.model.clone(),
         platform,
         windows: detections.len(),
         dropped: metrics.dropped.load(Ordering::Relaxed),
+        batches,
+        mean_batch: detections.len() as f64 / batches.max(1) as f64,
         threshold: detector.threshold,
         auc: auc(&scores, &labels),
         summary: DetectionSummary::from_detections(&detections),

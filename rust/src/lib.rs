@@ -10,12 +10,24 @@
 //!
 //! * [`gw`] — synthetic LIGO-like strain substrate (PSD-shaped noise, chirp
 //!   injections, whitening, band-pass, windowing) with a from-scratch FFT.
-//! * [`model`] — pure-rust reference LSTM autoencoder, both f32 and the
-//!   paper's 16-bit fixed-point datapath (LUT sigmoid, piecewise tanh).
-//! * [`runtime`] — PJRT CPU executor loading the AOT artifacts emitted by
-//!   `python/compile/aot.py` (HLO text; python never runs at request time).
+//! * [`model`] — pure-rust reference LSTM autoencoder: scalar f32, the
+//!   paper's 16-bit fixed-point datapath (LUT sigmoid, piecewise tanh), and
+//!   the **batched multi-stream engine** (`model::batched`): B `(h, c)`
+//!   states advance in lockstep per layer over weights packed once into a
+//!   column-tiled layout (`LstmWeightsPacked`), so one weight traversal per
+//!   timestep feeds every concurrent stream — the software analogue of the
+//!   paper's reuse-factor amortization, bit-identical to B scalar runs.
+//! * [`runtime`] — the request-path executor behind one type: the PJRT CPU
+//!   backend loading AOT artifacts from `python/compile/aot.py` (HLO text;
+//!   python never runs at request time; shape-locked to batch 1), and the
+//!   native batched backend (`ModelExecutor::native_from_weights`) that
+//!   executes whole micro-batches through `model::batched` anywhere.
 //! * [`coordinator`] — low-latency anomaly-detection serving: stream
-//!   assembly, batch-1 routing, threshold calibration, metrics.
+//!   assembly, micro-batch routing (drained `MicroBatch`es dispatch as one
+//!   `score_batch` call each; `Policy::Immediate` reproduces the paper's
+//!   batch-1 latency mode), threshold calibration, metrics. The paper
+//!   argues batch-1 for latency; the batched path exposes the opposing
+//!   throughput trade-off so both ends are measurable (`benches/`).
 //! * [`eval`] — ROC/AUC machinery for the Fig. 9 accuracy reproduction.
 //! * [`hls`]/[`sim`] — the FPGA substitute: device catalog, Eqs. (1)–(7)
 //!   performance model, reuse-factor DSE, Pareto frontiers, and an

@@ -14,12 +14,15 @@
 //! gwlstm verify                    golden-vector check of every artifact
 //! gwlstm infer --model small_ts8   one-shot inference demo
 //! gwlstm serve [--model m] [--windows n] [--workers k] [--config f.json]
+//!              [--batch N]   micro-batch dispatch through the batched engine
+//!              [--native]    artifact-less native batched backend (synthetic weights)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 use gwlstm::config::{Manifest, ServeConfig};
-use gwlstm::coordinator::run_serving;
+use gwlstm::coordinator::{run_serving_native, run_serving_with_policy, Policy};
 use gwlstm::gw::dataset::DEFAULT_SNR;
+use gwlstm::model::AutoencoderWeights;
 use gwlstm::hls::device::Device;
 use gwlstm::hls::dse::partition_model;
 use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
@@ -308,9 +311,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.target_fpr = args.f64_or("fpr", cfg.target_fpr)?;
     cfg.inject_prob = args.f64_or("inject-prob", cfg.inject_prob)?;
     cfg.pace_us = args.usize_or("pace-us", cfg.pace_us as usize)? as u64;
+    // --batch N > 1 switches to micro-batch dispatch (one batched-engine
+    // call per drained batch); default is the paper's batch-1 mode.
+    let max_batch = args.usize_or("batch", 1)?;
+    // --native serves through the in-tree batched engine on synthetic
+    // weights — runs in any environment, no artifacts or PJRT needed.
+    let native = args.flag("native");
+    let arch = if cfg.model.contains("nominal") { "nominal" } else { "small" };
+    let ts_flag = args.get("ts").map(str::to_string);
+    let ts = args.usize_or("ts", if arch == "nominal" { 100 } else { 8 })?;
     args.finish()?;
-    let manifest = Manifest::load(&dir)?;
-    let report = run_serving(&manifest, &cfg)?;
+    if ts_flag.is_some() && !native {
+        bail!("--ts only applies with --native (PJRT artifacts fix ts in the manifest)");
+    }
+    let policy = if max_batch > 1 {
+        Policy::MicroBatch {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(2),
+        }
+    } else {
+        Policy::Immediate
+    };
+    let report = if native {
+        let weights = AutoencoderWeights::synthetic(0xD0E, arch);
+        run_serving_native(&weights, ts, &cfg, policy)?
+    } else {
+        let manifest = Manifest::load(&dir)?;
+        run_serving_with_policy(&manifest, &cfg, policy)?
+    };
     report.print();
     Ok(())
 }

@@ -125,45 +125,63 @@ impl FixedAutoencoder {
             .sum::<f32>()
             / n
     }
+
+    /// Batched 16-bit forward: B windows `(B, TS)` batch-major advance in
+    /// lockstep through the fixed-point datapath (one weight traversal per
+    /// timestep feeds every stream, via [`FixedLstm::run_batch`]). Stream
+    /// b's reconstruction is bit-identical to [`FixedAutoencoder::forward`]
+    /// run alone on stream b.
+    pub fn forward_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(windows.len() % batch, 0, "ragged batch");
+        let ts = windows.len() / batch;
+        let split = self.layers.len() / 2;
+        let mut seq: Vec<i16> = windows.iter().map(|&v| to_q16(v)).collect();
+        let mut width = 1usize;
+        for l in &self.layers[..split] {
+            seq = l.run_batch(&self.lut, &seq, batch, ts);
+            width = l.lh;
+        }
+        let mut dec = vec![0i16; batch * ts * width];
+        for b in 0..batch {
+            let latent = &seq[(b * ts + ts - 1) * width..(b * ts + ts) * width];
+            for t in 0..ts {
+                dec[(b * ts + t) * width..(b * ts + t + 1) * width].copy_from_slice(latent);
+            }
+        }
+        seq = dec;
+        for l in &self.layers[split..] {
+            seq = l.run_batch(&self.lut, &seq, batch, ts);
+            width = l.lh;
+        }
+        let mut out = vec![0.0f32; batch * ts * self.d_out];
+        for bt in 0..batch * ts {
+            for o in 0..self.d_out {
+                let mut acc = self.out_b[o];
+                for j in 0..width {
+                    acc += q16_to_f32(seq[bt * width + j]) * self.out_w[j * self.d_out + o];
+                }
+                out[bt * self.d_out + o] = acc;
+            }
+        }
+        out
+    }
+
+    /// Per-stream fixed-point anomaly scores for a micro-batch.
+    pub fn score_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
+        let rec = self.forward_batch(windows, batch);
+        super::batched::mse_per_stream(windows, &rec, batch)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::weights::LstmWeights;
-    use crate::util::rng::Rng;
 
+    /// Shorthand for the now-public synthetic constructor (kept so the
+    /// existing test bodies read unchanged).
     fn synthetic_weights(seed: u64, arch: &str) -> AutoencoderWeights {
-        let dims: Vec<(usize, usize)> = match arch {
-            "small" => vec![(1, 9), (9, 9)],
-            _ => vec![(1, 32), (32, 8), (8, 8), (8, 32)],
-        };
-        let mut rng = Rng::new(seed);
-        let mut layers = Vec::new();
-        for (i, &(lx, lh)) in dims.iter().enumerate() {
-            let scale_x = (6.0 / (lx + 4 * lh) as f64).sqrt();
-            let scale_h = (6.0 / (lh + 4 * lh) as f64).sqrt();
-            layers.push(LstmWeights {
-                name: format!("l{i}"),
-                lx,
-                lh,
-                wx: (0..lx * 4 * lh)
-                    .map(|_| (rng.range(-scale_x, scale_x)) as f32)
-                    .collect(),
-                wh: (0..lh * 4 * lh)
-                    .map(|_| (rng.range(-scale_h, scale_h)) as f32)
-                    .collect(),
-                b: vec![0.0; 4 * lh],
-            });
-        }
-        let lh_last = dims.last().unwrap().1;
-        AutoencoderWeights {
-            arch: arch.into(),
-            layers,
-            out_w: (0..lh_last).map(|_| rng.range(-0.4, 0.4) as f32).collect(),
-            out_b: vec![0.0],
-            d_out: 1,
-        }
+        AutoencoderWeights::synthetic(seed, arch)
     }
 
     #[test]
@@ -200,6 +218,25 @@ mod tests {
         let w = synthetic_weights(3, "small");
         let a: Vec<f32> = (0..8).map(|i| (i as f32).cos()).collect();
         assert_eq!(forward_f32(&w, &a), forward_f32(&w, &a));
+    }
+
+    #[test]
+    fn fixed_forward_batch_bitexact_with_scalar() {
+        let w = synthetic_weights(5, "small");
+        let fx = FixedAutoencoder::from_weights(&w);
+        let (batch, ts) = (3, 8);
+        let windows: Vec<f32> = (0..batch * ts)
+            .map(|i| ((i * 13 % 7) as f32 - 3.0) / 3.0)
+            .collect();
+        let got = fx.forward_batch(&windows, batch);
+        for b in 0..batch {
+            let one = fx.forward(&windows[b * ts..(b + 1) * ts]);
+            assert_eq!(&got[b * ts..(b + 1) * ts], &one[..], "stream {b}");
+        }
+        let scores = fx.score_batch(&windows, batch);
+        for b in 0..batch {
+            assert_eq!(scores[b], fx.score(&windows[b * ts..(b + 1) * ts]));
+        }
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! Batched multi-stream LSTM engine: B independent `(h, c)` states advance
+//! in lockstep through each layer, sharing one packed-weight traversal per
+//! timestep.
+//!
+//! This is the software analogue of the paper's reuse-factor tuning: where
+//! the FPGA datapath amortizes weight fetches across MACs via per-layer
+//! reuse factors, this engine amortizes the `wx`/`wh` traversal across B
+//! concurrent LIGO streams. The paper itself serves batch 1 for latency;
+//! batching is the related-work trade-off (Que et al. 2021, and hls4ml's
+//! batch-parallel RNN strategy, Khoda et al. arXiv:2207.00559) that this
+//! module makes measurable — see `benches/hotpath.rs` for streams/sec at
+//! B ∈ {1, 4, 8, 32}.
+//!
+//! Numerics: every per-element accumulation runs in the same order as the
+//! scalar reference in [`super::lstm`] (k ascending, `z = xw + b` before the
+//! recurrent accumulate), so outputs are bit-identical to B independent
+//! [`super::lstm::lstm_layer`] runs — the parity suite in
+//! `tests/batched_parity.rs` pins this.
+//!
+//! Layouts:
+//! * sequence tensors are **batch-major**: `(B, TS, width)` row-major, i.e.
+//!   stream b's window is the contiguous slice `[b*ts*w .. (b+1)*ts*w]`;
+//! * weights are repacked once at load time ([`LstmWeightsPacked`]) into
+//!   column-tiled panels ([`PackedMatrix`]) so the inner GEMM kernel walks
+//!   contiguous memory and each weight panel stays cache-hot across all B
+//!   streams of a tile.
+
+use super::lstm::sigmoid;
+use super::weights::{AutoencoderWeights, LstmWeights};
+
+/// Output-column tile width of the packed GEMM panels. 16 f32 lanes = one
+/// 64-byte cache line, and wide enough for the autovectorizer.
+pub const GEMM_TILE: usize = 16;
+
+/// One column panel of a packed matrix: `width` output columns starting at
+/// `j0`, stored `(k, width)` row-major at `off` in the data pool.
+#[derive(Debug, Clone, Copy)]
+struct Panel {
+    off: usize,
+    j0: usize,
+    width: usize,
+}
+
+/// A `(k, n)` matrix repacked into column-tiled panels for the batched
+/// GEMM kernel. Packing happens once at load time; the hot loop only ever
+/// reads contiguous panel rows.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    /// Reduction (input) dimension.
+    pub k: usize,
+    /// Output dimension.
+    pub n: usize,
+    data: Vec<f32>,
+    panels: Vec<Panel>,
+}
+
+impl PackedMatrix {
+    /// Pack `src`, a `(k, n)` row-major matrix, with the default tile.
+    pub fn pack(src: &[f32], k: usize, n: usize) -> PackedMatrix {
+        PackedMatrix::pack_with_tile(src, k, n, GEMM_TILE)
+    }
+
+    /// Pack with an explicit tile width (exposed for tests/tuning).
+    pub fn pack_with_tile(src: &[f32], k: usize, n: usize, tile: usize) -> PackedMatrix {
+        assert!(tile > 0);
+        assert_eq!(src.len(), k * n, "source shape mismatch");
+        let mut data = Vec::with_capacity(k * n);
+        let mut panels = Vec::new();
+        let mut j0 = 0;
+        while j0 < n {
+            let width = tile.min(n - j0);
+            let off = data.len();
+            for kk in 0..k {
+                data.extend_from_slice(&src[kk * n + j0..kk * n + j0 + width]);
+            }
+            panels.push(Panel { off, j0, width });
+            j0 += width;
+        }
+        PackedMatrix { k, n, data, panels }
+    }
+
+    /// `z += x @ W` for `rows` independent rows: `x` is `(rows, k)`, `z` is
+    /// `(rows, n)`, both row-major. Accumulation per output element runs in
+    /// ascending-k order (bit-identical to the naive triple loop). Each
+    /// weight panel (`k * tile` f32, a few KB) is streamed once and reused
+    /// by every row — the weight-traversal amortization the batched engine
+    /// exists for.
+    pub fn gemm_acc(&self, x: &[f32], rows: usize, z: &mut [f32]) {
+        assert_eq!(x.len(), rows * self.k, "x shape mismatch");
+        assert_eq!(z.len(), rows * self.n, "z shape mismatch");
+        for p in &self.panels {
+            let panel = &self.data[p.off..p.off + self.k * p.width];
+            for r in 0..rows {
+                let xrow = &x[r * self.k..(r + 1) * self.k];
+                let zrow = &mut z[r * self.n + p.j0..r * self.n + p.j0 + p.width];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    let wrow = &panel[kk * p.width..(kk + 1) * p.width];
+                    for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                        *zv += xv * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One LSTM layer's weights in the packed, tile-transposed layout the
+/// batched engine consumes. Built once at load time from the row-major
+/// [`LstmWeights`]; every later perf layer (SIMD, sharding) builds on this
+/// layout.
+#[derive(Debug, Clone)]
+pub struct LstmWeightsPacked {
+    pub lx: usize,
+    pub lh: usize,
+    /// `(Lx, 4Lh)` input weights, panel-packed.
+    pub wx: PackedMatrix,
+    /// `(Lh, 4Lh)` recurrent weights, panel-packed.
+    pub wh: PackedMatrix,
+    /// `(4Lh,)` gate bias, i|f|g|o.
+    pub bias: Vec<f32>,
+}
+
+impl LstmWeightsPacked {
+    pub fn from_weights(w: &LstmWeights) -> LstmWeightsPacked {
+        let l4 = 4 * w.lh;
+        LstmWeightsPacked {
+            lx: w.lx,
+            lh: w.lh,
+            wx: PackedMatrix::pack(&w.wx, w.lx, l4),
+            wh: PackedMatrix::pack(&w.wh, w.lh, l4),
+            bias: w.b.clone(),
+        }
+    }
+}
+
+/// Mutable lockstep state for B concurrent streams: `(B, Lh)` row-major
+/// hidden and cell tensors.
+#[derive(Debug, Clone)]
+pub struct BatchedState {
+    pub batch: usize,
+    pub lh: usize,
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+impl BatchedState {
+    pub fn zeros(batch: usize, lh: usize) -> BatchedState {
+        BatchedState {
+            batch,
+            lh,
+            h: vec![0.0; batch * lh],
+            c: vec![0.0; batch * lh],
+        }
+    }
+}
+
+/// One LSTM layer ready to advance B streams per weight traversal.
+#[derive(Debug, Clone)]
+pub struct BatchedLstm {
+    pub w: LstmWeightsPacked,
+}
+
+impl BatchedLstm {
+    pub fn from_weights(w: &LstmWeights) -> BatchedLstm {
+        BatchedLstm {
+            w: LstmWeightsPacked::from_weights(w),
+        }
+    }
+
+    /// One timestep for all B streams. `xw_t` is the `(B, 4Lh)` input-MVM
+    /// slice for this step; `z` is a `(B, 4Lh)` scratch buffer.
+    fn step(&self, xw_t: &[f32], st: &mut BatchedState, z: &mut [f32]) {
+        let lh = self.w.lh;
+        let l4 = 4 * lh;
+        let batch = st.batch;
+        debug_assert_eq!(xw_t.len(), batch * l4);
+        debug_assert_eq!(z.len(), batch * l4);
+        // z := xw + bias first, then the recurrent accumulate — the same
+        // ordering as the scalar `step_from_xw` (bit-exactness contract).
+        for b in 0..batch {
+            let src = &xw_t[b * l4..(b + 1) * l4];
+            let dst = &mut z[b * l4..(b + 1) * l4];
+            for ((d, &s), &bv) in dst.iter_mut().zip(src).zip(&self.w.bias) {
+                *d = s + bv;
+            }
+        }
+        // z += H @ Wh: one packed-weight traversal feeds every stream.
+        self.w.wh.gemm_acc(&st.h, batch, z);
+        // Gate nonlinearities + state update over flat per-gate slices.
+        for b in 0..batch {
+            let zrow = &z[b * l4..(b + 1) * l4];
+            let (zi, rest) = zrow.split_at(lh);
+            let (zf, rest) = rest.split_at(lh);
+            let (zg, zo) = rest.split_at(lh);
+            let c_row = &mut st.c[b * lh..(b + 1) * lh];
+            let h_row = &mut st.h[b * lh..(b + 1) * lh];
+            for (((((iz, fz), gz), oz), c), h) in zi
+                .iter()
+                .zip(zf)
+                .zip(zg)
+                .zip(zo)
+                .zip(c_row.iter_mut())
+                .zip(h_row.iter_mut())
+            {
+                let c_new = sigmoid(*fz) * *c + sigmoid(*iz) * gz.tanh();
+                *c = c_new;
+                *h = sigmoid(*oz) * c_new.tanh();
+            }
+        }
+    }
+
+    /// Full layer over B sequences in lockstep. `xs` is `(B, TS, Lx)`
+    /// batch-major; returns all hidden vectors `(B, TS, Lh)` batch-major —
+    /// stream b's output equals `lstm_layer` run alone on stream b.
+    pub fn run(&self, xs: &[f32], batch: usize, ts: usize) -> Vec<f32> {
+        let (lx, lh) = (self.w.lx, self.w.lh);
+        let l4 = 4 * lh;
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(xs.len(), batch * ts * lx, "input shape mismatch");
+        // Sub-layer 1 (paper's mvm_x, hoisted): one GEMM over all (b, t)
+        // rows at once — batch-major input is already (B*TS, Lx) row-major.
+        let mut xw = vec![0.0f32; batch * ts * l4];
+        self.w.wx.gemm_acc(xs, batch * ts, &mut xw);
+        // Sub-layer 2: the recurrent loop, B states in lockstep.
+        let mut st = BatchedState::zeros(batch, lh);
+        let mut z = vec![0.0f32; batch * l4];
+        let mut xw_t = vec![0.0f32; batch * l4];
+        let mut out = vec![0.0f32; batch * ts * lh];
+        for t in 0..ts {
+            // gather this step's (B, 4Lh) slice from the batch-major xw
+            for b in 0..batch {
+                let row = (b * ts + t) * l4;
+                xw_t[b * l4..(b + 1) * l4].copy_from_slice(&xw[row..row + l4]);
+            }
+            self.step(&xw_t, &mut st, &mut z);
+            for b in 0..batch {
+                out[(b * ts + t) * lh..(b * ts + t + 1) * lh]
+                    .copy_from_slice(&st.h[b * lh..(b + 1) * lh]);
+            }
+        }
+        out
+    }
+}
+
+/// The full autoencoder with every layer packed for batched execution.
+/// This is the engine the serving runtime dispatches micro-batches through.
+#[derive(Debug, Clone)]
+pub struct PackedAutoencoder {
+    layers: Vec<BatchedLstm>,
+    split: usize,
+    out_w: Vec<f32>,
+    out_b: Vec<f32>,
+    d_out: usize,
+}
+
+impl PackedAutoencoder {
+    pub fn from_weights(w: &AutoencoderWeights) -> PackedAutoencoder {
+        PackedAutoencoder {
+            layers: w.layers.iter().map(BatchedLstm::from_weights).collect(),
+            split: w.layers.len() / 2,
+            out_w: w.out_w.clone(),
+            out_b: w.out_b.clone(),
+            d_out: w.d_out,
+        }
+    }
+
+    /// Reconstruct B windows in lockstep. `windows` is `(B, TS)` batch-major
+    /// (d_in = 1); returns `(B, TS * d_out)` reconstructions, stream b equal
+    /// to `forward_f32` run alone on stream b.
+    pub fn forward_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(windows.len() % batch, 0, "ragged batch");
+        let ts = windows.len() / batch;
+        let mut seq: Vec<f32> = windows.to_vec();
+        let mut width = 1usize;
+        for l in &self.layers[..self.split] {
+            assert_eq!(width, l.w.lx, "encoder layer input width");
+            seq = l.run(&seq, batch, ts);
+            width = l.w.lh;
+        }
+        // Bottleneck per stream: keep the last hidden vector, repeat over ts.
+        let mut dec = vec![0.0f32; batch * ts * width];
+        for b in 0..batch {
+            let latent = &seq[(b * ts + ts - 1) * width..(b * ts + ts) * width];
+            for t in 0..ts {
+                dec[(b * ts + t) * width..(b * ts + t + 1) * width].copy_from_slice(latent);
+            }
+        }
+        seq = dec;
+        for l in &self.layers[self.split..] {
+            assert_eq!(width, l.w.lx, "decoder layer input width");
+            seq = l.run(&seq, batch, ts);
+            width = l.w.lh;
+        }
+        // TimeDistributed dense, same accumulation order as the scalar path.
+        let mut out = vec![0.0f32; batch * ts * self.d_out];
+        for bt in 0..batch * ts {
+            for o in 0..self.d_out {
+                let mut acc = self.out_b[o];
+                for j in 0..width {
+                    acc += seq[bt * width + j] * self.out_w[j * self.d_out + o];
+                }
+                out[bt * self.d_out + o] = acc;
+            }
+        }
+        out
+    }
+
+    /// Per-stream reconstruction-MSE anomaly scores for a micro-batch.
+    pub fn score_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
+        let rec = self.forward_batch(windows, batch);
+        mse_per_stream(windows, &rec, batch)
+    }
+}
+
+/// Per-stream reconstruction MSE between batch-major `windows` and their
+/// reconstructions (d_out == 1 layouts: both `(B, TS)`). Every scoring
+/// backend (packed f32, fixed-point, runtime executor) shares this so the
+/// anomaly-score definition lives in exactly one place; the accumulation
+/// order matches the scalar `score_f32` (parity contract).
+pub fn mse_per_stream(windows: &[f32], rec: &[f32], batch: usize) -> Vec<f32> {
+    debug_assert_eq!(windows.len(), rec.len(), "d_out != 1 scoring unsupported");
+    let per = windows.len() / batch;
+    let n = per as f32;
+    (0..batch)
+        .map(|b| {
+            windows[b * per..(b + 1) * per]
+                .iter()
+                .zip(&rec[b * per..(b + 1) * per])
+                .map(|(a, r)| (a - r) * (a - r))
+                .sum::<f32>()
+                / n
+        })
+        .collect()
+}
+
+/// Batched f32 forward pass: B windows `(B, TS)` batch-major through the
+/// autoencoder in lockstep. Convenience wrapper that packs on every call —
+/// serving paths should hold a [`PackedAutoencoder`] and amortize the pack.
+pub fn forward_f32_batch(w: &AutoencoderWeights, windows: &[f32], batch: usize) -> Vec<f32> {
+    PackedAutoencoder::from_weights(w).forward_batch(windows, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::autoencoder::forward_f32;
+    use crate::model::lstm::lstm_layer;
+    use crate::util::rng::Rng;
+
+    fn random_layer(seed: u64, lx: usize, lh: usize) -> LstmWeights {
+        let mut rng = Rng::new(seed);
+        let mut gen = |n: usize, s: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.gaussian() * s) as f32).collect()
+        };
+        LstmWeights {
+            name: "rand".into(),
+            lx,
+            lh,
+            wx: gen(lx * 4 * lh, 0.4),
+            wh: gen(lh * 4 * lh, 0.3),
+            b: gen(4 * lh, 0.1),
+        }
+    }
+
+    fn naive_gemm(src: &[f32], k: usize, n: usize, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut z = vec![0.0f32; rows * n];
+        for r in 0..rows {
+            for kk in 0..k {
+                let xv = x[r * k + kk];
+                for j in 0..n {
+                    z[r * n + j] += xv * src[kk * n + j];
+                }
+            }
+        }
+        z
+    }
+
+    #[test]
+    fn packed_matrix_matches_naive() {
+        let mut rng = Rng::new(5);
+        // deliberately ragged: n = 36 -> panels of 16, 16, 4
+        let (k, n, rows) = (7, 36, 5);
+        let src: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.gaussian() as f32).collect();
+        let m = PackedMatrix::pack(&src, k, n);
+        let mut z = vec![0.0f32; rows * n];
+        m.gemm_acc(&x, rows, &mut z);
+        assert_eq!(z, naive_gemm(&src, k, n, &x, rows));
+    }
+
+    #[test]
+    fn packed_matrix_tile_width_invariant() {
+        let mut rng = Rng::new(6);
+        let (k, n, rows) = (4, 20, 3);
+        let src: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.gaussian() as f32).collect();
+        let mut ref_z: Option<Vec<f32>> = None;
+        for tile in [1, 3, 16, 64] {
+            let m = PackedMatrix::pack_with_tile(&src, k, n, tile);
+            let mut z = vec![0.0f32; rows * n];
+            m.gemm_acc(&x, rows, &mut z);
+            match &ref_z {
+                None => ref_z = Some(z),
+                Some(r) => assert_eq!(&z, r, "tile {tile} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn batch_one_is_bitexact_with_scalar_layer() {
+        let w = random_layer(1, 3, 9);
+        let mut rng = Rng::new(2);
+        let ts = 12;
+        let xs: Vec<f32> = (0..ts * 3).map(|_| rng.gaussian() as f32).collect();
+        let scalar = lstm_layer(&w, &xs, ts);
+        let batched = BatchedLstm::from_weights(&w).run(&xs, 1, ts);
+        assert_eq!(batched, scalar);
+    }
+
+    #[test]
+    fn lockstep_streams_match_independent_runs() {
+        let w = random_layer(3, 2, 8);
+        let eng = BatchedLstm::from_weights(&w);
+        let mut rng = Rng::new(4);
+        let (batch, ts) = (5, 10);
+        let xs: Vec<f32> = (0..batch * ts * 2).map(|_| rng.gaussian() as f32).collect();
+        let got = eng.run(&xs, batch, ts);
+        for b in 0..batch {
+            let one = lstm_layer(&w, &xs[b * ts * 2..(b + 1) * ts * 2], ts);
+            assert_eq!(&got[b * ts * 8..(b + 1) * ts * 8], &one[..], "stream {b}");
+        }
+    }
+
+    #[test]
+    fn autoencoder_batch_matches_scalar_forward() {
+        let w = AutoencoderWeights::synthetic(11, "small");
+        let mut rng = Rng::new(12);
+        let (batch, ts) = (3, 8);
+        let windows: Vec<f32> = (0..batch * ts).map(|_| rng.gaussian() as f32).collect();
+        let got = forward_f32_batch(&w, &windows, batch);
+        for b in 0..batch {
+            let one = forward_f32(&w, &windows[b * ts..(b + 1) * ts]);
+            assert_eq!(&got[b * ts..(b + 1) * ts], &one[..], "stream {b}");
+        }
+    }
+
+    #[test]
+    fn score_batch_matches_scalar_score() {
+        let w = AutoencoderWeights::synthetic(13, "small");
+        let packed = PackedAutoencoder::from_weights(&w);
+        let mut rng = Rng::new(14);
+        let (batch, ts) = (4, 8);
+        let windows: Vec<f32> = (0..batch * ts).map(|_| rng.gaussian() as f32).collect();
+        let scores = packed.score_batch(&windows, batch);
+        for b in 0..batch {
+            let one = crate::model::autoencoder::score_f32(&w, &windows[b * ts..(b + 1) * ts]);
+            assert_eq!(scores[b], one, "stream {b}");
+        }
+    }
+}

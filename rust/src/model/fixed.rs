@@ -142,6 +142,81 @@ impl FixedLstm {
         }
         out
     }
+
+    /// Lockstep batched sequence: B independent streams advance together,
+    /// sharing one weight-row traversal per timestep (k-outer loop order,
+    /// the integer twin of `model::batched`). `xs` is `(B, TS, Lx)`
+    /// batch-major Q6.10; returns `(B, TS, Lh)` batch-major hidden vectors,
+    /// bit-identical per stream to [`FixedLstm::run`] (integer gate MVMs
+    /// are exact, so accumulation order cannot change the result).
+    pub fn run_batch(&self, lut: &SigmoidLut, xs: &[i16], batch: usize, ts: usize) -> Vec<i16> {
+        let (lx, lh) = (self.lx, self.lh);
+        let l4 = 4 * lh;
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(xs.len(), batch * ts * lx, "input shape mismatch");
+        let mut h = vec![0i16; batch * lh];
+        let mut c = vec![0i32; batch * lh];
+        let mut z = vec![0i64; batch * l4];
+        let mut out = vec![0i16; batch * ts * lh];
+        for t in 0..ts {
+            z.iter_mut().for_each(|zv| *zv = 0);
+            // input MVM: each Q6.10 weight row is read once and feeds all B
+            for k in 0..lx {
+                let row = &self.wx[k * l4..(k + 1) * l4];
+                for b in 0..batch {
+                    let xv = xs[(b * ts + t) * lx + k] as i64;
+                    let zrow = &mut z[b * l4..(b + 1) * l4];
+                    for (zv, &wv) in zrow.iter_mut().zip(row) {
+                        *zv += xv * wv as i64;
+                    }
+                }
+            }
+            // recurrent MVM, same shared-traversal order
+            for k in 0..lh {
+                let row = &self.wh[k * l4..(k + 1) * l4];
+                for b in 0..batch {
+                    let hv = h[b * lh + k] as i64;
+                    let zrow = &mut z[b * l4..(b + 1) * l4];
+                    for (zv, &wv) in zrow.iter_mut().zip(row) {
+                        *zv += hv * wv as i64;
+                    }
+                }
+            }
+            // bias (already Q12.20) + the per-stream gate tail
+            for b in 0..batch {
+                let zrow = &mut z[b * l4..(b + 1) * l4];
+                for (zv, &bv) in zrow.iter_mut().zip(&self.b) {
+                    *zv += bv as i64;
+                }
+            }
+            for b in 0..batch {
+                let zrow = &z[b * l4..(b + 1) * l4];
+                let c_row = &mut c[b * lh..(b + 1) * lh];
+                let h_row = &mut h[b * lh..(b + 1) * lh];
+                for j in 0..lh {
+                    let zi = q32_sat(zrow[j]);
+                    let zf = q32_sat(zrow[lh + j]);
+                    let zg = q32_sat(zrow[2 * lh + j]);
+                    let zo = q32_sat(zrow[3 * lh + j]);
+                    let i_g = lut.eval(q32_to_f32(zi));
+                    let f_g = lut.eval(q32_to_f32(zf));
+                    let g_g = pwl_tanh(q32_to_f32(zg));
+                    let o_g = lut.eval(q32_to_f32(zo));
+                    let i_q = (i_g * (1 << 20) as f32) as i64;
+                    let f_q = (f_g * (1 << 20) as f32) as i64;
+                    let g_q = (g_g * (1 << 20) as f32) as i64;
+                    let fc = (f_q * c_row[j] as i64) >> 20;
+                    let ig = (i_q * g_q) >> 20;
+                    let c_new = sat_i32(fc + ig);
+                    c_row[j] = c_new;
+                    let h_f = o_g * pwl_tanh(q32_to_f32(c_new));
+                    h_row[j] = to_q16(h_f);
+                }
+                out[(b * ts + t) * lh..(b * ts + t + 1) * lh].copy_from_slice(h_row);
+            }
+        }
+        out
+    }
 }
 
 #[inline]
@@ -217,6 +292,23 @@ mod tests {
         let lut = SigmoidLut::default();
         let xs: Vec<i16> = (0..8).map(|i| to_q16((i as f32 - 4.0) / 4.0)).collect();
         assert_eq!(f.run(&lut, &xs, 8), f.run(&lut, &xs, 8));
+    }
+
+    #[test]
+    fn run_batch_bitexact_with_sequential_runs() {
+        let w = random_weights(7, 3, 6);
+        let f = FixedLstm::from_weights(&w);
+        let lut = SigmoidLut::default();
+        let (batch, ts) = (4, 9);
+        let mut rng = Rng::new(21);
+        let xs: Vec<i16> = (0..batch * ts * 3)
+            .map(|_| to_q16(rng.gaussian() as f32))
+            .collect();
+        let got = f.run_batch(&lut, &xs, batch, ts);
+        for b in 0..batch {
+            let one = f.run(&lut, &xs[b * ts * 3..(b + 1) * ts * 3], ts);
+            assert_eq!(&got[b * ts * 6..(b + 1) * ts * 6], &one[..], "stream {b}");
+        }
     }
 
     #[test]

@@ -3,17 +3,23 @@
 //! Mirrors the hardware at two precisions:
 //! * [`lstm`]/[`autoencoder`] — f32 reference (checked against the AOT
 //!   artifacts' golden vectors in the runtime integration test),
+//! * [`batched`] — the multi-stream engine: B `(h, c)` states in lockstep
+//!   per layer over packed, column-tiled weights ([`LstmWeightsPacked`]);
+//!   bit-identical to B independent scalar runs (tests/batched_parity.rs),
 //! * [`fixed`] + [`act_lut`] — the paper's 16-bit datapath bit-for-bit:
 //!   Q6.10 weights/activations, Q12.20 bias/cell state, BRAM-LUT sigmoid,
-//!   piecewise-linear tanh (Section IV-A).
+//!   piecewise-linear tanh (Section IV-A), including a lockstep batched
+//!   sequence path (`FixedLstm::run_batch`).
 //!
 //! [`weights`] loads the trained parameters exported by `aot.py`.
 
 pub mod act_lut;
 pub mod autoencoder;
+pub mod batched;
 pub mod fixed;
 pub mod lstm;
 pub mod weights;
 
 pub use autoencoder::{forward_f32, score_f32, FixedAutoencoder};
+pub use batched::{forward_f32_batch, BatchedLstm, LstmWeightsPacked, PackedAutoencoder};
 pub use weights::AutoencoderWeights;

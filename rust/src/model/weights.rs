@@ -79,6 +79,44 @@ impl AutoencoderWeights {
         })
     }
 
+    /// Seeded synthetic weights with the paper's layer shapes (Xavier-ish
+    /// uniform init). Used wherever trained artifacts are not required:
+    /// batched-engine benches, parity tests, and the native serving backend
+    /// in artifact-less environments. `arch` is `"small"` (9-9) or anything
+    /// else for the nominal 32-8-8-32 autoencoder.
+    pub fn synthetic(seed: u64, arch: &str) -> AutoencoderWeights {
+        let dims: Vec<(usize, usize)> = match arch {
+            "small" => vec![(1, 9), (9, 9)],
+            _ => vec![(1, 32), (32, 8), (8, 8), (8, 32)],
+        };
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut layers = Vec::new();
+        for (i, &(lx, lh)) in dims.iter().enumerate() {
+            let scale_x = (6.0 / (lx + 4 * lh) as f64).sqrt();
+            let scale_h = (6.0 / (lh + 4 * lh) as f64).sqrt();
+            layers.push(LstmWeights {
+                name: format!("l{i}"),
+                lx,
+                lh,
+                wx: (0..lx * 4 * lh)
+                    .map(|_| (rng.range(-scale_x, scale_x)) as f32)
+                    .collect(),
+                wh: (0..lh * 4 * lh)
+                    .map(|_| (rng.range(-scale_h, scale_h)) as f32)
+                    .collect(),
+                b: vec![0.0; 4 * lh],
+            });
+        }
+        let lh_last = dims.last().unwrap().1;
+        AutoencoderWeights {
+            arch: arch.into(),
+            layers,
+            out_w: (0..lh_last).map(|_| rng.range(-0.4, 0.4) as f32).collect(),
+            out_b: vec![0.0],
+            d_out: 1,
+        }
+    }
+
     /// Layer dims as the DSE wants them.
     pub fn layer_dims(&self) -> Vec<crate::hls::LayerDims> {
         self.layers

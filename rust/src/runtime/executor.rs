@@ -1,10 +1,26 @@
-//! The PJRT executor: one compiled executable per model variant.
+//! The model executor: one compiled (or packed) engine per model variant.
+//!
+//! Two backends sit behind one request-path type, [`ModelExecutor`]:
+//!
+//! * **PJRT** — the AOT HLO artifact compiled by the `xla` crate, exactly
+//!   as the paper's deployment ("python never on the request path"). The
+//!   compiled executable has the artifact's fixed `(ts, d_in)` shape, so
+//!   micro-batches execute as a loop of batch-1 calls.
+//! * **Native** — the in-tree batched engine
+//!   ([`crate::model::PackedAutoencoder`]): weights packed once at load
+//!   time into the column-tiled layout, after which
+//!   [`ModelExecutor::score_batch`] advances the whole micro-batch in
+//!   lockstep through every layer (one weight traversal per timestep feeds
+//!   all B streams). This is the executing backend when HLO artifacts or a
+//!   PJRT build are unavailable, and the backend the batched-throughput
+//!   benches measure.
 
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Manifest, VariantSpec};
+use crate::model::{AutoencoderWeights, PackedAutoencoder};
 use crate::util::json::Value;
 
 /// Shared PJRT client (CPU platform).
@@ -22,7 +38,7 @@ impl Engine {
         self.client.platform_name()
     }
 
-    /// Load + compile one artifact.
+    /// Load + compile one HLO artifact (PJRT backend).
     pub fn load_variant(&self, manifest: &Manifest, name: &str) -> Result<ModelExecutor> {
         let spec = manifest.variant(name)?.clone();
         let path = manifest.hlo_path(&spec);
@@ -37,24 +53,72 @@ impl Engine {
         let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
         Ok(ModelExecutor {
             spec,
-            exe,
+            backend: Backend::Pjrt(exe),
+            platform: self.client.platform_name(),
             compile_ms,
         })
     }
+
+    /// Load the variant's trained weights JSON and pack them for the native
+    /// batched engine (no HLO / PJRT involved).
+    pub fn load_native(&self, manifest: &Manifest, name: &str) -> Result<ModelExecutor> {
+        let spec = manifest.variant(name)?.clone();
+        let path = manifest.weights_path(&spec);
+        let weights = AutoencoderWeights::load(&path)
+            .with_context(|| format!("loading weights {path}"))?;
+        Ok(ModelExecutor::native(&weights, spec))
+    }
 }
 
-/// A compiled model ready for request-path execution.
+/// Which engine executes the request path.
+enum Backend {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Native(PackedAutoencoder),
+}
+
+/// A compiled/packed model ready for request-path execution.
 pub struct ModelExecutor {
     pub spec: VariantSpec,
-    exe: xla::PjRtLoadedExecutable,
-    /// One-time compile cost (for the report; not on the hot path).
+    backend: Backend,
+    platform: String,
+    /// One-time compile/pack cost (for the report; not on the hot path).
     pub compile_ms: f64,
 }
 
 impl ModelExecutor {
+    /// Build a native batched executor straight from weights (the
+    /// artifact-less path: synthetic or directly-loaded parameters).
+    pub fn native_from_weights(weights: &AutoencoderWeights, name: &str, ts: usize) -> ModelExecutor {
+        let spec = VariantSpec {
+            name: name.to_string(),
+            arch: weights.arch.clone(),
+            ts,
+            d_in: 1,
+            hlo: String::new(),
+            golden: String::new(),
+        };
+        ModelExecutor::native(weights, spec)
+    }
+
+    fn native(weights: &AutoencoderWeights, spec: VariantSpec) -> ModelExecutor {
+        let t0 = Instant::now();
+        let packed = PackedAutoencoder::from_weights(weights);
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        ModelExecutor {
+            spec,
+            backend: Backend::Native(packed),
+            platform: "native-batched".to_string(),
+            compile_ms,
+        }
+    }
+
+    /// Backend/platform label for reports.
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
     /// Run one window (ts * d_in f32 values) -> reconstruction of the same
-    /// shape. This is THE hot path: one literal in, one execute, one
-    /// literal out.
+    /// shape. This is THE batch-1 hot path.
     pub fn infer(&self, window: &[f32]) -> Result<Vec<f32>> {
         let n = self.spec.ts * self.spec.d_in;
         if window.len() != n {
@@ -65,23 +129,56 @@ impl ModelExecutor {
                 self.spec.name
             );
         }
-        let lit = xla::Literal::vec1(window).reshape(&[self.spec.ts as i64, self.spec.d_in as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        match &self.backend {
+            Backend::Pjrt(exe) => {
+                let lit = xla::Literal::vec1(window)
+                    .reshape(&[self.spec.ts as i64, self.spec.d_in as i64])?;
+                let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+                // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+                let out = result.to_tuple1()?;
+                Ok(out.to_vec::<f32>()?)
+            }
+            Backend::Native(packed) => Ok(packed.forward_batch(window, 1)),
+        }
+    }
+
+    /// Run a whole micro-batch: `windows` is `(B, ts*d_in)` batch-major.
+    /// The native backend advances all B streams in lockstep through the
+    /// batched engine; the PJRT backend is shape-locked to the artifact and
+    /// falls back to sequential batch-1 execution.
+    pub fn infer_batch(&self, windows: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if batch == 0 {
+            bail!("empty batch");
+        }
+        let n = self.spec.ts * self.spec.d_in;
+        if windows.len() != batch * n {
+            bail!(
+                "batch buffer length {} != batch {batch} * ts*d_in {n} for {}",
+                windows.len(),
+                self.spec.name
+            );
+        }
+        match &self.backend {
+            Backend::Native(packed) => Ok(packed.forward_batch(windows, batch)),
+            Backend::Pjrt(_) => {
+                let mut out = Vec::with_capacity(windows.len());
+                for b in 0..batch {
+                    out.extend(self.infer(&windows[b * n..(b + 1) * n])?);
+                }
+                Ok(out)
+            }
+        }
     }
 
     /// Reconstruction-MSE anomaly score for one window.
     pub fn score(&self, window: &[f32]) -> Result<f32> {
-        let rec = self.infer(window)?;
-        let n = window.len() as f32;
-        Ok(window
-            .iter()
-            .zip(&rec)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum::<f32>()
-            / n)
+        Ok(self.score_batch(window, 1)?[0])
+    }
+
+    /// Per-stream anomaly scores for a micro-batch (`windows` batch-major).
+    pub fn score_batch(&self, windows: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let rec = self.infer_batch(windows, batch)?;
+        Ok(crate::model::batched::mse_per_stream(windows, &rec, batch))
     }
 
     /// Verify this executable against its golden vector file (produced at
@@ -106,14 +203,47 @@ impl ModelExecutor {
 
 #[cfg(test)]
 mod tests {
-    // The runtime requires artifacts/ to exist; full coverage lives in
-    // rust/tests/integration_runtime.rs (run after `make artifacts`).
-    // Here we only check client creation, which needs no artifacts.
+    // PJRT coverage requires artifacts/ and lives in
+    // rust/tests/integration_runtime.rs (run after `make artifacts`). Here
+    // we cover client creation and the artifact-less native backend.
     use super::*;
+    use crate::model::{forward_f32, score_f32};
 
     #[test]
     fn cpu_client_comes_up() {
         let e = Engine::cpu().expect("PJRT CPU client");
         assert!(!e.platform().is_empty());
+    }
+
+    #[test]
+    fn native_executor_matches_reference_model() {
+        let w = AutoencoderWeights::synthetic(3, "small");
+        let exe = ModelExecutor::native_from_weights(&w, "small_synth", 8);
+        assert_eq!(exe.platform(), "native-batched");
+        let win: Vec<f32> = (0..8).map(|i| (i as f32 / 3.0).sin()).collect();
+        assert_eq!(exe.infer(&win).unwrap(), forward_f32(&w, &win));
+        assert_eq!(exe.score(&win).unwrap(), score_f32(&w, &win));
+    }
+
+    #[test]
+    fn native_batch_matches_per_window_scores() {
+        let w = AutoencoderWeights::synthetic(4, "small");
+        let exe = ModelExecutor::native_from_weights(&w, "small_synth", 8);
+        let (batch, ts) = (3, 8);
+        let windows: Vec<f32> = (0..batch * ts).map(|i| ((i * 11 % 13) as f32 - 6.0) / 6.0).collect();
+        let scores = exe.score_batch(&windows, batch).unwrap();
+        for b in 0..batch {
+            let one = exe.score(&windows[b * ts..(b + 1) * ts]).unwrap();
+            assert_eq!(scores[b], one, "stream {b}");
+        }
+    }
+
+    #[test]
+    fn shape_guards() {
+        let w = AutoencoderWeights::synthetic(5, "small");
+        let exe = ModelExecutor::native_from_weights(&w, "small_synth", 8);
+        assert!(exe.infer(&[0.0; 7]).is_err());
+        assert!(exe.infer_batch(&[0.0; 16], 0).is_err());
+        assert!(exe.infer_batch(&[0.0; 17], 2).is_err());
     }
 }

@@ -1,18 +1,30 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute on
-//! the request path.
+//! Model runtime: load artifacts, compile/pack once, execute on the
+//! request path — batch-1 or whole micro-batches.
 //!
-//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API) following the
-//! pattern of `/opt/xla-example/load_hlo.rs`:
+//! Two backends behind one [`ModelExecutor`]:
 //!
-//! ```text
-//! PjRtClient::cpu() -> HloModuleProto::from_text_file -> XlaComputation
-//!     -> client.compile -> executable.execute
-//! ```
+//! * **PJRT** (the paper's deployment): AOT HLO text compiled via the `xla`
+//!   crate (docs.rs/xla 0.1.6, PJRT C API), following
+//!   `/opt/xla-example/load_hlo.rs`:
 //!
-//! HLO **text** is the interchange format: jax >= 0.5 serializes protos
-//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md). Python never runs
-//! here — artifacts are produced once by `make artifacts`.
+//!   ```text
+//!   PjRtClient::cpu() -> HloModuleProto::from_text_file -> XlaComputation
+//!       -> client.compile -> executable.execute
+//!   ```
+//!
+//!   HLO **text** is the interchange format: jax >= 0.5 serializes protos
+//!   with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//!   parser reassigns ids (see /opt/xla-example/README.md). Python never
+//!   runs here — artifacts are produced once by `make artifacts`. In this
+//!   offline build the `xla` dependency is an in-tree shim that gates
+//!   compilation with a clear error (see `vendor/xla`).
+//!
+//! * **Native batched** ([`ModelExecutor::native_from_weights`] /
+//!   [`Engine::load_native`]): the in-tree multi-stream engine from
+//!   [`crate::model::batched`] — packed column-tiled weights, B `(h, c)`
+//!   states in lockstep, `score_batch` for whole micro-batches. Runs
+//!   anywhere (no artifacts, no PJRT) and is what the serving coordinator
+//!   dispatches micro-batches through.
 
 pub mod executor;
 

@@ -1,0 +1,160 @@
+//! Golden parity: the batched lockstep engine vs B independent scalar runs.
+//!
+//! The engine's contract (model::batched module docs) is that every
+//! per-element accumulation runs in the same order as the scalar reference,
+//! so stream b of a B-batch is *bit-identical* to running stream b alone.
+//! The acceptance bound here is the looser 1e-5 max elementwise error from
+//! the issue; the asserts additionally report the measured max error so a
+//! future kernel change that trades exactness for speed shows its cost.
+//!
+//! Covered at B ∈ {1, 3, 8}: raw LSTM layers on seeded random weights, the
+//! f32 autoencoder on random and on chirp-injected `gw::dataset` windows,
+//! the per-stream anomaly scores, and the 16-bit fixed-point datapath
+//! (integer MVMs are exact, so that parity is asserted bitwise).
+
+use gwlstm::gw::dataset::{make_dataset, DEFAULT_SNR};
+use gwlstm::model::batched::{forward_f32_batch, BatchedLstm, PackedAutoencoder};
+use gwlstm::model::lstm::lstm_layer;
+use gwlstm::model::weights::LstmWeights;
+use gwlstm::model::{forward_f32, score_f32, AutoencoderWeights, FixedAutoencoder};
+use gwlstm::util::rng::Rng;
+
+const TOL: f32 = 1e-5;
+const BATCHES: [usize; 3] = [1, 3, 8];
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+fn random_layer(seed: u64, lx: usize, lh: usize) -> LstmWeights {
+    let mut rng = Rng::new(seed);
+    let mut gen = |n: usize, s: f64| -> Vec<f32> {
+        (0..n).map(|_| (rng.gaussian() * s) as f32).collect()
+    };
+    LstmWeights {
+        name: format!("parity_{lx}x{lh}"),
+        lx,
+        lh,
+        wx: gen(lx * 4 * lh, 0.4),
+        wh: gen(lh * 4 * lh, 0.3),
+        b: gen(4 * lh, 0.1),
+    }
+}
+
+#[test]
+fn layer_parity_on_seeded_random_weights() {
+    for (seed, (lx, lh)) in [(1u64, (1usize, 9usize)), (2, (3, 8)), (3, (8, 32))] {
+        let w = random_layer(seed, lx, lh);
+        let eng = BatchedLstm::from_weights(&w);
+        let ts = 16;
+        for &batch in &BATCHES {
+            let mut rng = Rng::new(seed ^ 0xD1CE);
+            let xs: Vec<f32> = (0..batch * ts * lx)
+                .map(|_| rng.gaussian() as f32)
+                .collect();
+            let got = eng.run(&xs, batch, ts);
+            for b in 0..batch {
+                let one = lstm_layer(&w, &xs[b * ts * lx..(b + 1) * ts * lx], ts);
+                let err = max_abs_diff(&got[b * ts * lh..(b + 1) * ts * lh], &one);
+                assert!(
+                    err <= TOL,
+                    "layer ({lx},{lh}) B={batch} stream {b}: max err {err}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn autoencoder_parity_on_random_windows() {
+    for arch in ["small", "nominal"] {
+        let w = AutoencoderWeights::synthetic(7, arch);
+        let ts = if arch == "small" { 8 } else { 24 };
+        for &batch in &BATCHES {
+            let mut rng = Rng::new(0xA0 + batch as u64);
+            let windows: Vec<f32> = (0..batch * ts).map(|_| rng.gaussian() as f32).collect();
+            let got = forward_f32_batch(&w, &windows, batch);
+            for b in 0..batch {
+                let one = forward_f32(&w, &windows[b * ts..(b + 1) * ts]);
+                let err = max_abs_diff(&got[b * ts..(b + 1) * ts], &one);
+                assert!(err <= TOL, "{arch} B={batch} stream {b}: max err {err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn autoencoder_parity_on_chirp_injected_windows() {
+    // Real substrate: alternating noise / chirp-injected windows from the
+    // dataset twin, through the nominal architecture at its native TS.
+    let ts = 100;
+    let w = AutoencoderWeights::synthetic(42, "nominal");
+    let events = make_dataset(0xC41F, 8, ts, DEFAULT_SNR);
+    assert!(events.iter().any(|e| e.label == 1), "need injected windows");
+    let flat: Vec<f32> = events.iter().flat_map(|e| e.samples.clone()).collect();
+    for &batch in &BATCHES {
+        let got = forward_f32_batch(&w, &flat[..batch * ts], batch);
+        for b in 0..batch {
+            let one = forward_f32(&w, &events[b].samples);
+            let err = max_abs_diff(&got[b * ts..(b + 1) * ts], &one);
+            assert!(err <= TOL, "chirp B={batch} stream {b}: max err {err}");
+        }
+    }
+}
+
+#[test]
+fn score_parity_on_chirp_injected_windows() {
+    let ts = 8;
+    let w = AutoencoderWeights::synthetic(9, "small");
+    let packed = PackedAutoencoder::from_weights(&w);
+    let events = make_dataset(0x5C0, 8, ts, DEFAULT_SNR);
+    let flat: Vec<f32> = events.iter().flat_map(|e| e.samples.clone()).collect();
+    for &batch in &BATCHES {
+        let scores = packed.score_batch(&flat[..batch * ts], batch);
+        for b in 0..batch {
+            let one = score_f32(&w, &events[b].samples);
+            let err = (scores[b] - one).abs();
+            assert!(err <= TOL, "score B={batch} stream {b}: err {err}");
+        }
+    }
+}
+
+#[test]
+fn fixed_datapath_parity_is_bitwise() {
+    let ts = 8;
+    let w = AutoencoderWeights::synthetic(11, "small");
+    let fx = FixedAutoencoder::from_weights(&w);
+    let events = make_dataset(0xF1D0, 8, ts, DEFAULT_SNR);
+    let flat: Vec<f32> = events.iter().flat_map(|e| e.samples.clone()).collect();
+    for &batch in &BATCHES {
+        let got = fx.forward_batch(&flat[..batch * ts], batch);
+        for b in 0..batch {
+            let one = fx.forward(&events[b].samples);
+            assert_eq!(
+                &got[b * ts..(b + 1) * ts],
+                &one[..],
+                "fixed B={batch} stream {b} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn f32_batch_parity_is_bitwise_on_one_case() {
+    // Stronger than the 1e-5 acceptance bound: the engine promises
+    // bit-exactness (same accumulation order); pin it on one case so an
+    // order-breaking "optimization" is caught loudly.
+    let w = AutoencoderWeights::synthetic(13, "small");
+    let ts = 8;
+    let mut rng = Rng::new(77);
+    let windows: Vec<f32> = (0..3 * ts).map(|_| rng.gaussian() as f32).collect();
+    let got = forward_f32_batch(&w, &windows, 3);
+    for b in 0..3 {
+        let one = forward_f32(&w, &windows[b * ts..(b + 1) * ts]);
+        assert_eq!(&got[b * ts..(b + 1) * ts], &one[..], "stream {b}");
+    }
+}

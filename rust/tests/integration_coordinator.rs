@@ -1,8 +1,15 @@
 //! Integration: the full serving coordinator over the live synthetic
-//! stream (artifacts required; skips gracefully otherwise).
+//! stream. The native batched backend runs everywhere; the PJRT sections
+//! require artifacts and skip gracefully otherwise.
+
+use std::time::{Duration, Instant};
 
 use gwlstm::config::{Manifest, ServeConfig};
-use gwlstm::coordinator::{run_serving, run_serving_with_policy, Policy};
+use gwlstm::coordinator::batcher::Batcher;
+use gwlstm::coordinator::{run_serving, run_serving_native, run_serving_with_policy, Policy};
+use gwlstm::gw::dataset::{make_dataset, DEFAULT_SNR};
+use gwlstm::model::{score_f32, AutoencoderWeights};
+use gwlstm::runtime::ModelExecutor;
 
 fn manifest() -> Option<Manifest> {
     Manifest::load("artifacts").ok()
@@ -96,4 +103,130 @@ fn two_workers_complete() {
     cfg.workers = 2;
     let report = run_serving(&m, &cfg).unwrap();
     assert_eq!(report.windows, 100);
+}
+
+// ---------------------------------------------------------------------------
+// Native batched backend: no artifacts needed, so these always execute.
+// ---------------------------------------------------------------------------
+
+fn native_cfg(windows: usize) -> ServeConfig {
+    ServeConfig {
+        model: "small_native".into(),
+        calib_windows: 48,
+        max_windows: windows,
+        inject_prob: 0.4,
+        // deep enough that backpressure is structurally impossible for the
+        // window counts below — the no-drop asserts are then deterministic
+        queue_depth: 512,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn native_backend_serves_all_windows_batch1() {
+    let w = AutoencoderWeights::synthetic(0xAB, "small");
+    let report = run_serving_native(&w, 8, &native_cfg(150), Policy::Immediate).unwrap();
+    assert_eq!(report.windows, 150);
+    assert_eq!(report.dropped, 0);
+    assert_eq!(report.platform, "native-batched");
+    assert!(report.infer.n >= 150);
+    assert!(report.throughput_per_s > 0.0);
+    // batch-1 policy: every dispatch is a singleton micro-batch
+    assert_eq!(report.batches, 150);
+    assert!((report.mean_batch - 1.0).abs() < 1e-9);
+    // labels flow through: the summary must have both classes
+    assert!(report.summary.true_pos + report.summary.false_neg > 0);
+    assert!(report.summary.true_neg + report.summary.false_pos > 0);
+}
+
+#[test]
+fn native_microbatch_dispatches_whole_batches_through_engine() {
+    let w = AutoencoderWeights::synthetic(0xCD, "small");
+    let report = run_serving_native(
+        &w,
+        8,
+        &native_cfg(240),
+        Policy::MicroBatch {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        },
+    )
+    .unwrap();
+    assert_eq!(report.windows, 240, "every admitted window scored");
+    assert_eq!(report.dropped, 0, "no window shed at this depth");
+    // The MicroBatch drain reaches the engine as whole batches, not an
+    // internal batch-1 loop: strictly fewer dispatches than windows, and
+    // at least ceil(240 / 8) of them.
+    assert!(
+        report.batches < 240,
+        "expected multi-window dispatches, got {} singleton batches",
+        report.batches
+    );
+    assert!(report.batches >= 240 / 8, "batches {} too few", report.batches);
+    assert!(
+        report.mean_batch > 1.5 && report.mean_batch <= 8.0,
+        "mean batch {} outside (1.5, 8]",
+        report.mean_batch
+    );
+}
+
+#[test]
+fn native_two_workers_complete() {
+    let w = AutoencoderWeights::synthetic(0xEF, "small");
+    let mut cfg = native_cfg(160);
+    cfg.workers = 2;
+    let report = run_serving_native(
+        &w,
+        8,
+        &cfg,
+        Policy::MicroBatch {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+    )
+    .unwrap();
+    assert_eq!(report.windows, 160);
+    assert_eq!(report.dropped, 0);
+}
+
+#[test]
+fn microbatch_drain_scores_match_scalar_reference() {
+    // The coordinator contract in miniature, deterministically: windows
+    // from the dataset twin drain through the batcher as micro-batches and
+    // each batch is scored by ONE batched-engine call; results must match
+    // the scalar per-window reference and preserve FIFO order.
+    let ts = 8;
+    let w = AutoencoderWeights::synthetic(0x77, "small");
+    let exe = ModelExecutor::native_from_weights(&w, "small_native", ts);
+    let events = make_dataset(0xD15, 12, ts, DEFAULT_SNR);
+    let far = Duration::from_secs(3600);
+    let mut batcher = Batcher::new(Policy::MicroBatch {
+        max_batch: 4,
+        max_wait: far,
+    });
+    let mut scored: Vec<f32> = Vec::new();
+    let drain = |batcher: &mut Batcher<Vec<f32>>, now: Instant, out: &mut Vec<f32>| {
+        while let Some(batch) = batcher.take_ready(now) {
+            assert!(batch.len() <= 4, "batch over max_batch");
+            let mut flat = Vec::with_capacity(batch.len() * ts);
+            for p in &batch {
+                flat.extend_from_slice(&p.item);
+            }
+            out.extend(exe.score_batch(&flat, batch.len()).unwrap());
+        }
+    };
+    for e in &events {
+        batcher.push(e.samples.clone());
+        drain(&mut batcher, Instant::now(), &mut scored);
+    }
+    drain(&mut batcher, Instant::now() + far + far, &mut scored);
+    assert_eq!(scored.len(), events.len(), "windows lost in the drain");
+    for (i, e) in events.iter().enumerate() {
+        let reference = score_f32(&w, &e.samples);
+        let got = scored[i];
+        assert!(
+            (got - reference).abs() <= 1e-5,
+            "window {i}: batched {got} vs scalar {reference}"
+        );
+    }
 }

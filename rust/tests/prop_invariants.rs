@@ -10,9 +10,13 @@ use gwlstm::hls::device::{Device, DEVICES};
 use gwlstm::hls::dse::{balance_layer, partition_model};
 use gwlstm::hls::pareto::{balanced_family, frontier, naive_family};
 use gwlstm::hls::perf_model::{layer_perf, model_perf, DesignPoint, LayerDims};
-use gwlstm::model::fixed::{q16_to_f32, to_q16};
+use gwlstm::model::act_lut::SigmoidLut;
+use gwlstm::model::fixed::{q16_to_f32, to_q16, FixedLstm};
+use gwlstm::model::weights::LstmWeights;
+use gwlstm::model::{forward_f32, forward_f32_batch, AutoencoderWeights};
 use gwlstm::sim::{simulate, SimConfig};
 use gwlstm::util::prop::{check, Draw};
+use gwlstm::util::rng::Rng;
 
 fn any_device(d: &mut Draw) -> &'static Device {
     &DEVICES[d.usize_in(0, DEVICES.len() - 1)]
@@ -298,6 +302,169 @@ fn prop_batcher_never_loses_or_reorders() {
             }
             if &out != items {
                 return Err(format!("order/loss: {out:?} vs {items:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_microbatch_dispatch_no_loss_no_reorder() {
+    // The batched coordinator path: windows from several streams are
+    // interleaved into the batcher, drained as micro-batches, and routed as
+    // whole jobs. Invariants: no window is lost, order within each stream
+    // is preserved end-to-end (single worker => FIFO), and no dispatched
+    // micro-batch ever exceeds max_batch.
+    check(
+        "microbatch-dispatch",
+        |d| {
+            let n_streams = d.usize_in(1, 4);
+            let per_stream = d.usize_in(0, 12);
+            let max_batch = d.usize_in(1, 6);
+            (n_streams, per_stream, max_batch)
+        },
+        |&(n_streams, per_stream, max_batch)| {
+            let far = std::time::Duration::from_secs(3600);
+            let mut batcher = Batcher::new(Policy::MicroBatch {
+                max_batch,
+                max_wait: far,
+            });
+            // queue deep enough that backpressure is structurally impossible
+            let total = n_streams * per_stream;
+            let (router, queues) = Router::<Vec<(usize, usize)>>::new(1, total.max(1));
+            let route_batch = |items: Vec<(usize, usize)>| -> Result<(), String> {
+                if items.len() > max_batch {
+                    return Err(format!("batch {} > max_batch {max_batch}", items.len()));
+                }
+                match router.route(Job {
+                    seq: items[0].1 as u64,
+                    payload: items,
+                }) {
+                    RouteResult::Sent(_) => Ok(()),
+                    other => Err(format!("unexpected route result {other:?}")),
+                }
+            };
+            // interleave streams round-robin, draining after every push
+            for idx in 0..per_stream {
+                for stream in 0..n_streams {
+                    batcher.push((stream, idx));
+                    if let Some(batch) = batcher.take_ready(std::time::Instant::now()) {
+                        route_batch(batch.into_iter().map(|p| p.item).collect())?;
+                    }
+                }
+            }
+            // final flush (the producer's shutdown drain)
+            loop {
+                let later = std::time::Instant::now() + far + far;
+                match batcher.take_ready(later) {
+                    Some(batch) => route_batch(batch.into_iter().map(|p| p.item).collect())?,
+                    None => break,
+                }
+            }
+            router.shutdown();
+            let mut next_expected = vec![0usize; n_streams];
+            let mut received = 0usize;
+            while let Some(job) = queues[0].recv() {
+                for (stream, idx) in job.payload {
+                    if idx != next_expected[stream] {
+                        return Err(format!(
+                            "stream {stream}: got idx {idx}, expected {}",
+                            next_expected[stream]
+                        ));
+                    }
+                    next_expected[stream] += 1;
+                    received += 1;
+                }
+            }
+            if received != total {
+                return Err(format!("lost windows: {received} of {total}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_forward_matches_scalar() {
+    // Lockstep engine == B independent scalar forwards (1e-5 acceptance
+    // bound; the engine actually promises bit-exactness).
+    check(
+        "batched-forward-parity",
+        |d| {
+            let seed = d.usize_in(0, 10_000) as u64;
+            let batch = d.usize_in(1, 6);
+            let ts = d.usize_in(2, 12);
+            (seed, batch, ts)
+        },
+        |&(seed, batch, ts)| {
+            let w = AutoencoderWeights::synthetic(seed, "small");
+            let mut rng = Rng::new(seed ^ 0xFEED);
+            let windows: Vec<f32> = (0..batch * ts).map(|_| rng.gaussian() as f32).collect();
+            let got = forward_f32_batch(&w, &windows, batch);
+            for b in 0..batch {
+                let one = forward_f32(&w, &windows[b * ts..(b + 1) * ts]);
+                for (j, (x, y)) in got[b * ts..(b + 1) * ts].iter().zip(&one).enumerate() {
+                    if (x - y).abs() > 1e-5 {
+                        return Err(format!(
+                            "stream {b} sample {j}: batched {x} vs scalar {y}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_fixed_outputs_within_q16_bounds() {
+    // The lockstep fixed-point path keeps |h| inside the Q6.10 grid's
+    // tanh*sigmoid range (<= 1 + LUT slack) for any input, including
+    // saturated extremes, and matches the sequential runs bit-for-bit.
+    check(
+        "batched-fixed-q16-bounds",
+        |d| {
+            let seed = d.usize_in(0, 10_000) as u64;
+            let lx = d.usize_in(1, 3);
+            let lh = d.usize_in(1, 8);
+            let batch = d.usize_in(1, 5);
+            let ts = d.usize_in(1, 10);
+            let extreme = d.bool();
+            (seed, lx, lh, batch, ts, extreme)
+        },
+        |&(seed, lx, lh, batch, ts, extreme)| {
+            let mut rng = Rng::new(seed);
+            let mut gen = |n: usize, s: f64| -> Vec<f32> {
+                (0..n).map(|_| (rng.gaussian() * s) as f32).collect()
+            };
+            let w = LstmWeights {
+                name: "prop".into(),
+                lx,
+                lh,
+                wx: gen(lx * 4 * lh, 0.4),
+                wh: gen(lh * 4 * lh, 0.3),
+                b: gen(4 * lh, 0.2),
+            };
+            let f = FixedLstm::from_weights(&w);
+            let lut = SigmoidLut::default();
+            let xs: Vec<i16> = if extreme {
+                (0..batch * ts * lx)
+                    .map(|i| if i % 2 == 0 { i16::MAX } else { i16::MIN })
+                    .collect()
+            } else {
+                (0..batch * ts * lx)
+                    .map(|_| to_q16(rng.gaussian() as f32))
+                    .collect()
+            };
+            let got = f.run_batch(&lut, &xs, batch, ts);
+            if let Some(&v) = got.iter().find(|v| v.unsigned_abs() > 1100) {
+                return Err(format!("|h| escaped Q16 bound: {v}"));
+            }
+            for b in 0..batch {
+                let one = f.run(&lut, &xs[b * ts * lx..(b + 1) * ts * lx], ts);
+                if got[b * ts * lh..(b + 1) * ts * lh] != one[..] {
+                    return Err(format!("stream {b} diverged from sequential run"));
+                }
             }
             Ok(())
         },

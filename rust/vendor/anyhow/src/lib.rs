@@ -1,0 +1,160 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The real crates.io `anyhow` is not vendorable in this offline build, so
+//! this shim provides the exact subset `gwlstm` uses with compatible
+//! semantics:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value that any
+//!   `std::error::Error` converts into (so `?` works everywhere). Like the
+//!   real crate, `Error` deliberately does **not** implement
+//!   `std::error::Error` itself (that is what makes the blanket `From`
+//!   impl coherent).
+//! * [`Result<T>`] — alias with the error type defaulted.
+//! * [`anyhow!`] / [`bail!`] — format-style constructors.
+//! * [`Context`] — `.context(..)` / `.with_context(|| ..)` on results,
+//!   prepending outer context to the message chain.
+
+use std::fmt;
+
+/// Opaque error: a chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Prepend an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message (what `Display` shows first).
+    pub fn to_message(&self) -> String {
+        self.chain.join(": ")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_message())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror real anyhow: outermost message, then the cause chain.
+        match self.chain.split_first() {
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, c) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {c}")?;
+                    }
+                }
+                Ok(())
+            }
+            None => f.write_str("(empty error)"),
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error arm of a result.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Format-style error constructor.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: Result<()> = Err(io_err().into());
+        let e = r.context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config: missing thing");
+        let r2: Result<(), std::io::Error> = Err(io_err());
+        let e2 = r2.with_context(|| format!("attempt {}", 2)).unwrap_err();
+        assert_eq!(e2.to_string(), "attempt 2: missing thing");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn inner(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Err(anyhow!("fell through"))
+        }
+        assert_eq!(inner(true).unwrap_err().to_string(), "flag was true");
+        assert_eq!(inner(false).unwrap_err().to_string(), "fell through");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn reads() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(reads().is_err());
+    }
+}
