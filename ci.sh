@@ -22,11 +22,27 @@ if command -v cargo >/dev/null 2>&1; then
     note "rust: cargo test -q"
     (cd rust && cargo test -q) || failures=$((failures + 1))
 
+    if cargo clippy --version >/dev/null 2>&1; then
+        note "rust: cargo clippy -- -D warnings"
+        (cd rust && cargo clippy --release --all-targets -- -D warnings) \
+            || failures=$((failures + 1))
+    else
+        echo "WARNING: clippy not installed — lint stage skipped" >&2
+    fi
+
     if [ "${SKIP_BENCH:-0}" != "1" ]; then
-        note "rust: bench smoke (tiny iteration counts)"
+        # hotpath runs BOTH math tiers, emits BENCH_hotpath.json +
+        # BENCH_hotpath_pr1_baseline.json, and exits nonzero if the
+        # FastSimd smoke output diverges from BitExact beyond the
+        # model::simd tolerance — a tolerance regression fails CI here.
+        note "rust: bench smoke (tiny iteration counts, both math tiers)"
         (cd rust && GWLSTM_BENCH_SMOKE=1 cargo bench --bench hotpath) \
             || failures=$((failures + 1))
-        (cd rust && GWLSTM_BENCH_SMOKE=1 cargo bench --bench e2e_serving) \
+        (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=bitexact \
+            cargo bench --bench e2e_serving) \
+            || failures=$((failures + 1))
+        (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=fast_simd \
+            cargo bench --bench e2e_serving) \
             || failures=$((failures + 1))
     fi
 else

@@ -9,13 +9,15 @@
 //! * **PJRT artifacts** (requires `make artifacts`): the paper's AOT path.
 //!
 //! Run: `cargo bench --bench e2e_serving`. Set `GWLSTM_BENCH_SMOKE=1` for
-//! the ci.sh smoke invocation (tiny window counts).
+//! the ci.sh smoke invocation (tiny window counts), and `GWLSTM_MATH=
+//! bitexact|fast_simd` to pick the native engine's math tier (ci.sh runs
+//! the smoke in both).
 
 use std::time::Duration;
 
 use gwlstm::config::{Manifest, ServeConfig};
 use gwlstm::coordinator::{run_serving_native, run_serving_with_policy, Policy, ServeReport};
-use gwlstm::model::AutoencoderWeights;
+use gwlstm::model::{AutoencoderWeights, MathPolicy};
 use gwlstm::util::bench::Table;
 
 fn policies() -> Vec<(&'static str, Policy)> {
@@ -69,6 +71,10 @@ fn table_for(rows: Vec<(&str, ServeReport)>) -> Table {
 fn main() {
     let smoke = std::env::var("GWLSTM_BENCH_SMOKE").is_ok();
     let windows = if smoke { 120 } else { 600 };
+    let math = match std::env::var("GWLSTM_MATH") {
+        Ok(s) => MathPolicy::parse(&s).expect("GWLSTM_MATH"),
+        Err(_) => MathPolicy::BitExact,
+    };
 
     // ---- native batched backend (always available) ----
     let weights = AutoencoderWeights::synthetic(0x5E4E, "small");
@@ -77,6 +83,7 @@ fn main() {
         calib_windows: if smoke { 32 } else { 64 },
         max_windows: windows,
         inject_prob: 0.25,
+        math_policy: math,
         ..Default::default()
     };
     let mut rows = Vec::new();
@@ -84,7 +91,10 @@ fn main() {
         let r = run_serving_native(&weights, 8, &cfg, policy).expect("native serving run");
         rows.push((name, r));
     }
-    println!("=== e2e serving (native batched engine): policy trade-off ===\n");
+    println!(
+        "=== e2e serving (native batched engine, {} tier): policy trade-off ===\n",
+        math.label()
+    );
     table_for(rows).print();
 
     // ---- PJRT artifact backend ----

@@ -2,18 +2,27 @@
 //!
 //! Covers every layer the perf pass optimizes:
 //!   L3 rust: batched multi-stream engine (streams/sec at B ∈ {1,4,8,32}
-//!            vs the seed's naive batch-1 scalar loop), PJRT inference
+//!            vs the seed's naive batch-1 scalar loop AND vs the frozen
+//!            PR 1 engine), the FastSimd math tier, PJRT inference
 //!            (small + nominal), pure-rust f32 forward, fixed-point
 //!            forward, cycle-simulator throughput, DSE speed, window
 //!            generation (FFT + filters), router dispatch.
 //!
-//! Every measurement is also written to `BENCH_hotpath.json`
-//! (name -> median ns/op, plus derived per-stream throughput keys) so later
-//! PRs have a machine-readable perf baseline to diff against.
+//! Two JSON files are written per run, so the before/after perf claim is
+//! always a same-machine, same-build comparison:
+//!   * `BENCH_hotpath.json` — the current engine (BitExact + FastSimd),
+//!     with derived per-stream throughput, GFLOP/s, and speedup keys;
+//!   * `BENCH_hotpath_pr1_baseline.json` — the PR 1 hot path, re-measured
+//!     from the implementation frozen verbatim in
+//!     `model::batched::reference`.
+//!
+//! The run also self-checks the FastSimd contract: if fast scores diverge
+//! from BitExact beyond `model::simd::FAST_FORWARD_TOL` the process exits
+//! nonzero (ci.sh runs this as a smoke test, so a tolerance regression
+//! fails CI, not just a nightly bench).
 //!
 //! Run: `cargo bench --bench hotpath` (artifact-dependent sections skip
-//! gracefully). Set `GWLSTM_BENCH_SMOKE=1` for a tiny-iteration smoke run
-//! (used by ci.sh so the bench code can't silently rot).
+//! gracefully). Set `GWLSTM_BENCH_SMOKE=1` for a tiny-iteration smoke run.
 
 use std::collections::BTreeMap;
 
@@ -25,8 +34,10 @@ use gwlstm::gw::psd::colored_noise;
 use gwlstm::hls::device::Device;
 use gwlstm::hls::dse::partition_model;
 use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
+use gwlstm::model::batched::reference;
+use gwlstm::model::simd::FAST_FORWARD_TOL;
 use gwlstm::model::{
-    forward_f32, AutoencoderWeights, FixedAutoencoder, PackedAutoencoder,
+    forward_f32, AutoencoderWeights, FixedAutoencoder, MathPolicy, PackedAutoencoder,
 };
 use gwlstm::runtime::{Engine, ModelExecutor};
 use gwlstm::sim::{simulate, SimConfig};
@@ -34,7 +45,7 @@ use gwlstm::util::bench::Bench;
 use gwlstm::util::json::Value;
 use gwlstm::util::rng::Rng;
 
-/// Collected results: bench name -> median ns per op.
+/// Collected results: bench name -> median ns per op (plus derived keys).
 struct Recorder {
     out: BTreeMap<String, Value>,
     smoke: bool,
@@ -61,9 +72,12 @@ impl Recorder {
         self.out.insert(name.to_string(), Value::Num(median_ns));
     }
 
-    fn flush(&self) {
+    fn note(&mut self, name: &str, text: &str) {
+        self.out.insert(name.to_string(), Value::Str(text.to_string()));
+    }
+
+    fn flush(&self, path: &str) {
         let doc = Value::Obj(self.out.clone());
-        let path = "BENCH_hotpath.json";
         match std::fs::write(path, doc.to_string()) {
             Ok(()) => println!("\nwrote {} entries to {path}", self.out.len()),
             Err(e) => eprintln!("could not write {path}: {e}"),
@@ -71,21 +85,66 @@ impl Recorder {
     }
 }
 
+/// FLOPs of one window through the autoencoder: 2 per MAC over the gate
+/// MVMs (`Lx·4Lh + Lh·4Lh` MACs per layer-timestep) plus the final dense.
+/// Gate nonlinearities are excluded (the conventional GEMM-flops count),
+/// so GFLOP/s here measures multiplier saturation, matching how the paper
+/// reasons about DSP utilization.
+fn autoencoder_flops_per_window(w: &AutoencoderWeights, ts: usize) -> f64 {
+    let mut macs = 0u64;
+    for l in &w.layers {
+        macs += (ts * (l.lx * 4 * l.lh + l.lh * 4 * l.lh)) as u64;
+    }
+    let last_lh = w.layers.last().map(|l| l.lh).unwrap_or(0);
+    macs += (ts * last_lh * w.d_out) as u64;
+    2.0 * macs as f64
+}
+
 fn main() {
     let mut rec = Recorder::new();
+    let mut base = Recorder::new();
+    base.note(
+        "_meta",
+        "PR 1 hot path re-measured from model::batched::reference (frozen \
+         verbatim) in the same process/build as BENCH_hotpath.json",
+    );
 
     // ---- batched multi-stream engine (no artifacts needed) ----
-    // The tentpole measurement: per-stream throughput of the packed/tiled
-    // lockstep engine at B ∈ {1, 4, 8, 32} against the seed's batch-1
-    // scalar loop (naive triple-loop weight walk per stream).
+    // The tentpole measurement: per-stream throughput of the register-
+    // blocked lockstep engine at B ∈ {1, 4, 8, 32} against (a) the seed's
+    // batch-1 scalar loop and (b) the frozen PR 1 engine, plus the
+    // FastSimd tier at B=8.
     let ts = 100usize;
     let weights = AutoencoderWeights::synthetic(0xBA7C, "nominal");
     let packed = PackedAutoencoder::from_weights(&weights);
+    let packed_fast = PackedAutoencoder::from_weights_policy(&weights, MathPolicy::FastSimd);
+    let flops = autoencoder_flops_per_window(&weights, ts);
     let mut stream = StrainStream::new(9, ts, DEFAULT_SNR, 0.3);
     let max_b = 32usize;
     let mut pool: Vec<f32> = Vec::with_capacity(max_b * ts);
     for _ in 0..max_b {
         pool.extend_from_slice(&stream.next_window().samples);
+    }
+
+    // Contract self-check BEFORE timing anything: FastSimd must stay
+    // within its stated tolerance of BitExact on real windows.
+    {
+        let exact_scores = packed.score_batch(&pool[..8 * ts], 8);
+        let fast_scores = packed_fast.score_batch(&pool[..8 * ts], 8);
+        let worst = exact_scores
+            .iter()
+            .zip(&fast_scores)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        if worst > FAST_FORWARD_TOL {
+            eprintln!(
+                "FATAL: FastSimd diverged from BitExact by {worst} \
+                 (tolerance {FAST_FORWARD_TOL}) — math-tier contract broken"
+            );
+            std::process::exit(1);
+        }
+        println!("FastSimd vs BitExact score divergence: {worst:.2e} (tol {FAST_FORWARD_TOL:.0e}) — OK");
+        rec.put("batched/fast_vs_bitexact_score_maxdiff", worst as f64);
     }
 
     let seq = Bench::new("batched: scalar batch-1 loop x8 (seed engine)")
@@ -97,35 +156,96 @@ fn main() {
         });
     let seq_per_stream = seq.median_ns / 8.0;
     rec.put("batched/scalar_seq_x8_per_stream", seq_per_stream);
+    base.put("batched/scalar_seq_x8_per_stream", seq_per_stream);
     println!(
         "  -> scalar batch-1 loop: {:.0} ns/stream ({:.0} streams/s)",
         seq_per_stream,
         1e9 / seq_per_stream
     );
 
+    // PR 1 engine (frozen reference), per-stream at the same batch sizes.
+    let mut base_b8_per_stream = f64::NAN;
+    for &b in &[1usize, 4, 8, 32] {
+        let st = Bench::new(&format!("batched: PR1 reference lockstep B={b}"))
+            .iters(rec.iters(30))
+            .run(|| {
+                std::hint::black_box(reference::forward_batch(&packed, &pool[..b * ts], b));
+            });
+        let per_stream = st.median_ns / b as f64;
+        base.put(&format!("batched/packed_b{b}_per_stream"), per_stream);
+        println!(
+            "  -> PR1 B={b}: {:.0} ns/stream ({:.0} streams/s, {:.2} GFLOP/s)",
+            per_stream,
+            1e9 / per_stream,
+            flops / per_stream
+        );
+        if b == 8 {
+            base_b8_per_stream = per_stream;
+        }
+    }
+    base.put(
+        "batched/speedup_b8_vs_scalar_seq",
+        seq_per_stream / base_b8_per_stream,
+    );
+    base.put("batched/packed_b8_gflops", flops / base_b8_per_stream);
+
+    // Current blocked engine, BitExact tier.
     let mut b8_per_stream = f64::NAN;
     for &b in &[1usize, 4, 8, 32] {
-        let st = Bench::new(&format!("batched: packed lockstep B={b}"))
+        let st = Bench::new(&format!("batched: blocked lockstep B={b} (bitexact)"))
             .iters(rec.iters(30))
             .run(|| {
                 std::hint::black_box(packed.forward_batch(&pool[..b * ts], b));
             });
         let per_stream = st.median_ns / b as f64;
         rec.put(&format!("batched/packed_b{b}_per_stream"), per_stream);
+        rec.put(&format!("batched/packed_b{b}_gflops"), flops / per_stream);
         println!(
-            "  -> B={b}: {:.0} ns/stream ({:.0} streams/s)",
+            "  -> B={b}: {:.0} ns/stream ({:.0} streams/s, {:.2} GFLOP/s)",
             per_stream,
-            1e9 / per_stream
+            1e9 / per_stream,
+            flops / per_stream
         );
         if b == 8 {
             b8_per_stream = per_stream;
         }
     }
-    let speedup = seq_per_stream / b8_per_stream;
-    rec.put("batched/speedup_b8_vs_scalar_seq", speedup);
+    rec.put(
+        "batched/speedup_b8_vs_scalar_seq",
+        seq_per_stream / b8_per_stream,
+    );
+
+    // FastSimd tier at the acceptance batch size.
+    let st = Bench::new("batched: blocked lockstep B=8 (fast_simd)")
+        .iters(rec.iters(30))
+        .run(|| {
+            std::hint::black_box(packed_fast.forward_batch(&pool[..8 * ts], 8));
+        });
+    let fast_b8_per_stream = st.median_ns / 8.0;
+    rec.put("batched/fast_b8_per_stream", fast_b8_per_stream);
+    rec.put("batched/fast_b8_gflops", flops / fast_b8_per_stream);
+    rec.put(
+        "batched/fast_vs_bitexact_speedup",
+        b8_per_stream / fast_b8_per_stream,
+    );
+    rec.put(
+        "batched/packed_b8_vs_pr1_baseline",
+        base_b8_per_stream / b8_per_stream,
+    );
+    rec.put(
+        "batched/fast_b8_vs_pr1_baseline",
+        base_b8_per_stream / fast_b8_per_stream,
+    );
     println!(
-        "  -> per-stream speedup @ B=8 vs seed batch-1 loop: {speedup:.2}x \
-         (acceptance floor 1.5x)"
+        "  -> fast_simd B=8: {:.0} ns/stream ({:.2} GFLOP/s)\n\
+         \x20 -> blocked bitexact vs PR1 @ B=8: {:.2}x\n\
+         \x20 -> fast_simd vs bitexact @ B=8:  {:.2}x\n\
+         \x20 -> fast_simd vs PR1 @ B=8:       {:.2}x (acceptance floor 1.5x)",
+        fast_b8_per_stream,
+        flops / fast_b8_per_stream,
+        base_b8_per_stream / b8_per_stream,
+        b8_per_stream / fast_b8_per_stream,
+        base_b8_per_stream / fast_b8_per_stream,
     );
 
     // Executor-level dispatch cost: the serving coordinator's view (one
@@ -291,5 +411,6 @@ fn main() {
         });
     rec.put("model/f32_forward_ts100", st.median_ns);
 
-    rec.flush();
+    rec.flush("BENCH_hotpath.json");
+    base.flush("BENCH_hotpath_pr1_baseline.json");
 }

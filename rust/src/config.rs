@@ -8,6 +8,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::model::MathPolicy;
 use crate::util::json::Value;
 
 /// One AOT model variant from the manifest.
@@ -107,6 +108,11 @@ pub struct ServeConfig {
     /// fixed cadence; pacing reproduces that and keeps queueing delay out
     /// of the latency measurement (see EXPERIMENTS.md §Perf).
     pub pace_us: u64,
+    /// Math tier of the native batched engine: `BitExact` (default) is
+    /// bit-identical to the scalar reference; `FastSimd` trades bit-
+    /// exactness for throughput within the tolerances documented in
+    /// `model::simd`. JSON key `math_policy`: `"bitexact"` | `"fast_simd"`.
+    pub math_policy: MathPolicy,
 }
 
 impl Default for ServeConfig {
@@ -121,6 +127,7 @@ impl Default for ServeConfig {
             workers: 1,
             queue_depth: 64,
             pace_us: 0,
+            math_policy: MathPolicy::BitExact,
         }
     }
 }
@@ -139,6 +146,7 @@ impl ServeConfig {
                 "workers" => self.workers = val.as_usize()?,
                 "queue_depth" => self.queue_depth = val.as_usize()?,
                 "pace_us" => self.pace_us = val.as_usize()? as u64,
+                "math_policy" => self.math_policy = MathPolicy::parse(val.as_str()?)?,
                 other => return Err(anyhow!("unknown serve-config key {other:?}")),
             }
         }
@@ -235,6 +243,17 @@ mod tests {
         assert_eq!(cfg.workers, 2);
         // untouched fields keep defaults
         assert_eq!(cfg.calib_windows, 256);
+    }
+
+    #[test]
+    fn math_policy_override() {
+        let mut cfg = ServeConfig::default();
+        assert_eq!(cfg.math_policy, MathPolicy::BitExact);
+        let v = Value::parse(r#"{"math_policy": "fast_simd"}"#).unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.math_policy, MathPolicy::FastSimd);
+        let bad = Value::parse(r#"{"math_policy": "warp9"}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err());
     }
 
     #[test]

@@ -118,6 +118,16 @@ pub fn run_serving_with_policy(
     cfg: &ServeConfig,
     policy: Policy,
 ) -> Result<ServeReport> {
+    if cfg.math_policy != crate::model::MathPolicy::BitExact {
+        // The compiled artifact fixes its own math; accepting the key and
+        // serving BitExact anyway would silently ignore an explicit request
+        // (the `--math` CLI flag errors the same way).
+        anyhow::bail!(
+            "math_policy {:?} only applies to the native batched backend \
+             (the PJRT artifact datapath has no math tier)",
+            cfg.math_policy
+        );
+    }
     let spec = manifest.variant(&cfg.model)?.clone();
     let dir = manifest.dir.clone();
     let model = cfg.model.clone();
@@ -134,6 +144,8 @@ pub fn run_serving_with_policy(
 /// Artifact-less serving: the native batched engine packed straight from
 /// `weights` (trained or [`AutoencoderWeights::synthetic`]). This is the
 /// path integration tests and benches exercise without `make artifacts`.
+/// The engine's math tier follows `cfg.math_policy` (`BitExact` default;
+/// `FastSimd` opts into the accuracy-bounded fast kernel).
 pub fn run_serving_native(
     weights: &AutoencoderWeights,
     ts: usize,
@@ -142,8 +154,9 @@ pub fn run_serving_native(
 ) -> Result<ServeReport> {
     let w = weights.clone();
     let name = cfg.model.clone();
+    let math = cfg.math_policy;
     let factory = move || -> Result<ModelExecutor> {
-        Ok(ModelExecutor::native_from_weights(&w, &name, ts))
+        Ok(ModelExecutor::native_from_weights_policy(&w, &name, ts, math))
     };
     serve_core(factory, ts, cfg, policy)
 }

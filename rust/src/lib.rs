@@ -14,9 +14,12 @@
 //!   paper's 16-bit fixed-point datapath (LUT sigmoid, piecewise tanh), and
 //!   the **batched multi-stream engine** (`model::batched`): B `(h, c)`
 //!   states advance in lockstep per layer over weights packed once into a
-//!   column-tiled layout (`LstmWeightsPacked`), so one weight traversal per
-//!   timestep feeds every concurrent stream — the software analogue of the
-//!   paper's reuse-factor amortization, bit-identical to B scalar runs.
+//!   column-tiled layout (`LstmWeightsPacked`), executed through a
+//!   register-blocked SIMD microkernel (`model::simd`) — one weight
+//!   traversal per timestep feeds every concurrent stream, the software
+//!   analogue of the paper's reuse-factor amortization. Two math tiers
+//!   (`MathPolicy`): `BitExact` (default, bit-identical to B scalar runs)
+//!   and `FastSimd` (FMA + rational activations, accuracy-bounded).
 //! * [`runtime`] — the request-path executor behind one type: the PJRT CPU
 //!   backend loading AOT artifacts from `python/compile/aot.py` (HLO text;
 //!   python never runs at request time; shape-locked to batch 1), and the

@@ -16,6 +16,7 @@
 //! gwlstm serve [--model m] [--windows n] [--workers k] [--config f.json]
 //!              [--batch N]   micro-batch dispatch through the batched engine
 //!              [--native]    artifact-less native batched backend (synthetic weights)
+//!              [--math bitexact|fast_simd]   native-engine math tier (model::simd)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -317,12 +318,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --native serves through the in-tree batched engine on synthetic
     // weights — runs in any environment, no artifacts or PJRT needed.
     let native = args.flag("native");
+    // --math selects the native engine's tier (bitexact default; fast_simd
+    // is the accuracy-bounded FMA + rational-activation kernel).
+    let math_flag = args.get("math").map(str::to_string);
+    if let Some(m) = &math_flag {
+        cfg.math_policy = gwlstm::model::MathPolicy::parse(m)?;
+    }
     let arch = if cfg.model.contains("nominal") { "nominal" } else { "small" };
     let ts_flag = args.get("ts").map(str::to_string);
     let ts = args.usize_or("ts", if arch == "nominal" { 100 } else { 8 })?;
     args.finish()?;
     if ts_flag.is_some() && !native {
         bail!("--ts only applies with --native (PJRT artifacts fix ts in the manifest)");
+    }
+    if math_flag.is_some() && !native {
+        bail!("--math only applies with --native (the PJRT artifact datapath has no math tier)");
     }
     let policy = if max_batch > 1 {
         Policy::MicroBatch {

@@ -27,17 +27,28 @@ impl SigmoidLut {
         SigmoidLut { table, range }
     }
 
+    /// Nearest-entry lookup. The table holds `n` cells of width `2R/n`
+    /// over `[-R, R)`, each entry precomputed at its cell *midpoint*, so
+    /// truncating the scaled offset selects the entry nearest to `x`
+    /// (exactly what a BRAM with a truncated fixed-point address does).
+    ///
+    /// Boundary: for `x` just below `R`, f32 rounding of `(x + R) * n /
+    /// (2R)` can land on `n` exactly even though `x < R` — the explicit
+    /// clamp to the last cell below makes that case defined nearest-entry
+    /// behaviour rather than an accidental save (`tests`:
+    /// `lut_upper_boundary_hits_last_entry`).
     #[inline]
     pub fn eval(&self, x: f32) -> f32 {
+        let n = self.table.len();
         if x <= -self.range {
             return self.table[0];
         }
         if x >= self.range {
-            return *self.table.last().unwrap();
+            return self.table[n - 1];
         }
-        let n = self.table.len() as f32;
-        let idx = ((x + self.range) / (2.0 * self.range) * n) as usize;
-        self.table[idx.min(self.table.len() - 1)]
+        let cell = (x + self.range) / (2.0 * self.range) * n as f32;
+        let idx = (cell as usize).min(n - 1);
+        self.table[idx]
     }
 }
 
@@ -129,6 +140,42 @@ mod tests {
             assert!(y >= last - 1e-6, "non-monotone at {x}");
             last = y;
             x += 0.01;
+        }
+    }
+
+    #[test]
+    fn lut_upper_boundary_hits_last_entry() {
+        // x just below +range must resolve to the last table entry (the
+        // nearest one), not index off the end: (x + R)/(2R)*n can round to
+        // exactly n in f32 for x < R. Sweep several table sizes including
+        // non-powers-of-two.
+        for entries in [7usize, 1000, 1024, 4096] {
+            let lut = SigmoidLut::new(entries, 8.0);
+            let last = lut.eval(8.0); // saturation branch: last entry
+            // largest f32 strictly below 8.0
+            let just_below = f32::from_bits(8.0f32.to_bits() - 1);
+            assert!(just_below < 8.0);
+            assert_eq!(lut.eval(just_below), last, "entries={entries}");
+            // a value deep in the final cell also maps to the last entry
+            let cell_w = 16.0 / entries as f32;
+            assert_eq!(lut.eval(8.0 - 0.25 * cell_w), last, "entries={entries}");
+            // lower boundary saturates to the first entry symmetrically
+            assert_eq!(lut.eval(-8.0), lut.eval(-100.0), "entries={entries}");
+        }
+    }
+
+    #[test]
+    fn lut_nearest_entry_at_cell_midpoints() {
+        // Entry i is precomputed at the midpoint of cell i; evaluating at
+        // that midpoint must return exactly that entry's value.
+        let entries = 64usize;
+        let range = 8.0f32;
+        let lut = SigmoidLut::new(entries, range);
+        for i in [0usize, 1, 31, 32, 62, 63] {
+            // the exact midpoint expression the table was built with
+            let mid = -range + 2.0 * range * (i as f32 + 0.5) / entries as f32;
+            let want = 1.0 / (1.0 + (-mid).exp());
+            assert_eq!(lut.eval(mid), want, "cell {i}");
         }
     }
 

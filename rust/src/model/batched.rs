@@ -1,6 +1,6 @@
 //! Batched multi-stream LSTM engine: B independent `(h, c)` states advance
 //! in lockstep through each layer, sharing one packed-weight traversal per
-//! timestep.
+//! timestep — now around a register-blocked SIMD microkernel.
 //!
 //! This is the software analogue of the paper's reuse-factor tuning: where
 //! the FPGA datapath amortizes weight fetches across MACs via per-layer
@@ -9,13 +9,40 @@
 //! batching is the related-work trade-off (Que et al. 2021, and hls4ml's
 //! batch-parallel RNN strategy, Khoda et al. arXiv:2207.00559) that this
 //! module makes measurable — see `benches/hotpath.rs` for streams/sec at
-//! B ∈ {1, 4, 8, 32}.
+//! B ∈ {1, 4, 8, 32} and the before/after JSONs.
 //!
-//! Numerics: every per-element accumulation runs in the same order as the
-//! scalar reference in [`super::lstm`] (k ascending, `z = xw + b` before the
-//! recurrent accumulate), so outputs are bit-identical to B independent
-//! [`super::lstm::lstm_layer`] runs — the parity suite in
-//! `tests/batched_parity.rs` pins this.
+//! # The microkernel
+//!
+//! [`PackedMatrix::gemm_acc`] walks each column panel with an
+//! `RB×TILE = 4×16` block of accumulators ([`simd::kloop16_exact`] /
+//! [`simd::kloop16_fma`]): the block is loaded from `z` once, lives in
+//! registers across the *entire* k-reduction (the panel row is broadcast-
+//! multiplied into all four stream rows per k-step), and is stored back
+//! once — one `z` round-trip per block instead of one per k-step, which is
+//! what the PR 1 row-wise loop paid (kept verbatim in [`reference`] as the
+//! recorded baseline). Remainder rows (`rows % 4`) and ragged tail panels
+//! (`4·Lh % 16`) fall back to narrower, order-identical loops.
+//!
+//! # Numerics: the [`MathPolicy`] contract
+//!
+//! * `BitExact` (default): blocking changes *where* an accumulator lives,
+//!   not the order it accumulates in — every per-element reduction still
+//!   runs in ascending-k scalar order with plain mul+add roundings, and
+//!   gate nonlinearities are the exact libm `sigmoid`/`tanh` (fused into
+//!   one pass via [`simd::lstm_gates_exact`], the same helper the scalar
+//!   reference uses). Outputs are bit-identical to B independent
+//!   [`super::lstm::lstm_layer`] runs — `tests/batched_parity.rs` pins
+//!   this for every tile width and row-remainder configuration.
+//! * `FastSimd`: the same blocked loops with FMA contraction (where the
+//!   CPU has it) and the branch-free rational activations — accuracy-
+//!   bounded ([`simd::FAST_LAYER_TOL`] / [`simd::FAST_FORWARD_TOL`] abs vs
+//!   BitExact, pinned by `tests/fastmath_tolerance.rs`), not bit-exact.
+//!
+//! # Allocation discipline
+//!
+//! The hot path performs **no per-timestep heap allocation**: all gate and
+//! activation scratch lives in a [`BatchedScratch`] owned by the
+//! [`PackedAutoencoder`] and reused across timesteps, layers, and calls.
 //!
 //! Layouts:
 //! * sequence tensors are **batch-major**: `(B, TS, width)` row-major, i.e.
@@ -25,12 +52,18 @@
 //!   contiguous memory and each weight panel stays cache-hot across all B
 //!   streams of a tile.
 
-use super::lstm::sigmoid;
+use std::sync::Mutex;
+
+use super::simd;
+use super::simd::MathPolicy;
 use super::weights::{AutoencoderWeights, LstmWeights};
 
 /// Output-column tile width of the packed GEMM panels. 16 f32 lanes = one
-/// 64-byte cache line, and wide enough for the autovectorizer.
-pub const GEMM_TILE: usize = 16;
+/// 64-byte cache line = the microkernel block width ([`simd::BLOCK_W`]).
+pub const GEMM_TILE: usize = simd::BLOCK_W;
+
+/// Stream rows per register block ([`simd::BLOCK_RB`]).
+pub const GEMM_RB: usize = simd::BLOCK_RB;
 
 /// One column panel of a packed matrix: `width` output columns starting at
 /// `j0`, stored `(k, width)` row-major at `off` in the data pool.
@@ -79,27 +112,98 @@ impl PackedMatrix {
         PackedMatrix { k, n, data, panels }
     }
 
-    /// `z += x @ W` for `rows` independent rows: `x` is `(rows, k)`, `z` is
-    /// `(rows, n)`, both row-major. Accumulation per output element runs in
-    /// ascending-k order (bit-identical to the naive triple loop). Each
-    /// weight panel (`k * tile` f32, a few KB) is streamed once and reused
-    /// by every row — the weight-traversal amortization the batched engine
-    /// exists for.
+    /// `z += x @ W` for `rows` independent rows (`x` is `(rows, k)`, `z` is
+    /// `(rows, n)`, both row-major) through the register-blocked microkernel
+    /// with exact (bit-identical to the naive triple loop) accumulation.
     pub fn gemm_acc(&self, x: &[f32], rows: usize, z: &mut [f32]) {
+        self.gemm_acc_policy(x, rows, z, false);
+    }
+
+    /// Blocked GEMM with an FMA opt-in: `allow_fma = true` (FastSimd tier)
+    /// lets full-width blocks contract mul+add into `vfmadd` when the CPU
+    /// supports it — same per-element accumulation *order*, fused rounding.
+    /// With `allow_fma = false` every path is bit-identical to
+    /// [`PackedMatrix::gemm_acc_unblocked`].
+    pub fn gemm_acc_policy(&self, x: &[f32], rows: usize, z: &mut [f32], allow_fma: bool) {
+        assert_eq!(x.len(), rows * self.k, "x shape mismatch");
+        assert_eq!(z.len(), rows * self.n, "z shape mismatch");
+        let use_fma = allow_fma && simd::fma_available();
+        for p in &self.panels {
+            let panel = &self.data[p.off..p.off + self.k * p.width];
+            if p.width == GEMM_TILE {
+                let mut r0 = 0;
+                while r0 < rows {
+                    let rb_n = GEMM_RB.min(rows - r0);
+                    self.block16(panel, x, z, r0, rb_n, p.j0, use_fma);
+                    r0 += rb_n;
+                }
+            } else {
+                // Ragged panel (n % tile, or an explicit non-16 tile):
+                // row-wise order-identical fallback, never the hot shape.
+                self.panel_rowwise(panel, p.width, x, rows, z, p.j0);
+            }
+        }
+    }
+
+    /// One `rb_n×16` register block: load the z block once, reduce the
+    /// whole k-dimension in registers, store once.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn block16(
+        &self,
+        panel: &[f32],
+        x: &[f32],
+        z: &mut [f32],
+        r0: usize,
+        rb_n: usize,
+        j0: usize,
+        use_fma: bool,
+    ) {
+        let mut acc = [[0.0f32; GEMM_TILE]; GEMM_RB];
+        for (rb, a) in acc.iter_mut().enumerate().take(rb_n) {
+            let zo = (r0 + rb) * self.n + j0;
+            a.copy_from_slice(&z[zo..zo + GEMM_TILE]);
+        }
+        let x0 = &x[r0 * self.k..];
+        simd::kloop16(panel, self.k, x0, self.k, &mut acc, rb_n, use_fma);
+        for (rb, a) in acc.iter().enumerate().take(rb_n) {
+            let zo = (r0 + rb) * self.n + j0;
+            z[zo..zo + GEMM_TILE].copy_from_slice(a);
+        }
+    }
+
+    /// Row-wise panel walk for ragged widths (exact scalar-order math).
+    fn panel_rowwise(
+        &self,
+        panel: &[f32],
+        width: usize,
+        x: &[f32],
+        rows: usize,
+        z: &mut [f32],
+        j0: usize,
+    ) {
+        for r in 0..rows {
+            let xrow = &x[r * self.k..(r + 1) * self.k];
+            let zrow = &mut z[r * self.n + j0..r * self.n + j0 + width];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                let wrow = &panel[kk * width..(kk + 1) * width];
+                for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                    *zv += xv * wv;
+                }
+            }
+        }
+    }
+
+    /// The PR 1 kernel, kept verbatim: panel-major, one z-row load/store
+    /// per k-step. Bit-identical to [`PackedMatrix::gemm_acc`] (same
+    /// per-element order) — the order oracle for the block-sweep tests and
+    /// the measured half of the before/after bench baseline.
+    pub fn gemm_acc_unblocked(&self, x: &[f32], rows: usize, z: &mut [f32]) {
         assert_eq!(x.len(), rows * self.k, "x shape mismatch");
         assert_eq!(z.len(), rows * self.n, "z shape mismatch");
         for p in &self.panels {
             let panel = &self.data[p.off..p.off + self.k * p.width];
-            for r in 0..rows {
-                let xrow = &x[r * self.k..(r + 1) * self.k];
-                let zrow = &mut z[r * self.n + p.j0..r * self.n + p.j0 + p.width];
-                for (kk, &xv) in xrow.iter().enumerate() {
-                    let wrow = &panel[kk * p.width..(kk + 1) * p.width];
-                    for (zv, &wv) in zrow.iter_mut().zip(wrow) {
-                        *zv += xv * wv;
-                    }
-                }
-            }
+            self.panel_rowwise(panel, p.width, x, rows, z, p.j0);
         }
     }
 }
@@ -154,142 +258,256 @@ impl BatchedState {
     }
 }
 
+/// Per-layer working buffers for one lockstep run. Part of
+/// [`BatchedScratch`]; grown on demand, never shrunk, so steady-state
+/// serving does zero hot-path allocation.
+#[derive(Debug, Clone, Default)]
+pub struct LayerScratch {
+    /// `(B*TS, 4Lh)` hoisted input-MVM result.
+    xw: Vec<f32>,
+    /// `(B, 4Lh)` gate buffer for the current timestep.
+    z: Vec<f32>,
+    /// `(B, 4Lh)` gather of this step's xw slice.
+    xw_t: Vec<f32>,
+    /// `(B, Lh)` lockstep hidden state.
+    h: Vec<f32>,
+    /// `(B, Lh)` lockstep cell state.
+    c: Vec<f32>,
+}
+
+/// Reusable scratch for a whole autoencoder forward pass: the per-layer
+/// buffers plus ping-pong activation sequences. Owned by
+/// [`PackedAutoencoder`] (behind a once-per-call lock) and reused across
+/// timesteps, layers, and calls — the engine's answer to the PR 1 hot path
+/// allocating gate buffers every layer call.
+#[derive(Debug, Default)]
+pub struct BatchedScratch {
+    layer: LayerScratch,
+    /// Current layer input, `(B, TS, width)` batch-major.
+    seq: Vec<f32>,
+    /// Next layer output (swapped with `seq` after each layer).
+    seq_next: Vec<f32>,
+}
+
+impl BatchedScratch {
+    pub fn new() -> BatchedScratch {
+        BatchedScratch::default()
+    }
+}
+
+/// Resize + zero-fill of a scratch vector — for buffers whose semantics
+/// need zeros (GEMM accumulation targets, initial `(h, c)` state).
+#[inline]
+fn reset(buf: &mut Vec<f32>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Resize to exactly `len` WITHOUT touching retained elements — for
+/// scratch buffers that are fully overwritten before their first read
+/// (gate buffer, per-step gather, layer output), where a zero-fill would
+/// be a wasted memory pass per layer call.
+#[inline]
+fn resize_only(buf: &mut Vec<f32>, len: usize) {
+    buf.resize(len, 0.0);
+}
+
 /// One LSTM layer ready to advance B streams per weight traversal.
 #[derive(Debug, Clone)]
 pub struct BatchedLstm {
     pub w: LstmWeightsPacked,
+    /// Math tier this layer evaluates under (see module docs).
+    pub policy: MathPolicy,
 }
 
 impl BatchedLstm {
     pub fn from_weights(w: &LstmWeights) -> BatchedLstm {
+        BatchedLstm::from_weights_policy(w, MathPolicy::BitExact)
+    }
+
+    pub fn from_weights_policy(w: &LstmWeights, policy: MathPolicy) -> BatchedLstm {
         BatchedLstm {
             w: LstmWeightsPacked::from_weights(w),
+            policy,
         }
     }
 
-    /// One timestep for all B streams. `xw_t` is the `(B, 4Lh)` input-MVM
-    /// slice for this step; `z` is a `(B, 4Lh)` scratch buffer.
-    fn step(&self, xw_t: &[f32], st: &mut BatchedState, z: &mut [f32]) {
-        let lh = self.w.lh;
-        let l4 = 4 * lh;
-        let batch = st.batch;
-        debug_assert_eq!(xw_t.len(), batch * l4);
-        debug_assert_eq!(z.len(), batch * l4);
-        // z := xw + bias first, then the recurrent accumulate — the same
-        // ordering as the scalar `step_from_xw` (bit-exactness contract).
-        for b in 0..batch {
-            let src = &xw_t[b * l4..(b + 1) * l4];
-            let dst = &mut z[b * l4..(b + 1) * l4];
-            for ((d, &s), &bv) in dst.iter_mut().zip(src).zip(&self.w.bias) {
-                *d = s + bv;
-            }
-        }
-        // z += H @ Wh: one packed-weight traversal feeds every stream.
-        self.w.wh.gemm_acc(&st.h, batch, z);
-        // Gate nonlinearities + state update over flat per-gate slices.
-        for b in 0..batch {
-            let zrow = &z[b * l4..(b + 1) * l4];
-            let (zi, rest) = zrow.split_at(lh);
-            let (zf, rest) = rest.split_at(lh);
-            let (zg, zo) = rest.split_at(lh);
-            let c_row = &mut st.c[b * lh..(b + 1) * lh];
-            let h_row = &mut st.h[b * lh..(b + 1) * lh];
-            for (((((iz, fz), gz), oz), c), h) in zi
-                .iter()
-                .zip(zf)
-                .zip(zg)
-                .zip(zo)
-                .zip(c_row.iter_mut())
-                .zip(h_row.iter_mut())
-            {
-                let c_new = sigmoid(*fz) * *c + sigmoid(*iz) * gz.tanh();
-                *c = c_new;
-                *h = sigmoid(*oz) * c_new.tanh();
-            }
-        }
-    }
-
-    /// Full layer over B sequences in lockstep. `xs` is `(B, TS, Lx)`
-    /// batch-major; returns all hidden vectors `(B, TS, Lh)` batch-major —
-    /// stream b's output equals `lstm_layer` run alone on stream b.
+    /// Full layer over B sequences in lockstep, allocating its own scratch.
+    /// `xs` is `(B, TS, Lx)` batch-major; returns all hidden vectors
+    /// `(B, TS, Lh)` batch-major — under `BitExact`, stream b's output
+    /// equals `lstm_layer` run alone on stream b.
     pub fn run(&self, xs: &[f32], batch: usize, ts: usize) -> Vec<f32> {
+        let mut scratch = LayerScratch::default();
+        let mut out = Vec::new();
+        self.run_into(xs, batch, ts, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`BatchedLstm::run`] with caller-owned scratch and output buffers —
+    /// the zero-allocation serving path.
+    pub fn run_into(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        ts: usize,
+        scratch: &mut LayerScratch,
+        out: &mut Vec<f32>,
+    ) {
         let (lx, lh) = (self.w.lx, self.w.lh);
         let l4 = 4 * lh;
         assert!(batch > 0, "batch must be positive");
         assert_eq!(xs.len(), batch * ts * lx, "input shape mismatch");
+        let allow_fma = self.policy == MathPolicy::FastSimd;
+        let LayerScratch { xw, z, xw_t, h, c } = scratch;
         // Sub-layer 1 (paper's mvm_x, hoisted): one GEMM over all (b, t)
         // rows at once — batch-major input is already (B*TS, Lx) row-major.
-        let mut xw = vec![0.0f32; batch * ts * l4];
-        self.w.wx.gemm_acc(xs, batch * ts, &mut xw);
-        // Sub-layer 2: the recurrent loop, B states in lockstep.
-        let mut st = BatchedState::zeros(batch, lh);
-        let mut z = vec![0.0f32; batch * l4];
-        let mut xw_t = vec![0.0f32; batch * l4];
-        let mut out = vec![0.0f32; batch * ts * lh];
+        reset(xw, batch * ts * l4);
+        self.w.wx.gemm_acc_policy(xs, batch * ts, xw, allow_fma);
+        // Sub-layer 2: the recurrent loop, B states in lockstep. The gate
+        // buffer, gather, and output are fully overwritten each timestep
+        // before being read, so they only need the length fixed; h/c are
+        // the zero initial state and xw (above) is accumulated into.
+        resize_only(z, batch * l4);
+        resize_only(xw_t, batch * l4);
+        reset(h, batch * lh);
+        reset(c, batch * lh);
+        resize_only(out, batch * ts * lh);
         for t in 0..ts {
             // gather this step's (B, 4Lh) slice from the batch-major xw
             for b in 0..batch {
                 let row = (b * ts + t) * l4;
                 xw_t[b * l4..(b + 1) * l4].copy_from_slice(&xw[row..row + l4]);
             }
-            self.step(&xw_t, &mut st, &mut z);
+            // z := xw + bias first, then the recurrent accumulate — the
+            // same ordering as the scalar `step_from_xw` (bit-exactness
+            // contract under BitExact).
+            for b in 0..batch {
+                let src = &xw_t[b * l4..(b + 1) * l4];
+                let dst = &mut z[b * l4..(b + 1) * l4];
+                for ((d, &s), &bv) in dst.iter_mut().zip(src).zip(&self.w.bias) {
+                    *d = s + bv;
+                }
+            }
+            // z += H @ Wh: one packed-weight traversal feeds every stream.
+            self.w.wh.gemm_acc_policy(h, batch, z, allow_fma);
+            // Fused gate evaluation + cell/hidden update: one pass over
+            // each stream's 4Lh gate row (policy-dispatched activations).
+            for b in 0..batch {
+                let zrow = &z[b * l4..(b + 1) * l4];
+                let c_row = &mut c[b * lh..(b + 1) * lh];
+                let h_row = &mut h[b * lh..(b + 1) * lh];
+                simd::lstm_gates(self.policy, zrow, lh, c_row, h_row);
+            }
             for b in 0..batch {
                 out[(b * ts + t) * lh..(b * ts + t + 1) * lh]
-                    .copy_from_slice(&st.h[b * lh..(b + 1) * lh]);
+                    .copy_from_slice(&h[b * lh..(b + 1) * lh]);
             }
         }
-        out
     }
 }
 
 /// The full autoencoder with every layer packed for batched execution.
 /// This is the engine the serving runtime dispatches micro-batches through.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct PackedAutoencoder {
     layers: Vec<BatchedLstm>,
     split: usize,
     out_w: Vec<f32>,
     out_b: Vec<f32>,
     d_out: usize,
+    policy: MathPolicy,
+    /// Reused across calls; locked once per forward pass (uncontended in
+    /// the per-worker serving topology).
+    scratch: Mutex<BatchedScratch>,
+}
+
+impl Clone for PackedAutoencoder {
+    fn clone(&self) -> PackedAutoencoder {
+        PackedAutoencoder {
+            layers: self.layers.clone(),
+            split: self.split,
+            out_w: self.out_w.clone(),
+            out_b: self.out_b.clone(),
+            d_out: self.d_out,
+            policy: self.policy,
+            scratch: Mutex::new(BatchedScratch::new()),
+        }
+    }
 }
 
 impl PackedAutoencoder {
     pub fn from_weights(w: &AutoencoderWeights) -> PackedAutoencoder {
+        PackedAutoencoder::from_weights_policy(w, MathPolicy::BitExact)
+    }
+
+    pub fn from_weights_policy(w: &AutoencoderWeights, policy: MathPolicy) -> PackedAutoencoder {
         PackedAutoencoder {
-            layers: w.layers.iter().map(BatchedLstm::from_weights).collect(),
+            layers: w
+                .layers
+                .iter()
+                .map(|l| BatchedLstm::from_weights_policy(l, policy))
+                .collect(),
             split: w.layers.len() / 2,
             out_w: w.out_w.clone(),
             out_b: w.out_b.clone(),
             d_out: w.d_out,
+            policy,
+            scratch: Mutex::new(BatchedScratch::new()),
         }
     }
 
+    /// Math tier this engine evaluates under.
+    pub fn policy(&self) -> MathPolicy {
+        self.policy
+    }
+
     /// Reconstruct B windows in lockstep. `windows` is `(B, TS)` batch-major
-    /// (d_in = 1); returns `(B, TS * d_out)` reconstructions, stream b equal
-    /// to `forward_f32` run alone on stream b.
+    /// (d_in = 1); returns `(B, TS * d_out)` reconstructions — under
+    /// `BitExact`, stream b equal to `forward_f32` run alone on stream b.
     pub fn forward_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
+        let mut guard = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        self.forward_batch_with(windows, batch, &mut guard)
+    }
+
+    /// [`PackedAutoencoder::forward_batch`] against caller-owned scratch
+    /// (no lock; benches and single-threaded drivers use this directly).
+    pub fn forward_batch_with(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        scratch: &mut BatchedScratch,
+    ) -> Vec<f32> {
         assert!(batch > 0, "batch must be positive");
         assert_eq!(windows.len() % batch, 0, "ragged batch");
         let ts = windows.len() / batch;
-        let mut seq: Vec<f32> = windows.to_vec();
+        let BatchedScratch {
+            layer,
+            seq,
+            seq_next,
+        } = scratch;
+        seq.clear();
+        seq.extend_from_slice(windows);
         let mut width = 1usize;
         for l in &self.layers[..self.split] {
             assert_eq!(width, l.w.lx, "encoder layer input width");
-            seq = l.run(&seq, batch, ts);
+            l.run_into(seq, batch, ts, layer, seq_next);
+            std::mem::swap(seq, seq_next);
             width = l.w.lh;
         }
-        // Bottleneck per stream: keep the last hidden vector, repeat over ts.
-        let mut dec = vec![0.0f32; batch * ts * width];
+        // Bottleneck per stream: keep the last hidden vector, repeat over
+        // ts (every (b, t) slice is written, so no zero-fill needed).
+        resize_only(seq_next, batch * ts * width);
         for b in 0..batch {
             let latent = &seq[(b * ts + ts - 1) * width..(b * ts + ts) * width];
             for t in 0..ts {
-                dec[(b * ts + t) * width..(b * ts + t + 1) * width].copy_from_slice(latent);
+                seq_next[(b * ts + t) * width..(b * ts + t + 1) * width].copy_from_slice(latent);
             }
         }
-        seq = dec;
+        std::mem::swap(seq, seq_next);
         for l in &self.layers[self.split..] {
             assert_eq!(width, l.w.lx, "decoder layer input width");
-            seq = l.run(&seq, batch, ts);
+            l.run_into(seq, batch, ts, layer, seq_next);
+            std::mem::swap(seq, seq_next);
             width = l.w.lh;
         }
         // TimeDistributed dense, same accumulation order as the scalar path.
@@ -339,6 +557,118 @@ pub fn mse_per_stream(windows: &[f32], rec: &[f32], batch: usize) -> Vec<f32> {
 /// serving paths should hold a [`PackedAutoencoder`] and amortize the pack.
 pub fn forward_f32_batch(w: &AutoencoderWeights, windows: &[f32], batch: usize) -> Vec<f32> {
     PackedAutoencoder::from_weights(w).forward_batch(windows, batch)
+}
+
+/// The PR 1 hot path, frozen verbatim for before/after measurement.
+///
+/// `benches/hotpath.rs` runs this implementation and the current one in the
+/// same process and writes the former to `BENCH_hotpath_pr1_baseline.json`,
+/// so the recorded speedup is always a same-machine, same-build comparison.
+/// Numerically it is bit-identical to the current `BitExact` tier (same
+/// per-element order), which the parity sweep asserts.
+pub mod reference {
+    use super::*;
+
+    /// PR 1 layer loop: unblocked row-wise GEMM (`gemm_acc_unblocked`),
+    /// per-call gate/scratch allocation, unfused per-element gate math.
+    pub fn run_layer(l: &BatchedLstm, xs: &[f32], batch: usize, ts: usize) -> Vec<f32> {
+        use super::super::lstm::sigmoid;
+        let (lx, lh) = (l.w.lx, l.w.lh);
+        let l4 = 4 * lh;
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(xs.len(), batch * ts * lx, "input shape mismatch");
+        let mut xw = vec![0.0f32; batch * ts * l4];
+        l.w.wx.gemm_acc_unblocked(xs, batch * ts, &mut xw);
+        let mut st = BatchedState::zeros(batch, lh);
+        let mut z = vec![0.0f32; batch * l4];
+        let mut xw_t = vec![0.0f32; batch * l4];
+        let mut out = vec![0.0f32; batch * ts * lh];
+        for t in 0..ts {
+            for b in 0..batch {
+                let row = (b * ts + t) * l4;
+                xw_t[b * l4..(b + 1) * l4].copy_from_slice(&xw[row..row + l4]);
+            }
+            for b in 0..batch {
+                let src = &xw_t[b * l4..(b + 1) * l4];
+                let dst = &mut z[b * l4..(b + 1) * l4];
+                for ((d, &s), &bv) in dst.iter_mut().zip(src).zip(&l.w.bias) {
+                    *d = s + bv;
+                }
+            }
+            l.w.wh.gemm_acc_unblocked(&st.h, batch, &mut z);
+            for b in 0..batch {
+                let zrow = &z[b * l4..(b + 1) * l4];
+                let (zi, rest) = zrow.split_at(lh);
+                let (zf, rest) = rest.split_at(lh);
+                let (zg, zo) = rest.split_at(lh);
+                let c_row = &mut st.c[b * lh..(b + 1) * lh];
+                let h_row = &mut st.h[b * lh..(b + 1) * lh];
+                for (((((iz, fz), gz), oz), c), h) in zi
+                    .iter()
+                    .zip(zf)
+                    .zip(zg)
+                    .zip(zo)
+                    .zip(c_row.iter_mut())
+                    .zip(h_row.iter_mut())
+                {
+                    let c_new = sigmoid(*fz) * *c + sigmoid(*iz) * gz.tanh();
+                    *c = c_new;
+                    *h = sigmoid(*oz) * c_new.tanh();
+                }
+            }
+            for b in 0..batch {
+                out[(b * ts + t) * lh..(b * ts + t + 1) * lh]
+                    .copy_from_slice(&st.h[b * lh..(b + 1) * lh]);
+            }
+        }
+        out
+    }
+
+    /// PR 1 autoencoder forward: the old per-layer `Vec` churn around
+    /// [`run_layer`]. Consumes the same packed weights as the current
+    /// engine so only the kernel/allocation strategy differs.
+    pub fn forward_batch(p: &PackedAutoencoder, windows: &[f32], batch: usize) -> Vec<f32> {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(windows.len() % batch, 0, "ragged batch");
+        let ts = windows.len() / batch;
+        let mut seq: Vec<f32> = windows.to_vec();
+        let mut width = 1usize;
+        for l in &p.layers[..p.split] {
+            assert_eq!(width, l.w.lx, "encoder layer input width");
+            seq = run_layer(l, &seq, batch, ts);
+            width = l.w.lh;
+        }
+        let mut dec = vec![0.0f32; batch * ts * width];
+        for b in 0..batch {
+            let latent = &seq[(b * ts + ts - 1) * width..(b * ts + ts) * width];
+            for t in 0..ts {
+                dec[(b * ts + t) * width..(b * ts + t + 1) * width].copy_from_slice(latent);
+            }
+        }
+        seq = dec;
+        for l in &p.layers[p.split..] {
+            assert_eq!(width, l.w.lx, "decoder layer input width");
+            seq = run_layer(l, &seq, batch, ts);
+            width = l.w.lh;
+        }
+        let mut out = vec![0.0f32; batch * ts * p.d_out];
+        for bt in 0..batch * ts {
+            for o in 0..p.d_out {
+                let mut acc = p.out_b[o];
+                for j in 0..width {
+                    acc += seq[bt * width + j] * p.out_w[j * p.d_out + o];
+                }
+                out[bt * p.d_out + o] = acc;
+            }
+        }
+        out
+    }
+
+    /// PR 1 scoring (baseline half of the bench comparison).
+    pub fn score_batch(p: &PackedAutoencoder, windows: &[f32], batch: usize) -> Vec<f32> {
+        let rec = forward_batch(p, windows, batch);
+        mse_per_stream(windows, &rec, batch)
+    }
 }
 
 #[cfg(test)]
@@ -408,6 +738,24 @@ mod tests {
     }
 
     #[test]
+    fn blocked_kernel_is_bitexact_with_unblocked_all_row_remainders() {
+        // rows sweeps through every remainder class of the RB=4 blocking,
+        // including multi-block + remainder shapes.
+        let mut rng = Rng::new(17);
+        let (k, n) = (9, 48); // three full 16-wide panels
+        let src: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+        let m = PackedMatrix::pack(&src, k, n);
+        for rows in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 12] {
+            let x: Vec<f32> = (0..rows * k).map(|_| rng.gaussian() as f32).collect();
+            let mut z_blocked = vec![0.0f32; rows * n];
+            let mut z_rowwise = vec![0.0f32; rows * n];
+            m.gemm_acc(&x, rows, &mut z_blocked);
+            m.gemm_acc_unblocked(&x, rows, &mut z_rowwise);
+            assert_eq!(z_blocked, z_rowwise, "rows={rows}");
+        }
+    }
+
+    #[test]
     fn batch_one_is_bitexact_with_scalar_layer() {
         let w = random_layer(1, 3, 9);
         let mut rng = Rng::new(2);
@@ -457,5 +805,63 @@ mod tests {
             let one = crate::model::autoencoder::score_f32(&w, &windows[b * ts..(b + 1) * ts]);
             assert_eq!(scores[b], one, "stream {b}");
         }
+    }
+
+    #[test]
+    fn scratch_reuse_across_varying_batch_sizes() {
+        // The engine-owned scratch must produce identical results when a
+        // big batch is followed by a small one and vice versa (grow-only
+        // buffers + explicit reset discipline).
+        let w = AutoencoderWeights::synthetic(19, "small");
+        let reused = PackedAutoencoder::from_weights(&w);
+        let mut rng = Rng::new(20);
+        let ts = 8;
+        let windows: Vec<f32> = (0..8 * ts).map(|_| rng.gaussian() as f32).collect();
+        for &batch in &[8usize, 1, 3, 8, 2] {
+            let fresh = PackedAutoencoder::from_weights(&w);
+            let got = reused.forward_batch(&windows[..batch * ts], batch);
+            let want = fresh.forward_batch(&windows[..batch * ts], batch);
+            assert_eq!(got, want, "batch {batch} after reuse");
+        }
+    }
+
+    #[test]
+    fn pr1_reference_matches_current_bitexact_engine() {
+        // The frozen baseline and the blocked engine are numerically the
+        // same datapath; only speed may differ.
+        let w = AutoencoderWeights::synthetic(23, "nominal");
+        let packed = PackedAutoencoder::from_weights(&w);
+        let mut rng = Rng::new(24);
+        let (batch, ts) = (5, 16);
+        let windows: Vec<f32> = (0..batch * ts).map(|_| rng.gaussian() as f32).collect();
+        let old = reference::forward_batch(&packed, &windows, batch);
+        let new = packed.forward_batch(&windows, batch);
+        assert_eq!(old, new);
+        assert_eq!(
+            reference::score_batch(&packed, &windows, batch),
+            packed.score_batch(&windows, batch)
+        );
+    }
+
+    #[test]
+    fn fast_policy_stays_within_stated_tolerance() {
+        let w = AutoencoderWeights::synthetic(29, "small");
+        let exact = PackedAutoencoder::from_weights(&w);
+        let fast = PackedAutoencoder::from_weights_policy(&w, MathPolicy::FastSimd);
+        assert_eq!(fast.policy(), MathPolicy::FastSimd);
+        let mut rng = Rng::new(30);
+        let (batch, ts) = (3, 8);
+        let windows: Vec<f32> = (0..batch * ts).map(|_| rng.gaussian() as f32).collect();
+        let a = exact.forward_batch(&windows, batch);
+        let b = fast.forward_batch(&windows, batch);
+        let worst = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            worst <= simd::FAST_FORWARD_TOL,
+            "fast vs exact max err {worst}"
+        );
     }
 }

@@ -83,13 +83,23 @@ impl FixedLstm {
         }
     }
 
-    /// One timestep. `x` is the Q6.10 input vector.
+    /// One timestep. `x` is the Q6.10 input vector. Allocates its own gate
+    /// buffer; sequence loops use [`FixedLstm::step_into`] with a hoisted
+    /// buffer instead.
     pub fn step(&self, lut: &SigmoidLut, x: &[i16], st: &mut FixedState) {
+        let mut z = vec![0i64; 4 * self.lh];
+        self.step_into(lut, x, st, &mut z);
+    }
+
+    /// [`FixedLstm::step`] against a caller-owned `(4·Lh)` gate buffer —
+    /// the zero-allocation path (`z` is fully overwritten each call).
+    pub fn step_into(&self, lut: &SigmoidLut, x: &[i16], st: &mut FixedState, z: &mut [i64]) {
         let lh = self.lh;
         let l4 = 4 * lh;
         debug_assert_eq!(x.len(), self.lx);
+        debug_assert_eq!(z.len(), l4);
         // gate pre-activations accumulated exactly: Q6.10 x Q6.10 = Q12.20
-        let mut z = vec![0i64; l4];
+        z.iter_mut().for_each(|zv| *zv = 0);
         for (i, &xv) in x.iter().enumerate() {
             let row = &self.wx[i * l4..(i + 1) * l4];
             for (zv, &wv) in z.iter_mut().zip(row) {
@@ -105,39 +115,17 @@ impl FixedLstm {
         for (zv, &bv) in z.iter_mut().zip(&self.b) {
             *zv += bv as i64; // bias already Q12.20
         }
-        for j in 0..lh {
-            // activations evaluated at Q12.20 -> f32 (the LUT address is a
-            // truncation of the fixed-point value; same granularity)
-            let zi = q32_sat(z[j]);
-            let zf = q32_sat(z[lh + j]);
-            let zg = q32_sat(z[2 * lh + j]);
-            let zo = q32_sat(z[3 * lh + j]);
-            let i_g = lut.eval(q32_to_f32(zi));
-            let f_g = lut.eval(q32_to_f32(zf));
-            let g_g = pwl_tanh(q32_to_f32(zg));
-            let o_g = lut.eval(q32_to_f32(zo));
-            // tail in fixed point: gates as Q1.20 (range (-1, 1])
-            let i_q = (i_g * (1 << 20) as f32) as i64;
-            let f_q = (f_g * (1 << 20) as f32) as i64;
-            let g_q = (g_g * (1 << 20) as f32) as i64;
-            // f*c: Q1.20 x Q12.20 >> 20 = Q12.20 (the 2-DSP product)
-            let fc = (f_q * st.c[j] as i64) >> 20;
-            // i*g: Q1.20 x Q1.20 = Q2.40 -> Q12.20
-            let ig = (i_q * g_q) >> 20;
-            let c_new = sat_i32(fc + ig);
-            st.c[j] = c_new;
-            let h_f = o_g * pwl_tanh(q32_to_f32(c_new));
-            st.h[j] = to_q16(h_f);
-        }
+        fused_gate_tail(lut, z, lh, &mut st.c, &mut st.h);
     }
 
     /// Full sequence; returns hidden vectors as Q6.10, (TS, Lh) row-major.
     pub fn run(&self, lut: &SigmoidLut, xs: &[i16], ts: usize) -> Vec<i16> {
         assert_eq!(xs.len(), ts * self.lx);
         let mut st = FixedState::zeros(self.lh);
+        let mut z = vec![0i64; 4 * self.lh]; // hoisted across timesteps
         let mut out = vec![0i16; ts * self.lh];
         for t in 0..ts {
-            self.step(lut, &xs[t * self.lx..(t + 1) * self.lx], &mut st);
+            self.step_into(lut, &xs[t * self.lx..(t + 1) * self.lx], &mut st, &mut z);
             out[t * self.lh..(t + 1) * self.lh].copy_from_slice(&st.h);
         }
         out
@@ -193,29 +181,48 @@ impl FixedLstm {
                 let zrow = &z[b * l4..(b + 1) * l4];
                 let c_row = &mut c[b * lh..(b + 1) * lh];
                 let h_row = &mut h[b * lh..(b + 1) * lh];
-                for j in 0..lh {
-                    let zi = q32_sat(zrow[j]);
-                    let zf = q32_sat(zrow[lh + j]);
-                    let zg = q32_sat(zrow[2 * lh + j]);
-                    let zo = q32_sat(zrow[3 * lh + j]);
-                    let i_g = lut.eval(q32_to_f32(zi));
-                    let f_g = lut.eval(q32_to_f32(zf));
-                    let g_g = pwl_tanh(q32_to_f32(zg));
-                    let o_g = lut.eval(q32_to_f32(zo));
-                    let i_q = (i_g * (1 << 20) as f32) as i64;
-                    let f_q = (f_g * (1 << 20) as f32) as i64;
-                    let g_q = (g_g * (1 << 20) as f32) as i64;
-                    let fc = (f_q * c_row[j] as i64) >> 20;
-                    let ig = (i_q * g_q) >> 20;
-                    let c_new = sat_i32(fc + ig);
-                    c_row[j] = c_new;
-                    let h_f = o_g * pwl_tanh(q32_to_f32(c_new));
-                    h_row[j] = to_q16(h_f);
-                }
+                fused_gate_tail(lut, zrow, lh, c_row, h_row);
                 out[(b * ts + t) * lh..(b * ts + t + 1) * lh].copy_from_slice(h_row);
             }
         }
         out
+    }
+}
+
+/// Fused fixed-point gate tail: one pass over a stream's `(4·Lh)` gate
+/// buffer — activation lookup, the paper's 16×32 tail products, cell
+/// saturation and the Q6.10 hidden write-back. The scalar sequence path
+/// ([`FixedLstm::step_into`]) and the lockstep batched path
+/// ([`FixedLstm::run_batch`]) both run exactly this code, so the bitwise
+/// scalar/batched parity holds by construction.
+#[inline]
+fn fused_gate_tail(lut: &SigmoidLut, zrow: &[i64], lh: usize, c_row: &mut [i32], h_row: &mut [i16]) {
+    debug_assert_eq!(zrow.len(), 4 * lh);
+    debug_assert_eq!(c_row.len(), lh);
+    debug_assert_eq!(h_row.len(), lh);
+    for j in 0..lh {
+        // activations evaluated at Q12.20 -> f32 (the LUT address is a
+        // truncation of the fixed-point value; same granularity)
+        let zi = q32_sat(zrow[j]);
+        let zf = q32_sat(zrow[lh + j]);
+        let zg = q32_sat(zrow[2 * lh + j]);
+        let zo = q32_sat(zrow[3 * lh + j]);
+        let i_g = lut.eval(q32_to_f32(zi));
+        let f_g = lut.eval(q32_to_f32(zf));
+        let g_g = pwl_tanh(q32_to_f32(zg));
+        let o_g = lut.eval(q32_to_f32(zo));
+        // tail in fixed point: gates as Q1.20 (range (-1, 1])
+        let i_q = (i_g * (1 << 20) as f32) as i64;
+        let f_q = (f_g * (1 << 20) as f32) as i64;
+        let g_q = (g_g * (1 << 20) as f32) as i64;
+        // f*c: Q1.20 x Q12.20 >> 20 = Q12.20 (the 2-DSP product)
+        let fc = (f_q * c_row[j] as i64) >> 20;
+        // i*g: Q1.20 x Q1.20 = Q2.40 -> Q12.20
+        let ig = (i_q * g_q) >> 20;
+        let c_new = sat_i32(fc + ig);
+        c_row[j] = c_new;
+        let h_f = o_g * pwl_tanh(q32_to_f32(c_new));
+        h_row[j] = to_q16(h_f);
     }
 }
 

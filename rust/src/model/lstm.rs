@@ -6,6 +6,7 @@
 //! AOT artifacts (checked via golden vectors) and the fixed-point datapath
 //! in [`super::fixed`].
 
+use super::simd;
 use super::weights::LstmWeights;
 
 /// Mutable per-sequence LSTM state.
@@ -62,15 +63,12 @@ pub fn step_from_xw(w: &LstmWeights, xw_t: &[f32], st: &mut LstmState) {
             *zv += hv * wv;
         }
     }
-    for j in 0..lh {
-        let i_g = sigmoid(z[j]);
-        let f_g = sigmoid(z[lh + j]);
-        let g_g = z[2 * lh + j].tanh();
-        let o_g = sigmoid(z[3 * lh + j]);
-        let c_new = f_g * st.c[j] + i_g * g_g;
-        st.c[j] = c_new;
-        st.h[j] = o_g * c_new.tanh();
-    }
+    // Fused gate evaluation: one pass over the i|f|g|o buffer, shared with
+    // the batched engine's BitExact tier so the two paths cannot drift.
+    let (zi, rest) = z.split_at(lh);
+    let (zf, rest) = rest.split_at(lh);
+    let (zg, zo) = rest.split_at(lh);
+    simd::lstm_gates_exact(zi, zf, zg, zo, &mut st.c, &mut st.h);
 }
 
 /// Full layer over a sequence; returns all hidden vectors `(TS, Lh)`.

@@ -4,12 +4,22 @@
 //! * [`lstm`]/[`autoencoder`] — f32 reference (checked against the AOT
 //!   artifacts' golden vectors in the runtime integration test),
 //! * [`batched`] — the multi-stream engine: B `(h, c)` states in lockstep
-//!   per layer over packed, column-tiled weights ([`LstmWeightsPacked`]);
-//!   bit-identical to B independent scalar runs (tests/batched_parity.rs),
+//!   per layer over packed, column-tiled weights ([`LstmWeightsPacked`]),
+//!   executed through a register-blocked `RB×16` SIMD microkernel with all
+//!   gate/activation scratch hoisted into an engine-owned
+//!   [`batched::BatchedScratch`] (zero per-timestep allocation),
+//! * [`simd`] — the explicit-vector layer under it: portable fixed-width
+//!   block ops (bit-identical to scalar order), a runtime-detected
+//!   AVX2+FMA kernel, the fast rational sigmoid/tanh tier, and the
+//!   [`MathPolicy`] contract — `BitExact` (default; bit-identical to B
+//!   independent scalar runs, pinned by tests/batched_parity.rs) vs
+//!   `FastSimd` (FMA + approximate activations, accuracy-bounded by the
+//!   tolerances in [`simd`], pinned by tests/fastmath_tolerance.rs),
 //! * [`fixed`] + [`act_lut`] — the paper's 16-bit datapath bit-for-bit:
 //!   Q6.10 weights/activations, Q12.20 bias/cell state, BRAM-LUT sigmoid,
 //!   piecewise-linear tanh (Section IV-A), including a lockstep batched
-//!   sequence path (`FixedLstm::run_batch`).
+//!   sequence path (`FixedLstm::run_batch`) sharing one fused gate tail
+//!   with the scalar path.
 //!
 //! [`weights`] loads the trained parameters exported by `aot.py`.
 
@@ -18,8 +28,10 @@ pub mod autoencoder;
 pub mod batched;
 pub mod fixed;
 pub mod lstm;
+pub mod simd;
 pub mod weights;
 
 pub use autoencoder::{forward_f32, score_f32, FixedAutoencoder};
 pub use batched::{forward_f32_batch, BatchedLstm, LstmWeightsPacked, PackedAutoencoder};
+pub use simd::MathPolicy;
 pub use weights::AutoencoderWeights;

@@ -1,0 +1,491 @@
+//! Explicit-vector layer for the batched hot path: fixed-width f32 block
+//! ops, a fast-math activation tier, and the [`MathPolicy`] contract.
+//!
+//! Everything here is in-crate (the build is offline — no `std::simd`, no
+//! external SIMD crates). Two codepaths per primitive:
+//!
+//! * **portable** — plain loops over fixed-width array chunks
+//!   (`[f32; 16]` / 8-lane strides) written so LLVM's autovectorizer turns
+//!   them into SSE/AVX without intrinsics. These are strict IEEE mul+add in
+//!   ascending-k order, so they are *bit-identical* to the scalar reference
+//!   loops — the [`MathPolicy::BitExact`] tier runs exclusively on them.
+//! * **x86-64 AVX2+FMA intrinsics** — runtime-detected
+//!   ([`fma_available`]), used only by the [`MathPolicy::FastSimd`] tier:
+//!   `vfmadd` contracts the multiply-add into one rounding, which is more
+//!   accurate but *not* bit-identical to scalar mul+add.
+//!
+//! # The `MathPolicy` contract
+//!
+//! * [`MathPolicy::BitExact`] (default): every per-element accumulation
+//!   runs in the same order and with the same roundings as the scalar
+//!   reference in [`super::lstm`]; gate nonlinearities are libm
+//!   `exp`/`tanh`. Outputs are bit-identical to B independent scalar runs
+//!   (pinned by `tests/batched_parity.rs`).
+//! * [`MathPolicy::FastSimd`]: same loop structure, but multiply-adds may
+//!   contract to FMA and the gate nonlinearities are the branch-free
+//!   rational approximations [`fast_sigmoid`]/[`fast_tanh`]
+//!   (max abs error ≤ [`FAST_ACT_TOL`] per evaluation). End-to-end the
+//!   engine promises layer outputs within [`FAST_LAYER_TOL`] and full
+//!   autoencoder reconstructions/scores within [`FAST_FORWARD_TOL`]
+//!   absolute of the `BitExact` result (pinned by
+//!   `tests/fastmath_tolerance.rs`).
+
+use super::lstm::sigmoid;
+
+/// How the batched engine is allowed to evaluate floating-point math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MathPolicy {
+    /// Scalar-order accumulation + exact (libm) sigmoid/tanh. Bit-identical
+    /// to the scalar reference datapath; the parity suite runs under this.
+    #[default]
+    BitExact,
+    /// FMA-contracted accumulation (where the CPU has it) + vectorized
+    /// rational sigmoid/tanh. Accuracy-bounded, not bit-exact: see the
+    /// module docs for the promised tolerances.
+    FastSimd,
+}
+
+impl MathPolicy {
+    /// Parse a config/CLI spelling. Accepts `bitexact`/`bit_exact`/`exact`
+    /// and `fast_simd`/`fastsimd`/`fast`.
+    pub fn parse(s: &str) -> anyhow::Result<MathPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "bitexact" | "bit_exact" | "bit-exact" | "exact" => Ok(MathPolicy::BitExact),
+            "fastsimd" | "fast_simd" | "fast-simd" | "fast" => Ok(MathPolicy::FastSimd),
+            other => Err(anyhow::anyhow!(
+                "unknown math policy {other:?} (expected bitexact|fast_simd)"
+            )),
+        }
+    }
+
+    /// Stable label for reports and bench keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MathPolicy::BitExact => "bitexact",
+            MathPolicy::FastSimd => "fast_simd",
+        }
+    }
+}
+
+/// Output-column width of one register block (matches
+/// [`super::batched::GEMM_TILE`]): 16 f32 = one cache line = two 8-lane
+/// AVX registers.
+pub const BLOCK_W: usize = 16;
+
+/// Stream rows per register block: 4 rows × 2 ymm halves = 8 live
+/// accumulator registers in the AVX2 kernel, leaving headroom for the
+/// broadcast and the two panel-row loads.
+pub const BLOCK_RB: usize = 4;
+
+/// Max abs error of [`fast_sigmoid`]/[`fast_tanh`] per evaluation.
+pub const FAST_ACT_TOL: f32 = 2.5e-4;
+
+/// Promised abs tolerance of a FastSimd LSTM *layer* output vs BitExact
+/// (per-step activation error compounded over the recurrence).
+pub const FAST_LAYER_TOL: f32 = 1e-2;
+
+/// Promised abs tolerance of a FastSimd autoencoder reconstruction or
+/// anomaly score vs BitExact.
+pub const FAST_FORWARD_TOL: f32 = 2e-2;
+
+// ---------------------------------------------------------------------------
+// Runtime CPU feature detection (cached)
+// ---------------------------------------------------------------------------
+
+/// Whether the AVX2+FMA kernel may run on this CPU. Detection result is
+/// cached after the first call (0 = unknown, 1 = no, 2 = yes).
+pub fn fma_available() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let yes = detect_fma();
+            CACHE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_fma() -> bool {
+    std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_fma() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Register-blocked k-loops (the GEMM microkernel inner loops)
+// ---------------------------------------------------------------------------
+
+/// Portable BLOCK_RB×16 k-loop: `acc[rb][j] += x[rb*xstride + kk] *
+/// panel[kk*16 + j]` for kk ascending. Strict mul+add in scalar order, so
+/// bit-identical to the naive triple loop per output element; the `acc`
+/// block stays in registers across the whole reduction (the one z
+/// load/store per block the blocked kernel exists for). `rb_n ≤ BLOCK_RB`
+/// selects how many stream rows are live (remainder blocks).
+#[inline]
+pub fn kloop16_exact(
+    panel: &[f32],
+    kdim: usize,
+    x: &[f32],
+    xstride: usize,
+    acc: &mut [[f32; BLOCK_W]; BLOCK_RB],
+    rb_n: usize,
+) {
+    debug_assert!(rb_n >= 1 && rb_n <= BLOCK_RB);
+    debug_assert!(panel.len() >= kdim * BLOCK_W);
+    if rb_n == BLOCK_RB {
+        // full block: fixed trip counts so LLVM unrolls rb and vectorizes j
+        for kk in 0..kdim {
+            let w: &[f32; BLOCK_W] = panel[kk * BLOCK_W..kk * BLOCK_W + BLOCK_W]
+                .try_into()
+                .unwrap();
+            for rb in 0..BLOCK_RB {
+                let xv = x[rb * xstride + kk];
+                let a = &mut acc[rb];
+                for j in 0..BLOCK_W {
+                    a[j] += xv * w[j];
+                }
+            }
+        }
+    } else {
+        for kk in 0..kdim {
+            let w: &[f32; BLOCK_W] = panel[kk * BLOCK_W..kk * BLOCK_W + BLOCK_W]
+                .try_into()
+                .unwrap();
+            for (rb, a) in acc.iter_mut().enumerate().take(rb_n) {
+                let xv = x[rb * xstride + kk];
+                for j in 0..BLOCK_W {
+                    a[j] += xv * w[j];
+                }
+            }
+        }
+    }
+}
+
+/// AVX2+FMA k-loop: same reduction as [`kloop16_exact`] but with the
+/// multiply-add contracted to `vfmadd231ps` (one rounding instead of two —
+/// FastSimd tier only). All BLOCK_RB×2 accumulator registers are loaded
+/// once before the k-loop and stored once after it.
+///
+/// # Safety
+/// * Caller must have verified AVX2+FMA via [`fma_available`].
+/// * `panel.len() >= kdim * BLOCK_W` (one 16-wide row per k-step).
+/// * `x.len() >= (rb_n - 1) * xstride + kdim` — the unchecked reads address
+///   `x[rb * xstride + kk]` for `rb < rb_n`, `kk < kdim`.
+/// * `1 <= rb_n <= BLOCK_RB`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn kloop16_fma(
+    panel: &[f32],
+    kdim: usize,
+    x: &[f32],
+    xstride: usize,
+    acc: &mut [[f32; BLOCK_W]; BLOCK_RB],
+    rb_n: usize,
+) {
+    use core::arch::x86_64::*;
+    debug_assert!(rb_n >= 1 && rb_n <= BLOCK_RB);
+    debug_assert!(panel.len() >= kdim * BLOCK_W);
+    debug_assert!(kdim == 0 || x.len() >= (rb_n - 1) * xstride + kdim);
+    let mut lo = [_mm256_setzero_ps(); BLOCK_RB];
+    let mut hi = [_mm256_setzero_ps(); BLOCK_RB];
+    for rb in 0..rb_n {
+        lo[rb] = _mm256_loadu_ps(acc[rb].as_ptr());
+        hi[rb] = _mm256_loadu_ps(acc[rb].as_ptr().add(8));
+    }
+    let pp = panel.as_ptr();
+    let xp = x.as_ptr();
+    for kk in 0..kdim {
+        let w0 = _mm256_loadu_ps(pp.add(kk * BLOCK_W));
+        let w1 = _mm256_loadu_ps(pp.add(kk * BLOCK_W + 8));
+        for rb in 0..rb_n {
+            let xv = _mm256_set1_ps(*xp.add(rb * xstride + kk));
+            lo[rb] = _mm256_fmadd_ps(xv, w0, lo[rb]);
+            hi[rb] = _mm256_fmadd_ps(xv, w1, hi[rb]);
+        }
+    }
+    for rb in 0..rb_n {
+        _mm256_storeu_ps(acc[rb].as_mut_ptr(), lo[rb]);
+        _mm256_storeu_ps(acc[rb].as_mut_ptr().add(8), hi[rb]);
+    }
+}
+
+/// Dispatching k-loop: FMA when the caller opts in AND the CPU has it,
+/// the exact portable loop otherwise. Sound to call from safe code: CPU
+/// support is re-verified here (cached atomic load) and the slice-length
+/// preconditions of the unchecked kernel are asserted before dispatch, so
+/// a bogus `use_fma` or an undersized slice panics instead of executing
+/// unsupported instructions / reading out of bounds.
+#[inline]
+pub fn kloop16(
+    panel: &[f32],
+    kdim: usize,
+    x: &[f32],
+    xstride: usize,
+    acc: &mut [[f32; BLOCK_W]; BLOCK_RB],
+    rb_n: usize,
+    use_fma: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if use_fma && fma_available() {
+        assert!(rb_n >= 1 && rb_n <= BLOCK_RB);
+        assert!(panel.len() >= kdim * BLOCK_W);
+        assert!(kdim == 0 || x.len() >= (rb_n - 1) * xstride + kdim);
+        // SAFETY: AVX2+FMA verified just above; slice bounds asserted.
+        unsafe { kloop16_fma(panel, kdim, x, xstride, acc, rb_n) };
+        return;
+    }
+    let _ = use_fma;
+    kloop16_exact(panel, kdim, x, xstride, acc, rb_n);
+}
+
+// ---------------------------------------------------------------------------
+// Fast-math activations (branch-free, autovectorizable)
+// ---------------------------------------------------------------------------
+
+/// Rational tanh: Padé(3,3) of Lambert's continued fraction, input clamped
+/// to ±4.97 (where the approximant crosses 1) and output clamped to ±1.
+/// Branch-free (clamps compile to min/max), so a loop of these vectorizes.
+/// Max abs error ≤ [`FAST_ACT_TOL`] over all of ℝ.
+#[inline(always)]
+pub fn fast_tanh(x: f32) -> f32 {
+    let x = x.clamp(-4.97, 4.97);
+    let x2 = x * x;
+    let p = x * (135135.0 + x2 * (17325.0 + x2 * (378.0 + x2)));
+    let q = 135135.0 + x2 * (62370.0 + x2 * (3150.0 + x2 * 28.0));
+    (p / q).clamp(-1.0, 1.0)
+}
+
+/// Rational sigmoid via `0.5 + 0.5·tanh(x/2)` on [`fast_tanh`]. Max abs
+/// error ≤ [`FAST_ACT_TOL`] (half the tanh error).
+#[inline(always)]
+pub fn fast_sigmoid(x: f32) -> f32 {
+    0.5 + 0.5 * fast_tanh(0.5 * x)
+}
+
+// ---------------------------------------------------------------------------
+// Fused gate evaluation (one pass over the 4·Lh gate buffer)
+// ---------------------------------------------------------------------------
+
+/// Bit-exact fused LSTM gate update: one pass over the i|f|g|o slices of
+/// the gate buffer, updating `c` and `h` in place. The arithmetic is the
+/// exact expression (and FP op order) of the scalar reference
+/// `lstm::step_from_xw`, so both the scalar and the batched BitExact paths
+/// share this single implementation.
+#[inline]
+pub fn lstm_gates_exact(
+    zi: &[f32],
+    zf: &[f32],
+    zg: &[f32],
+    zo: &[f32],
+    c: &mut [f32],
+    h: &mut [f32],
+) {
+    debug_assert!(
+        zi.len() == zf.len()
+            && zf.len() == zg.len()
+            && zg.len() == zo.len()
+            && zo.len() == c.len()
+            && c.len() == h.len()
+    );
+    for (((((iz, fz), gz), oz), cv), hv) in zi
+        .iter()
+        .zip(zf)
+        .zip(zg)
+        .zip(zo)
+        .zip(c.iter_mut())
+        .zip(h.iter_mut())
+    {
+        let c_new = sigmoid(*fz) * *cv + sigmoid(*iz) * gz.tanh();
+        *cv = c_new;
+        *hv = sigmoid(*oz) * c_new.tanh();
+    }
+}
+
+/// FastSimd fused gate update: same single pass, with the branch-free
+/// rational activations so the whole loop autovectorizes (the libm
+/// `exp`-based sigmoid is the transcendental floor this tier removes).
+#[inline]
+pub fn lstm_gates_fast(
+    zi: &[f32],
+    zf: &[f32],
+    zg: &[f32],
+    zo: &[f32],
+    c: &mut [f32],
+    h: &mut [f32],
+) {
+    debug_assert!(
+        zi.len() == zf.len()
+            && zf.len() == zg.len()
+            && zg.len() == zo.len()
+            && zo.len() == c.len()
+            && c.len() == h.len()
+    );
+    for (((((iz, fz), gz), oz), cv), hv) in zi
+        .iter()
+        .zip(zf)
+        .zip(zg)
+        .zip(zo)
+        .zip(c.iter_mut())
+        .zip(h.iter_mut())
+    {
+        let c_new = fast_sigmoid(*fz) * *cv + fast_sigmoid(*iz) * fast_tanh(*gz);
+        *cv = c_new;
+        *hv = fast_sigmoid(*oz) * fast_tanh(c_new);
+    }
+}
+
+/// Policy-dispatched fused gate update over one stream's `(4·Lh)` gate row.
+#[inline]
+pub fn lstm_gates(
+    policy: MathPolicy,
+    zrow: &[f32],
+    lh: usize,
+    c: &mut [f32],
+    h: &mut [f32],
+) {
+    debug_assert_eq!(zrow.len(), 4 * lh);
+    let (zi, rest) = zrow.split_at(lh);
+    let (zf, rest) = rest.split_at(lh);
+    let (zg, zo) = rest.split_at(lh);
+    match policy {
+        MathPolicy::BitExact => lstm_gates_exact(zi, zf, zg, zo, c, h),
+        MathPolicy::FastSimd => lstm_gates_fast(zi, zf, zg, zo, c, h),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_and_label() {
+        assert_eq!(MathPolicy::parse("bitexact").unwrap(), MathPolicy::BitExact);
+        assert_eq!(MathPolicy::parse("BIT_EXACT").unwrap(), MathPolicy::BitExact);
+        assert_eq!(MathPolicy::parse("fast").unwrap(), MathPolicy::FastSimd);
+        assert_eq!(MathPolicy::parse("fast_simd").unwrap(), MathPolicy::FastSimd);
+        assert!(MathPolicy::parse("turbo").is_err());
+        assert_eq!(MathPolicy::default(), MathPolicy::BitExact);
+        assert_eq!(MathPolicy::FastSimd.label(), "fast_simd");
+    }
+
+    #[test]
+    fn fast_tanh_within_stated_tolerance() {
+        let mut worst = 0.0f32;
+        let mut x = -8.0f32;
+        while x <= 8.0 {
+            worst = worst.max((fast_tanh(x) - x.tanh()).abs());
+            x += 1e-3;
+        }
+        assert!(worst <= FAST_ACT_TOL, "fast_tanh max err {worst}");
+    }
+
+    #[test]
+    fn fast_sigmoid_within_stated_tolerance() {
+        let mut worst = 0.0f32;
+        let mut x = -12.0f32;
+        while x <= 12.0 {
+            worst = worst.max((fast_sigmoid(x) - sigmoid(x)).abs());
+            x += 1e-3;
+        }
+        assert!(worst <= FAST_ACT_TOL, "fast_sigmoid max err {worst}");
+    }
+
+    #[test]
+    fn fast_activations_bounded_and_odd() {
+        for i in -100..=100 {
+            let x = i as f32 / 5.0;
+            assert!(fast_tanh(x).abs() <= 1.0);
+            assert!((0.0..=1.0).contains(&fast_sigmoid(x)));
+            assert_eq!(fast_tanh(x), -fast_tanh(-x));
+        }
+        assert_eq!(fast_tanh(100.0), 1.0);
+        assert_eq!(fast_tanh(-100.0), -1.0);
+    }
+
+    #[test]
+    fn kloop16_exact_matches_naive_all_rb() {
+        let kdim = 7;
+        let panel: Vec<f32> = (0..kdim * BLOCK_W).map(|i| (i as f32 * 0.37).sin()).collect();
+        let x: Vec<f32> = (0..BLOCK_RB * kdim).map(|i| (i as f32 * 0.11).cos()).collect();
+        for rb_n in 1..=BLOCK_RB {
+            let mut acc = [[0.5f32; BLOCK_W]; BLOCK_RB];
+            kloop16_exact(&panel, kdim, &x, kdim, &mut acc, rb_n);
+            for rb in 0..rb_n {
+                for j in 0..BLOCK_W {
+                    // naive accumulation in the identical order
+                    let mut want = 0.5f32;
+                    for kk in 0..kdim {
+                        want += x[rb * kdim + kk] * panel[kk * BLOCK_W + j];
+                    }
+                    assert_eq!(acc[rb][j], want, "rb_n={rb_n} rb={rb} j={j}");
+                }
+            }
+            // untouched remainder rows stay at their initial value
+            for rb in rb_n..BLOCK_RB {
+                assert!(acc[rb].iter().all(|&v| v == 0.5));
+            }
+        }
+    }
+
+    #[test]
+    fn kloop16_fma_dispatch_close_to_exact() {
+        // When FMA hardware exists, the contracted kernel must agree with
+        // the exact one to fused-rounding precision; when it doesn't,
+        // kloop16 falls back and matches bitwise.
+        let kdim = 33;
+        let panel: Vec<f32> = (0..kdim * BLOCK_W).map(|i| ((i * 29 % 17) as f32 - 8.0) / 8.0).collect();
+        let x: Vec<f32> = (0..BLOCK_RB * kdim).map(|i| ((i * 13 % 11) as f32 - 5.0) / 5.0).collect();
+        let mut exact = [[0.0f32; BLOCK_W]; BLOCK_RB];
+        let mut fast = [[0.0f32; BLOCK_W]; BLOCK_RB];
+        kloop16_exact(&panel, kdim, &x, kdim, &mut exact, BLOCK_RB);
+        kloop16(&panel, kdim, &x, kdim, &mut fast, BLOCK_RB, fma_available());
+        for rb in 0..BLOCK_RB {
+            for j in 0..BLOCK_W {
+                let d = (exact[rb][j] - fast[rb][j]).abs();
+                assert!(d <= 1e-4, "rb={rb} j={j}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_gates_exact_matches_unfused_reference() {
+        let lh = 5;
+        let z: Vec<f32> = (0..4 * lh).map(|i| (i as f32 - 10.0) / 4.0).collect();
+        let mut c = vec![0.3f32; lh];
+        let mut h = vec![0.0f32; lh];
+        lstm_gates(MathPolicy::BitExact, &z, lh, &mut c, &mut h);
+        for j in 0..lh {
+            let i_g = sigmoid(z[j]);
+            let f_g = sigmoid(z[lh + j]);
+            let g_g = z[2 * lh + j].tanh();
+            let o_g = sigmoid(z[3 * lh + j]);
+            let c_new = f_g * 0.3 + i_g * g_g;
+            assert_eq!(c[j], c_new);
+            assert_eq!(h[j], o_g * c_new.tanh());
+        }
+    }
+
+    #[test]
+    fn fused_gates_fast_tracks_exact() {
+        let lh = 9; // ragged on purpose
+        let z: Vec<f32> = (0..4 * lh).map(|i| ((i * 7 % 23) as f32 - 11.0) / 3.0).collect();
+        let mut c_e = vec![0.1f32; lh];
+        let mut h_e = vec![0.0f32; lh];
+        let mut c_f = c_e.clone();
+        let mut h_f = h_e.clone();
+        lstm_gates(MathPolicy::BitExact, &z, lh, &mut c_e, &mut h_e);
+        lstm_gates(MathPolicy::FastSimd, &z, lh, &mut c_f, &mut h_f);
+        for j in 0..lh {
+            assert!((c_e[j] - c_f[j]).abs() <= 4.0 * FAST_ACT_TOL, "c[{j}]");
+            assert!((h_e[j] - h_f[j]).abs() <= 4.0 * FAST_ACT_TOL, "h[{j}]");
+        }
+    }
+}

@@ -20,7 +20,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Manifest, VariantSpec};
-use crate::model::{AutoencoderWeights, PackedAutoencoder};
+use crate::model::{AutoencoderWeights, MathPolicy, PackedAutoencoder};
 use crate::util::json::Value;
 
 /// Shared PJRT client (CPU platform).
@@ -66,7 +66,7 @@ impl Engine {
         let path = manifest.weights_path(&spec);
         let weights = AutoencoderWeights::load(&path)
             .with_context(|| format!("loading weights {path}"))?;
-        Ok(ModelExecutor::native(&weights, spec))
+        Ok(ModelExecutor::native(&weights, spec, MathPolicy::BitExact))
     }
 }
 
@@ -87,8 +87,21 @@ pub struct ModelExecutor {
 
 impl ModelExecutor {
     /// Build a native batched executor straight from weights (the
-    /// artifact-less path: synthetic or directly-loaded parameters).
+    /// artifact-less path: synthetic or directly-loaded parameters),
+    /// default `BitExact` math tier.
     pub fn native_from_weights(weights: &AutoencoderWeights, name: &str, ts: usize) -> ModelExecutor {
+        ModelExecutor::native_from_weights_policy(weights, name, ts, MathPolicy::BitExact)
+    }
+
+    /// [`ModelExecutor::native_from_weights`] with an explicit math tier —
+    /// `FastSimd` selects the FMA/fast-activation kernel (accuracy-bounded,
+    /// see `model::simd`).
+    pub fn native_from_weights_policy(
+        weights: &AutoencoderWeights,
+        name: &str,
+        ts: usize,
+        policy: MathPolicy,
+    ) -> ModelExecutor {
         let spec = VariantSpec {
             name: name.to_string(),
             arch: weights.arch.clone(),
@@ -97,17 +110,21 @@ impl ModelExecutor {
             hlo: String::new(),
             golden: String::new(),
         };
-        ModelExecutor::native(weights, spec)
+        ModelExecutor::native(weights, spec, policy)
     }
 
-    fn native(weights: &AutoencoderWeights, spec: VariantSpec) -> ModelExecutor {
+    fn native(weights: &AutoencoderWeights, spec: VariantSpec, policy: MathPolicy) -> ModelExecutor {
         let t0 = Instant::now();
-        let packed = PackedAutoencoder::from_weights(weights);
+        let packed = PackedAutoencoder::from_weights_policy(weights, policy);
         let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let platform = match policy {
+            MathPolicy::BitExact => "native-batched".to_string(),
+            MathPolicy::FastSimd => "native-batched+fastsimd".to_string(),
+        };
         ModelExecutor {
             spec,
             backend: Backend::Native(packed),
-            platform: "native-batched".to_string(),
+            platform,
             compile_ms,
         }
     }
@@ -235,6 +252,31 @@ mod tests {
         for b in 0..batch {
             let one = exe.score(&windows[b * ts..(b + 1) * ts]).unwrap();
             assert_eq!(scores[b], one, "stream {b}");
+        }
+    }
+
+    #[test]
+    fn fast_policy_executor_tracks_bitexact_scores() {
+        let w = AutoencoderWeights::synthetic(6, "small");
+        let exact = ModelExecutor::native_from_weights(&w, "small_synth", 8);
+        let fast = ModelExecutor::native_from_weights_policy(
+            &w,
+            "small_synth",
+            8,
+            MathPolicy::FastSimd,
+        );
+        assert_eq!(fast.platform(), "native-batched+fastsimd");
+        let (batch, ts) = (3, 8);
+        let windows: Vec<f32> = (0..batch * ts)
+            .map(|i| ((i * 7 % 19) as f32 - 9.0) / 9.0)
+            .collect();
+        let a = exact.score_batch(&windows, batch).unwrap();
+        let b = fast.score_batch(&windows, batch).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() <= crate::model::simd::FAST_FORWARD_TOL,
+                "score drift {x} vs {y}"
+            );
         }
     }
 

@@ -1,0 +1,206 @@
+//! The FastSimd accuracy contract, pinned: `MathPolicy::FastSimd` outputs
+//! must stay within the tolerances stated in `model::simd`
+//! (`FAST_LAYER_TOL` for a single LSTM layer, `FAST_FORWARD_TOL` for full
+//! autoencoder reconstructions and anomaly scores) of the `BitExact`
+//! engine — on random windows, on chirp-injected `gw::dataset` windows,
+//! for every serving batch size B ∈ {1, 3, 8}, and for ragged hidden
+//! widths not divisible by the 16-lane block width or the 8-lane vector
+//! width.
+//!
+//! Also pinned here: the BitExact tier of the register-blocked kernel is
+//! *bit-identical* to the unblocked PR 1 kernel for every tile width and
+//! every row-remainder (RB) configuration — blocking moves accumulators
+//! into registers, it must never reorder a reduction.
+
+use gwlstm::gw::dataset::{make_dataset, DEFAULT_SNR};
+use gwlstm::model::batched::{BatchedLstm, PackedMatrix, GEMM_RB};
+use gwlstm::model::simd::{FAST_FORWARD_TOL, FAST_LAYER_TOL};
+use gwlstm::model::weights::LstmWeights;
+use gwlstm::model::{AutoencoderWeights, MathPolicy, PackedAutoencoder};
+use gwlstm::util::prop::{check_with, Config};
+use gwlstm::util::rng::Rng;
+
+const BATCHES: [usize; 3] = [1, 3, 8];
+
+fn random_layer(seed: u64, lx: usize, lh: usize) -> LstmWeights {
+    let mut rng = Rng::new(seed);
+    let mut gen = |n: usize, s: f64| -> Vec<f32> {
+        (0..n).map(|_| (rng.gaussian() * s) as f32).collect()
+    };
+    LstmWeights {
+        name: format!("fast_{lx}x{lh}"),
+        lx,
+        lh,
+        wx: gen(lx * 4 * lh, 0.4),
+        wh: gen(lh * 4 * lh, 0.3),
+        b: gen(4 * lh, 0.1),
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn prop_fast_layer_within_tolerance_on_random_windows() {
+    // Random layer shapes with deliberately ragged Lh (1..=37 covers
+    // lh % 8 != 0, lh % 16 != 0, and 4*lh % 16 != 0 cases), random inputs,
+    // all serving batch sizes.
+    check_with(
+        Config {
+            cases: 40,
+            ..Default::default()
+        },
+        "fast-layer-tolerance",
+        |d| {
+            let lx = d.usize_in(1, 8);
+            let lh = d.usize_in(1, 37);
+            let ts = d.usize_in(1, 20);
+            let seed = d.usize_in(0, 1 << 20) as u64;
+            (lx, lh, ts, seed)
+        },
+        |&(lx, lh, ts, seed)| {
+            let w = random_layer(seed, lx, lh);
+            let exact = BatchedLstm::from_weights(&w);
+            let fast = BatchedLstm::from_weights_policy(&w, MathPolicy::FastSimd);
+            for &batch in &BATCHES {
+                let mut rng = Rng::new(seed ^ 0xFA57);
+                let xs: Vec<f32> = (0..batch * ts * lx)
+                    .map(|_| rng.gaussian() as f32)
+                    .collect();
+                let a = exact.run(&xs, batch, ts);
+                let b = fast.run(&xs, batch, ts);
+                let err = max_abs_diff(&a, &b);
+                if err > FAST_LAYER_TOL {
+                    return Err(format!(
+                        "lx={lx} lh={lh} ts={ts} B={batch}: max err {err} > {FAST_LAYER_TOL}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fast_autoencoder_within_tolerance_on_random_windows() {
+    for arch in ["small", "nominal"] {
+        let w = AutoencoderWeights::synthetic(31, arch);
+        let exact = PackedAutoencoder::from_weights(&w);
+        let fast = PackedAutoencoder::from_weights_policy(&w, MathPolicy::FastSimd);
+        let ts = if arch == "small" { 8 } else { 24 };
+        for &batch in &BATCHES {
+            let mut rng = Rng::new(0xFA + batch as u64);
+            let windows: Vec<f32> = (0..batch * ts).map(|_| rng.gaussian() as f32).collect();
+            let a = exact.forward_batch(&windows, batch);
+            let b = fast.forward_batch(&windows, batch);
+            let err = max_abs_diff(&a, &b);
+            assert!(
+                err <= FAST_FORWARD_TOL,
+                "{arch} B={batch}: max err {err} > {FAST_FORWARD_TOL}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fast_autoencoder_within_tolerance_on_chirp_windows() {
+    // Real substrate: chirp-injected windows from the dataset twin through
+    // the nominal architecture at its native TS=100 (the worst case for
+    // per-step activation-error compounding).
+    let ts = 100;
+    let w = AutoencoderWeights::synthetic(37, "nominal");
+    let exact = PackedAutoencoder::from_weights(&w);
+    let fast = PackedAutoencoder::from_weights_policy(&w, MathPolicy::FastSimd);
+    let events = make_dataset(0xFA57C, 8, ts, DEFAULT_SNR);
+    assert!(events.iter().any(|e| e.label == 1), "need injected windows");
+    let flat: Vec<f32> = events.iter().flat_map(|e| e.samples.clone()).collect();
+    for &batch in &BATCHES {
+        let a = exact.forward_batch(&flat[..batch * ts], batch);
+        let b = fast.forward_batch(&flat[..batch * ts], batch);
+        let err = max_abs_diff(&a, &b);
+        assert!(
+            err <= FAST_FORWARD_TOL,
+            "chirp B={batch}: max err {err} > {FAST_FORWARD_TOL}"
+        );
+        // ... and the anomaly scores the detector actually thresholds.
+        let sa = exact.score_batch(&flat[..batch * ts], batch);
+        let sb = fast.score_batch(&flat[..batch * ts], batch);
+        for (i, (x, y)) in sa.iter().zip(&sb).enumerate() {
+            assert!(
+                (x - y).abs() <= FAST_FORWARD_TOL,
+                "chirp B={batch} score {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bitexact_blocked_gemm_equals_unblocked_every_configuration() {
+    // Tile × rows sweep: every panel-width class (full 16-wide blocks,
+    // ragged tails, tiles narrower and wider than the block) crossed with
+    // every row-remainder class of the RB blocking must be bit-identical
+    // to the PR 1 row-wise kernel.
+    check_with(
+        Config {
+            cases: 60,
+            ..Default::default()
+        },
+        "blocked-gemm-bitexact-sweep",
+        |d| {
+            let k = d.usize_in(1, 24);
+            let n = d.usize_in(1, 70);
+            let rows = d.usize_in(1, 2 * GEMM_RB + 3);
+            let tile = [1, 2, 3, 5, 8, 16, 24, 64][d.usize_in(0, 7)];
+            let seed = d.usize_in(0, 1 << 20) as u64;
+            (k, n, rows, tile, seed)
+        },
+        |&(k, n, rows, tile, seed)| {
+            let mut rng = Rng::new(seed);
+            let src: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+            let x: Vec<f32> = (0..rows * k).map(|_| rng.gaussian() as f32).collect();
+            let m = PackedMatrix::pack_with_tile(&src, k, n, tile);
+            let mut z_blocked: Vec<f32> = (0..rows * n).map(|_| rng.gaussian() as f32).collect();
+            let mut z_rowwise = z_blocked.clone();
+            m.gemm_acc(&x, rows, &mut z_blocked);
+            m.gemm_acc_unblocked(&x, rows, &mut z_rowwise);
+            if z_blocked != z_rowwise {
+                return Err(format!("k={k} n={n} rows={rows} tile={tile} diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bitexact_layer_identical_for_every_row_remainder() {
+    // Layer-level RB sweep: every batch size through one full RB block
+    // plus remainder (1..=2*RB+1) must be bit-identical per stream to the
+    // scalar reference — the layer path exercises both the (B*TS)-row xw
+    // GEMM and the B-row recurrent GEMM blockings.
+    let w = random_layer(51, 3, 16);
+    let exact = BatchedLstm::from_weights(&w);
+    let ts = 6;
+    let mut rng = Rng::new(52);
+    let max_b = 2 * GEMM_RB + 1;
+    let xs: Vec<f32> = (0..max_b * ts * 3).map(|_| rng.gaussian() as f32).collect();
+    let singles: Vec<Vec<f32>> = (0..max_b)
+        .map(|b| {
+            gwlstm::model::lstm::lstm_layer(&w, &xs[b * ts * 3..(b + 1) * ts * 3], ts)
+        })
+        .collect();
+    for batch in 1..=max_b {
+        let got = exact.run(&xs[..batch * ts * 3], batch, ts);
+        for (b, single) in singles.iter().enumerate().take(batch) {
+            assert_eq!(
+                &got[b * ts * 16..(b + 1) * ts * 16],
+                &single[..],
+                "B={batch} stream {b}"
+            );
+        }
+    }
+}
