@@ -22,6 +22,16 @@ if command -v cargo >/dev/null 2>&1; then
     note "rust: cargo test -q"
     (cd rust && cargo test -q) || failures=$((failures + 1))
 
+    # Doc tests + rendered docs are tier-1: every public item in the model/
+    # stream layers carries runnable examples (ARCHITECTURE.md points at
+    # them), and cargo doc warnings (broken intra-doc links) are errors.
+    note "rust: cargo test --doc"
+    (cd rust && cargo test -q --doc) || failures=$((failures + 1))
+
+    note "rust: cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+    (cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet) \
+        || failures=$((failures + 1))
+
     if cargo clippy --version >/dev/null 2>&1; then
         note "rust: cargo clippy -- -D warnings"
         (cd rust && cargo clippy --release --all-targets -- -D warnings) \
@@ -31,10 +41,14 @@ if command -v cargo >/dev/null 2>&1; then
     fi
 
     if [ "${SKIP_BENCH:-0}" != "1" ]; then
-        # hotpath runs BOTH math tiers, emits BENCH_hotpath.json +
+        # hotpath runs BOTH math tiers (incl. the streaming stateful-vs-
+        # re-encode keys), emits BENCH_hotpath.json +
         # BENCH_hotpath_pr1_baseline.json, and exits nonzero if the
         # FastSimd smoke output diverges from BitExact beyond the
         # model::simd tolerance — a tolerance regression fails CI here.
+        # e2e_serving runs in both math tiers via GWLSTM_MATH, which also
+        # exercises the streaming serving arm (run_serving_streaming) in
+        # both tiers. See rust/BENCHMARKS.md for the JSON schema.
         note "rust: bench smoke (tiny iteration counts, both math tiers)"
         (cd rust && GWLSTM_BENCH_SMOKE=1 cargo bench --bench hotpath) \
             || failures=$((failures + 1))

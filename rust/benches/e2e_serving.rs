@@ -1,6 +1,8 @@
 //! Bench target: end-to-end serving — the full coordinator pipeline on the
 //! live synthetic stream, batch-1 (the paper's mode) vs micro-batching
-//! (the related-work mode whose latency penalty the paper calls out).
+//! (the related-work mode whose latency penalty the paper calls out) vs
+//! the streaming state service (resident per-stream state, one lockstep
+//! stateful call per tick — the continuous-inference workload).
 //!
 //! Two backends:
 //! * **native batched** (always runs, no artifacts): micro-batches execute
@@ -16,7 +18,9 @@
 use std::time::Duration;
 
 use gwlstm::config::{Manifest, ServeConfig};
-use gwlstm::coordinator::{run_serving_native, run_serving_with_policy, Policy, ServeReport};
+use gwlstm::coordinator::{
+    run_serving_native, run_serving_streaming, run_serving_with_policy, Policy, ServeReport,
+};
 use gwlstm::model::{AutoencoderWeights, MathPolicy};
 use gwlstm::util::bench::Table;
 
@@ -91,11 +95,35 @@ fn main() {
         let r = run_serving_native(&weights, 8, &cfg, policy).expect("native serving run");
         rows.push((name, r));
     }
+    // Streaming state service arm: S resident sessions advanced one hop of
+    // NEW samples per tick (stateful continuation) — the continuous-
+    // inference workload the stateless policies above cannot express. One
+    // lockstep stateful call per tick, so mean B ≈ S with no batching
+    // queue delay; ci.sh runs this smoke in both math tiers (GWLSTM_MATH).
+    let scfg = ServeConfig {
+        model: "small_stream".into(),
+        calib_windows: if smoke { 16 } else { 48 },
+        max_windows: windows,
+        inject_prob: 0.25,
+        math_policy: math,
+        streaming: true,
+        stream_sessions: 8,
+        stream_hop: 8,
+        ..Default::default()
+    };
+    let r = run_serving_streaming(&weights, &scfg).expect("streaming serving run");
+    rows.push(("streaming stateful S=8 hop=8", r));
     println!(
         "=== e2e serving (native batched engine, {} tier): policy trade-off ===\n",
         math.label()
     );
     table_for(rows).print();
+    println!(
+        "\nstreaming row: resident per-stream (h, c) — each window scores only\n\
+         hop new samples against carried state instead of re-encoding a full\n\
+         window from zeros (see BENCH_hotpath.json stream/* for the per-window\n\
+         engine-cost comparison)."
+    );
 
     // ---- PJRT artifact backend ----
     let Ok(manifest) = Manifest::load("artifacts") else {

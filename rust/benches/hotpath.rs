@@ -3,10 +3,13 @@
 //! Covers every layer the perf pass optimizes:
 //!   L3 rust: batched multi-stream engine (streams/sec at B ∈ {1,4,8,32}
 //!            vs the seed's naive batch-1 scalar loop AND vs the frozen
-//!            PR 1 engine), the FastSimd math tier, PJRT inference
-//!            (small + nominal), pure-rust f32 forward, fixed-point
-//!            forward, cycle-simulator throughput, DSE speed, window
-//!            generation (FFT + filters), router dispatch.
+//!            PR 1 engine), the FastSimd math tier, the streaming state
+//!            service (stateful continuation per hop of new samples vs
+//!            re-encoding the full window from zeros — the `stream/*`
+//!            keys), PJRT inference (small + nominal), pure-rust f32
+//!            forward, fixed-point forward, cycle-simulator throughput,
+//!            DSE speed, window generation (FFT + filters), router
+//!            dispatch.
 //!
 //! Two JSON files are written per run, so the before/after perf claim is
 //! always a same-machine, same-build comparison:
@@ -246,6 +249,47 @@ fn main() {
         base_b8_per_stream / b8_per_stream,
         b8_per_stream / fast_b8_per_stream,
         base_b8_per_stream / fast_b8_per_stream,
+    );
+
+    // ---- streaming: stateful continuation vs re-encode-from-zero ----
+    // The continuous-inference workload advances each stream by hop=25 NEW
+    // samples per window. Stateful sessions score exactly those 25 samples
+    // against resident (h, c); the stateless baseline must re-encode the
+    // full ts=100 window from zeros every hop. Same engine, same weights —
+    // the measured ratio is the cost of throwing state away (~ts/hop at
+    // the GEMM level, minus fixed per-call overhead).
+    let hop = 25usize;
+    let mut stream_state = packed.zero_state(8);
+    let st = Bench::new("stream: stateful continuation hop=25 B=8 (bitexact)")
+        .iters(rec.iters(30))
+        .run(|| {
+            std::hint::black_box(packed.score_batch_stateful(&pool[..8 * hop], 8, &mut stream_state));
+        });
+    let stateful_per_window = st.median_ns / 8.0;
+    rec.put("stream/stateful_hop25_b8_per_window", stateful_per_window);
+    let mut stream_state_fast = packed_fast.zero_state(8);
+    let st = Bench::new("stream: stateful continuation hop=25 B=8 (fast_simd)")
+        .iters(rec.iters(30))
+        .run(|| {
+            std::hint::black_box(packed_fast.score_batch_stateful(
+                &pool[..8 * hop],
+                8,
+                &mut stream_state_fast,
+            ));
+        });
+    rec.put("stream/stateful_hop25_b8_per_window_fast", st.median_ns / 8.0);
+    // the stateless per-window cost at B=8 measured above IS the re-encode
+    // baseline (every hop pays the whole window again)
+    rec.put("stream/reencode_ts100_b8_per_window", b8_per_stream);
+    rec.put(
+        "stream/stateful_vs_reencode_speedup",
+        b8_per_stream / stateful_per_window,
+    );
+    println!(
+        "  -> streaming: stateful hop={hop} {:.0} ns/window vs re-encode ts={ts} {:.0} ns/window ({:.2}x per hop of new samples)",
+        stateful_per_window,
+        b8_per_stream,
+        b8_per_stream / stateful_per_window,
     );
 
     // Executor-level dispatch cost: the serving coordinator's view (one

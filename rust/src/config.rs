@@ -113,6 +113,21 @@ pub struct ServeConfig {
     /// exactness for throughput within the tolerances documented in
     /// `model::simd`. JSON key `math_policy`: `"bitexact"` | `"fast_simd"`.
     pub math_policy: MathPolicy,
+    /// Serve the streaming state service instead of the stateless window
+    /// pipeline: per-stream resident `(h, c)` sessions, one lockstep
+    /// stateful call per tick (`run_serving_streaming`; native backend
+    /// only). JSON key `streaming`.
+    pub streaming: bool,
+    /// Concurrent detector streams (sessions) in streaming mode.
+    /// JSON key `sessions`.
+    pub stream_sessions: usize,
+    /// Samples per stateful chunk (the streaming hop): each tick every
+    /// session is advanced by exactly this many NEW samples, instead of
+    /// re-encoding a full window from zeros. JSON key `hop`.
+    pub stream_hop: usize,
+    /// Idle ticks before a streaming session is evicted (its state is
+    /// snapshotted for warm restart). JSON key `session_ttl`.
+    pub stream_ttl: u64,
 }
 
 impl Default for ServeConfig {
@@ -128,6 +143,10 @@ impl Default for ServeConfig {
             queue_depth: 64,
             pace_us: 0,
             math_policy: MathPolicy::BitExact,
+            streaming: false,
+            stream_sessions: 8,
+            stream_hop: 25,
+            stream_ttl: 256,
         }
     }
 }
@@ -147,6 +166,10 @@ impl ServeConfig {
                 "queue_depth" => self.queue_depth = val.as_usize()?,
                 "pace_us" => self.pace_us = val.as_usize()? as u64,
                 "math_policy" => self.math_policy = MathPolicy::parse(val.as_str()?)?,
+                "streaming" => self.streaming = val.as_bool()?,
+                "sessions" => self.stream_sessions = val.as_usize()?,
+                "hop" => self.stream_hop = val.as_usize()?,
+                "session_ttl" => self.stream_ttl = val.as_usize()? as u64,
                 other => return Err(anyhow!("unknown serve-config key {other:?}")),
             }
         }
@@ -254,6 +277,23 @@ mod tests {
         assert_eq!(cfg.math_policy, MathPolicy::FastSimd);
         let bad = Value::parse(r#"{"math_policy": "warp9"}"#).unwrap();
         assert!(cfg.apply_json(&bad).is_err());
+    }
+
+    #[test]
+    fn streaming_overrides() {
+        let mut cfg = ServeConfig::default();
+        assert!(!cfg.streaming);
+        let v = Value::parse(
+            r#"{"streaming": true, "sessions": 4, "hop": 10, "session_ttl": 32}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert!(cfg.streaming);
+        assert_eq!(cfg.stream_sessions, 4);
+        assert_eq!(cfg.stream_hop, 10);
+        assert_eq!(cfg.stream_ttl, 32);
+        let bad = Value::parse(r#"{"streaming": "yes"}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err(), "non-bool streaming rejected");
     }
 
     #[test]

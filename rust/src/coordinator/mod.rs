@@ -18,13 +18,23 @@
 //!   advance in lockstep sharing each weight traversal. Backends: PJRT
 //!   artifacts ([`run_serving`]) or the artifact-less native batched engine
 //!   ([`run_serving_native`]).
+//! * [`stream_router`] — the continuous-inference twin of the micro-batch
+//!   path: per-stream resident `(h, c)` sessions ([`crate::stream`])
+//!   grouped per tick into ONE lockstep *stateful* engine call
+//!   ([`StreamRouter`]), served end-to-end by [`run_serving_streaming`]
+//!   (`gwlstm serve --native --streaming`). Each stream pays O(hop) per
+//!   new chunk instead of re-encoding a full window from zeros.
 
 pub mod batcher;
 pub mod detector;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod stream_router;
 
 pub use batcher::Policy;
 pub use detector::{Detection, DetectionSummary, Detector};
-pub use server::{run_serving, run_serving_native, run_serving_with_policy, ServeReport};
+pub use server::{
+    run_serving, run_serving_native, run_serving_streaming, run_serving_with_policy, ServeReport,
+};
+pub use stream_router::{StreamRouter, StreamScore};

@@ -19,6 +19,7 @@
 //! pipeline serves the PJRT artifact backend ([`run_serving`]) and the
 //! artifact-less native batched backend ([`run_serving_native`]).
 
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -30,11 +31,13 @@ use super::batcher::{Batcher, Policy};
 use super::detector::{Detection, DetectionSummary, Detector};
 use super::metrics::{LatencySnapshot, Metrics};
 use super::router::{Job, RouteResult, Router};
+use super::stream_router::StreamRouter;
 use crate::config::{Manifest, ServeConfig};
 use crate::eval::roc::auc;
 use crate::gw::dataset::StrainStream;
 use crate::model::AutoencoderWeights;
 use crate::runtime::{Engine, ModelExecutor};
+use crate::stream::StreamConfig;
 
 /// One window travelling leader -> worker (inside a micro-batch).
 struct WorkItem {
@@ -128,6 +131,15 @@ pub fn run_serving_with_policy(
             cfg.math_policy
         );
     }
+    if cfg.streaming {
+        // Same reject-don't-ignore rule: this entry point serves the
+        // stateless window pipeline and would silently drop the
+        // resident-session request.
+        anyhow::bail!(
+            "streaming serving has its own entry point (run_serving_streaming, \
+             native backend); the PJRT window pipeline is stateless"
+        );
+    }
     let spec = manifest.variant(&cfg.model)?.clone();
     let dir = manifest.dir.clone();
     let model = cfg.model.clone();
@@ -152,6 +164,14 @@ pub fn run_serving_native(
     cfg: &ServeConfig,
     policy: Policy,
 ) -> Result<ServeReport> {
+    if cfg.streaming {
+        // Reject-don't-ignore (same rule as the PJRT math_policy guard):
+        // this is the stateless window pipeline.
+        anyhow::bail!(
+            "cfg.streaming is set — use run_serving_streaming (this entry \
+             point re-encodes every window from zeros)"
+        );
+    }
     let w = weights.clone();
     let name = cfg.model.clone();
     let math = cfg.math_policy;
@@ -159,6 +179,136 @@ pub fn run_serving_native(
         Ok(ModelExecutor::native_from_weights_policy(&w, &name, ts, math))
     };
     serve_core(factory, ts, cfg, policy)
+}
+
+/// Streaming continuous-inference serving: S resident sessions, one
+/// lockstep stateful engine call per tick.
+///
+/// This is the workload the stateless pipeline cannot express: every
+/// detector stream keeps its `(h, c)` resident across windows
+/// ([`crate::stream`]), so each tick scores only the `cfg.stream_hop` NEW
+/// samples per stream instead of re-encoding a full window from zeros.
+/// Topology is deliberately single-threaded: resident state must live
+/// exactly where the engine runs, and the lockstep group (all S sessions
+/// advance in one [`ModelExecutor::score_batch_stateful`] call) *is* the
+/// parallelism — the streaming analogue of micro-batch dispatch, without
+/// the queueing latency the paper's Section V-C warns about.
+///
+/// Uses `cfg.stream_sessions` concurrent synthetic feeds, `cfg.stream_hop`
+/// samples per chunk, `cfg.stream_ttl` idle-tick eviction, and the native
+/// batched backend under `cfg.math_policy` (both tiers supported). The
+/// threshold is calibrated on a *stateful* background session so it
+/// matches the serving score distribution.
+pub fn run_serving_streaming(
+    weights: &AutoencoderWeights,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let hop = cfg.stream_hop.max(1);
+    let sessions = cfg.stream_sessions.max(1);
+    let exe = ModelExecutor::native_from_weights_policy(weights, &cfg.model, hop, cfg.math_policy);
+    let platform = format!("{}+streaming", exe.platform());
+    let compile_ms = exe.compile_ms;
+    let metrics = Metrics::new();
+
+    // ---- calibration: one background stream scored as a stateful session
+    // (the serving path conditions scores on resident state, so the
+    // threshold must be calibrated on stateful scores too) ----
+    let scfg = StreamConfig {
+        hop,
+        ttl_ticks: cfg.stream_ttl.max(1),
+        max_sessions: sessions.max(1) + 1,
+    };
+    let mut router = StreamRouter::new(&exe, scfg)?;
+    const CALIB_ID: u64 = u64::MAX;
+    let mut calib_stream = StrainStream::new(0xCA11B, hop, cfg.snr, 0.0);
+    let mut bg_scores = Vec::with_capacity(cfg.calib_windows);
+    for i in 0..cfg.calib_windows as u64 {
+        router.ingest(CALIB_ID, &calib_stream.next_window().samples, i);
+        for s in router.dispatch(&exe, i)? {
+            bg_scores.push(s.score as f64);
+        }
+    }
+    router.evict(CALIB_ID);
+    let detector = Detector::calibrate(&bg_scores, cfg.target_fpr);
+
+    // ---- serve: S synthetic detector feeds, hop-sized chunks per tick ----
+    let mut feeds: Vec<StrainStream> = (0..sessions)
+        .map(|s| {
+            StrainStream::new(
+                0x57EA4 ^ (s as u64).wrapping_mul(0x9E37_79B9),
+                hop,
+                cfg.snr,
+                cfg.inject_prob,
+            )
+        })
+        .collect();
+    let max_windows = cfg.max_windows.max(1);
+    let mut detections: Vec<Detection> = Vec::with_capacity(max_windows);
+    let mut scores = Vec::with_capacity(max_windows);
+    let mut labels: Vec<u8> = Vec::with_capacity(max_windows);
+    let started = Instant::now();
+    let mut served = 0usize;
+    let mut seq = 0u64;
+    let mut tick = cfg.calib_windows as u64;
+    while served < max_windows {
+        // admit one chunk per feed (stop admitting once the quota is met);
+        // each chunk carries its own admission timestamp so e2e latency is
+        // per-item, same as serve_core's WorkItem stamping
+        let mut tick_meta: HashMap<u64, (u8, Instant)> = HashMap::new();
+        for (s, feed) in feeds.iter_mut().enumerate() {
+            if served + tick_meta.len() >= max_windows {
+                break;
+            }
+            let w = feed.next_window();
+            metrics.windows_in.fetch_add(1, Ordering::Relaxed);
+            router.ingest(s as u64, &w.samples, tick);
+            tick_meta.insert(s as u64, (w.label, Instant::now()));
+        }
+        // ONE lockstep stateful call over every ready session
+        let t0 = Instant::now();
+        let scored = router.dispatch(&exe, tick)?;
+        let batch_ns = t0.elapsed().as_nanos() as u64;
+        if !scored.is_empty() {
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            let per_ns = batch_ns / scored.len() as u64;
+            for sc in &scored {
+                metrics.infer.record_ns(per_ns);
+                metrics.windows_done.fetch_add(1, Ordering::Relaxed);
+                let meta = tick_meta.get(&sc.stream);
+                if let Some((_, admitted)) = meta {
+                    metrics.e2e.record_ns(admitted.elapsed().as_nanos() as u64);
+                }
+                let label = meta.map(|(l, _)| *l);
+                let det = detector.classify(seq, sc.score as f64, label);
+                if det.flagged {
+                    metrics.flagged.fetch_add(1, Ordering::Relaxed);
+                }
+                scores.push(sc.score as f64);
+                labels.push(label.unwrap_or(0));
+                detections.push(det);
+                seq += 1;
+                served += 1;
+            }
+        }
+        router.evict_expired(tick);
+        tick += 1;
+    }
+    let batches = metrics.batches.load(Ordering::Relaxed);
+    Ok(ServeReport {
+        model: cfg.model.clone(),
+        platform,
+        windows: detections.len(),
+        dropped: 0,
+        batches,
+        mean_batch: detections.len() as f64 / batches.max(1) as f64,
+        threshold: detector.threshold,
+        auc: auc(&scores, &labels),
+        summary: DetectionSummary::from_detections(&detections),
+        e2e: metrics.e2e.snapshot(),
+        infer: metrics.infer.snapshot(),
+        throughput_per_s: metrics.throughput_per_s(started),
+        compile_ms,
+    })
 }
 
 /// The backend-generic pipeline: calibration, worker fan-out, paced

@@ -1,0 +1,260 @@
+//! Stream router: one lockstep batched call per tick over every ready
+//! streaming session.
+//!
+//! The micro-batch dispatcher ([`super::batcher`]/[`super::router`]) groups
+//! *stateless* windows; this router is its streaming twin. Each dispatch:
+//!
+//! ```text
+//!   ready sessions (ascending id)      s3   s7   s9
+//!        take one hop-sized chunk      [c]  [c]  [c]   -> flat (B, hop)
+//!        gather resident states        r0 <-s3, r1 <-s7, r2 <-s9
+//!        ONE stateful lockstep call    score_batch_stateful(chunks, B)
+//!        scatter advanced states       s3 <-r0, s7 <-r1, s9 <-r2
+//! ```
+//!
+//! so B concurrent detector streams share every packed-weight traversal
+//! (the same amortization the stateless engine gets) *and* each pays only
+//! O(hop) per new chunk instead of re-encoding a full window from zeros.
+//!
+//! Isolation contract: lockstep rows are independent in the engine, so a
+//! session's scores never depend on which other sessions shared its batch
+//! — `tests/streaming_parity.rs` pins this against isolated-session
+//! references under random interleavings.
+
+use anyhow::Result;
+
+use crate::model::StreamState;
+use crate::runtime::ModelExecutor;
+use crate::stream::{SessionRegistry, SessionSnapshot, StreamConfig};
+
+/// One scored streaming chunk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamScore {
+    /// Stream (session) id the chunk belongs to.
+    pub stream: u64,
+    /// Reconstruction-MSE anomaly score of the chunk, conditioned on the
+    /// session's resident state.
+    pub score: f32,
+}
+
+/// Groups same-tick chunks from different sessions into one lockstep
+/// batched stateful call.
+///
+/// ```
+/// use gwlstm::coordinator::StreamRouter;
+/// use gwlstm::model::AutoencoderWeights;
+/// use gwlstm::runtime::ModelExecutor;
+/// use gwlstm::stream::StreamConfig;
+///
+/// let w = AutoencoderWeights::synthetic(6, "small");
+/// let exe = ModelExecutor::native_from_weights(&w, "demo", 8);
+/// let cfg = StreamConfig { hop: 4, ..Default::default() };
+/// let mut router = StreamRouter::new(&exe, cfg).unwrap();
+///
+/// router.ingest(3, &[0.1; 4], 0);
+/// router.ingest(9, &[0.2; 4], 0);
+/// let scored = router.dispatch(&exe, 0).unwrap();   // one call, B = 2
+/// assert_eq!(scored.len(), 2);
+/// assert_eq!(scored[0].stream, 3); // ascending id order
+/// assert!(router.dispatch(&exe, 1).unwrap().is_empty()); // nothing ready
+/// ```
+pub struct StreamRouter {
+    registry: SessionRegistry,
+    /// Flat `(B, hop)` chunk gather buffer, reused across dispatches.
+    gather: Vec<f32>,
+    /// Lockstep group state, reused across dispatches (rebuilt only when
+    /// the ready-set size changes). Safe to reuse: every row is fully
+    /// overwritten by the per-session gather before the engine reads it.
+    group: Option<StreamState>,
+}
+
+impl StreamRouter {
+    /// Build a router whose sessions resume from `exe`'s zero state
+    /// (native backend only — errors on PJRT, which cannot host state).
+    pub fn new(exe: &ModelExecutor, cfg: StreamConfig) -> Result<StreamRouter> {
+        let proto = exe.stream_state(1)?;
+        Ok(StreamRouter {
+            registry: SessionRegistry::new(cfg, proto),
+            gather: Vec::new(),
+            group: None,
+        })
+    }
+
+    /// Read access to the session registry (tests, reporting).
+    pub fn registry(&self) -> &SessionRegistry {
+        &self.registry
+    }
+
+    /// Ingest raw samples for stream `id` at tick `now` (sessions are
+    /// created on first contact).
+    pub fn ingest(&mut self, id: u64, samples: &[f32], now: u64) {
+        self.registry.ingest(id, samples, now);
+    }
+
+    /// Advance every ready session (≥ one hop pending) by exactly one
+    /// chunk through ONE lockstep stateful engine call; returns per-stream
+    /// scores in ascending session-id order. Sessions with more than one
+    /// hop pending stay ready for the next dispatch (call in a loop to
+    /// drain). An empty return means no session was ready.
+    ///
+    /// On engine error the consumed chunks are lost (with the native
+    /// backend the only error sources are construction-time shape
+    /// mismatches, not data-dependent failures).
+    pub fn dispatch(&mut self, exe: &ModelExecutor, now: u64) -> Result<Vec<StreamScore>> {
+        let hop = self.registry.config().hop;
+        let ids = self.registry.ready_ids();
+        if ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let batch = ids.len();
+        self.gather.clear();
+        if self.group.as_ref().map(|g| g.batch) != Some(batch) {
+            self.group = Some(exe.stream_state(batch)?);
+        }
+        let group = self.group.as_mut().expect("group state just ensured");
+        for (b, id) in ids.iter().enumerate() {
+            let sess = self.registry.get_mut(*id).expect("ready session exists");
+            let took = sess.take_chunk_into(hop, &mut self.gather);
+            debug_assert!(took, "ready_ids promised a full hop");
+            group.load_row(b, &sess.state, 0);
+        }
+        let scores = exe.score_batch_stateful(&self.gather, batch, group)?;
+        let mut out = Vec::with_capacity(batch);
+        for (b, id) in ids.iter().enumerate() {
+            let sess = self.registry.get_mut(*id).expect("ready session exists");
+            sess.state.load_row(0, group, b);
+            sess.last_tick = now;
+            out.push(StreamScore {
+                stream: *id,
+                score: scores[b],
+            });
+        }
+        Ok(out)
+    }
+
+    /// Evict sessions idle past the configured TTL; returns warm-restart
+    /// snapshots (see [`StreamRouter::restore`]).
+    pub fn evict_expired(&mut self, now: u64) -> Vec<SessionSnapshot> {
+        self.registry.evict_expired(now)
+    }
+
+    /// Remove one session, returning its warm-restartable snapshot.
+    pub fn evict(&mut self, id: u64) -> Option<SessionSnapshot> {
+        self.registry.evict(id)
+    }
+
+    /// Warm restart: reinstall an evicted session; continuing the stream
+    /// is bit-identical to never having evicted it.
+    pub fn restore(&mut self, snap: SessionSnapshot, now: u64) {
+        self.registry.restore(snap, now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::AutoencoderWeights;
+
+    fn exe() -> ModelExecutor {
+        let w = AutoencoderWeights::synthetic(41, "small");
+        ModelExecutor::native_from_weights(&w, "small_stream", 8)
+    }
+
+    fn cfg(hop: usize) -> StreamConfig {
+        StreamConfig {
+            hop,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn dispatch_groups_ready_sessions_only() {
+        let exe = exe();
+        let mut r = StreamRouter::new(&exe, cfg(4)).unwrap();
+        r.ingest(5, &[0.1; 4], 0);
+        r.ingest(2, &[0.2; 4], 0);
+        r.ingest(8, &[0.3; 2], 0); // below hop
+        let scored = r.dispatch(&exe, 0).unwrap();
+        assert_eq!(
+            scored.iter().map(|s| s.stream).collect::<Vec<_>>(),
+            vec![2, 5]
+        );
+        assert_eq!(r.registry().get(8).unwrap().pending_len(), 2);
+        assert_eq!(r.registry().get(2).unwrap().windows_done, 1);
+    }
+
+    #[test]
+    fn multi_hop_backlog_drains_one_chunk_per_dispatch() {
+        let exe = exe();
+        let mut r = StreamRouter::new(&exe, cfg(3)).unwrap();
+        r.ingest(1, &[0.5; 7], 0); // 2 full hops + 1 leftover
+        assert_eq!(r.dispatch(&exe, 0).unwrap().len(), 1);
+        assert_eq!(r.dispatch(&exe, 1).unwrap().len(), 1);
+        assert!(r.dispatch(&exe, 2).unwrap().is_empty());
+        assert_eq!(r.registry().get(1).unwrap().pending_len(), 1);
+    }
+
+    #[test]
+    fn batched_dispatch_matches_isolated_sessions() {
+        // Two sessions scored in one lockstep call must each match the
+        // same chunks scored through a router that only ever saw them.
+        let exe = exe();
+        let chunk_a: Vec<f32> = (0..4).map(|i| (i as f32 * 0.4).sin()).collect();
+        let chunk_b: Vec<f32> = (0..4).map(|i| (i as f32 * 0.7).cos()).collect();
+        let mut shared = StreamRouter::new(&exe, cfg(4)).unwrap();
+        let mut solo_a = StreamRouter::new(&exe, cfg(4)).unwrap();
+        let mut solo_b = StreamRouter::new(&exe, cfg(4)).unwrap();
+        for tick in 0..3u64 {
+            shared.ingest(10, &chunk_a, tick);
+            shared.ingest(20, &chunk_b, tick);
+            solo_a.ingest(10, &chunk_a, tick);
+            solo_b.ingest(20, &chunk_b, tick);
+            let got = shared.dispatch(&exe, tick).unwrap();
+            let want_a = solo_a.dispatch(&exe, tick).unwrap();
+            let want_b = solo_b.dispatch(&exe, tick).unwrap();
+            assert_eq!(got[0], want_a[0], "tick {tick}");
+            assert_eq!(got[1], want_b[0], "tick {tick}");
+        }
+    }
+
+    #[test]
+    fn evict_then_recreate_restarts_from_zero_state() {
+        let exe = exe();
+        let chunk: Vec<f32> = (0..4).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut r = StreamRouter::new(&exe, cfg(4)).unwrap();
+        r.ingest(1, &chunk, 0);
+        let first = r.dispatch(&exe, 0).unwrap()[0].score;
+        r.ingest(1, &chunk, 1);
+        let continued = r.dispatch(&exe, 1).unwrap()[0].score;
+        assert_ne!(first, continued, "state must have advanced");
+        // evict + recreate: same chunk scores like the very first one
+        assert!(r.evict(1).is_some());
+        r.ingest(1, &chunk, 2);
+        let fresh = r.dispatch(&exe, 2).unwrap()[0].score;
+        assert_eq!(fresh, first, "recreated session must re-encode from zeros");
+    }
+
+    #[test]
+    fn warm_restart_resumes_bitexact() {
+        let exe = exe();
+        let chunk: Vec<f32> = (0..4).map(|i| (i as f32 * 0.9).sin()).collect();
+        let mut uninterrupted = StreamRouter::new(&exe, cfg(4)).unwrap();
+        let mut evicted = StreamRouter::new(&exe, cfg(4)).unwrap();
+        for tick in 0..2u64 {
+            uninterrupted.ingest(1, &chunk, tick);
+            evicted.ingest(1, &chunk, tick);
+            let a = uninterrupted.dispatch(&exe, tick).unwrap();
+            let b = evicted.dispatch(&exe, tick).unwrap();
+            assert_eq!(a, b);
+        }
+        let snap = evicted.evict(1).unwrap();
+        evicted.restore(snap, 2);
+        uninterrupted.ingest(1, &chunk, 3);
+        evicted.ingest(1, &chunk, 3);
+        assert_eq!(
+            uninterrupted.dispatch(&exe, 3).unwrap(),
+            evicted.dispatch(&exe, 3).unwrap(),
+            "warm restart must be bit-identical to no eviction"
+        );
+    }
+}

@@ -31,6 +31,13 @@
 //!   batch-1 latency mode), threshold calibration, metrics. The paper
 //!   argues batch-1 for latency; the batched path exposes the opposing
 //!   throughput trade-off so both ends are measurable (`benches/`).
+//! * [`stream`] — the streaming state service: per-stream resident
+//!   `(h, c)` sessions ([`stream::SessionRegistry`], TTL/LRU eviction,
+//!   warm-restart snapshots) so continuous inference pays O(hop) per new
+//!   chunk instead of re-encoding every window from zeros — see
+//!   ARCHITECTURE.md for the session lifecycle; the coordinator's
+//!   `StreamRouter` groups ready sessions into one lockstep stateful call
+//!   per tick.
 //! * [`eval`] — ROC/AUC machinery for the Fig. 9 accuracy reproduction.
 //! * [`hls`]/[`sim`] — the FPGA substitute: device catalog, Eqs. (1)–(7)
 //!   performance model, reuse-factor DSE, Pareto frontiers, and an
@@ -52,6 +59,7 @@ pub mod model;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod stream;
 pub mod util;
 
 /// Crate-wide result type (anyhow is the only error dependency available

@@ -17,11 +17,17 @@
 //!              [--batch N]   micro-batch dispatch through the batched engine
 //!              [--native]    artifact-less native batched backend (synthetic weights)
 //!              [--math bitexact|fast_simd]   native-engine math tier (model::simd)
+//!              [--streaming] [--sessions S] [--hop H]
+//!                            streaming state service: S resident per-stream
+//!                            (h, c) sessions, one lockstep stateful call per
+//!                            tick, O(hop) per new chunk (requires --native)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 use gwlstm::config::{Manifest, ServeConfig};
-use gwlstm::coordinator::{run_serving_native, run_serving_with_policy, Policy};
+use gwlstm::coordinator::{
+    run_serving_native, run_serving_streaming, run_serving_with_policy, Policy,
+};
 use gwlstm::gw::dataset::DEFAULT_SNR;
 use gwlstm::model::AutoencoderWeights;
 use gwlstm::hls::device::Device;
@@ -314,6 +320,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.pace_us = args.usize_or("pace-us", cfg.pace_us as usize)? as u64;
     // --batch N > 1 switches to micro-batch dispatch (one batched-engine
     // call per drained batch); default is the paper's batch-1 mode.
+    let batch_flag = args.get("batch").is_some();
     let max_batch = args.usize_or("batch", 1)?;
     // --native serves through the in-tree batched engine on synthetic
     // weights — runs in any environment, no artifacts or PJRT needed.
@@ -324,6 +331,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(m) = &math_flag {
         cfg.math_policy = gwlstm::model::MathPolicy::parse(m)?;
     }
+    // --streaming serves the streaming state service: resident per-stream
+    // (h, c) continued across chunks instead of re-encoding from zeros.
+    if args.flag("streaming") {
+        cfg.streaming = true;
+    }
+    let sessions_flag = args.get("sessions").is_some();
+    let hop_flag = args.get("hop").is_some();
+    cfg.stream_sessions = args.usize_or("sessions", cfg.stream_sessions)?;
+    cfg.stream_hop = args.usize_or("hop", cfg.stream_hop)?;
     let arch = if cfg.model.contains("nominal") { "nominal" } else { "small" };
     let ts_flag = args.get("ts").map(str::to_string);
     let ts = args.usize_or("ts", if arch == "nominal" { 100 } else { 8 })?;
@@ -333,6 +349,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if math_flag.is_some() && !native {
         bail!("--math only applies with --native (the PJRT artifact datapath has no math tier)");
+    }
+    if cfg.streaming && !native {
+        bail!(
+            "--streaming requires --native (resident session state lives in \
+             the native batched engine; the PJRT artifact is stateless)"
+        );
+    }
+    if cfg.streaming && batch_flag {
+        // Reject rather than silently ignore (same convention as --math
+        // without --native): streaming dispatch is already one lockstep
+        // stateful call per tick over all ready sessions, so the
+        // micro-batch policy does not apply.
+        bail!("--batch does not apply with --streaming (use --sessions to size the lockstep group)");
+    }
+    if (sessions_flag || hop_flag) && !cfg.streaming {
+        bail!("--sessions/--hop only apply with --streaming (the stateless pipeline has no resident sessions)");
     }
     let policy = if max_batch > 1 {
         Policy::MicroBatch {
@@ -344,7 +376,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let report = if native {
         let weights = AutoencoderWeights::synthetic(0xD0E, arch);
-        run_serving_native(&weights, ts, &cfg, policy)?
+        if cfg.streaming {
+            run_serving_streaming(&weights, &cfg)?
+        } else {
+            run_serving_native(&weights, ts, &cfg, policy)?
+        }
     } else {
         let manifest = Manifest::load(&dir)?;
         run_serving_with_policy(&manifest, &cfg, policy)?

@@ -44,6 +44,18 @@
 //! activation scratch lives in a [`BatchedScratch`] owned by the
 //! [`PackedAutoencoder`] and reused across timesteps, layers, and calls.
 //!
+//! # Streaming continuation
+//!
+//! Every entry point has a `*_stateful` twin that starts the recurrence
+//! from a caller-resident state instead of zeros and writes the final
+//! `(h, c)` back: [`BatchedLstm::run_stateful`] against one layer's
+//! [`BatchedState`], [`PackedAutoencoder::forward_batch_stateful`] /
+//! [`PackedAutoencoder::score_batch_stateful`] against the all-layer
+//! [`StreamState`]. Chunking a sequence across stateful calls is
+//! bit-identical to one contiguous call (same per-element op sequence in
+//! both math tiers) — the substrate of the continuous-inference streaming
+//! service in [`crate::stream`].
+//!
 //! Layouts:
 //! * sequence tensors are **batch-major**: `(B, TS, width)` row-major, i.e.
 //!   stream b's window is the contiguous slice `[b*ts*w .. (b+1)*ts*w]`;
@@ -89,6 +101,16 @@ pub struct PackedMatrix {
 
 impl PackedMatrix {
     /// Pack `src`, a `(k, n)` row-major matrix, with the default tile.
+    ///
+    /// ```
+    /// use gwlstm::model::batched::PackedMatrix;
+    ///
+    /// // z += x @ W for a (1, 2) x, (2, 3) W — matches the naive product
+    /// let w = PackedMatrix::pack(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+    /// let mut z = vec![0.0f32; 3];
+    /// w.gemm_acc(&[10.0, 100.0], 1, &mut z);
+    /// assert_eq!(z, vec![410.0, 520.0, 630.0]);
+    /// ```
     pub fn pack(src: &[f32], k: usize, n: usize) -> PackedMatrix {
         PackedMatrix::pack_with_tile(src, k, n, GEMM_TILE)
     }
@@ -214,7 +236,9 @@ impl PackedMatrix {
 /// layout.
 #[derive(Debug, Clone)]
 pub struct LstmWeightsPacked {
+    /// Input width of the layer.
     pub lx: usize,
+    /// Hidden width of the layer.
     pub lh: usize,
     /// `(Lx, 4Lh)` input weights, panel-packed.
     pub wx: PackedMatrix,
@@ -225,6 +249,8 @@ pub struct LstmWeightsPacked {
 }
 
 impl LstmWeightsPacked {
+    /// Repack one layer's row-major weights into the panel layout (done
+    /// once at load time; the hot loop never touches the row-major form).
     pub fn from_weights(w: &LstmWeights) -> LstmWeightsPacked {
         let l4 = 4 * w.lh;
         LstmWeightsPacked {
@@ -239,21 +265,123 @@ impl LstmWeightsPacked {
 
 /// Mutable lockstep state for B concurrent streams: `(B, Lh)` row-major
 /// hidden and cell tensors.
+///
+/// This is both the *transient* state a [`BatchedLstm::run`] call owns
+/// internally and, since the streaming state service, the *resident* state
+/// a continuous-inference session keeps alive between windows (see
+/// [`StreamState`] for the all-layer container and
+/// [`BatchedLstm::run_stateful`] for the continuation entry point).
+///
+/// ```
+/// use gwlstm::model::batched::BatchedState;
+///
+/// let st = BatchedState::zeros(3, 8);
+/// assert_eq!((st.batch, st.lh), (3, 8));
+/// assert_eq!(st.h.len(), 3 * 8);
+/// assert!(st.h.iter().chain(&st.c).all(|&v| v == 0.0));
+/// ```
 #[derive(Debug, Clone)]
 pub struct BatchedState {
+    /// Lockstep stream rows in this state block.
     pub batch: usize,
+    /// Hidden width of the layer this state belongs to.
     pub lh: usize,
+    /// `(B, Lh)` row-major hidden state.
     pub h: Vec<f32>,
+    /// `(B, Lh)` row-major cell state.
     pub c: Vec<f32>,
 }
 
 impl BatchedState {
+    /// The zero initial state (what every stream starts from — and what a
+    /// stateless `run` re-encodes from on every window).
     pub fn zeros(batch: usize, lh: usize) -> BatchedState {
         BatchedState {
             batch,
             lh,
             h: vec![0.0; batch * lh],
             c: vec![0.0; batch * lh],
+        }
+    }
+
+    /// Copy stream row `src_row` of `src` into row `row` of `self` (both
+    /// `h` and `c`). This is the gather/scatter primitive the stream
+    /// router uses to assemble per-session resident states into one
+    /// lockstep group state and back.
+    ///
+    /// ```
+    /// use gwlstm::model::batched::BatchedState;
+    ///
+    /// let mut group = BatchedState::zeros(2, 4);
+    /// let mut session = BatchedState::zeros(1, 4);
+    /// session.h.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+    /// group.copy_row_from(1, &session, 0);
+    /// assert_eq!(&group.h[4..8], &[1.0, 2.0, 3.0, 4.0]);
+    /// assert_eq!(&group.h[..4], &[0.0; 4]); // row 0 untouched
+    /// ```
+    pub fn copy_row_from(&mut self, row: usize, src: &BatchedState, src_row: usize) {
+        assert_eq!(self.lh, src.lh, "state width mismatch");
+        assert!(row < self.batch, "destination row out of range");
+        assert!(src_row < src.batch, "source row out of range");
+        let lh = self.lh;
+        self.h[row * lh..(row + 1) * lh]
+            .copy_from_slice(&src.h[src_row * lh..(src_row + 1) * lh]);
+        self.c[row * lh..(row + 1) * lh]
+            .copy_from_slice(&src.c[src_row * lh..(src_row + 1) * lh]);
+    }
+}
+
+/// Resident all-layer state of one detector stream (or a lockstep group of
+/// them): one [`BatchedState`] per LSTM layer of the autoencoder, in layer
+/// order (encoder layers first, then decoder layers).
+///
+/// This is the unit the streaming state service keeps alive per session
+/// ([`crate::stream`]): consecutive windows of one stream continue from the
+/// previous `(h, c)` via [`PackedAutoencoder::forward_batch_stateful`]
+/// instead of re-encoding from zeros. Build one with
+/// [`PackedAutoencoder::zero_state`].
+///
+/// ```
+/// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+///
+/// let w = AutoencoderWeights::synthetic(1, "small");
+/// let eng = PackedAutoencoder::from_weights(&w);
+/// let state = eng.zero_state(2);
+/// assert_eq!(state.batch, 2);
+/// assert_eq!(state.layers.len(), 2); // small = 1 encoder + 1 decoder layer
+/// ```
+#[derive(Debug, Clone)]
+pub struct StreamState {
+    /// Lockstep stream rows held by every layer state.
+    pub batch: usize,
+    /// Per-layer `(h, c)` blocks, one per LSTM layer (encoder then decoder).
+    pub layers: Vec<BatchedState>,
+}
+
+impl StreamState {
+    /// Copy stream row `src_row` of `src` into row `row` of `self` across
+    /// every layer. The stream router's gather (sessions → group) and
+    /// scatter (group → sessions) are both this one primitive.
+    ///
+    /// ```
+    /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+    ///
+    /// let w = AutoencoderWeights::synthetic(2, "small");
+    /// let eng = PackedAutoencoder::from_weights(&w);
+    /// let mut session = eng.zero_state(1);
+    /// session.layers[0].h[0] = 0.5;
+    /// let mut group = eng.zero_state(3);
+    /// group.load_row(2, &session, 0); // gather
+    /// assert_eq!(group.layers[0].h[2 * group.layers[0].lh], 0.5);
+    /// ```
+    pub fn load_row(&mut self, row: usize, src: &StreamState, src_row: usize) {
+        assert_eq!(
+            self.layers.len(),
+            src.layers.len(),
+            "state layer count mismatch"
+        );
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            dst.copy_row_from(row, s, src_row);
         }
     }
 }
@@ -290,6 +418,7 @@ pub struct BatchedScratch {
 }
 
 impl BatchedScratch {
+    /// Empty scratch; buffers grow on first use and are then reused.
     pub fn new() -> BatchedScratch {
         BatchedScratch::default()
     }
@@ -315,16 +444,19 @@ fn resize_only(buf: &mut Vec<f32>, len: usize) {
 /// One LSTM layer ready to advance B streams per weight traversal.
 #[derive(Debug, Clone)]
 pub struct BatchedLstm {
+    /// The layer's packed weights.
     pub w: LstmWeightsPacked,
     /// Math tier this layer evaluates under (see module docs).
     pub policy: MathPolicy,
 }
 
 impl BatchedLstm {
+    /// Pack one layer for batched execution, default `BitExact` tier.
     pub fn from_weights(w: &LstmWeights) -> BatchedLstm {
         BatchedLstm::from_weights_policy(w, MathPolicy::BitExact)
     }
 
+    /// Pack one layer with an explicit math tier.
     pub fn from_weights_policy(w: &LstmWeights, policy: MathPolicy) -> BatchedLstm {
         BatchedLstm {
             w: LstmWeightsPacked::from_weights(w),
@@ -336,6 +468,20 @@ impl BatchedLstm {
     /// `xs` is `(B, TS, Lx)` batch-major; returns all hidden vectors
     /// `(B, TS, Lh)` batch-major — under `BitExact`, stream b's output
     /// equals `lstm_layer` run alone on stream b.
+    ///
+    /// Every stream starts from the zero `(h, c)` state; use
+    /// [`BatchedLstm::run_stateful`] to continue from a resident state.
+    ///
+    /// ```
+    /// use gwlstm::model::batched::BatchedLstm;
+    /// use gwlstm::model::AutoencoderWeights;
+    ///
+    /// let w = AutoencoderWeights::synthetic(5, "small");
+    /// let layer = BatchedLstm::from_weights(&w.layers[0]); // Lx=1, Lh=9
+    /// let xs: Vec<f32> = (0..2 * 6).map(|i| (i as f32 * 0.3).sin()).collect();
+    /// let hs = layer.run(&xs, 2, 6);
+    /// assert_eq!(hs.len(), 2 * 6 * 9); // (B, TS, Lh) batch-major
+    /// ```
     pub fn run(&self, xs: &[f32], batch: usize, ts: usize) -> Vec<f32> {
         let mut scratch = LayerScratch::default();
         let mut out = Vec::new();
@@ -353,6 +499,74 @@ impl BatchedLstm {
         scratch: &mut LayerScratch,
         out: &mut Vec<f32>,
     ) {
+        self.run_core(xs, batch, ts, scratch, out, None);
+    }
+
+    /// Stateful continuation: like [`BatchedLstm::run`], but the recurrence
+    /// starts from the caller's resident `state` and the final `(h, c)` is
+    /// written back into it. Feeding a sequence chunk-by-chunk through the
+    /// same state is **bit-identical** to one contiguous [`BatchedLstm::run`]
+    /// over the concatenation — in *both* math tiers, because chunking
+    /// changes neither the per-element accumulation order nor any operand
+    /// (`tests/streaming_parity.rs` pins this for ragged hop schedules).
+    ///
+    /// `state.batch` must equal `batch` and `state.lh` the layer width.
+    ///
+    /// ```
+    /// use gwlstm::model::batched::{BatchedLstm, BatchedState};
+    /// use gwlstm::model::AutoencoderWeights;
+    ///
+    /// let w = AutoencoderWeights::synthetic(7, "small");
+    /// let layer = BatchedLstm::from_weights(&w.layers[0]); // Lx=1, Lh=9
+    /// let xs: Vec<f32> = (0..10).map(|i| (i as f32 * 0.3).sin()).collect();
+    /// // one contiguous window ...
+    /// let full = layer.run(&xs, 1, 10);
+    /// // ... equals two chunks with the state carried across the cut
+    /// let mut st = BatchedState::zeros(1, 9);
+    /// let head = layer.run_stateful(&xs[..4], 1, 4, &mut st);
+    /// let tail = layer.run_stateful(&xs[4..], 1, 6, &mut st);
+    /// assert_eq!([head, tail].concat(), full);
+    /// ```
+    pub fn run_stateful(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        ts: usize,
+        state: &mut BatchedState,
+    ) -> Vec<f32> {
+        let mut scratch = LayerScratch::default();
+        let mut out = Vec::new();
+        self.run_stateful_into(xs, batch, ts, &mut scratch, &mut out, state);
+        out
+    }
+
+    /// [`BatchedLstm::run_stateful`] with caller-owned scratch and output
+    /// buffers — the zero-allocation streaming serving path.
+    pub fn run_stateful_into(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        ts: usize,
+        scratch: &mut LayerScratch,
+        out: &mut Vec<f32>,
+        state: &mut BatchedState,
+    ) {
+        self.run_core(xs, batch, ts, scratch, out, Some(state));
+    }
+
+    /// The shared layer loop. With `state = None` the recurrence starts
+    /// from zeros in scratch-owned buffers (the stateless contract); with
+    /// `Some`, it runs directly on the resident `(h, c)` vectors — no
+    /// copy in, no copy out, the state simply *is* the lockstep buffer.
+    fn run_core(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        ts: usize,
+        scratch: &mut LayerScratch,
+        out: &mut Vec<f32>,
+        state: Option<&mut BatchedState>,
+    ) {
         let (lx, lh) = (self.w.lx, self.w.lh);
         let l4 = 4 * lh;
         assert!(batch > 0, "batch must be positive");
@@ -366,11 +580,25 @@ impl BatchedLstm {
         // Sub-layer 2: the recurrent loop, B states in lockstep. The gate
         // buffer, gather, and output are fully overwritten each timestep
         // before being read, so they only need the length fixed; h/c are
-        // the zero initial state and xw (above) is accumulated into.
+        // either the zero initial state (stateless) or the caller's
+        // resident state (streaming continuation); xw (above) is
+        // accumulated into.
         resize_only(z, batch * l4);
         resize_only(xw_t, batch * l4);
-        reset(h, batch * lh);
-        reset(c, batch * lh);
+        let (h, c): (&mut Vec<f32>, &mut Vec<f32>) = match state {
+            Some(st) => {
+                assert_eq!(st.batch, batch, "state batch mismatch");
+                assert_eq!(st.lh, lh, "state width mismatch");
+                assert_eq!(st.h.len(), batch * lh, "state h length");
+                assert_eq!(st.c.len(), batch * lh, "state c length");
+                (&mut st.h, &mut st.c)
+            }
+            None => {
+                reset(h, batch * lh);
+                reset(c, batch * lh);
+                (h, c)
+            }
+        };
         resize_only(out, batch * ts * lh);
         for t in 0..ts {
             // gather this step's (B, 4Lh) slice from the batch-major xw
@@ -436,10 +664,12 @@ impl Clone for PackedAutoencoder {
 }
 
 impl PackedAutoencoder {
+    /// Pack every layer for batched execution, default `BitExact` tier.
     pub fn from_weights(w: &AutoencoderWeights) -> PackedAutoencoder {
         PackedAutoencoder::from_weights_policy(w, MathPolicy::BitExact)
     }
 
+    /// Pack every layer with an explicit math tier.
     pub fn from_weights_policy(w: &AutoencoderWeights, policy: MathPolicy) -> PackedAutoencoder {
         PackedAutoencoder {
             layers: w
@@ -461,9 +691,46 @@ impl PackedAutoencoder {
         self.policy
     }
 
+    /// Zero-initialized resident state for `batch` lockstep streams: one
+    /// [`BatchedState`] per LSTM layer, each `(batch, Lh_layer)`. This is
+    /// what a fresh streaming session starts from (and what "re-encode
+    /// from zeros" means: throwing this away every window).
+    ///
+    /// ```
+    /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+    ///
+    /// let w = AutoencoderWeights::synthetic(3, "nominal");
+    /// let eng = PackedAutoencoder::from_weights(&w);
+    /// let st = eng.zero_state(4);
+    /// assert_eq!(st.layers.len(), 4); // nominal = 2 encoder + 2 decoder
+    /// assert_eq!(st.layers[0].lh, 32);
+    /// assert_eq!(st.layers[0].h.len(), 4 * 32);
+    /// ```
+    pub fn zero_state(&self, batch: usize) -> StreamState {
+        assert!(batch > 0, "batch must be positive");
+        StreamState {
+            batch,
+            layers: self
+                .layers
+                .iter()
+                .map(|l| BatchedState::zeros(batch, l.w.lh))
+                .collect(),
+        }
+    }
+
     /// Reconstruct B windows in lockstep. `windows` is `(B, TS)` batch-major
     /// (d_in = 1); returns `(B, TS * d_out)` reconstructions — under
     /// `BitExact`, stream b equal to `forward_f32` run alone on stream b.
+    ///
+    /// ```
+    /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+    ///
+    /// let w = AutoencoderWeights::synthetic(11, "small");
+    /// let eng = PackedAutoencoder::from_weights(&w);
+    /// let windows = vec![0.25f32; 3 * 8]; // B=3 windows of ts=8
+    /// let rec = eng.forward_batch(&windows, 3);
+    /// assert_eq!(rec.len(), 3 * 8);
+    /// ```
     pub fn forward_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
         let mut guard = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
         self.forward_batch_with(windows, batch, &mut guard)
@@ -477,8 +744,74 @@ impl PackedAutoencoder {
         batch: usize,
         scratch: &mut BatchedScratch,
     ) -> Vec<f32> {
+        self.forward_core(windows, batch, scratch, None)
+    }
+
+    /// Stateful continuation of B streaming sessions: every LSTM layer
+    /// (encoder and decoder) continues from `state` instead of zeros, and
+    /// the per-layer final `(h, c)` are written back. The bottleneck stays
+    /// per-window (the latent is this window's last encoder hidden vector,
+    /// repeated over its TS), so a streaming reconstruction is conditioned
+    /// on the whole stream history *through the resident states* — not a
+    /// re-run of the concatenated past. Layer-level chunk parity is exact
+    /// (see [`BatchedLstm::run_stateful`]); session-level isolation (no
+    /// state crossing between lockstep rows, results independent of batch
+    /// grouping) is pinned by `tests/streaming_parity.rs`.
+    ///
+    /// `state` must come from [`PackedAutoencoder::zero_state`] (or a
+    /// restored snapshot) with `state.batch == batch`.
+    ///
+    /// ```
+    /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+    ///
+    /// let w = AutoencoderWeights::synthetic(13, "small");
+    /// let eng = PackedAutoencoder::from_weights(&w);
+    /// let mut state = eng.zero_state(2);
+    /// let chunk = vec![0.1f32; 2 * 4]; // B=2, hop=4 samples per stream
+    /// let first = eng.forward_batch_stateful(&chunk, 2, &mut state);
+    /// let second = eng.forward_batch_stateful(&chunk, 2, &mut state);
+    /// assert_eq!(first.len(), 2 * 4);
+    /// // the resident state evolved, so the same samples reconstruct differently
+    /// assert_ne!(first, second);
+    /// ```
+    pub fn forward_batch_stateful(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        state: &mut StreamState,
+    ) -> Vec<f32> {
+        let mut guard = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        self.forward_batch_stateful_with(windows, batch, state, &mut guard)
+    }
+
+    /// [`PackedAutoencoder::forward_batch_stateful`] against caller-owned
+    /// scratch (no lock).
+    pub fn forward_batch_stateful_with(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        state: &mut StreamState,
+        scratch: &mut BatchedScratch,
+    ) -> Vec<f32> {
+        self.forward_core(windows, batch, scratch, Some(state))
+    }
+
+    /// The shared forward pass; `state = Some` threads each layer's
+    /// resident `(h, c)` through the stateful layer loop, `None` is the
+    /// stateless re-encode-from-zeros contract.
+    fn forward_core(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        scratch: &mut BatchedScratch,
+        mut state: Option<&mut StreamState>,
+    ) -> Vec<f32> {
         assert!(batch > 0, "batch must be positive");
         assert_eq!(windows.len() % batch, 0, "ragged batch");
+        if let Some(st) = state.as_deref() {
+            assert_eq!(st.batch, batch, "state batch mismatch");
+            assert_eq!(st.layers.len(), self.layers.len(), "state layer count");
+        }
         let ts = windows.len() / batch;
         let BatchedScratch {
             layer,
@@ -488,9 +821,12 @@ impl PackedAutoencoder {
         seq.clear();
         seq.extend_from_slice(windows);
         let mut width = 1usize;
-        for l in &self.layers[..self.split] {
+        for (i, l) in self.layers[..self.split].iter().enumerate() {
             assert_eq!(width, l.w.lx, "encoder layer input width");
-            l.run_into(seq, batch, ts, layer, seq_next);
+            match state.as_deref_mut() {
+                Some(st) => l.run_stateful_into(seq, batch, ts, layer, seq_next, &mut st.layers[i]),
+                None => l.run_into(seq, batch, ts, layer, seq_next),
+            }
             std::mem::swap(seq, seq_next);
             width = l.w.lh;
         }
@@ -504,9 +840,14 @@ impl PackedAutoencoder {
             }
         }
         std::mem::swap(seq, seq_next);
-        for l in &self.layers[self.split..] {
+        for (j, l) in self.layers[self.split..].iter().enumerate() {
             assert_eq!(width, l.w.lx, "decoder layer input width");
-            l.run_into(seq, batch, ts, layer, seq_next);
+            match state.as_deref_mut() {
+                Some(st) => {
+                    l.run_stateful_into(seq, batch, ts, layer, seq_next, &mut st.layers[self.split + j])
+                }
+                None => l.run_into(seq, batch, ts, layer, seq_next),
+            }
             std::mem::swap(seq, seq_next);
             width = l.w.lh;
         }
@@ -525,17 +866,60 @@ impl PackedAutoencoder {
     }
 
     /// Per-stream reconstruction-MSE anomaly scores for a micro-batch.
+    ///
+    /// ```
+    /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+    ///
+    /// let w = AutoencoderWeights::synthetic(17, "small");
+    /// let eng = PackedAutoencoder::from_weights(&w);
+    /// let windows = vec![0.5f32; 2 * 8];
+    /// let scores = eng.score_batch(&windows, 2);
+    /// assert_eq!(scores.len(), 2);
+    /// assert_eq!(scores[0], scores[1]); // identical windows, identical MSE
+    /// ```
     pub fn score_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
         let rec = self.forward_batch(windows, batch);
+        mse_per_stream(windows, &rec, batch)
+    }
+
+    /// Stateful per-stream anomaly scores: MSE between each chunk and its
+    /// [`PackedAutoencoder::forward_batch_stateful`] reconstruction. The
+    /// score definition ([`mse_per_stream`]) is shared with the stateless
+    /// path; only the reconstruction is conditioned on the resident state.
+    ///
+    /// ```
+    /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+    ///
+    /// let w = AutoencoderWeights::synthetic(19, "small");
+    /// let eng = PackedAutoencoder::from_weights(&w);
+    /// let mut state = eng.zero_state(2);
+    /// let scores = eng.score_batch_stateful(&vec![0.1f32; 2 * 4], 2, &mut state);
+    /// assert_eq!(scores.len(), 2);
+    /// ```
+    pub fn score_batch_stateful(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        state: &mut StreamState,
+    ) -> Vec<f32> {
+        let rec = self.forward_batch_stateful(windows, batch, state);
         mse_per_stream(windows, &rec, batch)
     }
 }
 
 /// Per-stream reconstruction MSE between batch-major `windows` and their
 /// reconstructions (d_out == 1 layouts: both `(B, TS)`). Every scoring
-/// backend (packed f32, fixed-point, runtime executor) shares this so the
-/// anomaly-score definition lives in exactly one place; the accumulation
-/// order matches the scalar `score_f32` (parity contract).
+/// backend (packed f32, fixed-point, runtime executor, streaming sessions)
+/// shares this so the anomaly-score definition lives in exactly one place;
+/// the accumulation order matches the scalar `score_f32` (parity contract).
+///
+/// ```
+/// use gwlstm::model::batched::mse_per_stream;
+///
+/// let windows = [1.0f32, 1.0, 0.0, 0.0]; // B=2, TS=2
+/// let rec = [0.0f32, 0.0, 0.0, 0.0];
+/// assert_eq!(mse_per_stream(&windows, &rec, 2), vec![1.0, 0.0]);
+/// ```
 pub fn mse_per_stream(windows: &[f32], rec: &[f32], batch: usize) -> Vec<f32> {
     debug_assert_eq!(windows.len(), rec.len(), "d_out != 1 scoring unsupported");
     let per = windows.len() / batch;
@@ -555,6 +939,14 @@ pub fn mse_per_stream(windows: &[f32], rec: &[f32], batch: usize) -> Vec<f32> {
 /// Batched f32 forward pass: B windows `(B, TS)` batch-major through the
 /// autoencoder in lockstep. Convenience wrapper that packs on every call —
 /// serving paths should hold a [`PackedAutoencoder`] and amortize the pack.
+///
+/// ```
+/// use gwlstm::model::{forward_f32_batch, AutoencoderWeights};
+///
+/// let w = AutoencoderWeights::synthetic(21, "small");
+/// let rec = forward_f32_batch(&w, &vec![0.3f32; 2 * 8], 2);
+/// assert_eq!(rec.len(), 2 * 8);
+/// ```
 pub fn forward_f32_batch(w: &AutoencoderWeights, windows: &[f32], batch: usize) -> Vec<f32> {
     PackedAutoencoder::from_weights(w).forward_batch(windows, batch)
 }
@@ -841,6 +1233,82 @@ mod tests {
             reference::score_batch(&packed, &windows, batch),
             packed.score_batch(&windows, batch)
         );
+    }
+
+    #[test]
+    fn stateful_chunks_match_contiguous_run() {
+        let w = random_layer(31, 2, 8);
+        let eng = BatchedLstm::from_weights(&w);
+        let mut rng = Rng::new(32);
+        let (batch, ts) = (3, 12);
+        let xs: Vec<f32> = (0..batch * ts * 2).map(|_| rng.gaussian() as f32).collect();
+        let full = eng.run(&xs, batch, ts);
+        // chunked over a ragged hop schedule, state carried across cuts;
+        // xs is batch-major so each chunk is a gather of per-stream spans
+        let mut st = BatchedState::zeros(batch, 8);
+        let mut got = vec![0.0f32; batch * ts * 8];
+        let mut t0 = 0usize;
+        for hop in [5usize, 1, 4, 2] {
+            let mut chunk = Vec::with_capacity(batch * hop * 2);
+            for b in 0..batch {
+                chunk.extend_from_slice(&xs[(b * ts + t0) * 2..(b * ts + t0 + hop) * 2]);
+            }
+            let out = eng.run_stateful(&chunk, batch, hop, &mut st);
+            for b in 0..batch {
+                got[(b * ts + t0) * 8..(b * ts + t0 + hop) * 8]
+                    .copy_from_slice(&out[b * hop * 8..(b + 1) * hop * 8]);
+            }
+            t0 += hop;
+        }
+        assert_eq!(t0, ts);
+        assert_eq!(got, full, "chunked stateful != contiguous");
+    }
+
+    #[test]
+    fn zero_state_stateful_matches_stateless_forward() {
+        // One stateful pass from the zero state must equal the stateless
+        // path bit-for-bit (same initial conditions, same op sequence).
+        let w = AutoencoderWeights::synthetic(33, "small");
+        let eng = PackedAutoencoder::from_weights(&w);
+        let mut rng = Rng::new(34);
+        let (batch, ts) = (3, 8);
+        let windows: Vec<f32> = (0..batch * ts).map(|_| rng.gaussian() as f32).collect();
+        let mut st = eng.zero_state(batch);
+        assert_eq!(
+            eng.forward_batch_stateful(&windows, batch, &mut st),
+            eng.forward_batch(&windows, batch)
+        );
+        let mut st = eng.zero_state(batch);
+        assert_eq!(
+            eng.score_batch_stateful(&windows, batch, &mut st),
+            eng.score_batch(&windows, batch)
+        );
+    }
+
+    #[test]
+    fn stream_state_row_gather_scatter_roundtrip() {
+        let w = AutoencoderWeights::synthetic(35, "small");
+        let eng = PackedAutoencoder::from_weights(&w);
+        let mut rng = Rng::new(36);
+        // evolve three isolated sessions to distinct states
+        let mut sessions: Vec<StreamState> = (0..3).map(|_| eng.zero_state(1)).collect();
+        for st in sessions.iter_mut() {
+            let win: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+            eng.forward_batch_stateful(&win, 1, st);
+        }
+        // gather -> group, scatter -> fresh sessions: must round-trip exactly
+        let mut group = eng.zero_state(3);
+        for (b, st) in sessions.iter().enumerate() {
+            group.load_row(b, st, 0);
+        }
+        for (b, st) in sessions.iter().enumerate() {
+            let mut back = eng.zero_state(1);
+            back.load_row(0, &group, b);
+            for (l, (a, want)) in back.layers.iter().zip(&st.layers).enumerate() {
+                assert_eq!(a.h, want.h, "layer {l} h row {b}");
+                assert_eq!(a.c, want.c, "layer {l} c row {b}");
+            }
+        }
     }
 
     #[test]

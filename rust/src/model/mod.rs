@@ -7,7 +7,10 @@
 //!   per layer over packed, column-tiled weights ([`LstmWeightsPacked`]),
 //!   executed through a register-blocked `RB×16` SIMD microkernel with all
 //!   gate/activation scratch hoisted into an engine-owned
-//!   [`batched::BatchedScratch`] (zero per-timestep allocation),
+//!   [`batched::BatchedScratch`] (zero per-timestep allocation), plus the
+//!   `*_stateful` continuation twins ([`batched::StreamState`] resident
+//!   `(h, c)`) that the streaming state service ([`crate::stream`]) keeps
+//!   alive across windows,
 //! * [`simd`] — the explicit-vector layer under it: portable fixed-width
 //!   block ops (bit-identical to scalar order), a runtime-detected
 //!   AVX2+FMA kernel, the fast rational sigmoid/tanh tier, and the
@@ -32,6 +35,9 @@ pub mod simd;
 pub mod weights;
 
 pub use autoencoder::{forward_f32, score_f32, FixedAutoencoder};
-pub use batched::{forward_f32_batch, BatchedLstm, LstmWeightsPacked, PackedAutoencoder};
+pub use batched::{
+    forward_f32_batch, BatchedLstm, BatchedState, LstmWeightsPacked, PackedAutoencoder,
+    StreamState,
+};
 pub use simd::MathPolicy;
 pub use weights::AutoencoderWeights;

@@ -48,6 +48,14 @@ pub enum MathPolicy {
 impl MathPolicy {
     /// Parse a config/CLI spelling. Accepts `bitexact`/`bit_exact`/`exact`
     /// and `fast_simd`/`fastsimd`/`fast`.
+    ///
+    /// ```
+    /// use gwlstm::model::MathPolicy;
+    ///
+    /// assert_eq!(MathPolicy::parse("bitexact").unwrap(), MathPolicy::BitExact);
+    /// assert_eq!(MathPolicy::parse("fast").unwrap(), MathPolicy::FastSimd);
+    /// assert!(MathPolicy::parse("warp9").is_err());
+    /// ```
     pub fn parse(s: &str) -> anyhow::Result<MathPolicy> {
         match s.to_ascii_lowercase().as_str() {
             "bitexact" | "bit_exact" | "bit-exact" | "exact" => Ok(MathPolicy::BitExact),
@@ -59,6 +67,13 @@ impl MathPolicy {
     }
 
     /// Stable label for reports and bench keys.
+    ///
+    /// ```
+    /// use gwlstm::model::MathPolicy;
+    ///
+    /// assert_eq!(MathPolicy::BitExact.label(), "bitexact");
+    /// assert_eq!(MathPolicy::FastSimd.label(), "fast_simd");
+    /// ```
     pub fn label(&self) -> &'static str {
         match self {
             MathPolicy::BitExact => "bitexact",
@@ -94,6 +109,12 @@ pub const FAST_FORWARD_TOL: f32 = 2e-2;
 
 /// Whether the AVX2+FMA kernel may run on this CPU. Detection result is
 /// cached after the first call (0 = unknown, 1 = no, 2 = yes).
+///
+/// ```
+/// // stable across calls on one machine (the kernel dispatch relies on it)
+/// assert_eq!(gwlstm::model::simd::fma_available(),
+///            gwlstm::model::simd::fma_available());
+/// ```
 pub fn fma_available() -> bool {
     use std::sync::atomic::{AtomicU8, Ordering};
     static CACHE: AtomicU8 = AtomicU8::new(0);
@@ -128,6 +149,17 @@ fn detect_fma() -> bool {
 /// block stays in registers across the whole reduction (the one z
 /// load/store per block the blocked kernel exists for). `rb_n ≤ BLOCK_RB`
 /// selects how many stream rows are live (remainder blocks).
+///
+/// ```
+/// use gwlstm::model::simd::{kloop16_exact, BLOCK_RB, BLOCK_W};
+///
+/// // kdim = 1: acc[rb][j] += x[rb] * panel[j]
+/// let panel: Vec<f32> = (0..BLOCK_W).map(|j| j as f32).collect();
+/// let x = [2.0f32; BLOCK_RB];
+/// let mut acc = [[1.0f32; BLOCK_W]; BLOCK_RB];
+/// kloop16_exact(&panel, 1, &x, 1, &mut acc, BLOCK_RB);
+/// assert_eq!(acc[0][3], 1.0 + 2.0 * 3.0);
+/// ```
 #[inline]
 pub fn kloop16_exact(
     panel: &[f32],
@@ -254,6 +286,14 @@ pub fn kloop16(
 /// to ±4.97 (where the approximant crosses 1) and output clamped to ±1.
 /// Branch-free (clamps compile to min/max), so a loop of these vectorizes.
 /// Max abs error ≤ [`FAST_ACT_TOL`] over all of ℝ.
+///
+/// ```
+/// use gwlstm::model::simd::{fast_tanh, FAST_ACT_TOL};
+///
+/// assert!((fast_tanh(0.7) - 0.7f32.tanh()).abs() <= FAST_ACT_TOL);
+/// assert_eq!(fast_tanh(100.0), 1.0); // saturates exactly
+/// assert_eq!(fast_tanh(-0.3), -fast_tanh(0.3)); // odd
+/// ```
 #[inline(always)]
 pub fn fast_tanh(x: f32) -> f32 {
     let x = x.clamp(-4.97, 4.97);
@@ -265,6 +305,14 @@ pub fn fast_tanh(x: f32) -> f32 {
 
 /// Rational sigmoid via `0.5 + 0.5·tanh(x/2)` on [`fast_tanh`]. Max abs
 /// error ≤ [`FAST_ACT_TOL`] (half the tanh error).
+///
+/// ```
+/// use gwlstm::model::simd::{fast_sigmoid, FAST_ACT_TOL};
+///
+/// assert_eq!(fast_sigmoid(0.0), 0.5);
+/// let exact = 1.0 / (1.0 + (-1.5f32).exp());
+/// assert!((fast_sigmoid(1.5) - exact).abs() <= FAST_ACT_TOL);
+/// ```
 #[inline(always)]
 pub fn fast_sigmoid(x: f32) -> f32 {
     0.5 + 0.5 * fast_tanh(0.5 * x)
@@ -343,6 +391,19 @@ pub fn lstm_gates_fast(
 }
 
 /// Policy-dispatched fused gate update over one stream's `(4·Lh)` gate row.
+///
+/// ```
+/// use gwlstm::model::simd::lstm_gates;
+/// use gwlstm::model::MathPolicy;
+///
+/// let lh = 2;
+/// let z = [0.0f32; 8]; // i|f|g|o all zero
+/// let (mut c, mut h) = (vec![0.0f32; lh], vec![0.0f32; lh]);
+/// lstm_gates(MathPolicy::BitExact, &z, lh, &mut c, &mut h);
+/// // c = σ(0)·0 + σ(0)·tanh(0) = 0, h = σ(0)·tanh(0) = 0
+/// assert_eq!(c, vec![0.0; lh]);
+/// assert_eq!(h, vec![0.0; lh]);
+/// ```
 #[inline]
 pub fn lstm_gates(
     policy: MathPolicy,

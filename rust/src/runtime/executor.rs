@@ -13,14 +13,18 @@
 //!   lockstep through every layer (one weight traversal per timestep feeds
 //!   all B streams). This is the executing backend when HLO artifacts or a
 //!   PJRT build are unavailable, and the backend the batched-throughput
-//!   benches measure.
+//!   benches measure. It is also the only backend that can host the
+//!   streaming state service: [`ModelExecutor::stream_state`] mints
+//!   resident per-session `(h, c)` and
+//!   [`ModelExecutor::score_batch_stateful`] advances a lockstep group of
+//!   sessions by one hop-sized chunk each (see [`crate::stream`]).
 
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Manifest, VariantSpec};
-use crate::model::{AutoencoderWeights, MathPolicy, PackedAutoencoder};
+use crate::model::{AutoencoderWeights, MathPolicy, PackedAutoencoder, StreamState};
 use crate::util::json::Value;
 
 /// Shared PJRT client (CPU platform).
@@ -198,6 +202,71 @@ impl ModelExecutor {
         Ok(crate::model::batched::mse_per_stream(windows, &rec, batch))
     }
 
+    /// Zero-initialized resident state for `batch` lockstep streaming
+    /// sessions. Native backend only: the PJRT artifact is a fixed-shape,
+    /// stateless batch-1 executable and cannot host resident `(h, c)`.
+    ///
+    /// ```
+    /// use gwlstm::model::AutoencoderWeights;
+    /// use gwlstm::runtime::ModelExecutor;
+    ///
+    /// let w = AutoencoderWeights::synthetic(3, "small");
+    /// let exe = ModelExecutor::native_from_weights(&w, "demo", 8);
+    /// let state = exe.stream_state(2).unwrap();
+    /// assert_eq!(state.batch, 2);
+    /// ```
+    pub fn stream_state(&self, batch: usize) -> Result<StreamState> {
+        match &self.backend {
+            Backend::Native(packed) => Ok(packed.zero_state(batch)),
+            Backend::Pjrt(_) => bail!(
+                "streaming state requires the native batched backend \
+                 (the PJRT artifact is a stateless fixed-shape executable)"
+            ),
+        }
+    }
+
+    /// Stateful per-stream anomaly scores for a lockstep group of
+    /// streaming sessions: `windows` is `(B, hop)` batch-major where `hop`
+    /// is the streaming chunk length — deliberately NOT checked against
+    /// the variant's `ts` (a continuation chunk is shorter than the
+    /// stateless window; that is the whole point). The resident `state`
+    /// advances in place. Native backend only.
+    ///
+    /// ```
+    /// use gwlstm::model::AutoencoderWeights;
+    /// use gwlstm::runtime::ModelExecutor;
+    ///
+    /// let w = AutoencoderWeights::synthetic(4, "small");
+    /// let exe = ModelExecutor::native_from_weights(&w, "demo", 8);
+    /// let mut state = exe.stream_state(2).unwrap();
+    /// let scores = exe.score_batch_stateful(&[0.1; 2 * 4], 2, &mut state).unwrap();
+    /// assert_eq!(scores.len(), 2);
+    /// ```
+    pub fn score_batch_stateful(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>> {
+        if batch == 0 {
+            bail!("empty batch");
+        }
+        if windows.is_empty() || windows.len() % batch != 0 {
+            bail!(
+                "chunk buffer length {} is not a positive multiple of batch {batch} for {}",
+                windows.len(),
+                self.spec.name
+            );
+        }
+        match &self.backend {
+            Backend::Native(packed) => Ok(packed.score_batch_stateful(windows, batch, state)),
+            Backend::Pjrt(_) => bail!(
+                "score_batch_stateful requires the native batched backend \
+                 (the PJRT artifact is a stateless fixed-shape executable)"
+            ),
+        }
+    }
+
     /// Verify this executable against its golden vector file (produced at
     /// AOT time from the jnp oracle). Returns max abs error.
     pub fn verify_golden(&self, manifest: &Manifest) -> Result<f32> {
@@ -287,5 +356,32 @@ mod tests {
         assert!(exe.infer(&[0.0; 7]).is_err());
         assert!(exe.infer_batch(&[0.0; 16], 0).is_err());
         assert!(exe.infer_batch(&[0.0; 17], 2).is_err());
+        let mut st = exe.stream_state(2).unwrap();
+        assert!(exe.score_batch_stateful(&[0.0; 8], 0, &mut st).is_err());
+        assert!(exe.score_batch_stateful(&[0.0; 9], 2, &mut st).is_err());
+        assert!(exe.score_batch_stateful(&[], 2, &mut st).is_err());
+    }
+
+    #[test]
+    fn stateful_executor_matches_engine_and_advances_state() {
+        let w = AutoencoderWeights::synthetic(7, "small");
+        let exe = ModelExecutor::native_from_weights(&w, "small_synth", 8);
+        let packed = PackedAutoencoder::from_weights(&w);
+        let (batch, hop) = (3, 4);
+        let chunk: Vec<f32> = (0..batch * hop)
+            .map(|i| ((i * 5 % 17) as f32 - 8.0) / 8.0)
+            .collect();
+        let mut st_exe = exe.stream_state(batch).unwrap();
+        let mut st_eng = packed.zero_state(batch);
+        // two consecutive chunks: scores and evolved states must agree
+        for _ in 0..2 {
+            let a = exe.score_batch_stateful(&chunk, batch, &mut st_exe).unwrap();
+            let b = packed.score_batch_stateful(&chunk, batch, &mut st_eng);
+            assert_eq!(a, b);
+        }
+        for (l, (x, y)) in st_exe.layers.iter().zip(&st_eng.layers).enumerate() {
+            assert_eq!(x.h, y.h, "layer {l} h");
+            assert_eq!(x.c, y.c, "layer {l} c");
+        }
     }
 }

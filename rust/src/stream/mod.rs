@@ -1,0 +1,90 @@
+//! Streaming state service: resident per-stream LSTM state for continuous
+//! inference.
+//!
+//! LIGO events "happen at unknown times and of varying durations", so the
+//! production workload is not isolated windows but an unbounded time series
+//! per detector stream. The stateless serving path re-encodes every window
+//! from the zero `(h, c)` state — paying the full window length again for
+//! every hop of new samples. This subsystem keeps each stream's state
+//! *resident* instead, so consecutive windows continue where the previous
+//! one left off and each sample is encoded exactly once:
+//!
+//! ```text
+//!   re-encode from zeros (stateless):       stateful continuation:
+//!     win k  : [0 .. W)          from 0       chunk k  : [kH .. (k+1)H)
+//!     win k+1: [H .. W+H)        from 0       chunk k+1: [(k+1)H .. (k+2)H)
+//!     cost per hop H: O(W)                    cost per hop H: O(H)
+//! ```
+//!
+//! Pieces (model-layer substrate in [`crate::model::batched`]:
+//! `run_stateful`, `forward_batch_stateful`, [`StreamState`]):
+//!
+//! * [`session::StreamSession`] — one stream's resident [`StreamState`],
+//!   its buffer of not-yet-consumed samples, and activity bookkeeping.
+//! * [`registry::SessionRegistry`] — sessions keyed by stream id, with
+//!   get-or-create, TTL eviction of idle sessions, LRU eviction at
+//!   capacity, and snapshot/restore (warm restart).
+//! * `coordinator::StreamRouter` — groups every ready session's next chunk
+//!   into ONE lockstep batched stateful call (states gathered into a group
+//!   [`StreamState`], scattered back after), the streaming analogue of the
+//!   coordinator's micro-batch dispatch.
+//!
+//! Ticks: the service is clocked by a caller-supplied logical tick (`u64`,
+//! monotone). Real deployments pass wall-clock-derived ticks; tests and the
+//! synthetic serving loop pass loop indices — TTL semantics only need
+//! monotonicity.
+//!
+//! The parity contract (pinned by `tests/streaming_parity.rs`): feeding a
+//! window chunk-by-chunk through a session is bit-identical to one
+//! contiguous run at the layer level, and per-session results through the
+//! router never depend on which other sessions share the lockstep batch.
+
+use crate::model::batched::StreamState;
+
+pub mod registry;
+pub mod session;
+
+pub use registry::SessionRegistry;
+pub use session::{SessionSnapshot, StreamSession};
+
+/// Knobs of the streaming state service.
+///
+/// ```
+/// use gwlstm::stream::StreamConfig;
+///
+/// let cfg = StreamConfig { hop: 8, ..Default::default() };
+/// assert_eq!(cfg.hop, 8);
+/// assert!(cfg.max_sessions > 0);
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Samples consumed per stateful inference chunk. Each dispatch
+    /// advances a ready session by exactly one hop; with resident state the
+    /// hop IS the window (no overlap is re-encoded).
+    pub hop: usize,
+    /// Idle ticks after which a session is evicted (its resident state is
+    /// returned as a [`SessionSnapshot`] for optional warm restart).
+    pub ttl_ticks: u64,
+    /// Registry capacity: creating a session beyond this evicts the
+    /// least-recently-active one first.
+    pub max_sessions: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            hop: 25,
+            ttl_ticks: 256,
+            max_sessions: 1024,
+        }
+    }
+}
+
+/// Batch-1 `StreamState` sanity check shared by registry construction.
+pub(crate) fn assert_proto(proto: &StreamState) {
+    assert_eq!(proto.batch, 1, "session prototype state must be batch 1");
+    assert!(
+        !proto.layers.is_empty(),
+        "session prototype state has no layers"
+    );
+}

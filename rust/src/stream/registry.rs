@@ -1,0 +1,257 @@
+//! Session registry: resident streaming sessions keyed by stream id, with
+//! TTL/LRU eviction and warm restart.
+//!
+//! The registry is the service's source of truth for "which streams are
+//! live and where their state is". It is deliberately single-owner (the
+//! stream router holds it on the leader thread): resident state is memory
+//! that must live exactly where the lockstep engine runs, so there is no
+//! cross-thread sharing to get wrong.
+
+use std::collections::HashMap;
+
+use crate::model::batched::StreamState;
+
+use super::session::{SessionSnapshot, StreamSession};
+use super::StreamConfig;
+
+/// Streaming sessions keyed by stream id.
+///
+/// Eviction has two triggers, both returning [`SessionSnapshot`]s so the
+/// caller can warm-restart later instead of losing stream history:
+/// * **TTL** — [`SessionRegistry::evict_expired`] removes sessions idle
+///   longer than [`StreamConfig::ttl_ticks`];
+/// * **capacity** — creating a session past
+///   [`StreamConfig::max_sessions`] evicts the least-recently-active one.
+///
+/// ```
+/// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+/// use gwlstm::stream::{SessionRegistry, StreamConfig};
+///
+/// let w = AutoencoderWeights::synthetic(2, "small");
+/// let eng = PackedAutoencoder::from_weights(&w);
+/// let cfg = StreamConfig { hop: 4, ttl_ticks: 10, ..Default::default() };
+/// let mut reg = SessionRegistry::new(cfg, eng.zero_state(1));
+///
+/// reg.ingest(1, &[0.0; 4], 0);       // create session 1 at tick 0
+/// reg.ingest(2, &[0.0; 4], 5);       // create session 2 at tick 5
+/// let evicted = reg.evict_expired(12); // tick 12: session 1 idle 12 > ttl
+/// assert_eq!(evicted.len(), 1);
+/// assert_eq!(evicted[0].id, 1);
+/// assert!(reg.get(2).is_some());
+///
+/// reg.restore(evicted.into_iter().next().unwrap(), 13); // warm restart
+/// assert_eq!(reg.get(1).unwrap().pending_len(), 4);
+/// ```
+pub struct SessionRegistry {
+    cfg: StreamConfig,
+    /// Batch-1 zero-state template cloned into every new session.
+    proto: StreamState,
+    sessions: HashMap<u64, StreamSession>,
+}
+
+impl SessionRegistry {
+    /// Build a registry whose new sessions start from `proto` (a batch-1
+    /// zero state from `PackedAutoencoder::zero_state(1)` or
+    /// `ModelExecutor::stream_state(1)`).
+    pub fn new(cfg: StreamConfig, proto: StreamState) -> SessionRegistry {
+        assert!(cfg.hop > 0, "hop must be positive");
+        assert!(cfg.max_sessions > 0, "max_sessions must be positive");
+        super::assert_proto(&proto);
+        SessionRegistry {
+            cfg,
+            proto,
+            sessions: HashMap::new(),
+        }
+    }
+
+    /// The service knobs this registry enforces.
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Whether no session is live.
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Read access to one session.
+    pub fn get(&self, id: u64) -> Option<&StreamSession> {
+        self.sessions.get(&id)
+    }
+
+    /// Mutable access to one session (the router's scatter path).
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut StreamSession> {
+        self.sessions.get_mut(&id)
+    }
+
+    /// Get-or-create the session for `id` and stamp its activity tick.
+    /// Creating past capacity first evicts the least-recently-active
+    /// session (its snapshot is dropped here — use
+    /// [`SessionRegistry::evict`] for an orderly handover).
+    pub fn touch(&mut self, id: u64, now: u64) -> &mut StreamSession {
+        self.make_room_for(id);
+        let proto = &self.proto;
+        let sess = self
+            .sessions
+            .entry(id)
+            .or_insert_with(|| StreamSession::new(id, proto.clone(), now));
+        sess.last_tick = now;
+        sess
+    }
+
+    /// Evict the least-recently-active session if inserting `id` would
+    /// exceed capacity (no-op when `id` is already resident). Every
+    /// insertion path — [`SessionRegistry::touch`] and
+    /// [`SessionRegistry::restore`] — goes through this, so the
+    /// max_sessions memory bound cannot be bypassed.
+    fn make_room_for(&mut self, id: u64) {
+        if !self.sessions.contains_key(&id) && self.sessions.len() >= self.cfg.max_sessions {
+            if let Some(idlest) = self
+                .sessions
+                .values()
+                .min_by_key(|s| (s.last_tick, s.id))
+                .map(|s| s.id)
+            {
+                self.sessions.remove(&idlest);
+            }
+        }
+    }
+
+    /// Ingest raw samples for stream `id` at tick `now` (get-or-create).
+    pub fn ingest(&mut self, id: u64, samples: &[f32], now: u64) {
+        self.touch(id, now).push(samples);
+    }
+
+    /// Ids of every session with a full hop pending, ascending — the
+    /// deterministic grouping order of the next lockstep dispatch.
+    pub fn ready_ids(&self) -> Vec<u64> {
+        let hop = self.cfg.hop;
+        let mut ids: Vec<u64> = self
+            .sessions
+            .values()
+            .filter(|s| s.ready(hop))
+            .map(|s| s.id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Remove one session, returning its warm-restartable snapshot.
+    pub fn evict(&mut self, id: u64) -> Option<SessionSnapshot> {
+        self.sessions.remove(&id).map(StreamSession::into_snapshot)
+    }
+
+    /// Remove every session idle for more than
+    /// [`StreamConfig::ttl_ticks`] at tick `now`; returns their snapshots
+    /// in ascending id order.
+    pub fn evict_expired(&mut self, now: u64) -> Vec<SessionSnapshot> {
+        let ttl = self.cfg.ttl_ticks;
+        let mut dead: Vec<u64> = self
+            .sessions
+            .values()
+            .filter(|s| now.saturating_sub(s.last_tick) > ttl)
+            .map(|s| s.id)
+            .collect();
+        dead.sort_unstable();
+        dead.into_iter().filter_map(|id| self.evict(id)).collect()
+    }
+
+    /// Warm restart: reinstall an evicted session with its resident state
+    /// and unconsumed samples. Continuing the stream afterwards is
+    /// bit-identical to never having evicted it. Replaces any session
+    /// currently holding the same id, and enforces the same capacity
+    /// bound as [`SessionRegistry::touch`] (LRU-evicts first if full).
+    pub fn restore(&mut self, snap: SessionSnapshot, now: u64) -> &mut StreamSession {
+        let id = snap.id;
+        self.make_room_for(id);
+        self.sessions.insert(id, snap.into_session(now));
+        self.sessions.get_mut(&id).expect("just inserted")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::batched::BatchedState;
+
+    fn registry(hop: usize, ttl: u64, cap: usize) -> SessionRegistry {
+        let proto = StreamState {
+            batch: 1,
+            layers: vec![BatchedState::zeros(1, 3)],
+        };
+        SessionRegistry::new(
+            StreamConfig {
+                hop,
+                ttl_ticks: ttl,
+                max_sessions: cap,
+            },
+            proto,
+        )
+    }
+
+    #[test]
+    fn get_or_create_and_ready_ordering() {
+        let mut reg = registry(2, 100, 8);
+        reg.ingest(9, &[0.0; 2], 0);
+        reg.ingest(3, &[0.0; 2], 0);
+        reg.ingest(5, &[0.0; 1], 0); // below hop: not ready
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.ready_ids(), vec![3, 9], "ascending, ready only");
+    }
+
+    #[test]
+    fn ttl_evicts_idle_sessions_only() {
+        let mut reg = registry(2, 5, 8);
+        reg.ingest(1, &[0.0; 2], 0);
+        reg.ingest(2, &[0.0; 2], 4);
+        let gone = reg.evict_expired(6); // 1 idle 6 > 5; 2 idle 2
+        assert_eq!(gone.len(), 1);
+        assert_eq!(gone[0].id, 1);
+        assert!(reg.get(1).is_none());
+        assert!(reg.get(2).is_some());
+    }
+
+    #[test]
+    fn capacity_evicts_least_recently_active() {
+        let mut reg = registry(2, 1000, 2);
+        reg.touch(1, 0);
+        reg.touch(2, 1);
+        reg.touch(1, 2); // 1 is now fresher than 2
+        reg.touch(3, 3); // over capacity: evicts 2
+        assert_eq!(reg.len(), 2);
+        assert!(reg.get(2).is_none());
+        assert!(reg.get(1).is_some() && reg.get(3).is_some());
+    }
+
+    #[test]
+    fn restore_respects_capacity_bound() {
+        let mut reg = registry(2, 1000, 2);
+        reg.touch(1, 0);
+        let snap = reg.evict(1).unwrap();
+        reg.touch(2, 1);
+        reg.touch(3, 2);
+        assert_eq!(reg.len(), 2);
+        reg.restore(snap, 3); // at capacity: idlest (2) must go
+        assert_eq!(reg.len(), 2, "restore must not exceed max_sessions");
+        assert!(reg.get(2).is_none());
+        assert!(reg.get(1).is_some() && reg.get(3).is_some());
+    }
+
+    #[test]
+    fn restore_reinstalls_state_and_pending() {
+        let mut reg = registry(4, 100, 8);
+        reg.ingest(7, &[1.0, 2.0, 3.0], 0);
+        reg.get_mut(7).unwrap().state.layers[0].c[1] = 0.5;
+        let snap = reg.evict(7).unwrap();
+        assert!(reg.is_empty());
+        let s = reg.restore(snap, 9);
+        assert_eq!(s.state.layers[0].c[1], 0.5);
+        assert_eq!(s.pending_len(), 3);
+        assert_eq!(s.last_tick, 9);
+    }
+}

@@ -1,0 +1,191 @@
+//! One streaming session: a stream id, its resident all-layer LSTM state,
+//! and the buffer of ingested-but-not-yet-scored samples.
+//!
+//! Sessions are created and owned by the [`super::SessionRegistry`];
+//! chunk-by-chunk state continuation is driven from outside (the stream
+//! router takes a hop of samples, runs the stateful engine, and writes the
+//! advanced state back through [`StreamSession::state`]).
+
+use crate::model::batched::StreamState;
+
+/// Resident per-stream serving state. Fields the router mutates directly
+/// (`state`, `last_tick`) are public; the sample buffer is private so the
+/// consume-each-sample-exactly-once discipline cannot be bypassed.
+///
+/// ```
+/// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+/// use gwlstm::stream::{SessionRegistry, StreamConfig};
+///
+/// let w = AutoencoderWeights::synthetic(1, "small");
+/// let eng = PackedAutoencoder::from_weights(&w);
+/// let cfg = StreamConfig { hop: 4, ..Default::default() };
+/// let mut reg = SessionRegistry::new(cfg, eng.zero_state(1));
+/// reg.ingest(7, &[0.1, 0.2, 0.3], 0);
+/// let sess = reg.get(7).unwrap();
+/// assert_eq!(sess.pending_len(), 3);
+/// assert!(!sess.ready(4)); // 3 < hop
+/// ```
+#[derive(Debug, Clone)]
+pub struct StreamSession {
+    /// The stream this session belongs to (registry key).
+    pub id: u64,
+    /// Resident all-layer `(h, c)` (always `batch == 1`): what makes the
+    /// next chunk a continuation instead of a re-encode from zeros.
+    pub state: StreamState,
+    /// Ingested samples not yet consumed by a dispatch.
+    pending: Vec<f32>,
+    /// Tick of the last ingest or dispatch touching this session (TTL and
+    /// LRU eviction key).
+    pub last_tick: u64,
+    /// Tick the session was (re)created at.
+    pub created_tick: u64,
+    /// Chunks scored through this session since creation/restore.
+    pub windows_done: u64,
+}
+
+impl StreamSession {
+    pub(crate) fn new(id: u64, state: StreamState, now: u64) -> StreamSession {
+        StreamSession {
+            id,
+            state,
+            pending: Vec::new(),
+            last_tick: now,
+            created_tick: now,
+            windows_done: 0,
+        }
+    }
+
+    /// Append raw samples to the session's pending buffer.
+    pub fn push(&mut self, samples: &[f32]) {
+        self.pending.extend_from_slice(samples);
+    }
+
+    /// Samples ingested but not yet consumed.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether a full hop-sized chunk is ready to dispatch.
+    pub fn ready(&self, hop: usize) -> bool {
+        hop > 0 && self.pending.len() >= hop
+    }
+
+    /// Consume the oldest `hop` pending samples, appending them to `out`
+    /// (the router's flat `(B, hop)` gather buffer). Returns `false` — and
+    /// appends nothing — when fewer than `hop` samples are pending.
+    pub fn take_chunk_into(&mut self, hop: usize, out: &mut Vec<f32>) -> bool {
+        if !self.ready(hop) {
+            return false;
+        }
+        out.extend(self.pending.drain(..hop));
+        self.windows_done += 1;
+        true
+    }
+
+    /// Cold restart: zero the resident state in place (the next chunk
+    /// re-encodes from scratch, as if the session were new). Pending
+    /// samples are kept.
+    pub fn reset_state(&mut self) {
+        for l in &mut self.state.layers {
+            l.h.fill(0.0);
+            l.c.fill(0.0);
+        }
+    }
+
+    /// Freeze this session into a restorable snapshot (state + unconsumed
+    /// samples). Consumes the session — the registry's eviction paths call
+    /// this so an evicted stream can later warm-restart exactly where it
+    /// stopped ([`super::SessionRegistry::restore`]).
+    pub fn into_snapshot(self) -> SessionSnapshot {
+        SessionSnapshot {
+            id: self.id,
+            state: self.state,
+            pending: self.pending,
+            windows_done: self.windows_done,
+        }
+    }
+}
+
+/// A detached session: everything needed to resume a stream after eviction
+/// (or a process restart, once serialized) without losing its history —
+/// the warm-restart path. Restoring a snapshot and continuing is
+/// bit-identical to never having evicted the session.
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    /// Stream id the snapshot belongs to.
+    pub id: u64,
+    /// Resident all-layer `(h, c)` at eviction time.
+    pub state: StreamState,
+    /// Samples that were ingested but never consumed.
+    pub pending: Vec<f32>,
+    /// Chunk count carried over into the restored session.
+    pub windows_done: u64,
+}
+
+impl SessionSnapshot {
+    pub(crate) fn into_session(self, now: u64) -> StreamSession {
+        StreamSession {
+            id: self.id,
+            state: self.state,
+            pending: self.pending,
+            last_tick: now,
+            created_tick: now,
+            windows_done: self.windows_done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::batched::BatchedState;
+
+    fn state1() -> StreamState {
+        StreamState {
+            batch: 1,
+            layers: vec![BatchedState::zeros(1, 4)],
+        }
+    }
+
+    #[test]
+    fn chunk_consumption_in_arrival_order() {
+        let mut s = StreamSession::new(1, state1(), 0);
+        s.push(&[1.0, 2.0, 3.0]);
+        s.push(&[4.0, 5.0]);
+        assert_eq!(s.pending_len(), 5);
+        let mut out = Vec::new();
+        assert!(s.take_chunk_into(4, &mut out));
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.pending_len(), 1);
+        assert_eq!(s.windows_done, 1);
+        assert!(!s.take_chunk_into(4, &mut out), "only 1 sample left");
+        assert_eq!(out.len(), 4, "failed take must append nothing");
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_state_and_pending() {
+        let mut s = StreamSession::new(9, state1(), 3);
+        s.state.layers[0].h[0] = 0.75;
+        s.push(&[1.0, 2.0]);
+        s.windows_done = 5;
+        let snap = s.into_snapshot();
+        assert_eq!(snap.id, 9);
+        let back = snap.into_session(10);
+        assert_eq!(back.state.layers[0].h[0], 0.75);
+        assert_eq!(back.pending_len(), 2);
+        assert_eq!(back.windows_done, 5);
+        assert_eq!(back.last_tick, 10);
+    }
+
+    #[test]
+    fn reset_state_zeros_but_keeps_pending() {
+        let mut s = StreamSession::new(2, state1(), 0);
+        s.state.layers[0].h.fill(1.0);
+        s.state.layers[0].c.fill(-1.0);
+        s.push(&[0.5; 3]);
+        s.reset_state();
+        assert!(s.state.layers[0].h.iter().all(|&v| v == 0.0));
+        assert!(s.state.layers[0].c.iter().all(|&v| v == 0.0));
+        assert_eq!(s.pending_len(), 3);
+    }
+}

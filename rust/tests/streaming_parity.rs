@@ -1,0 +1,403 @@
+//! Streaming-continuation parity: resident `(h, c)` carried across chunks
+//! must change *nothing* numerically.
+//!
+//! Contracts pinned here (the acceptance criteria of the streaming state
+//! service):
+//!
+//! 1. **Chunk parity** — N windows fed chunk-by-chunk through a stateful
+//!    session are bit-identical (BitExact tier; and, because chunking does
+//!    not reorder any per-element operation, FastSimd too) to ONE
+//!    contiguous `run` over the concatenation, at B ∈ {1, 3, 8} and under
+//!    ragged hop schedules.
+//! 2. **Eviction/recreate** — evicting a session mid-stream and recreating
+//!    it restarts from the zero state: the continuation equals a fresh
+//!    contiguous run over only the post-recreate samples.
+//! 3. **Warm restart** — snapshot + restore is bit-identical to never
+//!    having evicted.
+//! 4. **Isolation (property)** — interleaved sessions through the
+//!    `StreamRouter` never cross states: per-session score sequences match
+//!    an isolated-session reference regardless of which other sessions
+//!    share each lockstep batch, under randomized interleavings.
+
+use gwlstm::coordinator::{run_serving_native, run_serving_streaming, Policy, StreamRouter};
+use gwlstm::config::ServeConfig;
+use gwlstm::model::batched::{BatchedLstm, BatchedState};
+use gwlstm::model::weights::LstmWeights;
+use gwlstm::model::{AutoencoderWeights, MathPolicy, PackedAutoencoder};
+use gwlstm::runtime::ModelExecutor;
+use gwlstm::stream::StreamConfig;
+use gwlstm::util::prop;
+use gwlstm::util::rng::Rng;
+
+const BATCHES: [usize; 3] = [1, 3, 8];
+
+fn random_layer(seed: u64, lx: usize, lh: usize) -> LstmWeights {
+    let mut rng = Rng::new(seed);
+    let mut gen = |n: usize, s: f64| -> Vec<f32> {
+        (0..n).map(|_| (rng.gaussian() * s) as f32).collect()
+    };
+    LstmWeights {
+        name: format!("stream_{lx}x{lh}"),
+        lx,
+        lh,
+        wx: gen(lx * 4 * lh, 0.4),
+        wh: gen(lh * 4 * lh, 0.3),
+        b: gen(4 * lh, 0.1),
+    }
+}
+
+/// Feed `xs` (batch-major `(B, TS, Lx)`) through `eng` chunk-by-chunk over
+/// `hops` (which must sum to TS), carrying state; returns the stitched
+/// `(B, TS, Lh)` output.
+fn run_chunked(
+    eng: &BatchedLstm,
+    xs: &[f32],
+    batch: usize,
+    ts: usize,
+    hops: &[usize],
+) -> Vec<f32> {
+    let (lx, lh) = (eng.w.lx, eng.w.lh);
+    assert_eq!(hops.iter().sum::<usize>(), ts, "hop schedule must cover TS");
+    let mut st = BatchedState::zeros(batch, lh);
+    let mut out = vec![0.0f32; batch * ts * lh];
+    let mut t0 = 0usize;
+    for &hop in hops {
+        let mut chunk = Vec::with_capacity(batch * hop * lx);
+        for b in 0..batch {
+            chunk.extend_from_slice(&xs[(b * ts + t0) * lx..(b * ts + t0 + hop) * lx]);
+        }
+        let got = eng.run_stateful(&chunk, batch, hop, &mut st);
+        for b in 0..batch {
+            out[(b * ts + t0) * lh..(b * ts + t0 + hop) * lh]
+                .copy_from_slice(&got[b * hop * lh..(b + 1) * hop * lh]);
+        }
+        t0 += hop;
+    }
+    out
+}
+
+#[test]
+fn chunked_session_bitidentical_to_contiguous_run() {
+    // Ragged hop schedules, B ∈ {1, 3, 8}, both math tiers: chunking only
+    // moves the call boundary, never an operand or an accumulation order,
+    // so equality is exact — not approximate — in BOTH tiers.
+    let ts = 24;
+    let schedules: [&[usize]; 4] = [&[24], &[1; 24], &[5, 1, 9, 2, 7], &[11, 13]];
+    for (seed, (lx, lh)) in [(50u64, (1usize, 9usize)), (51, (3, 8)), (52, (4, 16))] {
+        let w = random_layer(seed, lx, lh);
+        for policy in [MathPolicy::BitExact, MathPolicy::FastSimd] {
+            let eng = BatchedLstm::from_weights_policy(&w, policy);
+            for &batch in &BATCHES {
+                let mut rng = Rng::new(seed ^ 0x5EED);
+                let xs: Vec<f32> = (0..batch * ts * lx)
+                    .map(|_| rng.gaussian() as f32)
+                    .collect();
+                let contiguous = eng.run(&xs, batch, ts);
+                for hops in schedules {
+                    let chunked = run_chunked(&eng, &xs, batch, ts, hops);
+                    assert_eq!(
+                        chunked, contiguous,
+                        "B={batch} {policy:?} hops={hops:?} diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn autoencoder_session_scores_match_manual_state_threading() {
+    // The router + registry + executor stack must produce exactly what
+    // direct engine calls with hand-threaded state produce.
+    for &batch in &BATCHES {
+        let w = AutoencoderWeights::synthetic(60 + batch as u64, "small");
+        let exe = ModelExecutor::native_from_weights(&w, "stream_ref", 8);
+        let packed = PackedAutoencoder::from_weights(&w);
+        let hop = 5usize;
+        let cfg = StreamConfig {
+            hop,
+            ..Default::default()
+        };
+        let mut router = StreamRouter::new(&exe, cfg).unwrap();
+        let mut rng = Rng::new(61);
+        let mut states: Vec<_> = (0..batch).map(|_| packed.zero_state(1)).collect();
+        for tick in 0..4u64 {
+            let chunks: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..hop).map(|_| rng.gaussian() as f32).collect())
+                .collect();
+            for (s, chunk) in chunks.iter().enumerate() {
+                router.ingest(s as u64, chunk, tick);
+            }
+            let scored = router.dispatch(&exe, tick).unwrap();
+            assert_eq!(scored.len(), batch);
+            for (s, chunk) in chunks.iter().enumerate() {
+                let want = packed.score_batch_stateful(chunk, 1, &mut states[s]);
+                assert_eq!(
+                    scored[s].score, want[0],
+                    "B={batch} tick={tick} session {s}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_recreate_mid_stream_restarts_from_zeros() {
+    for &batch in &BATCHES {
+        let w = AutoencoderWeights::synthetic(70, "small");
+        let exe = ModelExecutor::native_from_weights(&w, "stream_evict", 8);
+        let packed = PackedAutoencoder::from_weights(&w);
+        let hop = 4usize;
+        let mut router = StreamRouter::new(
+            &exe,
+            StreamConfig {
+                hop,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(71 + batch as u64);
+        let chunks: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..hop).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        // two chunks in, then evict session 0 only
+        for tick in 0..2u64 {
+            for (s, c) in chunks.iter().enumerate() {
+                router.ingest(s as u64, c, tick);
+            }
+            router.dispatch(&exe, tick).unwrap();
+        }
+        assert!(router.evict(0).is_some());
+        // third chunk: session 0 is recreated from zeros, others continue
+        for (s, c) in chunks.iter().enumerate() {
+            router.ingest(s as u64, c, 2);
+        }
+        let scored = router.dispatch(&exe, 2).unwrap();
+        let mut zero_state = packed.zero_state(1);
+        let fresh = packed.score_batch_stateful(&chunks[0], 1, &mut zero_state);
+        assert_eq!(
+            scored[0].score, fresh[0],
+            "B={batch}: recreated session must score like a brand-new stream"
+        );
+        if batch > 1 {
+            // survivors must have 3-chunk continuation state, not zeros
+            let mut st = packed.zero_state(1);
+            for _ in 0..3 {
+                packed.score_batch_stateful(&chunks[1], 1, &mut st);
+            }
+            let survivor = router.registry().get(1).unwrap();
+            assert_eq!(survivor.state.layers[0].h, st.layers[0].h, "survivor h");
+            assert_eq!(survivor.state.layers[0].c, st.layers[0].c, "survivor c");
+        }
+    }
+}
+
+#[test]
+fn ttl_eviction_then_warm_restart_is_bitexact() {
+    let w = AutoencoderWeights::synthetic(80, "small");
+    let exe = ModelExecutor::native_from_weights(&w, "stream_ttl", 8);
+    let hop = 4usize;
+    let cfg = StreamConfig {
+        hop,
+        ttl_ticks: 2,
+        ..Default::default()
+    };
+    let chunk: Vec<f32> = (0..hop).map(|i| (i as f32 * 0.6).sin()).collect();
+    let mut interrupted = StreamRouter::new(&exe, cfg).unwrap();
+    let mut reference = StreamRouter::new(&exe, cfg).unwrap();
+    // both score one chunk at tick 0
+    interrupted.ingest(1, &chunk, 0);
+    reference.ingest(1, &chunk, 0);
+    assert_eq!(
+        interrupted.dispatch(&exe, 0).unwrap(),
+        reference.dispatch(&exe, 0).unwrap()
+    );
+    // TTL fires for the interrupted router only; warm-restart the snapshot
+    let evicted = interrupted.evict_expired(10);
+    assert_eq!(evicted.len(), 1);
+    assert!(interrupted.registry().is_empty());
+    interrupted.restore(evicted.into_iter().next().unwrap(), 10);
+    // continuation after restore == uninterrupted continuation
+    interrupted.ingest(1, &chunk, 11);
+    reference.ingest(1, &chunk, 11);
+    assert_eq!(
+        interrupted.dispatch(&exe, 11).unwrap(),
+        reference.dispatch(&exe, 11).unwrap(),
+        "warm restart must be bit-identical to an uninterrupted session"
+    );
+}
+
+/// One randomized interleaving scenario for the isolation property.
+#[derive(Debug)]
+struct Interleaving {
+    hop: usize,
+    /// Per-session chunk sequences (session id = index).
+    chunks: Vec<Vec<Vec<f32>>>,
+    /// Tick schedule: which sessions receive their next chunk this tick.
+    schedule: Vec<Vec<usize>>,
+}
+
+#[test]
+fn prop_interleaved_sessions_never_cross_states() {
+    let w = AutoencoderWeights::synthetic(90, "small");
+    let exe = ModelExecutor::native_from_weights(&w, "stream_prop", 8);
+    prop::check_with(
+        prop::Config {
+            cases: 24, // each case runs many engine calls; keep the suite fast
+            ..Default::default()
+        },
+        "interleaved-sessions-isolated",
+        |d| {
+            let hop = d.usize_in(2, 6);
+            let n_sessions = d.usize_in(2, 5);
+            let chunks: Vec<Vec<Vec<f32>>> = (0..n_sessions)
+                .map(|_| {
+                    let n_chunks = d.usize_in(1, 4);
+                    (0..n_chunks)
+                        .map(|_| (0..hop).map(|_| d.f64_in(-2.0, 2.0) as f32).collect())
+                        .collect()
+                })
+                .collect();
+            // random arrival order: a shuffled multiset of session ids,
+            // partitioned into ticks of random width
+            let mut arrivals: Vec<usize> = Vec::new();
+            for (s, cs) in chunks.iter().enumerate() {
+                arrivals.extend(std::iter::repeat(s).take(cs.len()));
+            }
+            // Fisher-Yates with the draw's RNG
+            for i in (1..arrivals.len()).rev() {
+                let j = d.usize_in(0, i);
+                arrivals.swap(i, j);
+            }
+            let mut schedule: Vec<Vec<usize>> = Vec::new();
+            while !arrivals.is_empty() {
+                // a session appears at most once per tick (one chunk per
+                // dispatch); the stable partition keeps per-session order
+                let width = d.usize_in(1, arrivals.len().min(n_sessions));
+                let mut tick: Vec<usize> = Vec::new();
+                let mut remaining: Vec<usize> = Vec::new();
+                for &s in &arrivals {
+                    if tick.len() < width && !tick.contains(&s) {
+                        tick.push(s);
+                    } else {
+                        remaining.push(s);
+                    }
+                }
+                arrivals = remaining;
+                schedule.push(tick);
+            }
+            Interleaving {
+                hop,
+                chunks,
+                schedule,
+            }
+        },
+        |case| {
+            let cfg = StreamConfig {
+                hop: case.hop,
+                ..Default::default()
+            };
+            // shared router: sessions interleaved per the schedule
+            let mut shared = StreamRouter::new(&exe, cfg).map_err(|e| e.to_string())?;
+            let mut got: Vec<Vec<f32>> = vec![Vec::new(); case.chunks.len()];
+            let mut next_chunk: Vec<usize> = vec![0; case.chunks.len()];
+            for (tick, sessions) in case.schedule.iter().enumerate() {
+                for &s in sessions {
+                    let c = &case.chunks[s][next_chunk[s]];
+                    next_chunk[s] += 1;
+                    shared.ingest(s as u64, c, tick as u64);
+                }
+                for sc in shared.dispatch(&exe, tick as u64).map_err(|e| e.to_string())? {
+                    got[sc.stream as usize].push(sc.score);
+                }
+            }
+            // isolated reference: each session alone in its own router
+            for (s, cs) in case.chunks.iter().enumerate() {
+                let mut solo = StreamRouter::new(&exe, cfg).map_err(|e| e.to_string())?;
+                let mut want: Vec<f32> = Vec::new();
+                for (tick, c) in cs.iter().enumerate() {
+                    solo.ingest(s as u64, c, tick as u64);
+                    for sc in solo.dispatch(&exe, tick as u64).map_err(|e| e.to_string())? {
+                        want.push(sc.score);
+                    }
+                }
+                if got[s] != want {
+                    return Err(format!(
+                        "session {s}: grouped scores {:?} != isolated {:?}",
+                        got[s], want
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn streaming_serving_end_to_end() {
+    // The full run_serving_streaming loop: serves the quota, scores flow
+    // through stateful sessions, AUC is defined, and per-dispatch batches
+    // actually group sessions (mean batch ≈ S under full admission).
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = ServeConfig {
+        model: "small_streaming".into(),
+        calib_windows: 24,
+        max_windows: 96,
+        inject_prob: 0.4,
+        stream_sessions: 4,
+        stream_hop: 8,
+        streaming: true,
+        ..Default::default()
+    };
+    let report = run_serving_streaming(&weights, &cfg).unwrap();
+    assert_eq!(report.windows, 96);
+    assert_eq!(report.dropped, 0);
+    assert!(report.platform.contains("streaming"), "{}", report.platform);
+    assert!(report.mean_batch > 3.5, "mean batch {}", report.mean_batch);
+    assert!(report.auc > 0.0 && report.auc <= 1.0);
+    assert!(report.infer.n >= 96);
+    assert!(report.throughput_per_s > 0.0);
+    // both classes present so the detection summary is meaningful
+    assert!(report.summary.true_pos + report.summary.false_neg > 0);
+    assert!(report.summary.true_neg + report.summary.false_pos > 0);
+}
+
+#[test]
+fn stateless_entry_point_rejects_streaming_config() {
+    // Reject-don't-ignore: a config asking for resident sessions must not
+    // silently serve through the stateless window pipeline.
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = ServeConfig {
+        streaming: true,
+        ..Default::default()
+    };
+    assert!(run_serving_native(&weights, 8, &cfg, Policy::Immediate).is_err());
+}
+
+#[test]
+fn streaming_serving_fast_tier_runs_and_stays_close() {
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let mk = |policy| ServeConfig {
+        model: "small_streaming".into(),
+        calib_windows: 16,
+        max_windows: 48,
+        inject_prob: 0.3,
+        stream_sessions: 3,
+        stream_hop: 8,
+        streaming: true,
+        math_policy: policy,
+        ..Default::default()
+    };
+    let exact = run_serving_streaming(&weights, &mk(MathPolicy::BitExact)).unwrap();
+    let fast = run_serving_streaming(&weights, &mk(MathPolicy::FastSimd)).unwrap();
+    assert_eq!(fast.windows, 48);
+    assert!(fast.platform.contains("fastsimd"), "{}", fast.platform);
+    // same synthetic feeds, bounded activations: AUC of the two tiers must
+    // agree closely (scores drift within FAST_FORWARD_TOL per window)
+    assert!(
+        (exact.auc - fast.auc).abs() < 0.2,
+        "AUC drift {} vs {}",
+        exact.auc,
+        fast.auc
+    );
+}
