@@ -19,8 +19,16 @@ if command -v cargo >/dev/null 2>&1; then
     note "rust: cargo build --release"
     (cd rust && cargo build --release) || failures=$((failures + 1))
 
-    note "rust: cargo test -q"
-    (cd rust && cargo test -q) || failures=$((failures + 1))
+    # The suite runs twice: once serial, once with 4-lane engine pools.
+    # tests/parallel_parity.rs widens its thread sweep from GWLSTM_THREADS
+    # and the serving/e2e tests pick it up via threads_from_env, so the
+    # parallel path is exercised suite-wide — results must be bit-identical
+    # either way (the model::par contract).
+    note "rust: cargo test -q (GWLSTM_THREADS=1)"
+    (cd rust && GWLSTM_THREADS=1 cargo test -q) || failures=$((failures + 1))
+
+    note "rust: cargo test -q (GWLSTM_THREADS=4)"
+    (cd rust && GWLSTM_THREADS=4 cargo test -q) || failures=$((failures + 1))
 
     # Doc tests + rendered docs are tier-1: every public item in the model/
     # stream layers carries runnable examples (ARCHITECTURE.md points at
@@ -48,14 +56,18 @@ if command -v cargo >/dev/null 2>&1; then
         # model::simd tolerance — a tolerance regression fails CI here.
         # e2e_serving runs in both math tiers via GWLSTM_MATH, which also
         # exercises the streaming serving arm (run_serving_streaming) in
-        # both tiers. See rust/BENCHMARKS.md for the JSON schema.
+        # both tiers; the fast_simd pass additionally runs with 4-lane
+        # engine pools (GWLSTM_THREADS) so the thread-sweep serving arm is
+        # part of the smoke. hotpath now also emits the par/* thread-
+        # scaling keys (parity-guarded: it exits nonzero if any thread
+        # count diverges bitwise). See rust/BENCHMARKS.md for the schema.
         note "rust: bench smoke (tiny iteration counts, both math tiers)"
         (cd rust && GWLSTM_BENCH_SMOKE=1 cargo bench --bench hotpath) \
             || failures=$((failures + 1))
         (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=bitexact \
             cargo bench --bench e2e_serving) \
             || failures=$((failures + 1))
-        (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=fast_simd \
+        (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=fast_simd GWLSTM_THREADS=4 \
             cargo bench --bench e2e_serving) \
             || failures=$((failures + 1))
     fi

@@ -11,9 +11,15 @@
 //! * **PJRT artifacts** (requires `make artifacts`): the paper's AOT path.
 //!
 //! Run: `cargo bench --bench e2e_serving`. Set `GWLSTM_BENCH_SMOKE=1` for
-//! the ci.sh smoke invocation (tiny window counts), and `GWLSTM_MATH=
+//! the ci.sh smoke invocation (tiny window counts), `GWLSTM_MATH=
 //! bitexact|fast_simd` to pick the native engine's math tier (ci.sh runs
-//! the smoke in both).
+//! the smoke in both), and `GWLSTM_THREADS=N` to give every native engine
+//! (stateless policies AND the streaming arm) an N-lane balanced-partition
+//! worker pool — the thread-sweep arm of the serving tables without a new
+//! bench binary. Scores are bit-identical across N; only the latency/
+//! throughput columns move. The PJRT sweep ignores threads by design
+//! (`run_serving_with_policy` would reject it) and always serves with the
+//! default single-threaded config.
 
 use std::time::Duration;
 
@@ -79,6 +85,7 @@ fn main() {
         Ok(s) => MathPolicy::parse(&s).expect("GWLSTM_MATH"),
         Err(_) => MathPolicy::BitExact,
     };
+    let threads = gwlstm::model::par::threads_from_env(1);
 
     // ---- native batched backend (always available) ----
     let weights = AutoencoderWeights::synthetic(0x5E4E, "small");
@@ -88,6 +95,7 @@ fn main() {
         max_windows: windows,
         inject_prob: 0.25,
         math_policy: math,
+        threads,
         ..Default::default()
     };
     let mut rows = Vec::new();
@@ -106,6 +114,7 @@ fn main() {
         max_windows: windows,
         inject_prob: 0.25,
         math_policy: math,
+        threads,
         streaming: true,
         stream_sessions: 8,
         stream_hop: 8,
@@ -114,7 +123,7 @@ fn main() {
     let r = run_serving_streaming(&weights, &scfg).expect("streaming serving run");
     rows.push(("streaming stateful S=8 hop=8", r));
     println!(
-        "=== e2e serving (native batched engine, {} tier): policy trade-off ===\n",
+        "=== e2e serving (native batched engine, {} tier, {threads} engine thread(s)): policy trade-off ===\n",
         math.label()
     );
     table_for(rows).print();

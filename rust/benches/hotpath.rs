@@ -6,7 +6,10 @@
 //!            PR 1 engine), the FastSimd math tier, the streaming state
 //!            service (stateful continuation per hop of new samples vs
 //!            re-encoding the full window from zeros — the `stream/*`
-//!            keys), PJRT inference (small + nominal), pure-rust f32
+//!            keys), the balanced-partition parallel layer (thread scaling
+//!            at B=32 and the balanced-vs-naive split comparison — the
+//!            `par/*` keys, parity-guarded before timing),
+//!            PJRT inference (small + nominal), pure-rust f32
 //!            forward, fixed-point forward, cycle-simulator throughput,
 //!            DSE speed, window generation (FFT + filters), router
 //!            dispatch.
@@ -40,7 +43,8 @@ use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
 use gwlstm::model::batched::reference;
 use gwlstm::model::simd::FAST_FORWARD_TOL;
 use gwlstm::model::{
-    forward_f32, AutoencoderWeights, FixedAutoencoder, MathPolicy, PackedAutoencoder,
+    forward_f32, AutoencoderWeights, FixedAutoencoder, MathPolicy, PackedAutoencoder, PlanMode,
+    WorkerPool,
 };
 use gwlstm::runtime::{Engine, ModelExecutor};
 use gwlstm::sim::{simulate, SimConfig};
@@ -291,6 +295,92 @@ fn main() {
         b8_per_stream,
         b8_per_stream / stateful_per_window,
     );
+
+    // ---- parallel lockstep execution (worker pool + StagePlan) ----
+    // Thread scaling of the balanced-partition parallel layer at the wide
+    // batch (B=32), plus the balanced-vs-naive split comparison at the
+    // plan's motivating shape (B=30 over 8 lanes: naive leaves a 9-row
+    // tail on the last worker; balanced keeps every slice at one register
+    // block). All engines are BitExact — the parity guard below asserts
+    // the parallel outputs are bit-identical before anything is timed.
+    let par_b = 32usize;
+    let mut t1_per_window = f64::NAN;
+    let mut t4_per_window = f64::NAN;
+    let par_want = packed.forward_batch(&pool[..par_b * ts], par_b);
+    for &threads in &[1usize, 2, 4, 8] {
+        let eng = PackedAutoencoder::from_weights_policy_threads(
+            &weights,
+            MathPolicy::BitExact,
+            threads,
+        );
+        if eng.forward_batch(&pool[..par_b * ts], par_b) != par_want {
+            eprintln!(
+                "FATAL: {threads}-thread engine diverged from single-thread \
+                 — parallel bit-exactness contract broken"
+            );
+            std::process::exit(1);
+        }
+        let st = Bench::new(&format!("par: blocked lockstep B={par_b} threads={threads}"))
+            .iters(rec.iters(30))
+            .run(|| {
+                std::hint::black_box(eng.forward_batch(&pool[..par_b * ts], par_b));
+            });
+        let per_window = st.median_ns / par_b as f64;
+        rec.put(&format!("par/threads{threads}_b32_per_window"), per_window);
+        println!(
+            "  -> threads={threads}: {:.0} ns/window ({:.2} GFLOP/s aggregate)",
+            per_window,
+            flops / per_window
+        );
+        if threads == 1 {
+            t1_per_window = per_window;
+        }
+        if threads == 4 {
+            t4_per_window = per_window;
+        }
+    }
+    // parallel efficiency at 4 lanes: speedup(4)/4, 1.0 = perfect scaling
+    rec.put(
+        "par/scaling_efficiency",
+        (t1_per_window / t4_per_window) / 4.0,
+    );
+    println!(
+        "  -> scaling: {:.2}x at 4 threads ({:.0}% efficiency)",
+        t1_per_window / t4_per_window,
+        100.0 * (t1_per_window / t4_per_window) / 4.0
+    );
+    {
+        let imb_b = 30usize; // 8 lanes: naive = 3-row slices + a 9-row tail
+        let balanced = PackedAutoencoder::from_weights_policy_pool(
+            &weights,
+            MathPolicy::BitExact,
+            WorkerPool::new(8),
+        );
+        let naive = PackedAutoencoder::from_weights_policy_pool(
+            &weights,
+            MathPolicy::BitExact,
+            WorkerPool::with_mode(8, PlanMode::NaiveRows),
+        );
+        let bal = Bench::new("par: balanced split B=30 threads=8")
+            .iters(rec.iters(30))
+            .run(|| {
+                std::hint::black_box(balanced.forward_batch(&pool[..imb_b * ts], imb_b));
+            });
+        let nai = Bench::new("par: naive floor split B=30 threads=8")
+            .iters(rec.iters(30))
+            .run(|| {
+                std::hint::black_box(naive.forward_batch(&pool[..imb_b * ts], imb_b));
+            });
+        rec.put(
+            "par/balanced_vs_naive_split_speedup",
+            nai.median_ns / bal.median_ns,
+        );
+        println!(
+            "  -> balanced vs naive split @ B={imb_b}, 8 threads: {:.2}x \
+             (II-style work balancing vs the floor(B/T) tail)",
+            nai.median_ns / bal.median_ns
+        );
+    }
 
     // Executor-level dispatch cost: the serving coordinator's view (one
     // score_batch call vs a loop of score calls, native backend).

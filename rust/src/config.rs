@@ -113,6 +113,15 @@ pub struct ServeConfig {
     /// exactness for throughput within the tolerances documented in
     /// `model::simd`. JSON key `math_policy`: `"bitexact"` | `"fast_simd"`.
     pub math_policy: MathPolicy,
+    /// Worker lanes INSIDE each native engine (`model::par` balanced-
+    /// partition pool): every lockstep call splits its batch across this
+    /// many threads, bit-identically to `threads = 1`. Distinct from
+    /// `workers`, which is how many serving pipelines (each owning one
+    /// engine) run side by side — total compute threads ≈ workers ×
+    /// threads. Native backend only: the PJRT entry point *rejects*
+    /// `threads != 1` rather than silently serving single-threaded.
+    /// JSON key `threads`; `0` is rejected at parse time.
+    pub threads: usize,
     /// Serve the streaming state service instead of the stateless window
     /// pipeline: per-stream resident `(h, c)` sessions, one lockstep
     /// stateful call per tick (`run_serving_streaming`; native backend
@@ -143,6 +152,7 @@ impl Default for ServeConfig {
             queue_depth: 64,
             pace_us: 0,
             math_policy: MathPolicy::BitExact,
+            threads: 1,
             streaming: false,
             stream_sessions: 8,
             stream_hop: 25,
@@ -166,6 +176,15 @@ impl ServeConfig {
                 "queue_depth" => self.queue_depth = val.as_usize()?,
                 "pace_us" => self.pace_us = val.as_usize()? as u64,
                 "math_policy" => self.math_policy = MathPolicy::parse(val.as_str()?)?,
+                "threads" => {
+                    let t = val.as_usize()?;
+                    if t == 0 {
+                        return Err(anyhow!(
+                            "threads: 0 is invalid (use 1 for single-threaded execution)"
+                        ));
+                    }
+                    self.threads = t;
+                }
                 "streaming" => self.streaming = val.as_bool()?,
                 "sessions" => self.stream_sessions = val.as_usize()?,
                 "hop" => self.stream_hop = val.as_usize()?,
@@ -294,6 +313,19 @@ mod tests {
         assert_eq!(cfg.stream_ttl, 32);
         let bad = Value::parse(r#"{"streaming": "yes"}"#).unwrap();
         assert!(cfg.apply_json(&bad).is_err(), "non-bool streaming rejected");
+    }
+
+    #[test]
+    fn threads_override_and_zero_rejection() {
+        let mut cfg = ServeConfig::default();
+        assert_eq!(cfg.threads, 1, "default stays byte-compatible");
+        let v = Value::parse(r#"{"threads": 4}"#).unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.threads, 4);
+        // reject-don't-ignore: 0 is a config error, not silent 1
+        let bad = Value::parse(r#"{"threads": 0}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err());
+        assert_eq!(cfg.threads, 4, "failed apply must not half-commit");
     }
 
     #[test]

@@ -140,6 +140,17 @@ pub fn run_serving_with_policy(
              native backend); the PJRT window pipeline is stateless"
         );
     }
+    if cfg.threads != 1 {
+        // Reject-don't-ignore (the math_policy/--streaming precedent): the
+        // compiled artifact executes on PJRT's own runtime; the balanced-
+        // partition worker pool exists only inside the native engine, so
+        // accepting `threads` here would silently serve single-threaded.
+        anyhow::bail!(
+            "threads = {} only applies to the native batched backend \
+             (the PJRT executable has no balanced-partition worker pool)",
+            cfg.threads
+        );
+    }
     let spec = manifest.variant(&cfg.model)?.clone();
     let dir = manifest.dir.clone();
     let model = cfg.model.clone();
@@ -157,7 +168,9 @@ pub fn run_serving_with_policy(
 /// `weights` (trained or [`AutoencoderWeights::synthetic`]). This is the
 /// path integration tests and benches exercise without `make artifacts`.
 /// The engine's math tier follows `cfg.math_policy` (`BitExact` default;
-/// `FastSimd` opts into the accuracy-bounded fast kernel).
+/// `FastSimd` opts into the accuracy-bounded fast kernel), and each
+/// worker's engine spans `cfg.threads` balanced-partition lanes
+/// (`model::par`; scores bit-identical to single-threaded).
 pub fn run_serving_native(
     weights: &AutoencoderWeights,
     ts: usize,
@@ -175,8 +188,11 @@ pub fn run_serving_native(
     let w = weights.clone();
     let name = cfg.model.clone();
     let math = cfg.math_policy;
+    let threads = cfg.threads.max(1);
     let factory = move || -> Result<ModelExecutor> {
-        Ok(ModelExecutor::native_from_weights_policy(&w, &name, ts, math))
+        Ok(ModelExecutor::native_from_weights_policy_threads(
+            &w, &name, ts, math, threads,
+        ))
     };
     serve_core(factory, ts, cfg, policy)
 }
@@ -198,14 +214,23 @@ pub fn run_serving_native(
 /// samples per chunk, `cfg.stream_ttl` idle-tick eviction, and the native
 /// batched backend under `cfg.math_policy` (both tiers supported). The
 /// threshold is calibrated on a *stateful* background session so it
-/// matches the serving score distribution.
+/// matches the serving score distribution. "Single-threaded by design"
+/// refers to the coordinator loop; the engine itself spans `cfg.threads`
+/// balanced-partition lanes, splitting each lockstep stateful call across
+/// cores bit-identically (the leader stays the only dispatcher).
 pub fn run_serving_streaming(
     weights: &AutoencoderWeights,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
     let hop = cfg.stream_hop.max(1);
     let sessions = cfg.stream_sessions.max(1);
-    let exe = ModelExecutor::native_from_weights_policy(weights, &cfg.model, hop, cfg.math_policy);
+    let exe = ModelExecutor::native_from_weights_policy_threads(
+        weights,
+        &cfg.model,
+        hop,
+        cfg.math_policy,
+        cfg.threads.max(1),
+    );
     let platform = format!("{}+streaming", exe.platform());
     let compile_ms = exe.compile_ms;
     let metrics = Metrics::new();

@@ -17,6 +17,9 @@
 //!              [--batch N]   micro-batch dispatch through the batched engine
 //!              [--native]    artifact-less native batched backend (synthetic weights)
 //!              [--math bitexact|fast_simd]   native-engine math tier (model::simd)
+//!              [--threads N] balanced-partition parallel engine: each lockstep
+//!                            call splits its batch across N worker lanes
+//!                            (model::par), bit-identical to N=1 (requires --native)
 //!              [--streaming] [--sessions S] [--hop H]
 //!                            streaming state service: S resident per-stream
 //!                            (h, c) sessions, one lockstep stateful call per
@@ -331,6 +334,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(m) = &math_flag {
         cfg.math_policy = gwlstm::model::MathPolicy::parse(m)?;
     }
+    // --threads N spreads each lockstep engine call across N balanced-
+    // partition worker lanes (model::par) — bit-identical to N=1.
+    let threads_flag = args.get("threads").is_some();
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
     // --streaming serves the streaming state service: resident per-stream
     // (h, c) continued across chunks instead of re-encoding from zeros.
     if args.flag("streaming") {
@@ -349,6 +356,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if math_flag.is_some() && !native {
         bail!("--math only applies with --native (the PJRT artifact datapath has no math tier)");
+    }
+    if threads_flag && !native {
+        // Reject-don't-ignore, same as --math: the PJRT executable has no
+        // balanced-partition worker pool to spread a batch across.
+        bail!("--threads only applies with --native (the PJRT artifact executes on its own runtime)");
+    }
+    if cfg.threads == 0 {
+        bail!("--threads 0 is invalid (use 1 for single-threaded execution)");
     }
     if cfg.streaming && !native {
         bail!(

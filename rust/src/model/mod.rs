@@ -10,7 +10,12 @@
 //!   [`batched::BatchedScratch`] (zero per-timestep allocation), plus the
 //!   `*_stateful` continuation twins ([`batched::StreamState`] resident
 //!   `(h, c)`) that the streaming state service ([`crate::stream`]) keeps
-//!   alive across windows,
+//!   alive across windows, and the balanced-partition parallel layer
+//!   ([`par`]): a persistent [`par::WorkerPool`] splits the lockstep batch
+//!   into cost-balanced contiguous stream-slices ([`par::StagePlan`], the
+//!   software analogue of the paper's per-layer reuse-factor balancing) —
+//!   bit-identical to single-thread at any thread count in both math
+//!   tiers (pinned by tests/parallel_parity.rs),
 //! * [`simd`] — the explicit-vector layer under it: portable fixed-width
 //!   block ops (bit-identical to scalar order), a runtime-detected
 //!   AVX2+FMA kernel, the fast rational sigmoid/tanh tier, and the
@@ -31,6 +36,7 @@ pub mod autoencoder;
 pub mod batched;
 pub mod fixed;
 pub mod lstm;
+pub mod par;
 pub mod simd;
 pub mod weights;
 
@@ -39,5 +45,6 @@ pub use batched::{
     forward_f32_batch, BatchedLstm, BatchedState, LstmWeightsPacked, PackedAutoencoder,
     StreamState,
 };
+pub use par::{PlanMode, StagePlan, WorkerPool};
 pub use simd::MathPolicy;
 pub use weights::AutoencoderWeights;

@@ -1,0 +1,644 @@
+//! Balanced-partition parallel execution layer for the lockstep engine:
+//! a persistent [`WorkerPool`] plus the [`StagePlan`] cost model that
+//! decides which contiguous stream-slice each worker owns.
+//!
+//! This is the multi-core analogue of the paper's initiation-interval
+//! balancing (Que et al., arXiv:2106.14089): there, per-layer reuse
+//! factors are chosen so no pipeline stage bottlenecks the others; here,
+//! per-worker slice widths are chosen by a static per-layer cost model so
+//! no worker retires its share of the lockstep batch later than the rest.
+//! Throughput scaling comes from replicating the balanced compute unit
+//! (the hls4ml RNN strategy, Khoda et al., arXiv:2207.00559), not from
+//! making one unit faster — each worker runs the *same* register-blocked
+//! kernel ([`super::batched`]) on its slice.
+//!
+//! # Why partitioning is bit-exact
+//!
+//! The batch is split by **stream rows**, and lockstep rows never interact:
+//! every per-element accumulation of stream `b` reads only stream `b`'s
+//! inputs and states, in ascending-`k` order, regardless of which rows
+//! share its register block or its worker. Partitioning therefore changes
+//! *which core* computes a row, never an operand or an accumulation order
+//! — outputs are bit-identical to the single-thread path at any thread
+//! count, in **both** [`super::simd::MathPolicy`] tiers (pinned by
+//! `tests/parallel_parity.rs`).
+//!
+//! # Pool lifecycle
+//!
+//! Workers are `std::thread`s spawned **once** at engine construction and
+//! parked in a channel `recv` between dispatches — no per-call spawn cost
+//! on the serving hot path. [`WorkerPool::run_tasks`] sends one closure per
+//! slice to the workers, runs slice 0 on the calling thread, and blocks
+//! until every slice has retired, which is what makes handing stack
+//! borrows to the workers sound (see the safety note on `run_tasks`).
+//! Whole dispatches are serialized by an internal lock — concurrent
+//! `run_tasks` calls from two threads are safe, the second simply waits
+//! — but a pool is **not** a sharing point between engines: each
+//! [`super::batched::PackedAutoencoder`] owns its own pool (the engine's
+//! scratch lock already admits one dispatcher, so the internal lock is
+//! uncontended there).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::simd::BLOCK_RB;
+
+/// How a pool partitions a lockstep batch into per-worker stream slices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanMode {
+    /// Cost-model-balanced, register-block-aligned slices
+    /// ([`StagePlan::balanced`]) — the production default.
+    #[default]
+    Balanced,
+    /// The naive `floor(B/T)`-rows-each split with the whole remainder
+    /// dumped on the last worker ([`StagePlan::naive`]). Kept as the
+    /// baseline the `par/balanced_vs_naive_split_speedup` bench key
+    /// measures against — do not serve with it.
+    NaiveRows,
+}
+
+/// A contiguous partition of `batch` lockstep stream rows into per-worker
+/// slices, widths chosen so every worker's modeled cost is near-equal.
+///
+/// The cost model is the software analogue of the paper's per-layer
+/// reuse-factor table: one slice's cost through a layer is the number of
+/// `RB`-row register-block panel walks it needs times the MACs each walk
+/// streams (`(Lx + Lh) · 4·Lh` — both GEMMs of the gate computation). A
+/// partial block pays a full panel traversal, which is why balanced slices
+/// prefer `RB`-aligned widths over merely equal row counts.
+///
+/// ```
+/// use gwlstm::model::par::StagePlan;
+///
+/// // 30 rows over 8 workers: balanced keeps the worst slice at one
+/// // register block; the naive floor split loads 9 rows on the last.
+/// let dims = [(1usize, 9usize), (9, 9)];
+/// let bal = StagePlan::balanced(30, 8, &dims);
+/// let nai = StagePlan::naive(30, 8);
+/// assert_eq!(bal.batch(), 30);
+/// assert!(bal.max_cost(&dims) < nai.max_cost(&dims));
+/// assert_eq!(nai.slices().last().unwrap().1, 9);
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagePlan {
+    batch: usize,
+    /// `(first_row, rows)` per slice: contiguous, non-empty, covering
+    /// `0..batch` in order.
+    slices: Vec<(usize, usize)>,
+}
+
+impl StagePlan {
+    /// The `(first_row, rows)` slices, in stream order.
+    pub fn slices(&self) -> &[(usize, usize)] {
+        &self.slices
+    }
+
+    /// Total lockstep rows this plan partitions.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Modeled cost of `rows` lockstep rows through one `(Lx, Lh)` layer:
+    /// register-block panel walks × MACs per walk (a partial block pays a
+    /// full traversal — see the type docs).
+    pub fn layer_cost(rows: usize, lx: usize, lh: usize) -> u64 {
+        let walks = rows.div_ceil(BLOCK_RB) as u64;
+        walks * (BLOCK_RB * (lx + lh) * 4 * lh) as u64
+    }
+
+    /// Modeled cost of a slice through every layer of `dims` (`(Lx, Lh)`
+    /// per layer).
+    pub fn slice_cost(rows: usize, dims: &[(usize, usize)]) -> u64 {
+        dims.iter()
+            .map(|&(lx, lh)| StagePlan::layer_cost(rows, lx, lh))
+            .sum()
+    }
+
+    /// The plan's bottleneck: the largest per-slice modeled cost (the
+    /// quantity balancing minimizes, like the paper's system II).
+    pub fn max_cost(&self, dims: &[(usize, usize)]) -> u64 {
+        self.slices
+            .iter()
+            .map(|&(_, rows)| StagePlan::slice_cost(rows, dims))
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn from_widths(batch: usize, widths: Vec<usize>) -> StagePlan {
+        let mut slices = Vec::with_capacity(widths.len());
+        let mut b0 = 0usize;
+        for rows in widths {
+            if rows > 0 {
+                slices.push((b0, rows));
+                b0 += rows;
+            }
+        }
+        assert_eq!(b0, batch, "plan must cover the whole batch");
+        StagePlan { batch, slices }
+    }
+
+    /// Balanced partition of `batch` rows over at most `threads` workers:
+    /// the better (lower max modeled cost through `dims`) of the evenest
+    /// row split and the evenest register-block split, preferring the
+    /// block-aligned one on ties so full blocks are never split across
+    /// workers when equal-cost alternatives exist.
+    pub fn balanced(batch: usize, threads: usize, dims: &[(usize, usize)]) -> StagePlan {
+        assert!(batch > 0, "batch must be positive");
+        let threads = threads.max(1);
+        if threads == 1 {
+            return StagePlan::from_widths(batch, vec![batch]);
+        }
+        // Candidate A: evenest row split (first `extra` slices one wider).
+        let ta = threads.min(batch);
+        let (base, extra) = (batch / ta, batch % ta);
+        let even: Vec<usize> = (0..ta).map(|i| base + usize::from(i < extra)).collect();
+        // Candidate B: evenest register-block split; only the final slice
+        // may hold the partial block.
+        let blocks = batch.div_ceil(BLOCK_RB);
+        let tb = threads.min(blocks);
+        let (bbase, bextra) = (blocks / tb, blocks % tb);
+        let mut blocked = Vec::with_capacity(tb);
+        let mut assigned = 0usize;
+        for i in 0..tb {
+            let w = ((bbase + usize::from(i < bextra)) * BLOCK_RB).min(batch - assigned);
+            blocked.push(w);
+            assigned += w;
+        }
+        let a = StagePlan::from_widths(batch, even);
+        let b = StagePlan::from_widths(batch, blocked);
+        if a.max_cost(dims) < b.max_cost(dims) {
+            a
+        } else {
+            b
+        }
+    }
+
+    /// The naive split: `floor(batch/threads)` rows per worker with the
+    /// entire remainder on the last one. Exists only as the imbalance
+    /// baseline for benches/tests — its tail worker can carry several
+    /// times the balanced bottleneck cost.
+    pub fn naive(batch: usize, threads: usize) -> StagePlan {
+        assert!(batch > 0, "batch must be positive");
+        let t = threads.max(1).min(batch);
+        let base = batch / t;
+        let mut widths = vec![base; t];
+        widths[t - 1] = batch - base * (t - 1);
+        StagePlan::from_widths(batch, widths)
+    }
+}
+
+/// Thread count from the `GWLSTM_THREADS` environment variable, falling
+/// back to `default` when unset. Used by the benches and the parity suite
+/// so `ci.sh` can sweep the whole pipeline across thread counts without
+/// new binaries. Panics on `0` or garbage — a mistyped sweep must fail
+/// loudly, not silently serve single-threaded.
+pub fn threads_from_env(default: usize) -> usize {
+    match std::env::var("GWLSTM_THREADS") {
+        Ok(s) => {
+            let n: usize = s
+                .trim()
+                .parse()
+                .unwrap_or_else(|_| panic!("GWLSTM_THREADS must be a positive integer, got {s:?}"));
+            assert!(n >= 1, "GWLSTM_THREADS must be >= 1 (got 0)");
+            n
+        }
+        Err(_) => default,
+    }
+}
+
+/// A task dispatched to a pool worker. Lifetime-erased to `'static`; the
+/// erasure is sound because [`WorkerPool::run_tasks`] never returns before
+/// every task has retired (see its safety note).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion accounting shared between the dispatcher and the workers.
+struct TaskSync {
+    /// Worker-side tasks still running in the current dispatch.
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// Set by a worker whose task panicked; surfaced as a dispatcher panic
+    /// after the barrier (so borrows never outlive a unwinding caller).
+    panicked: AtomicBool,
+}
+
+struct PoolShared {
+    /// One channel per worker: a send is a dispatch, a parked `recv` is
+    /// the idle state between ticks.
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    sync: Arc<TaskSync>,
+    /// Held for the entire span of one [`WorkerPool::run_tasks`] barrier.
+    /// `WorkerPool` is `Sync` (mpsc senders are `Sync`), so without this
+    /// two threads sharing a pool could interleave on the one
+    /// `remaining`/`panicked` accounting — letting one caller's barrier
+    /// observe the other's completions and return while its own
+    /// stack-borrowed tasks still run. Serializing whole dispatches keeps
+    /// the lifetime-erasure argument airtight from safe code; the lock is
+    /// uncontended in the engine topology (the scratch mutex already
+    /// admits one dispatcher per engine).
+    dispatch: Mutex<()>,
+}
+
+/// Persistent worker pool for balanced-partition lockstep execution.
+///
+/// `threads = 1` is the serial pool: no threads are spawned, nothing is
+/// allocated, and [`WorkerPool::run_tasks`] runs inline — the
+/// single-thread engine path is exactly what it was before this layer
+/// existed. `threads = N > 1` spawns `N - 1` workers once; the calling
+/// thread is the N-th lane on every dispatch.
+///
+/// ```
+/// use gwlstm::model::par::WorkerPool;
+/// use std::sync::atomic::{AtomicUsize, Ordering};
+///
+/// let pool = WorkerPool::new(3);
+/// assert_eq!(pool.threads(), 3);
+/// let hits = AtomicUsize::new(0);
+/// let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+///     .map(|_| {
+///         Box::new(|| {
+///             hits.fetch_add(1, Ordering::SeqCst);
+///         }) as Box<dyn FnOnce() + Send + '_>
+///     })
+///     .collect();
+/// pool.run_tasks(tasks); // returns only after all three ran
+/// assert_eq!(hits.load(Ordering::SeqCst), 3);
+/// ```
+pub struct WorkerPool {
+    threads: usize,
+    mode: PlanMode,
+    shared: Option<PoolShared>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .field("mode", &self.mode)
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Balanced-partition pool of `threads` total lanes (`threads - 1`
+    /// spawned workers + the caller).
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool::with_mode(threads, PlanMode::Balanced)
+    }
+
+    /// The allocation-free single-thread pool (what the plain engine
+    /// constructors and the layer-level `run_into` entry points use).
+    pub fn serial() -> WorkerPool {
+        WorkerPool {
+            threads: 1,
+            mode: PlanMode::Balanced,
+            shared: None,
+        }
+    }
+
+    /// Pool with an explicit partition mode (benches compare
+    /// [`PlanMode::Balanced`] against [`PlanMode::NaiveRows`]).
+    pub fn with_mode(threads: usize, mode: PlanMode) -> WorkerPool {
+        let threads = threads.max(1);
+        if threads == 1 {
+            let mut p = WorkerPool::serial();
+            p.mode = mode;
+            return p;
+        }
+        let sync = Arc::new(TaskSync {
+            remaining: Mutex::new(0),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let mut txs = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let (tx, rx) = channel::<Job>();
+            let s = sync.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("gwlstm-par-{i}"))
+                .spawn(move || worker_loop(rx, s))
+                .expect("spawning pool worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool {
+            threads,
+            mode,
+            shared: Some(PoolShared {
+                txs,
+                handles,
+                sync,
+                dispatch: Mutex::new(()),
+            }),
+        }
+    }
+
+    /// Total lanes (spawned workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Partition mode this pool plans with.
+    pub fn mode(&self) -> PlanMode {
+        self.mode
+    }
+
+    /// A fresh pool with this pool's configuration (used by engine
+    /// `Clone`: threads are never shared between engine instances).
+    pub fn like(&self) -> WorkerPool {
+        WorkerPool::with_mode(self.threads, self.mode)
+    }
+
+    /// Partition `batch` lockstep rows for this pool's lane count and
+    /// mode, through the per-layer dims `(Lx, Lh)` of the cost model.
+    pub fn plan(&self, batch: usize, dims: &[(usize, usize)]) -> StagePlan {
+        match self.mode {
+            PlanMode::Balanced => StagePlan::balanced(batch, self.threads, dims),
+            PlanMode::NaiveRows => StagePlan::naive(batch, self.threads),
+        }
+    }
+
+    /// Run every task concurrently — task 0 on the calling thread, the
+    /// rest one-per-worker — and return once **all** of them have retired.
+    /// `tasks.len()` must not exceed [`WorkerPool::threads`]. A panicking
+    /// task does not tear the barrier down: the dispatcher still waits for
+    /// every other task, then re-raises (caller's panic takes precedence).
+    ///
+    /// # Why handing stack borrows to workers is sound
+    ///
+    /// Tasks borrow caller-stack data (`&mut` sub-slices of scratch, state
+    /// and output buffers), but are sent to worker threads as `'static`
+    /// jobs (lifetime transmute below). Soundness rests on the barrier:
+    /// this function does not return — not even by unwinding — until the
+    /// worker-side completion count reaches zero, so every borrow strictly
+    /// outlives every use. The barrier is the same argument scoped-thread
+    /// APIs make; the pool persists across calls where `std::thread::scope`
+    /// would respawn per call. Because `WorkerPool` is `Sync`, the barrier
+    /// accounting itself is guarded by a per-pool dispatch lock: two
+    /// threads calling `run_tasks` on one pool serialize, so neither can
+    /// observe the other's completions as its own.
+    pub fn run_tasks<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let run_inline = self.shared.is_none() || n == 1;
+        if run_inline {
+            assert!(
+                self.shared.is_some() || n == 1,
+                "serial pool handed {n} tasks"
+            );
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let shared = self.shared.as_ref().expect("checked above");
+        assert!(
+            n <= self.threads,
+            "{n} tasks exceed the pool's {} lanes",
+            self.threads
+        );
+        // One dispatch at a time (see `PoolShared::dispatch`): a second
+        // caller blocks here until the first barrier fully retires.
+        let _dispatch = shared
+            .dispatch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        {
+            let mut left = lock(&shared.sync.remaining);
+            debug_assert_eq!(*left, 0, "previous dispatch still in flight");
+            *left = n - 1;
+        }
+        let mut it = tasks.into_iter();
+        let local = it.next().expect("n >= 1");
+        for (i, task) in it.enumerate() {
+            // SAFETY: lifetime erasure only — the barrier below guarantees
+            // the task (and every borrow it captures) is finished before
+            // this function returns or unwinds.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(task)
+            };
+            shared.txs[i].send(job).expect("pool worker exited early");
+        }
+        let local_result = catch_unwind(AssertUnwindSafe(local));
+        let mut left = lock(&shared.sync.remaining);
+        while *left > 0 {
+            left = shared
+                .sync
+                .done
+                .wait(left)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        drop(left);
+        let worker_panicked = shared.sync.panicked.swap(false, Ordering::SeqCst);
+        if let Err(p) = local_result {
+            resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("parallel worker task panicked (see worker thread output)");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(shared) = self.shared.take() {
+            // Closing the channels wakes every parked worker into a recv
+            // error and a clean exit; then join so no detached thread
+            // outlives the engine that owned it.
+            drop(shared.txs);
+            for h in shared.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn lock(m: &Mutex<usize>) -> std::sync::MutexGuard<'_, usize> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker_loop(rx: Receiver<Job>, sync: Arc<TaskSync>) {
+    while let Ok(job) = rx.recv() {
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            sync.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut left = lock(&sync.remaining);
+        *left -= 1;
+        if *left == 0 {
+            sync.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn assert_covers(plan: &StagePlan, batch: usize) {
+        let mut next = 0usize;
+        for &(b0, rows) in plan.slices() {
+            assert_eq!(b0, next, "slices must be contiguous");
+            assert!(rows > 0, "no empty slices");
+            next += rows;
+        }
+        assert_eq!(next, batch, "slices must cover the batch");
+        assert_eq!(plan.batch(), batch);
+    }
+
+    #[test]
+    fn plans_partition_every_shape() {
+        let dims = [(1usize, 9usize), (9, 9)];
+        for batch in [1usize, 2, 3, 4, 5, 7, 8, 16, 30, 32, 33] {
+            for threads in [1usize, 2, 3, 4, 8, 40] {
+                assert_covers(&StagePlan::balanced(batch, threads, &dims), batch);
+                assert_covers(&StagePlan::naive(batch, threads), batch);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_never_worse_than_naive() {
+        let dims = [(1usize, 32usize), (32, 8), (8, 8), (8, 32)];
+        for batch in [1usize, 5, 8, 30, 32, 33, 100] {
+            for threads in [2usize, 3, 4, 8] {
+                let bal = StagePlan::balanced(batch, threads, &dims);
+                let nai = StagePlan::naive(batch, threads);
+                assert!(
+                    bal.max_cost(&dims) <= nai.max_cost(&dims),
+                    "batch {batch} threads {threads}: balanced {} > naive {}",
+                    bal.max_cost(&dims),
+                    nai.max_cost(&dims)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_fixes_the_naive_tail_imbalance() {
+        // The motivating shape: 30 rows / 8 workers. Naive leaves a 9-row
+        // tail (3 register blocks); balanced keeps every slice at one.
+        let dims = [(1usize, 9usize)];
+        let bal = StagePlan::balanced(30, 8, &dims);
+        let nai = StagePlan::naive(30, 8);
+        assert_eq!(nai.slices().last().unwrap().1, 9);
+        assert!(bal.slices().iter().all(|&(_, rows)| rows <= BLOCK_RB));
+        assert_eq!(
+            bal.max_cost(&dims) * 3,
+            nai.max_cost(&dims),
+            "3x modeled tail imbalance"
+        );
+    }
+
+    #[test]
+    fn single_thread_plan_is_one_slice() {
+        let p = StagePlan::balanced(17, 1, &[(1, 9)]);
+        assert_eq!(p.slices(), &[(0, 17)]);
+    }
+
+    #[test]
+    fn pool_runs_all_tasks_and_is_reusable() {
+        let pool = WorkerPool::new(4);
+        for round in 1..=3usize {
+            let hits = AtomicUsize::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..round.min(4))
+                .map(|i| {
+                    let hits = &hits;
+                    Box::new(move || {
+                        hits.fetch_add(i + 1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            let want: usize = (1..=round.min(4)).sum();
+            pool.run_tasks(tasks);
+            assert_eq!(hits.load(Ordering::SeqCst), want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn pool_tasks_see_disjoint_mut_slices() {
+        // The engine's actual usage shape: split_at_mut chunks written
+        // concurrently, visible to the caller after the barrier.
+        let pool = WorkerPool::new(3);
+        let mut buf = vec![0u64; 9];
+        {
+            let (a, rest) = buf.split_at_mut(3);
+            let (b, c) = rest.split_at_mut(3);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = [a, b, c]
+                .into_iter()
+                .enumerate()
+                .map(|(i, chunk)| {
+                    Box::new(move || {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = (i * 3 + j) as u64 + 1;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+        assert_eq!(buf, (1..=9u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_dispatch_from_two_threads_serializes_safely() {
+        // WorkerPool is Sync, so safe code can drive one pool from two
+        // threads at once; the internal dispatch lock must serialize the
+        // barriers so neither caller returns before its own tasks retire.
+        let pool = WorkerPool::new(3);
+        let mut a = vec![0u32; 6];
+        let mut b = vec![0u32; 6];
+        std::thread::scope(|s| {
+            for (buf, base) in [(&mut a, 1u32), (&mut b, 100u32)] {
+                let pool = &pool;
+                s.spawn(move || {
+                    for round in 0..50u32 {
+                        let (x, y) = buf.split_at_mut(3);
+                        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = [x, y]
+                            .into_iter()
+                            .map(|chunk| {
+                                Box::new(move || {
+                                    for v in chunk.iter_mut() {
+                                        *v = base + round;
+                                    }
+                                })
+                                    as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        pool.run_tasks(tasks);
+                    }
+                });
+            }
+        });
+        assert!(a.iter().all(|&v| v == 50), "{a:?}");
+        assert!(b.iter().all(|&v| v == 149), "{b:?}");
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::serial();
+        assert_eq!(pool.threads(), 1);
+        let mut x = 0;
+        pool.run_tasks(vec![Box::new(|| {
+            x = 7;
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(x, 7);
+    }
+
+    #[test]
+    fn threads_env_default_applies_when_unset() {
+        // GWLSTM_THREADS is process-global; only assert the fallback path
+        // here (ci.sh exercises the set path across the whole suite).
+        if std::env::var("GWLSTM_THREADS").is_err() {
+            assert_eq!(threads_from_env(3), 3);
+        } else {
+            assert!(threads_from_env(1) >= 1);
+        }
+    }
+}

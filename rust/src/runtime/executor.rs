@@ -70,7 +70,7 @@ impl Engine {
         let path = manifest.weights_path(&spec);
         let weights = AutoencoderWeights::load(&path)
             .with_context(|| format!("loading weights {path}"))?;
-        Ok(ModelExecutor::native(&weights, spec, MathPolicy::BitExact))
+        Ok(ModelExecutor::native(&weights, spec, MathPolicy::BitExact, 1))
     }
 }
 
@@ -99,12 +99,30 @@ impl ModelExecutor {
 
     /// [`ModelExecutor::native_from_weights`] with an explicit math tier —
     /// `FastSimd` selects the FMA/fast-activation kernel (accuracy-bounded,
-    /// see `model::simd`).
+    /// see `model::simd`). Single-threaded; see
+    /// [`ModelExecutor::native_from_weights_policy_threads`] for the
+    /// balanced-partition parallel engine.
     pub fn native_from_weights_policy(
         weights: &AutoencoderWeights,
         name: &str,
         ts: usize,
         policy: MathPolicy,
+    ) -> ModelExecutor {
+        ModelExecutor::native_from_weights_policy_threads(weights, name, ts, policy, 1)
+    }
+
+    /// [`ModelExecutor::native_from_weights_policy`] with an explicit
+    /// worker-lane count: `threads > 1` spreads every lockstep engine call
+    /// across a persistent balanced-partition pool (`model::par`). Scores
+    /// and reconstructions are bit-identical to `threads = 1` at any lane
+    /// count, in both math tiers; only wall-clock changes. The platform
+    /// label gains a `+par{threads}` suffix so reports show the topology.
+    pub fn native_from_weights_policy_threads(
+        weights: &AutoencoderWeights,
+        name: &str,
+        ts: usize,
+        policy: MathPolicy,
+        threads: usize,
     ) -> ModelExecutor {
         let spec = VariantSpec {
             name: name.to_string(),
@@ -114,17 +132,26 @@ impl ModelExecutor {
             hlo: String::new(),
             golden: String::new(),
         };
-        ModelExecutor::native(weights, spec, policy)
+        ModelExecutor::native(weights, spec, policy, threads)
     }
 
-    fn native(weights: &AutoencoderWeights, spec: VariantSpec, policy: MathPolicy) -> ModelExecutor {
+    fn native(
+        weights: &AutoencoderWeights,
+        spec: VariantSpec,
+        policy: MathPolicy,
+        threads: usize,
+    ) -> ModelExecutor {
+        assert!(threads >= 1, "threads must be positive");
         let t0 = Instant::now();
-        let packed = PackedAutoencoder::from_weights_policy(weights, policy);
+        let packed = PackedAutoencoder::from_weights_policy_threads(weights, policy, threads);
         let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let platform = match policy {
+        let mut platform = match policy {
             MathPolicy::BitExact => "native-batched".to_string(),
             MathPolicy::FastSimd => "native-batched+fastsimd".to_string(),
         };
+        if threads > 1 {
+            platform.push_str(&format!("+par{threads}"));
+        }
         ModelExecutor {
             spec,
             backend: Backend::Native(packed),
@@ -346,6 +373,44 @@ mod tests {
                 (x - y).abs() <= crate::model::simd::FAST_FORWARD_TOL,
                 "score drift {x} vs {y}"
             );
+        }
+    }
+
+    #[test]
+    fn threaded_executor_is_bitexact_and_labeled() {
+        let w = AutoencoderWeights::synthetic(8, "small");
+        let one = ModelExecutor::native_from_weights(&w, "small_synth", 8);
+        let par = ModelExecutor::native_from_weights_policy_threads(
+            &w,
+            "small_synth",
+            8,
+            MathPolicy::BitExact,
+            3,
+        );
+        assert_eq!(par.platform(), "native-batched+par3");
+        let (batch, ts) = (5, 8);
+        let windows: Vec<f32> = (0..batch * ts)
+            .map(|i| ((i * 13 % 23) as f32 - 11.0) / 11.0)
+            .collect();
+        assert_eq!(
+            par.score_batch(&windows, batch).unwrap(),
+            one.score_batch(&windows, batch).unwrap()
+        );
+        // stateful streaming path: scores AND evolved states bit-identical
+        let mut st_one = one.stream_state(batch).unwrap();
+        let mut st_par = par.stream_state(batch).unwrap();
+        for _ in 0..2 {
+            let a = par
+                .score_batch_stateful(&windows[..batch * 4], batch, &mut st_par)
+                .unwrap();
+            let b = one
+                .score_batch_stateful(&windows[..batch * 4], batch, &mut st_one)
+                .unwrap();
+            assert_eq!(a, b);
+        }
+        for (l, (x, y)) in st_par.layers.iter().zip(&st_one.layers).enumerate() {
+            assert_eq!(x.h, y.h, "layer {l} h");
+            assert_eq!(x.c, y.c, "layer {l} c");
         }
     }
 

@@ -1,0 +1,422 @@
+//! Parallel-determinism parity: the balanced-partition worker pool must
+//! change *nothing* numerically — only wall-clock.
+//!
+//! Contracts pinned here (the acceptance criteria of the parallel layer):
+//!
+//! 1. **Thread-count parity** — forward/score at threads ∈ {1, 2, 3, 8} ×
+//!    B ∈ {1, 3, 8, 32} × both math tiers are bit-identical to the
+//!    single-thread engine, through every entry point (stateless,
+//!    stateful, streaming executor), including the evolved resident
+//!    states.
+//! 2. **Plan-mode parity** — even the deliberately imbalanced
+//!    [`PlanMode::NaiveRows`] split is bit-identical (partitioning changes
+//!    which core computes a stream row, never an operand or an
+//!    accumulation order).
+//! 3. **Streaming isolation under parallelism (property)** — randomized
+//!    ragged hop schedules through a `StreamRouter` backed by a
+//!    multi-threaded executor match isolated single-thread references
+//!    bitwise.
+//! 4. **Serving end-to-end** — `run_serving_native` and
+//!    `run_serving_streaming` complete with `threads > 1` and report the
+//!    `+par{N}` platform; the PJRT entry point *rejects* `threads != 1`.
+//!
+//! `GWLSTM_THREADS` (set by ci.sh to 1 and 4) widens the thread sweep so
+//! the whole suite runs under both a serial and a parallel engine.
+
+use gwlstm::config::{Manifest, ServeConfig};
+use gwlstm::coordinator::{
+    run_serving_native, run_serving_streaming, run_serving_with_policy, Policy, StreamRouter,
+};
+use gwlstm::model::batched::{BatchedState, LayerScratch};
+use gwlstm::model::par::{threads_from_env, PlanMode, StagePlan, WorkerPool};
+use gwlstm::model::weights::LstmWeights;
+use gwlstm::model::{AutoencoderWeights, BatchedLstm, MathPolicy, PackedAutoencoder};
+use gwlstm::runtime::ModelExecutor;
+use gwlstm::stream::StreamConfig;
+use gwlstm::util::prop;
+use gwlstm::util::rng::Rng;
+
+const BATCHES: [usize; 4] = [1, 3, 8, 32];
+const TIERS: [MathPolicy; 2] = [MathPolicy::BitExact, MathPolicy::FastSimd];
+
+/// The acceptance sweep {1, 2, 3, 8}, widened by GWLSTM_THREADS when ci.sh
+/// (or a user) sets it.
+fn thread_sweep() -> Vec<usize> {
+    let mut ts = vec![1usize, 2, 3, 8];
+    let env = threads_from_env(1);
+    if !ts.contains(&env) {
+        ts.push(env);
+    }
+    ts
+}
+
+fn random_layer(seed: u64, lx: usize, lh: usize) -> LstmWeights {
+    let mut rng = Rng::new(seed);
+    let mut gen = |n: usize, s: f64| -> Vec<f32> {
+        (0..n).map(|_| (rng.gaussian() * s) as f32).collect()
+    };
+    LstmWeights {
+        name: format!("par_{lx}x{lh}"),
+        lx,
+        lh,
+        wx: gen(lx * 4 * lh, 0.4),
+        wh: gen(lh * 4 * lh, 0.3),
+        b: gen(4 * lh, 0.1),
+    }
+}
+
+#[test]
+fn stateless_forward_and_scores_bitidentical_at_every_thread_count() {
+    let ts = 12usize;
+    let w = AutoencoderWeights::synthetic(0x9A1, "small");
+    let mut rng = Rng::new(0x9A2);
+    let windows: Vec<f32> = (0..32 * ts).map(|_| rng.gaussian() as f32).collect();
+    for policy in TIERS {
+        let serial = PackedAutoencoder::from_weights_policy(&w, policy);
+        for threads in thread_sweep() {
+            let par = PackedAutoencoder::from_weights_policy_threads(&w, policy, threads);
+            for &batch in &BATCHES {
+                let win = &windows[..batch * ts];
+                assert_eq!(
+                    par.forward_batch(win, batch),
+                    serial.forward_batch(win, batch),
+                    "{policy:?} threads={threads} B={batch} forward diverged"
+                );
+                assert_eq!(
+                    par.score_batch(win, batch),
+                    serial.score_batch(win, batch),
+                    "{policy:?} threads={threads} B={batch} scores diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stateful_chunked_runs_bitidentical_at_every_thread_count() {
+    // Ragged hop schedule through the layer-level stateful twin: outputs
+    // AND carried (h, c) must match the serial engine bit-for-bit.
+    let (lx, lh, ts) = (2usize, 9usize, 12usize);
+    let w = random_layer(0x9B1, lx, lh);
+    let hops = [5usize, 1, 4, 2];
+    assert_eq!(hops.iter().sum::<usize>(), ts);
+    for policy in TIERS {
+        let eng = BatchedLstm::from_weights_policy(&w, policy);
+        for threads in thread_sweep() {
+            let pool = WorkerPool::new(threads);
+            for &batch in &BATCHES {
+                let mut rng = Rng::new(0x9B2 + batch as u64);
+                let xs: Vec<f32> = (0..batch * ts * lx)
+                    .map(|_| rng.gaussian() as f32)
+                    .collect();
+                let mut st_serial = BatchedState::zeros(batch, lh);
+                let mut st_par = BatchedState::zeros(batch, lh);
+                let mut scratch = LayerScratch::default();
+                let mut t0 = 0usize;
+                for &hop in &hops {
+                    let mut chunk = Vec::with_capacity(batch * hop * lx);
+                    for b in 0..batch {
+                        chunk.extend_from_slice(
+                            &xs[(b * ts + t0) * lx..(b * ts + t0 + hop) * lx],
+                        );
+                    }
+                    let want = eng.run_stateful(&chunk, batch, hop, &mut st_serial);
+                    let mut got = Vec::new();
+                    eng.run_stateful_into_pooled(
+                        &chunk,
+                        batch,
+                        hop,
+                        &mut scratch,
+                        &mut got,
+                        &mut st_par,
+                        &pool,
+                    );
+                    assert_eq!(
+                        got, want,
+                        "{policy:?} threads={threads} B={batch} t0={t0} chunk diverged"
+                    );
+                    t0 += hop;
+                }
+                assert_eq!(st_par.h, st_serial.h, "{policy:?} threads={threads} h");
+                assert_eq!(st_par.c, st_serial.c, "{policy:?} threads={threads} c");
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_executor_bitidentical_at_every_thread_count() {
+    // The runtime-level streaming entry point (what StreamRouter drives):
+    // stateful score sequences and final states across consecutive hops.
+    let hop = 4usize;
+    for policy in TIERS {
+        let w = AutoencoderWeights::synthetic(0x9C1, "small");
+        let serial =
+            ModelExecutor::native_from_weights_policy_threads(&w, "par_ref", 8, policy, 1);
+        for threads in thread_sweep() {
+            let par =
+                ModelExecutor::native_from_weights_policy_threads(&w, "par_ref", 8, policy, threads);
+            for &batch in &BATCHES {
+                let mut rng = Rng::new(0x9C2 + threads as u64);
+                let mut st_serial = serial.stream_state(batch).unwrap();
+                let mut st_par = par.stream_state(batch).unwrap();
+                for tick in 0..3 {
+                    let chunk: Vec<f32> = (0..batch * hop)
+                        .map(|_| rng.gaussian() as f32)
+                        .collect();
+                    let want = serial
+                        .score_batch_stateful(&chunk, batch, &mut st_serial)
+                        .unwrap();
+                    let got = par
+                        .score_batch_stateful(&chunk, batch, &mut st_par)
+                        .unwrap();
+                    assert_eq!(
+                        got, want,
+                        "{policy:?} threads={threads} B={batch} tick={tick}"
+                    );
+                }
+                for (l, (a, b)) in st_par.layers.iter().zip(&st_serial.layers).enumerate() {
+                    assert_eq!(a.h, b.h, "{policy:?} threads={threads} layer {l} h");
+                    assert_eq!(a.c, b.c, "{policy:?} threads={threads} layer {l} c");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn naive_plan_mode_is_bitexact_too() {
+    // The imbalanced baseline split must only be slower, never different.
+    let ts = 10usize;
+    let w = AutoencoderWeights::synthetic(0x9D1, "small");
+    let serial = PackedAutoencoder::from_weights(&w);
+    let naive = PackedAutoencoder::from_weights_policy_pool(
+        &w,
+        MathPolicy::BitExact,
+        WorkerPool::with_mode(8, PlanMode::NaiveRows),
+    );
+    let mut rng = Rng::new(0x9D2);
+    let windows: Vec<f32> = (0..30 * ts).map(|_| rng.gaussian() as f32).collect();
+    for &batch in &[1usize, 7, 30] {
+        assert_eq!(
+            naive.score_batch(&windows[..batch * ts], batch),
+            serial.score_batch(&windows[..batch * ts], batch),
+            "naive split diverged at B={batch}"
+        );
+    }
+}
+
+#[test]
+fn stage_plan_balances_what_naive_does_not() {
+    let dims = [(1usize, 9usize), (9, 9)];
+    for batch in [1usize, 3, 8, 30, 32, 33] {
+        for threads in [1usize, 2, 3, 8] {
+            let bal = StagePlan::balanced(batch, threads, &dims);
+            let nai = StagePlan::naive(batch, threads);
+            // both partition the batch exactly
+            for plan in [&bal, &nai] {
+                let mut next = 0usize;
+                for &(b0, rows) in plan.slices() {
+                    assert_eq!(b0, next);
+                    assert!(rows > 0);
+                    next += rows;
+                }
+                assert_eq!(next, batch);
+            }
+            assert!(bal.max_cost(&dims) <= nai.max_cost(&dims));
+        }
+    }
+    // the motivating shape: naive's 9-row tail = 3x the balanced bottleneck
+    let bal = StagePlan::balanced(30, 8, &dims);
+    let nai = StagePlan::naive(30, 8);
+    assert_eq!(nai.max_cost(&dims), 3 * bal.max_cost(&dims));
+}
+
+/// One randomized scenario: per-session chunk sequences plus an arrival
+/// schedule, replayed through a parallel-engine router vs isolated
+/// single-thread references.
+#[derive(Debug)]
+struct ParInterleaving {
+    hop: usize,
+    threads: usize,
+    chunks: Vec<Vec<Vec<f32>>>,
+    schedule: Vec<Vec<usize>>,
+}
+
+#[test]
+fn prop_parallel_router_matches_isolated_single_thread_references() {
+    let w = AutoencoderWeights::synthetic(0x9E1, "small");
+    let solo_exe = ModelExecutor::native_from_weights(&w, "par_prop_ref", 8);
+    prop::check_with(
+        prop::Config {
+            cases: 16, // each case runs many engine calls; keep the suite fast
+            ..Default::default()
+        },
+        "parallel-router-matches-single-thread",
+        |d| {
+            let hop = d.usize_in(2, 6);
+            let threads = d.usize_in(2, 6);
+            let n_sessions = d.usize_in(2, 5);
+            let chunks: Vec<Vec<Vec<f32>>> = (0..n_sessions)
+                .map(|_| {
+                    let n_chunks = d.usize_in(1, 4);
+                    (0..n_chunks)
+                        .map(|_| (0..hop).map(|_| d.f64_in(-2.0, 2.0) as f32).collect())
+                        .collect()
+                })
+                .collect();
+            // random arrival order, partitioned into ticks (a session
+            // appears at most once per tick — one chunk per dispatch)
+            let mut arrivals: Vec<usize> = Vec::new();
+            for (s, cs) in chunks.iter().enumerate() {
+                arrivals.extend(std::iter::repeat(s).take(cs.len()));
+            }
+            for i in (1..arrivals.len()).rev() {
+                let j = d.usize_in(0, i);
+                arrivals.swap(i, j);
+            }
+            let mut schedule: Vec<Vec<usize>> = Vec::new();
+            while !arrivals.is_empty() {
+                let width = d.usize_in(1, arrivals.len().min(n_sessions));
+                let mut tick: Vec<usize> = Vec::new();
+                let mut remaining: Vec<usize> = Vec::new();
+                for &s in &arrivals {
+                    if tick.len() < width && !tick.contains(&s) {
+                        tick.push(s);
+                    } else {
+                        remaining.push(s);
+                    }
+                }
+                arrivals = remaining;
+                schedule.push(tick);
+            }
+            ParInterleaving {
+                hop,
+                threads,
+                chunks,
+                schedule,
+            }
+        },
+        |case| {
+            let cfg = StreamConfig {
+                hop: case.hop,
+                ..Default::default()
+            };
+            // shared router backed by a PARALLEL engine
+            let par_exe = ModelExecutor::native_from_weights_policy_threads(
+                &w,
+                "par_prop",
+                8,
+                MathPolicy::BitExact,
+                case.threads,
+            );
+            let mut shared = StreamRouter::new(&par_exe, cfg).map_err(|e| e.to_string())?;
+            let mut got: Vec<Vec<f32>> = vec![Vec::new(); case.chunks.len()];
+            let mut next_chunk: Vec<usize> = vec![0; case.chunks.len()];
+            for (tick, sessions) in case.schedule.iter().enumerate() {
+                for &s in sessions {
+                    let c = &case.chunks[s][next_chunk[s]];
+                    next_chunk[s] += 1;
+                    shared.ingest(s as u64, c, tick as u64);
+                }
+                for sc in shared
+                    .dispatch(&par_exe, tick as u64)
+                    .map_err(|e| e.to_string())?
+                {
+                    got[sc.stream as usize].push(sc.score);
+                }
+            }
+            // isolated single-thread references
+            for (s, cs) in case.chunks.iter().enumerate() {
+                let mut solo = StreamRouter::new(&solo_exe, cfg).map_err(|e| e.to_string())?;
+                let mut want: Vec<f32> = Vec::new();
+                for (tick, c) in cs.iter().enumerate() {
+                    solo.ingest(s as u64, c, tick as u64);
+                    for sc in solo
+                        .dispatch(&solo_exe, tick as u64)
+                        .map_err(|e| e.to_string())?
+                    {
+                        want.push(sc.score);
+                    }
+                }
+                if got[s] != want {
+                    return Err(format!(
+                        "threads={}: session {s} grouped scores {:?} != isolated \
+                         single-thread {:?}",
+                        case.threads, got[s], want
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn native_serving_end_to_end_with_threads() {
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let threads = threads_from_env(3);
+    let cfg = ServeConfig {
+        model: "small_par".into(),
+        calib_windows: 24,
+        max_windows: 96,
+        inject_prob: 0.3,
+        threads,
+        ..Default::default()
+    };
+    let report = run_serving_native(&weights, 8, &cfg, Policy::Immediate).unwrap();
+    assert_eq!(report.windows, 96);
+    if threads > 1 {
+        assert!(
+            report.platform.contains(&format!("par{threads}")),
+            "platform {} must advertise the lane count",
+            report.platform
+        );
+    }
+    assert!(report.auc > 0.0 && report.auc <= 1.0);
+}
+
+#[test]
+fn streaming_serving_end_to_end_with_threads_matches_single_thread_scores() {
+    // Same synthetic feeds, same config modulo threads: the two serving
+    // runs must produce identical thresholds and AUC (scores are
+    // bit-identical, and the deterministic feeds replay exactly).
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let mk = |threads: usize| ServeConfig {
+        model: "small_par_stream".into(),
+        calib_windows: 16,
+        max_windows: 48,
+        inject_prob: 0.3,
+        stream_sessions: 4,
+        stream_hop: 8,
+        streaming: true,
+        threads,
+        ..Default::default()
+    };
+    let one = run_serving_streaming(&weights, &mk(1)).unwrap();
+    let par = run_serving_streaming(&weights, &mk(3)).unwrap();
+    assert_eq!(par.windows, one.windows);
+    assert_eq!(par.threshold, one.threshold, "calibration diverged");
+    assert_eq!(par.auc, one.auc, "served score distribution diverged");
+    assert!(par.platform.contains("par3"), "{}", par.platform);
+}
+
+#[test]
+fn pjrt_entry_point_rejects_threads() {
+    // Reject-don't-ignore: the PJRT pipeline has no worker pool, so an
+    // explicit threads request must error before any artifact is touched.
+    let manifest = Manifest {
+        dir: ".".into(),
+        variants: vec![],
+    };
+    let cfg = ServeConfig {
+        threads: 4,
+        ..Default::default()
+    };
+    let err = run_serving_with_policy(&manifest, &cfg, Policy::Immediate)
+        .expect_err("threads != 1 must be rejected under PJRT");
+    assert!(
+        err.to_string().contains("native"),
+        "error should point at the native backend: {err}"
+    );
+}
