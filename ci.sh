@@ -55,16 +55,19 @@ if command -v cargo >/dev/null 2>&1; then
         # FastSimd smoke output diverges from BitExact beyond the
         # model::simd tolerance — a tolerance regression fails CI here.
         # e2e_serving runs in both math tiers via GWLSTM_MATH, which also
-        # exercises the streaming serving arm (run_serving_streaming) in
-        # both tiers; the fast_simd pass additionally runs with 4-lane
+        # exercises the streaming serving arm (run_serving_streaming) AND
+        # the async-ingress arms (run_serving_ingress, uniform + bursty
+        # arrivals — the double-buffered tick pipeline, conservation
+        # asserted in-bench) in both tiers; both passes run with 4-lane
         # engine pools (GWLSTM_THREADS) so the thread-sweep serving arm is
-        # part of the smoke. hotpath now also emits the par/* thread-
-        # scaling keys (parity-guarded: it exits nonzero if any thread
-        # count diverges bitwise). See rust/BENCHMARKS.md for the schema.
+        # part of the smoke, and the two passes merge their tier's keys
+        # into rust/BENCH_serving.json. hotpath also emits the par/*
+        # thread-scaling keys (parity-guarded: it exits nonzero if any
+        # thread count diverges bitwise). See rust/BENCHMARKS.md.
         note "rust: bench smoke (tiny iteration counts, both math tiers)"
         (cd rust && GWLSTM_BENCH_SMOKE=1 cargo bench --bench hotpath) \
             || failures=$((failures + 1))
-        (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=bitexact \
+        (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=bitexact GWLSTM_THREADS=4 \
             cargo bench --bench e2e_serving) \
             || failures=$((failures + 1))
         (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=fast_simd GWLSTM_THREADS=4 \

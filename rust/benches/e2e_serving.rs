@@ -14,21 +14,29 @@
 //! the ci.sh smoke invocation (tiny window counts), `GWLSTM_MATH=
 //! bitexact|fast_simd` to pick the native engine's math tier (ci.sh runs
 //! the smoke in both), and `GWLSTM_THREADS=N` to give every native engine
-//! (stateless policies AND the streaming arm) an N-lane balanced-partition
-//! worker pool — the thread-sweep arm of the serving tables without a new
-//! bench binary. Scores are bit-identical across N; only the latency/
-//! throughput columns move. The PJRT sweep ignores threads by design
-//! (`run_serving_with_policy` would reject it) and always serves with the
-//! default single-threaded config.
+//! (stateless policies AND the streaming/ingress arms) an N-lane balanced-
+//! partition worker pool — the thread-sweep arm of the serving tables
+//! without a new bench binary. Scores are bit-identical across N; only the
+//! latency/throughput columns move. The PJRT sweep ignores threads by
+//! design (`run_serving_with_policy` would reject it) and always serves
+//! with the default single-threaded config.
+//!
+//! Emits `BENCH_serving.json` with the ingress pipeline's headline keys
+//! (`ingress/<arrival>/e2e_p99_us/<tier>` etc.), merged with any existing
+//! file contents so ci.sh's two tier passes accumulate instead of
+//! clobbering each other.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use gwlstm::config::{Manifest, ServeConfig};
 use gwlstm::coordinator::{
-    run_serving_native, run_serving_streaming, run_serving_with_policy, Policy, ServeReport,
+    run_serving_native, run_serving_streaming, run_serving_with_policy, Arrival, Policy,
+    ServeReport,
 };
 use gwlstm::model::{AutoencoderWeights, MathPolicy};
 use gwlstm::util::bench::Table;
+use gwlstm::util::json::Value;
 
 fn policies() -> Vec<(&'static str, Policy)> {
     vec![
@@ -48,6 +56,22 @@ fn policies() -> Vec<(&'static str, Policy)> {
             },
         ),
     ]
+}
+
+/// Merge-on-write JSON emission: ci.sh runs the smoke once per math tier,
+/// so each pass must keep the other tier's keys instead of clobbering the
+/// file (the hotpath bench's Recorder convention, plus the merge).
+fn flush_bench_keys(path: &str, keys: BTreeMap<String, Value>) {
+    let mut out: BTreeMap<String, Value> = match Value::from_file(path) {
+        Ok(v) => v.as_obj().map(Clone::clone).unwrap_or_default(),
+        Err(_) => BTreeMap::new(),
+    };
+    let n = keys.len();
+    out.extend(keys);
+    match std::fs::write(path, Value::Obj(out).to_string()) {
+        Ok(()) => println!("\nwrote {n} ingress keys to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn table_for(rows: Vec<(&str, ServeReport)>) -> Table {
@@ -122,6 +146,67 @@ fn main() {
     };
     let r = run_serving_streaming(&weights, &scfg).expect("streaming serving run");
     rows.push(("streaming stateful S=8 hop=8", r));
+    // Ingress arms: the async front door in front of the same streaming
+    // service — bounded-MPSC producers, double-buffered ticks (ingest and
+    // gather tick N+1 while the engine computes tick N). Uniform arrivals
+    // measure the pipelining win directly against the serial streaming row
+    // above; bursty arrivals (1-8-chunk bursts at the same mean rate) are
+    // the arm the p99 tail keys are judged on.
+    let mut bench_keys: BTreeMap<String, Value> = BTreeMap::new();
+    for arrival in [Arrival::Uniform, Arrival::Bursty] {
+        let icfg = ServeConfig {
+            model: "small_ingress".into(),
+            arrival,
+            ingress: true,
+            // pace the feeds so arrival shape (not producer saturation)
+            // dominates the tail; bursts then genuinely queue
+            pace_us: 50,
+            slo_us: 0, // shedding off: bit-exact vs the serial loop
+            ..scfg.clone()
+        };
+        let r = run_serving_streaming(&weights, &icfg).expect("ingress serving run");
+        assert_eq!(
+            r.ingested,
+            r.windows as u64 + r.dropped,
+            "ingress conservation violated in bench"
+        );
+        let prefix = format!("ingress/{}", arrival.label());
+        let tier = math.label();
+        bench_keys.insert(
+            format!("{prefix}/e2e_p50_us/{tier}"),
+            Value::Num(r.e2e.p50_ns / 1e3),
+        );
+        bench_keys.insert(
+            format!("{prefix}/e2e_p99_us/{tier}"),
+            Value::Num(r.e2e.p99_ns / 1e3),
+        );
+        bench_keys.insert(
+            format!("{prefix}/infer_p50_us/{tier}"),
+            Value::Num(r.infer.p50_ns / 1e3),
+        );
+        bench_keys.insert(
+            format!("{prefix}/throughput_win_per_s/{tier}"),
+            Value::Num(r.throughput_per_s),
+        );
+        bench_keys.insert(
+            format!("{prefix}/dropped/{tier}"),
+            Value::Num(r.dropped as f64),
+        );
+        let label: &'static str = match arrival {
+            Arrival::Uniform => "ingress pipelined S=8 hop=8 uniform",
+            Arrival::Bursty => "ingress pipelined S=8 hop=8 bursty",
+        };
+        rows.push((label, r));
+    }
+    bench_keys.insert(
+        "_meta".to_string(),
+        Value::Str(
+            "ingress serving keys from benches/e2e_serving.rs; tiers merge \
+             across ci.sh passes (see BENCHMARKS.md)"
+                .to_string(),
+        ),
+    );
+    flush_bench_keys("BENCH_serving.json", bench_keys);
     println!(
         "=== e2e serving (native batched engine, {} tier, {threads} engine thread(s)): policy trade-off ===\n",
         math.label()

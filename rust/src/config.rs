@@ -8,6 +8,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::coordinator::Arrival;
 use crate::model::MathPolicy;
 use crate::util::json::Value;
 
@@ -137,6 +138,21 @@ pub struct ServeConfig {
     /// Idle ticks before a streaming session is evicted (its state is
     /// snapshotted for warm restart). JSON key `session_ttl`.
     pub stream_ttl: u64,
+    /// Serve the streaming service through the async ingress front door:
+    /// bounded-MPSC producers, SLO load shedding, double-buffered ticks
+    /// (`run_serving_ingress`; implies/requires `streaming`). JSON key
+    /// `ingress`.
+    pub ingress: bool,
+    /// End-to-end latency SLO in microseconds for ingress admission: a
+    /// queued chunk older than this is shed instead of scored
+    /// (oldest-pending first). `0` disables SLO shedding — the
+    /// bit-exactness-vs-serial contract holds only then. JSON key
+    /// `slo_us`.
+    pub slo_us: u64,
+    /// Arrival process of the synthetic ingress feeds: `"uniform"` fixed
+    /// cadence or `"bursty"` 1–8-chunk bursts at the same mean rate. JSON
+    /// key `arrival`.
+    pub arrival: Arrival,
 }
 
 impl Default for ServeConfig {
@@ -157,6 +173,9 @@ impl Default for ServeConfig {
             stream_sessions: 8,
             stream_hop: 25,
             stream_ttl: 256,
+            ingress: false,
+            slo_us: 0,
+            arrival: Arrival::Uniform,
         }
     }
 }
@@ -189,6 +208,9 @@ impl ServeConfig {
                 "sessions" => self.stream_sessions = val.as_usize()?,
                 "hop" => self.stream_hop = val.as_usize()?,
                 "session_ttl" => self.stream_ttl = val.as_usize()? as u64,
+                "ingress" => self.ingress = val.as_bool()?,
+                "slo_us" => self.slo_us = val.as_usize()? as u64,
+                "arrival" => self.arrival = Arrival::parse(val.as_str()?)?,
                 other => return Err(anyhow!("unknown serve-config key {other:?}")),
             }
         }
@@ -313,6 +335,26 @@ mod tests {
         assert_eq!(cfg.stream_ttl, 32);
         let bad = Value::parse(r#"{"streaming": "yes"}"#).unwrap();
         assert!(cfg.apply_json(&bad).is_err(), "non-bool streaming rejected");
+    }
+
+    #[test]
+    fn ingress_overrides() {
+        let mut cfg = ServeConfig::default();
+        assert!(!cfg.ingress);
+        assert_eq!(cfg.slo_us, 0, "SLO shedding off by default");
+        assert_eq!(cfg.arrival, Arrival::Uniform);
+        let v = Value::parse(
+            r#"{"ingress": true, "slo_us": 5000, "arrival": "bursty"}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert!(cfg.ingress);
+        assert_eq!(cfg.slo_us, 5000);
+        assert_eq!(cfg.arrival, Arrival::Bursty);
+        // reject-don't-ignore: an unknown arrival token is a config error
+        let bad = Value::parse(r#"{"arrival": "poisson"}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err());
+        assert_eq!(cfg.arrival, Arrival::Bursty, "failed apply must not reset");
     }
 
     #[test]

@@ -1,0 +1,444 @@
+//! Async ingest front-end: bounded-queue admission + double-buffered tick
+//! pipelining for the streaming state service.
+//!
+//! The serial streaming loop ([`super::run_serving_streaming`]) is
+//! synchronous: ingest, gather, compute, scatter run back-to-back on one
+//! thread, so the engine idles during every ingest and the ingest stalls
+//! during every compute. This module is the software twin of the paper's
+//! balanced initiation intervals — no stage idles waiting for another:
+//!
+//! ```text
+//!   [feed producers] --bounded MPSC (try_send: full => shed at source)-->
+//!   [leader]  drain queue -> SLO check -> registry admission (backlog cap)
+//!       |     take_ready(N+1)  +  gather(N+1)        <- overlaps ->
+//!   [engine thread]            score_batch_stateful(N)
+//!       |     complete(N): scatter states, classify, account
+//! ```
+//!
+//! Two pieces live here:
+//! * [`spawn_feeds`] — the producer side: synthetic detector feeds
+//!   multiplexed over a few threads, pushing hop-sized
+//!   [`IngressChunk`]s into one bounded MPSC queue with uniform or bursty
+//!   arrivals ([`Arrival`]). A full queue sheds at the source (real
+//!   detector data is a lossy real-time feed; stale windows are
+//!   worthless).
+//! * [`TickPipeline`] — the compute side: the engine owned by a dedicated
+//!   thread, one tick in flight, prepared-tick buffers travelling down and
+//!   finished-tick buffers travelling back (that round trip IS the double
+//!   buffer — steady state allocates nothing).
+//!
+//! Bit-exactness: the pipeline runs the exact stage code of the serial
+//! router (`take_ready` / `gather_group` / `complete`) and the scatter of
+//! tick N always happens before the gather of tick N+1, so with shedding
+//! disabled the scores are bit-identical to the serial loop in both math
+//! tiers — pinned by `tests/ingress_parity.rs` via
+//! [`run_pipelined_schedule`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::metrics::{Metrics, ShedClass};
+use super::stream_router::{StreamRouter, StreamScore};
+use crate::gw::dataset::StrainStream;
+use crate::model::batched::StreamState;
+use crate::runtime::ModelExecutor;
+use crate::stream::StreamConfig;
+use crate::util::rng::Rng;
+
+/// Arrival process of the synthetic ingress feeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Arrival {
+    /// One chunk per feed per pacing interval (a detector's fixed cadence).
+    #[default]
+    Uniform,
+    /// Bursts of 1–8 back-to-back chunks, then a proportional idle gap —
+    /// same mean rate as `Uniform`, much spikier instantaneous load. This
+    /// is the arm the p99 tail-latency keys are judged on.
+    Bursty,
+}
+
+impl Arrival {
+    /// Parse the config/CLI token (`"uniform"` | `"bursty"`).
+    pub fn parse(s: &str) -> Result<Arrival> {
+        match s {
+            "uniform" => Ok(Arrival::Uniform),
+            "bursty" => Ok(Arrival::Bursty),
+            other => bail!("unknown arrival process {other:?} (uniform|bursty)"),
+        }
+    }
+
+    /// Stable token for reports and bench keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Arrival::Uniform => "uniform",
+            Arrival::Bursty => "bursty",
+        }
+    }
+}
+
+/// One hop-sized unit of ingest travelling producer -> leader.
+#[derive(Debug)]
+pub struct IngressChunk {
+    /// Stream (session) id the samples belong to.
+    pub stream: u64,
+    /// Exactly `hop` raw samples (producers emit whole hops, so shed
+    /// accounting is exact: one chunk == one window).
+    pub samples: Vec<f32>,
+    /// Ground-truth injection label of the window (evaluation only).
+    pub label: u8,
+    /// Production timestamp: the SLO clock and the e2e latency origin.
+    pub admitted: Instant,
+}
+
+/// Knobs of the synthetic ingress producers.
+#[derive(Debug, Clone)]
+pub struct FeedConfig {
+    /// Concurrent detector streams (session ids `0..sessions`).
+    pub sessions: usize,
+    /// Samples per chunk (the streaming hop).
+    pub hop: usize,
+    /// Injection SNR of the synthetic strain.
+    pub snr: f64,
+    /// Injection probability per window.
+    pub inject_prob: f64,
+    /// Arrival process (uniform cadence vs bursts).
+    pub arrival: Arrival,
+    /// Mean pacing per feed in microseconds (0 = produce flat out).
+    pub pace_us: u64,
+    /// Bounded ingress queue depth (try_send past this sheds at source).
+    pub queue_depth: usize,
+    /// Chunks each feed may produce before retiring — the termination
+    /// bound that guarantees the serve loop ends even under 100% shed.
+    pub quota_per_feed: usize,
+}
+
+/// Spawn the ingress producers: `min(sessions, 4)` threads multiplexing
+/// the synthetic feeds, all pushing into ONE bounded MPSC queue whose
+/// receiver the leader drains. Every produced chunk is counted in
+/// `metrics.windows_in`; a full queue sheds the chunk at the source
+/// ([`ShedClass::Queue`]). Producers retire when `stop` is raised or their
+/// quota is exhausted; the receiver observing disconnection after a full
+/// drain is the leader's end-of-input signal.
+///
+/// Feed `s` uses the same seed as the serial streaming loop
+/// (`0x57EA4 ^ s * 0x9E37_79B9`), so ingress serving scores the same
+/// synthetic streams the serial path does.
+pub fn spawn_feeds(
+    cfg: &FeedConfig,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+) -> (Receiver<IngressChunk>, Vec<JoinHandle<()>>) {
+    let (tx, rx) = sync_channel::<IngressChunk>(cfg.queue_depth.max(1));
+    let n_prod = cfg.sessions.clamp(1, 4);
+    let mut handles = Vec::with_capacity(n_prod);
+    for p in 0..n_prod {
+        let tx = tx.clone();
+        let stop = stop.clone();
+        let metrics = metrics.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut feeds: Vec<(u64, StrainStream)> = (p..cfg.sessions.max(1))
+                .step_by(n_prod)
+                .map(|s| {
+                    let seed = 0x57EA4 ^ (s as u64).wrapping_mul(0x9E37_79B9);
+                    (
+                        s as u64,
+                        StrainStream::new(seed, cfg.hop, cfg.snr, cfg.inject_prob),
+                    )
+                })
+                .collect();
+            let mut rng = Rng::new(0x1A6E55 ^ p as u64);
+            let pace = Duration::from_micros(cfg.pace_us);
+            let quota = cfg.quota_per_feed.saturating_mul(feeds.len());
+            let mut produced = 0usize;
+            'produce: while produced < quota && !stop.load(Ordering::Relaxed) {
+                for (id, feed) in feeds.iter_mut() {
+                    if produced >= quota || stop.load(Ordering::Relaxed) {
+                        break 'produce;
+                    }
+                    let burst = match cfg.arrival {
+                        Arrival::Uniform => 1,
+                        Arrival::Bursty => 1 + rng.below(8) as usize,
+                    };
+                    for _ in 0..burst {
+                        if produced >= quota {
+                            break;
+                        }
+                        let w = feed.next_window();
+                        produced += 1;
+                        metrics.windows_in.fetch_add(1, Ordering::Relaxed);
+                        let chunk = IngressChunk {
+                            stream: *id,
+                            samples: w.samples,
+                            label: w.label,
+                            admitted: Instant::now(),
+                        };
+                        if tx.try_send(chunk).is_err() {
+                            // bounded queue full (or leader gone): a
+                            // real-time feed sheds at the source rather
+                            // than buffering stale strain
+                            metrics.shed(ShedClass::Queue);
+                        }
+                    }
+                    if !pace.is_zero() {
+                        // bursty feeds idle in proportion to the burst they
+                        // just emitted, preserving the uniform mean rate
+                        let gap = match cfg.arrival {
+                            Arrival::Uniform => pace,
+                            Arrival::Bursty => {
+                                pace.mul_f64(burst as f64 * rng.range(0.5, 1.5))
+                            }
+                        };
+                        std::thread::sleep(gap);
+                    }
+                }
+                if pace.is_zero() {
+                    std::thread::yield_now();
+                }
+            }
+        }));
+    }
+    drop(tx); // leader's rx disconnects exactly when every producer retires
+    (rx, handles)
+}
+
+/// What the engine thread reports once its executor is built: everything
+/// the leader needs that would otherwise require holding the executor.
+pub struct EngineInfo {
+    /// Batch-1 zero-state prototype ([`StreamRouter::from_proto`]).
+    pub proto: StreamState,
+    /// Backend label for reports.
+    pub platform: String,
+    /// One-time engine construction cost.
+    pub compile_ms: f64,
+}
+
+/// A fully prepared tick travelling leader -> engine: the chunks and the
+/// gathered group state (stages 1+2 of the router).
+pub struct PreparedTick {
+    /// Ascending session ids, row order of `flat` and `group`.
+    pub ids: Vec<u64>,
+    /// `(B, hop)` row-major chunk buffer.
+    pub flat: Vec<f32>,
+    /// Gathered lockstep group state.
+    pub group: StreamState,
+    /// Logical tick number (the `now` of the eventual `complete`).
+    pub tick: u64,
+}
+
+/// A computed tick travelling engine -> leader. Carries the tick's buffers
+/// back so the leader can reuse them for tick N+2 — the round trip is the
+/// double buffer.
+pub struct FinishedTick {
+    /// Ids of [`PreparedTick::ids`], unchanged.
+    pub ids: Vec<u64>,
+    /// One score per id.
+    pub scores: Vec<f32>,
+    /// The chunk buffer, returned for reuse.
+    pub flat: Vec<f32>,
+    /// The advanced group state (input to the router's `complete`).
+    pub group: StreamState,
+    /// The tick number of the prepared tick.
+    pub tick: u64,
+    /// Wall time of the engine call alone.
+    pub infer_ns: u64,
+}
+
+/// The compute half of the double-buffered tick pipeline: a dedicated
+/// thread owning the [`ModelExecutor`], fed one [`PreparedTick`] at a
+/// time. While it computes tick N, the leader ingests and gathers tick
+/// N+1 — the software analogue of the paper's pipelined initiation
+/// interval (compute never waits on ingest, ingest never waits on
+/// compute).
+///
+/// Protocol: at most one tick in flight ([`TickPipeline::submit`] then
+/// [`TickPipeline::wait`]); the leader must complete tick N (scattering
+/// its states) before gathering tick N+1, which is what makes pipelined
+/// output bit-identical to the serial loop.
+pub struct TickPipeline {
+    tx: Option<SyncSender<PreparedTick>>,
+    rx: Receiver<Result<FinishedTick>>,
+    handle: Option<JoinHandle<()>>,
+    in_flight: usize,
+}
+
+impl TickPipeline {
+    /// Spawn the engine thread. `factory` builds the executor *on* that
+    /// thread (PJRT-style backends need not be movable); its zero-state
+    /// prototype and platform label come back as [`EngineInfo`]. A factory
+    /// error is returned here, not deferred to the first submit.
+    pub fn spawn<F>(factory: F) -> Result<(TickPipeline, EngineInfo)>
+    where
+        F: FnOnce() -> Result<ModelExecutor> + Send + 'static,
+    {
+        let (prep_tx, prep_rx) = sync_channel::<PreparedTick>(1);
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<Result<FinishedTick>>();
+        let (info_tx, info_rx) = std::sync::mpsc::channel::<Result<EngineInfo>>();
+        let handle = std::thread::spawn(move || {
+            let exe = match factory().and_then(|exe| {
+                let proto = exe.stream_state(1)?;
+                Ok((exe, proto))
+            }) {
+                Ok((exe, proto)) => {
+                    let info = EngineInfo {
+                        proto,
+                        platform: exe.platform().to_string(),
+                        compile_ms: exe.compile_ms,
+                    };
+                    if info_tx.send(Ok(info)).is_err() {
+                        return;
+                    }
+                    exe
+                }
+                Err(e) => {
+                    let _ = info_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(mut t) = prep_rx.recv() {
+                let t0 = Instant::now();
+                match exe.score_batch_stateful(&t.flat, t.ids.len(), &mut t.group) {
+                    Ok(scores) => {
+                        let fin = FinishedTick {
+                            ids: t.ids,
+                            scores,
+                            flat: t.flat,
+                            group: t.group,
+                            tick: t.tick,
+                            infer_ns: t0.elapsed().as_nanos() as u64,
+                        };
+                        if done_tx.send(Ok(fin)).is_err() {
+                            return; // leader gone: orderly shutdown
+                        }
+                    }
+                    Err(e) => {
+                        let _ = done_tx.send(Err(e));
+                        return;
+                    }
+                }
+            }
+        });
+        let info = info_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died before reporting readiness"))??;
+        Ok((
+            TickPipeline {
+                tx: Some(prep_tx),
+                rx: done_rx,
+                handle: Some(handle),
+                in_flight: 0,
+            },
+            info,
+        ))
+    }
+
+    /// Ticks submitted but not yet waited for (0 or 1 under the leader
+    /// protocol).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Hand a prepared tick to the engine thread and return immediately.
+    pub fn submit(&mut self, tick: PreparedTick) -> Result<()> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("tick pipeline already shut down"))?;
+        tx.send(tick)
+            .map_err(|_| anyhow!("engine thread hung up (its error surfaces on wait)"))?;
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// Block until the oldest in-flight tick finishes. Errors if nothing
+    /// is in flight, if the engine call failed, or if the engine thread
+    /// died.
+    pub fn wait(&mut self) -> Result<FinishedTick> {
+        if self.in_flight == 0 {
+            bail!("no tick in flight");
+        }
+        let r = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread hung up without a result"))?;
+        self.in_flight -= 1;
+        r
+    }
+}
+
+impl Drop for TickPipeline {
+    fn drop(&mut self) {
+        self.tx = None; // engine thread's recv() ends
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Test/bench harness: drive an explicit per-tick ingest schedule through
+/// the double-buffered pipeline and return every score in completion
+/// order. `schedule[t]` is the list of `(stream, samples)` ingested before
+/// tick `t`; after the schedule the backlog is drained (one tick per
+/// remaining ready set). This runs the exact leader protocol of
+/// `run_serving_ingress` minus queues and shedding, so
+/// `tests/ingress_parity.rs` can pin pipelined == serial bitwise without
+/// timing nondeterminism.
+pub fn run_pipelined_schedule<F>(
+    factory: F,
+    cfg: StreamConfig,
+    schedule: &[Vec<(u64, Vec<f32>)>],
+) -> Result<Vec<StreamScore>>
+where
+    F: FnOnce() -> Result<ModelExecutor> + Send + 'static,
+{
+    let (mut pipe, info) = TickPipeline::spawn(factory)?;
+    let mut router = StreamRouter::from_proto(info.proto, cfg);
+    let mut out = Vec::new();
+    let mut cur_flat: Vec<f32> = Vec::new();
+    let mut cur_group: Option<StreamState> = None;
+    let mut spare_flat: Vec<f32> = Vec::new();
+    let mut spare_group: Option<StreamState> = None;
+    let mut tick = 0u64;
+    let mut feed = schedule.iter();
+    loop {
+        // ingest + prepare tick N+1 (these touch no resident state) ...
+        let fed = match feed.next() {
+            Some(items) => {
+                for (id, samples) in items {
+                    router.ingest(*id, samples, tick);
+                }
+                true
+            }
+            None => false,
+        };
+        let ids = router.take_ready(&mut cur_flat);
+        // ... then retire tick N (the only state write), ...
+        if pipe.in_flight() > 0 {
+            let fin = pipe.wait()?;
+            out.extend(router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick));
+            spare_flat = fin.flat;
+            spare_group = Some(fin.group);
+        }
+        // ... and only now gather + launch N+1 against the updated states.
+        if !ids.is_empty() {
+            router.gather_group(&ids, &mut cur_group);
+            pipe.submit(PreparedTick {
+                ids,
+                flat: std::mem::take(&mut cur_flat),
+                group: cur_group.take().expect("gather_group ensures the group"),
+                tick,
+            })?;
+            cur_flat = std::mem::take(&mut spare_flat);
+            cur_group = spare_group.take();
+        } else if !fed && pipe.in_flight() == 0 {
+            break; // schedule exhausted, backlog drained, nothing in flight
+        }
+        tick += 1;
+    }
+    Ok(out)
+}

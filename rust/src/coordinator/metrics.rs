@@ -1,13 +1,22 @@
 //! Serving metrics: log-bucketed latency histogram + throughput counters.
 //!
 //! Lock-free on the hot path (atomics only); snapshots are taken by the
-//! reporting thread. Buckets are powers of sqrt(2) over [1 us, ~4 s], which
-//! gives < 5% quantile error — plenty for p50/p99 reporting.
+//! reporting thread. Histogram buckets are powers of sqrt(2): bucket 0
+//! holds everything at or below 1 us, and bucket `b` (b >= 1) holds the
+//! half-open range `(upper(b-1), upper(b)]` with `upper(b) = 1 us *
+//! 2^(b/2)` — 44 sqrt(2)-spaced buckets cover (1 us, ~4.2 s]. Samples
+//! beyond the top edge clamp into the last bucket (quantiles saturate at
+//! ~4.2 s; `max_ns` stays exact), so inside the covered range quantile
+//! error is bounded by one bucket: < sqrt(2) relative — plenty for
+//! p50/p99 reporting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-const BUCKETS: usize = 64;
+/// Bucket 0 (<= 1 us) + 44 sqrt(2) buckets up to 1 us * 2^22 ~= 4.2 s.
+/// `bucket_of`'s self-consistency test pins the range and the half-open
+/// convention against `bucket_upper_ns`.
+const BUCKETS: usize = 45;
 
 /// Latency histogram in nanoseconds.
 pub struct LatencyHistogram {
@@ -17,17 +26,34 @@ pub struct LatencyHistogram {
     max_ns: AtomicU64,
 }
 
+/// Bucket index of a sample, honoring the half-open `(lo, hi]` contract:
+/// a sample exactly on a bucket's upper edge lands in that bucket, never
+/// the one above. Samples past the top edge clamp into the last bucket.
 fn bucket_of(ns: u64) -> usize {
-    // bucket = log_sqrt2(ns / 1000), clamped
-    if ns < 1_000 {
+    if ns <= 1_000 {
         return 0;
     }
+    // bucket = ceil(log_sqrt2(ns / 1us)), then correct for float rounding
+    // so the result always agrees with bucket_upper_ns (the quantile
+    // reporter) — the contract is checked exhaustively in tests.
     let x = (ns as f64 / 1_000.0).log2() * 2.0;
-    (x as usize).min(BUCKETS - 1)
+    let mut b = (x.ceil() as usize).clamp(1, BUCKETS - 1);
+    while b > 1 && ns as f64 <= bucket_upper_ns(b - 1) {
+        b -= 1;
+    }
+    while b < BUCKETS - 1 && ns as f64 > bucket_upper_ns(b) {
+        b += 1;
+    }
+    b
 }
 
+/// Upper edge of bucket `b` in nanoseconds (inclusive).
 fn bucket_upper_ns(b: usize) -> f64 {
-    1_000.0 * 2f64.powf((b + 1) as f64 / 2.0)
+    if b == 0 {
+        1_000.0
+    } else {
+        1_000.0 * 2f64.powf(b as f64 / 2.0)
+    }
 }
 
 impl Default for LatencyHistogram {
@@ -65,7 +91,9 @@ impl LatencyHistogram {
             if n == 0 {
                 return 0.0;
             }
-            let target = (q * n as f64).ceil() as u64;
+            // rank-ceil(q*n) sample, clamped so q = 0 still needs one
+            // sample and q = 1 never overshoots past the population.
+            let target = ((q * n as f64).ceil() as u64).clamp(1, n);
             let mut acc = 0;
             for (b, &c) in counts.iter().enumerate() {
                 acc += c;
@@ -99,6 +127,31 @@ pub struct LatencySnapshot {
     pub max_ns: f64,
 }
 
+/// Where shed windows went. Every shed is also counted in
+/// [`Metrics::dropped`]; the breakdown exists so tests and reports can
+/// assert *why* load was refused, not just how much.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShedBreakdown {
+    /// Bounded ingress queue was full at the source (producer-side shed).
+    pub queue: u64,
+    /// Chunk was older than the latency SLO at admission time (the
+    /// oldest-pending-first shed of the ingress drain).
+    pub slo: u64,
+    /// Session pending-backlog cap refused admission
+    /// (`StreamConfig::max_pending_hops`).
+    pub backlog: u64,
+    /// Unserved backlog discarded at orderly shutdown.
+    pub shutdown: u64,
+}
+
+impl ShedBreakdown {
+    /// Sum of all shed classes (== `Metrics::dropped` when every drop path
+    /// goes through a classified counter).
+    pub fn total(&self) -> u64 {
+        self.queue + self.slo + self.backlog + self.shutdown
+    }
+}
+
 /// Whole-server metrics registry.
 #[derive(Default)]
 pub struct Metrics {
@@ -110,6 +163,12 @@ pub struct Metrics {
     pub windows_done: AtomicU64,
     pub flagged: AtomicU64,
     pub dropped: AtomicU64,
+    /// Shed-class counters behind `dropped` (ingress pipeline only; the
+    /// stateless pipeline's backpressure drops count as `queue`).
+    pub shed_queue: AtomicU64,
+    pub shed_slo: AtomicU64,
+    pub shed_backlog: AtomicU64,
+    pub shed_shutdown: AtomicU64,
     /// Micro-batches dispatched through the batched engine (one
     /// `score_batch` call each; == windows_done under batch-1 policy).
     pub batches: AtomicU64,
@@ -120,10 +179,40 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Count one shed window: the class counter AND the `dropped` total.
+    pub fn shed(&self, class: ShedClass) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+        let c = match class {
+            ShedClass::Queue => &self.shed_queue,
+            ShedClass::Slo => &self.shed_slo,
+            ShedClass::Backlog => &self.shed_backlog,
+            ShedClass::Shutdown => &self.shed_shutdown,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shed_breakdown(&self) -> ShedBreakdown {
+        ShedBreakdown {
+            queue: self.shed_queue.load(Ordering::Relaxed),
+            slo: self.shed_slo.load(Ordering::Relaxed),
+            backlog: self.shed_backlog.load(Ordering::Relaxed),
+            shutdown: self.shed_shutdown.load(Ordering::Relaxed),
+        }
+    }
+
     pub fn throughput_per_s(&self, since: Instant) -> f64 {
         let secs = since.elapsed().as_secs_f64().max(1e-9);
         self.windows_done.load(Ordering::Relaxed) as f64 / secs
     }
+}
+
+/// Why a window was shed (see [`ShedBreakdown`] for the meanings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedClass {
+    Queue,
+    Slo,
+    Backlog,
+    Shutdown,
 }
 
 #[cfg(test)]
@@ -138,6 +227,95 @@ mod tests {
             assert!(b >= last);
             last = b;
         }
+    }
+
+    #[test]
+    fn bucket_contract_self_consistent() {
+        // The half-open (lo, hi] contract between bucket_of and
+        // bucket_upper_ns must hold for edges, near-edges, and a dense
+        // sweep — this is the invariant the quantile reporter relies on.
+        let mut probes: Vec<u64> = vec![1, 999, 1_000, 1_001];
+        for b in 1..BUCKETS {
+            let edge = bucket_upper_ns(b);
+            for d in [-1.0, 0.0, 1.0] {
+                let ns = (edge + d).max(1.0) as u64;
+                probes.push(ns);
+            }
+        }
+        let mut ns = 1u64;
+        while ns < 10_000_000_000 {
+            probes.push(ns);
+            ns = ns.saturating_mul(3) / 2 + 1;
+        }
+        for ns in probes {
+            let b = bucket_of(ns);
+            assert!(b < BUCKETS);
+            assert!(
+                ns as f64 <= bucket_upper_ns(b) || b == BUCKETS - 1,
+                "{ns} ns above its bucket {b} upper {}",
+                bucket_upper_ns(b)
+            );
+            if b > 0 {
+                assert!(
+                    ns as f64 > bucket_upper_ns(b - 1),
+                    "{ns} ns at or below bucket {}'s upper edge {} but binned into {b}",
+                    b - 1,
+                    bucket_upper_ns(b - 1)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn range_matches_module_doc() {
+        // Doc claim: buckets cover up to ~4.2 s. The top edge must be in
+        // [4 s, 5 s) and anything beyond must clamp, not wrap.
+        let top = bucket_upper_ns(BUCKETS - 1);
+        assert!((4.0e9..5.0e9).contains(&top), "top edge {top} ns");
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_of(10_000_000_000), BUCKETS - 1); // 10 s clamps
+    }
+
+    #[test]
+    fn exact_edges_land_in_their_bucket() {
+        // upper(b) is inclusive: recording exactly the edge must fill
+        // bucket b, so quantile(1.0) reports that same edge back.
+        assert_eq!(bucket_of(1_000), 0);
+        assert_eq!(bucket_of(2_000), 2); // upper(2) = 1 us * 2^1 exactly
+        assert_eq!(bucket_of(4_000), 4);
+        assert_eq!(bucket_of(1_024_000), 20); // 2^10 * 1 us
+        assert_eq!(bucket_of(2_001), 3);
+    }
+
+    #[test]
+    fn single_sample_quantiles() {
+        let h = LatencyHistogram::new();
+        h.record_ns(2_000);
+        let s = h.snapshot();
+        assert_eq!(s.n, 1);
+        // all quantiles of a single sample are that sample's bucket edge
+        assert_eq!(s.p50_ns, 2_000.0);
+        assert_eq!(s.p99_ns, 2_000.0);
+        assert_eq!(s.max_ns, 2_000.0);
+        assert_eq!(s.mean_ns, 2_000.0);
+    }
+
+    #[test]
+    fn q1_reports_last_occupied_bucket() {
+        let h = LatencyHistogram::new();
+        for _ in 0..9 {
+            h.record_ns(1_000);
+        }
+        h.record_ns(4_000); // exactly upper(4)
+        let counts: Vec<u64> = h.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        assert_eq!(counts[0], 9);
+        assert_eq!(counts[4], 1);
+        let n = 10u64;
+        // q = 1.0: target = n, so the scan must reach bucket 4's edge
+        let target = ((1.0 * n as f64).ceil() as u64).clamp(1, n);
+        assert_eq!(target, n);
+        let s = h.snapshot();
+        assert_eq!(s.p99_ns, 4_000.0, "p99 of 10 samples needs all 10");
     }
 
     #[test]
@@ -174,5 +352,18 @@ mod tests {
         let s = h.snapshot();
         assert_eq!(s.n, 0);
         assert_eq!(s.mean_ns, 0.0);
+    }
+
+    #[test]
+    fn shed_classes_sum_to_dropped() {
+        let m = Metrics::new();
+        m.shed(ShedClass::Queue);
+        m.shed(ShedClass::Slo);
+        m.shed(ShedClass::Slo);
+        m.shed(ShedClass::Backlog);
+        m.shed(ShedClass::Shutdown);
+        let b = m.shed_breakdown();
+        assert_eq!(b, ShedBreakdown { queue: 1, slo: 2, backlog: 1, shutdown: 1 });
+        assert_eq!(b.total(), m.dropped.load(Ordering::Relaxed));
     }
 }

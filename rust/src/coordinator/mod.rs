@@ -24,9 +24,18 @@
 //!   ([`StreamRouter`]), served end-to-end by [`run_serving_streaming`]
 //!   (`gwlstm serve --native --streaming`). Each stream pays O(hop) per
 //!   new chunk instead of re-encoding a full window from zeros.
+//! * [`ingress`] — the production front door of the streaming service:
+//!   bounded-MPSC ingestion with SLO-based load shedding and
+//!   double-buffered ticks ([`TickPipeline`]: ingest/gather tick N+1
+//!   while the engine computes tick N — the software analogue of the
+//!   paper's pipelined initiation interval), served end-to-end by
+//!   [`run_serving_ingress`] (`gwlstm serve --native --streaming
+//!   --ingress`). With shedding disabled the pipelined output is
+//!   bit-identical to the serial tick loop.
 
 pub mod batcher;
 pub mod detector;
+pub mod ingress;
 pub mod metrics;
 pub mod router;
 pub mod server;
@@ -34,7 +43,10 @@ pub mod stream_router;
 
 pub use batcher::Policy;
 pub use detector::{Detection, DetectionSummary, Detector};
+pub use ingress::{Arrival, TickPipeline};
+pub use metrics::ShedBreakdown;
 pub use server::{
-    run_serving, run_serving_native, run_serving_streaming, run_serving_with_policy, ServeReport,
+    run_serving, run_serving_ingress, run_serving_native, run_serving_streaming,
+    run_serving_with_policy, ServeReport,
 };
 pub use stream_router::{StreamRouter, StreamScore};

@@ -32,15 +32,33 @@ pub struct WorkerQueue<T> {
     pub outstanding: Arc<AtomicUsize>,
 }
 
+/// The producer side hung up and the queue is drained — the clean
+/// end-of-stream signal of a worker loop, not a failure. Implements
+/// `std::error::Error` so callers that *do* treat it as fatal can `?` it
+/// instead of unwrapping (a hung-up producer used to panic the worker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Disconnected;
+
+impl std::fmt::Display for Disconnected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job queue disconnected (all producers hung up)")
+    }
+}
+
+impl std::error::Error for Disconnected {}
+
 impl<T> WorkerQueue<T> {
     /// Receive the next job (blocking). Decrements in-flight accounting.
-    pub fn recv(&self) -> Option<Job<T>> {
+    /// `Err(Disconnected)` means orderly shutdown: every producer dropped
+    /// its sender and the queue is drained — loop with
+    /// `while let Ok(job) = q.recv()` and treat the exit as clean.
+    pub fn recv(&self) -> Result<Job<T>, Disconnected> {
         match self.rx.recv() {
             Ok(j) => {
                 self.outstanding.fetch_sub(1, Ordering::AcqRel);
-                Some(j)
+                Ok(j)
             }
-            Err(_) => None,
+            Err(_) => Err(Disconnected),
         }
     }
 }
@@ -124,7 +142,8 @@ impl<T> Router<T> {
         }
     }
 
-    /// Close all queues (workers' recv() returns None after draining).
+    /// Close all queues (workers' recv() reports [`Disconnected`] after
+    /// draining).
     pub fn shutdown(self) {
         drop(self.senders);
     }
@@ -177,7 +196,23 @@ mod tests {
         r.route(Job { seq: 0, payload: 1 });
         r.shutdown();
         let q = &qs[0];
-        assert!(q.recv().is_some()); // drains queued job
-        assert!(q.recv().is_none()); // then observes closure
+        assert!(q.recv().is_ok()); // drains queued job
+        assert_eq!(q.recv(), Err(Disconnected)); // then observes closure
+    }
+
+    #[test]
+    fn producer_hangup_is_clean_error_not_panic() {
+        // The original bug: a worker blocked in recv() unwrapped the
+        // RecvError when the producer side dropped. It must instead get a
+        // typed Disconnected it can ? or match on.
+        let (r, qs) = Router::<u32>::new(1, 4);
+        let waiter = std::thread::spawn(move || qs.into_iter().next().unwrap().recv());
+        drop(r); // producer hangs up with nothing queued
+        let got = waiter.join().expect("worker must not panic");
+        assert_eq!(got, Err(Disconnected));
+        assert_eq!(
+            Disconnected.to_string(),
+            "job queue disconnected (all producers hung up)"
+        );
     }
 }

@@ -19,9 +19,9 @@
 //! pipeline serves the PJRT artifact backend ([`run_serving`]) and the
 //! artifact-less native batched backend ([`run_serving_native`]).
 
-use std::collections::HashMap;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::channel;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -29,13 +29,16 @@ use anyhow::{Context, Result};
 
 use super::batcher::{Batcher, Policy};
 use super::detector::{Detection, DetectionSummary, Detector};
-use super::metrics::{LatencySnapshot, Metrics};
+use super::ingress::{
+    spawn_feeds, FeedConfig, FinishedTick, IngressChunk, PreparedTick, TickPipeline,
+};
+use super::metrics::{LatencySnapshot, Metrics, ShedBreakdown, ShedClass};
 use super::router::{Job, RouteResult, Router};
 use super::stream_router::StreamRouter;
 use crate::config::{Manifest, ServeConfig};
 use crate::eval::roc::auc;
 use crate::gw::dataset::StrainStream;
-use crate::model::AutoencoderWeights;
+use crate::model::{AutoencoderWeights, StreamState};
 use crate::runtime::{Engine, ModelExecutor};
 use crate::stream::StreamConfig;
 
@@ -62,7 +65,13 @@ pub struct ServeReport {
     pub model: String,
     pub platform: String,
     pub windows: usize,
+    /// Windows produced at the source (`Metrics::windows_in`). The ingress
+    /// pipeline's conservation contract: `ingested == windows + dropped`.
+    pub ingested: u64,
     pub dropped: u64,
+    /// Why the dropped windows were shed (all zeros outside the ingress
+    /// pipeline except `queue`, which also counts stateless backpressure).
+    pub sheds: ShedBreakdown,
     /// Micro-batches dispatched to workers (== windows under batch-1).
     pub batches: u64,
     /// Mean dispatched batch size (1.0 under Policy::Immediate).
@@ -80,7 +89,16 @@ impl ServeReport {
     pub fn print(&self) {
         println!("=== gwlstm serving report ===");
         println!("model          : {} on {}", self.model, self.platform);
-        println!("windows served : {} (dropped {})", self.windows, self.dropped);
+        println!(
+            "windows served : {} (ingested {}, dropped {})",
+            self.windows, self.ingested, self.dropped
+        );
+        if self.sheds.total() > 0 {
+            println!(
+                "sheds          : queue {}, slo {}, backlog {}, shutdown {}",
+                self.sheds.queue, self.sheds.slo, self.sheds.backlog, self.sheds.shutdown
+            );
+        }
         println!(
             "dispatches     : {} micro-batches, mean batch {:.2}",
             self.batches, self.mean_batch
@@ -140,6 +158,14 @@ pub fn run_serving_with_policy(
              native backend); the PJRT window pipeline is stateless"
         );
     }
+    if cfg.ingress {
+        // Reject-don't-ignore: ingress pipelining is built on the
+        // streaming state service.
+        anyhow::bail!(
+            "cfg.ingress requires the streaming pipeline (run_serving_ingress, \
+             native backend); the PJRT window pipeline has no tick to pipeline"
+        );
+    }
     if cfg.threads != 1 {
         // Reject-don't-ignore (the math_policy/--streaming precedent): the
         // compiled artifact executes on PJRT's own runtime; the balanced-
@@ -185,6 +211,13 @@ pub fn run_serving_native(
              point re-encodes every window from zeros)"
         );
     }
+    if cfg.ingress {
+        // Reject-don't-ignore: same rule as streaming above.
+        anyhow::bail!(
+            "cfg.ingress is set — use run_serving_ingress (this entry point \
+             has no streaming tick to pipeline)"
+        );
+    }
     let w = weights.clone();
     let name = cfg.model.clone();
     let math = cfg.math_policy;
@@ -222,6 +255,12 @@ pub fn run_serving_streaming(
     weights: &AutoencoderWeights,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
+    if cfg.ingress {
+        // The async front door subsumes this loop (same sessions, same
+        // engine, pipelined ticks); delegating keeps `--streaming
+        // --ingress` a strict superset instead of a silent ignore.
+        return run_serving_ingress(weights, cfg);
+    }
     let hop = cfg.stream_hop.max(1);
     let sessions = cfg.stream_sessions.max(1);
     let exe = ModelExecutor::native_from_weights_policy_threads(
@@ -242,6 +281,7 @@ pub fn run_serving_streaming(
         hop,
         ttl_ticks: cfg.stream_ttl.max(1),
         max_sessions: sessions.max(1) + 1,
+        ..Default::default()
     };
     let mut router = StreamRouter::new(&exe, scfg)?;
     const CALIB_ID: u64 = u64::MAX;
@@ -323,7 +363,323 @@ pub fn run_serving_streaming(
         model: cfg.model.clone(),
         platform,
         windows: detections.len(),
+        ingested: metrics.windows_in.load(Ordering::Relaxed),
         dropped: 0,
+        sheds: ShedBreakdown::default(),
+        batches,
+        mean_batch: detections.len() as f64 / batches.max(1) as f64,
+        threshold: detector.threshold,
+        auc: auc(&scores, &labels),
+        summary: DetectionSummary::from_detections(&detections),
+        e2e: metrics.e2e.snapshot(),
+        infer: metrics.infer.snapshot(),
+        throughput_per_s: metrics.throughput_per_s(started),
+        compile_ms,
+    })
+}
+
+/// Admit one ingress chunk at the leader: SLO check first (a chunk older
+/// than the latency budget is worthless — shed it before it wastes a
+/// lockstep slot), then the registry's per-session backlog cap. Admitted
+/// chunks record their `(label, admitted)` meta FIFO-per-stream, matching
+/// the strict arrival-order consumption of `take_chunk_into`.
+fn admit_chunk(
+    c: IngressChunk,
+    router: &mut StreamRouter,
+    metrics: &Metrics,
+    metas: &mut HashMap<u64, VecDeque<(u8, Instant)>>,
+    slo: Duration,
+    now: u64,
+) {
+    if !slo.is_zero() && c.admitted.elapsed() > slo {
+        metrics.shed(ShedClass::Slo);
+        return;
+    }
+    if router.try_ingest(c.stream, &c.samples, now) {
+        metas
+            .entry(c.stream)
+            .or_default()
+            .push_back((c.label, c.admitted));
+    } else {
+        metrics.shed(ShedClass::Backlog);
+    }
+}
+
+/// Retire one finished tick: scatter states back (`complete`), classify
+/// and account every score, and hand the tick's buffers back to the
+/// caller for reuse (the double buffer's return leg). A free function
+/// (not a closure) because the leader loop and the shutdown drain both
+/// call it between other mutable uses of the router.
+#[allow(clippy::too_many_arguments)]
+fn retire_ingress_tick(
+    fin: FinishedTick,
+    router: &mut StreamRouter,
+    metrics: &Metrics,
+    metas: &mut HashMap<u64, VecDeque<(u8, Instant)>>,
+    detector: &Detector,
+    scores: &mut Vec<f64>,
+    labels: &mut Vec<u8>,
+    detections: &mut Vec<Detection>,
+    seq: &mut u64,
+    served: &mut usize,
+) -> (Vec<f32>, StreamState) {
+    let out = router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    let per_ns = fin.infer_ns / fin.ids.len().max(1) as u64;
+    for sc in &out {
+        metrics.infer.record_ns(per_ns);
+        metrics.windows_done.fetch_add(1, Ordering::Relaxed);
+        // chunks drain FIFO per stream, so the oldest meta is this score's
+        let meta = metas.get_mut(&sc.stream).and_then(VecDeque::pop_front);
+        if let Some((_, admitted)) = meta {
+            metrics.e2e.record_ns(admitted.elapsed().as_nanos() as u64);
+        }
+        let label = meta.map(|(l, _)| l);
+        let det = detector.classify(*seq, sc.score as f64, label);
+        if det.flagged {
+            metrics.flagged.fetch_add(1, Ordering::Relaxed);
+        }
+        scores.push(sc.score as f64);
+        labels.push(label.unwrap_or(0));
+        detections.push(det);
+        *seq += 1;
+        *served += 1;
+    }
+    (fin.flat, fin.group)
+}
+
+/// Async-ingress streaming serving: the production front door of the
+/// streaming state service ([`run_serving_streaming`] with the serial
+/// loop replaced by [`super::ingress`]).
+///
+/// * **Non-blocking ingestion** — `min(sessions, 4)` producer threads push
+///   hop-sized chunks into one bounded MPSC queue ([`spawn_feeds`]); a
+///   full queue sheds at the source instead of buffering a live feed.
+/// * **Admission control** — the leader drains the queue between ticks:
+///   chunks older than `cfg.slo_us` are shed ([`ShedClass::Slo`]; FIFO
+///   drain order means oldest-pending sheds first), and a stream whose
+///   backlog exceeds `cfg.queue_depth` hops sheds at the registry
+///   ([`ShedClass::Backlog`]).
+/// * **Double-buffered ticks** — while the engine thread computes tick N
+///   ([`TickPipeline`]), the leader ingests and gathers tick N+1; the
+///   scatter of N strictly precedes the gather of N+1, so with shedding
+///   disabled the scores are bit-identical to the serial loop
+///   (`tests/ingress_parity.rs`).
+///
+/// Conservation contract (pinned by the SLO property test): every chunk
+/// the producers create is either scored or counted in exactly one shed
+/// class — `report.ingested == report.windows + report.dropped` and
+/// `report.sheds.total() == report.dropped`.
+pub fn run_serving_ingress(
+    weights: &AutoencoderWeights,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let hop = cfg.stream_hop.max(1);
+    let sessions = cfg.stream_sessions.max(1);
+    let math = cfg.math_policy;
+    let threads = cfg.threads.max(1);
+    let w = weights.clone();
+    let name = cfg.model.clone();
+    let factory = move || -> Result<ModelExecutor> {
+        Ok(ModelExecutor::native_from_weights_policy_threads(
+            &w, &name, hop, math, threads,
+        ))
+    };
+    let (mut pipe, info) = TickPipeline::spawn(factory)?;
+    let platform = format!("{}+ingress", info.platform);
+    let compile_ms = info.compile_ms;
+    let scfg = StreamConfig {
+        hop,
+        ttl_ticks: cfg.stream_ttl.max(1),
+        max_sessions: sessions + 1,
+        // backlog cap per stream mirrors the ingress queue depth: the two
+        // bounded buffers are the whole memory footprint of the front door
+        max_pending_hops: cfg.queue_depth.max(1),
+    };
+    let mut router = StreamRouter::from_proto(info.proto, scfg);
+    let metrics = Arc::new(Metrics::new());
+
+    // ---- calibration: the background session scored THROUGH the pipeline
+    // (depth 1: submit then wait), so the threshold is calibrated on the
+    // exact datapath that serves ----
+    const CALIB_ID: u64 = u64::MAX;
+    let mut calib_stream = StrainStream::new(0xCA11B, hop, cfg.snr, 0.0);
+    let mut bg_scores = Vec::with_capacity(cfg.calib_windows);
+    let mut cur_flat: Vec<f32> = Vec::new();
+    let mut cur_group: Option<StreamState> = None;
+    for i in 0..cfg.calib_windows as u64 {
+        router.ingest(CALIB_ID, &calib_stream.next_window().samples, i);
+        let ids = router.take_ready(&mut cur_flat);
+        if ids.is_empty() {
+            continue;
+        }
+        router.gather_group(&ids, &mut cur_group);
+        pipe.submit(PreparedTick {
+            ids,
+            flat: std::mem::take(&mut cur_flat),
+            group: cur_group.take().expect("gather_group ensures the group"),
+            tick: i,
+        })?;
+        let fin = pipe.wait()?;
+        for s in router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick) {
+            bg_scores.push(s.score as f64);
+        }
+        cur_flat = fin.flat;
+        cur_group = Some(fin.group);
+    }
+    router.evict(CALIB_ID);
+    let detector = Detector::calibrate(&bg_scores, cfg.target_fpr);
+
+    // ---- producers ----
+    let max_windows = cfg.max_windows.max(1);
+    let stop = Arc::new(AtomicBool::new(false));
+    let fcfg = FeedConfig {
+        sessions,
+        hop,
+        snr: cfg.snr,
+        inject_prob: cfg.inject_prob,
+        arrival: cfg.arrival,
+        pace_us: cfg.pace_us,
+        queue_depth: cfg.queue_depth.max(1),
+        // headroom for moderate shedding, but finite: the serve loop must
+        // terminate even under 100% shed
+        quota_per_feed: max_windows
+            .div_ceil(sessions)
+            .saturating_mul(4)
+            .saturating_add(8),
+    };
+    let (rx, feed_handles) = spawn_feeds(&fcfg, stop.clone(), metrics.clone());
+
+    // ---- leader: prepare tick N+1 while the engine computes tick N ----
+    let slo = Duration::from_micros(cfg.slo_us);
+    let mut metas: HashMap<u64, VecDeque<(u8, Instant)>> = HashMap::new();
+    let mut detections: Vec<Detection> = Vec::with_capacity(max_windows);
+    let mut scores = Vec::with_capacity(max_windows);
+    let mut labels: Vec<u8> = Vec::with_capacity(max_windows);
+    let started = Instant::now();
+    let mut served = 0usize;
+    let mut seq = 0u64;
+    let mut tick = cfg.calib_windows as u64;
+    let mut spare_flat: Vec<f32> = Vec::new();
+    let mut spare_group: Option<StreamState> = None;
+    let mut producers_live = true;
+    while served < max_windows {
+        // 1. drain the ingress queue (non-blocking: overlaps the in-flight
+        //    engine call)
+        loop {
+            match rx.try_recv() {
+                Ok(c) => admit_chunk(c, &mut router, &metrics, &mut metas, slo, tick),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    producers_live = false;
+                    break;
+                }
+            }
+        }
+        // 2. prepare tick N+1 (consumes chunks; touches no resident state)
+        let ids = router.take_ready(&mut cur_flat);
+        // 3. retire tick N — the scatter, the only state write
+        if pipe.in_flight() > 0 {
+            let fin = pipe.wait()?;
+            let (f, g) = retire_ingress_tick(
+                fin,
+                &mut router,
+                &metrics,
+                &mut metas,
+                &detector,
+                &mut scores,
+                &mut labels,
+                &mut detections,
+                &mut seq,
+                &mut served,
+            );
+            spare_flat = f;
+            spare_group = Some(g);
+        }
+        // 4. gather N+1 against the freshly scattered states and launch it
+        if !ids.is_empty() {
+            router.gather_group(&ids, &mut cur_group);
+            pipe.submit(PreparedTick {
+                ids,
+                flat: std::mem::take(&mut cur_flat),
+                group: cur_group.take().expect("gather_group ensures the group"),
+                tick,
+            })?;
+            cur_flat = std::mem::take(&mut spare_flat);
+            cur_group = spare_group.take();
+        } else if pipe.in_flight() == 0 {
+            if !producers_live {
+                break; // input ended and the backlog fully drained
+            }
+            // idle tick: nothing ready, nothing computing — block briefly
+            // for new arrivals instead of spinning
+            match rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(c) => admit_chunk(c, &mut router, &metrics, &mut metas, slo, tick),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => producers_live = false,
+            }
+        }
+        // TTL housekeeping: an evicted session's unconsumed backlog is
+        // admitted-but-never-scored work, so it must leave through a shed
+        // class for conservation to hold (producers emit whole hops, so
+        // pending/hop is exact)
+        for snap in router.evict_expired(tick) {
+            let lost = snap.pending.len() / hop;
+            for _ in 0..lost {
+                metrics.shed(ShedClass::Backlog);
+            }
+            if let Some(q) = metas.get_mut(&snap.id) {
+                // newest metas correspond to the lost (never-consumed) tail
+                for _ in 0..lost {
+                    q.pop_back();
+                }
+            }
+        }
+        tick += 1;
+    }
+
+    // ---- orderly shutdown: stop producers, retire in-flight work, then
+    // account every still-buffered chunk so conservation holds exactly ----
+    stop.store(true, Ordering::Relaxed);
+    while pipe.in_flight() > 0 {
+        let fin = pipe.wait()?;
+        let _ = retire_ingress_tick(
+            fin,
+            &mut router,
+            &metrics,
+            &mut metas,
+            &detector,
+            &mut scores,
+            &mut labels,
+            &mut detections,
+            &mut seq,
+            &mut served,
+        );
+    }
+    for h in feed_handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("ingress feed thread panicked"))?;
+    }
+    // producers retired: whatever is still queued or pending was admitted
+    // into a buffer but never scored
+    while rx.try_recv().is_ok() {
+        metrics.shed(ShedClass::Shutdown);
+    }
+    for id in router.registry().ids() {
+        let pending = router.registry().get(id).map_or(0, |s| s.pending_len());
+        for _ in 0..pending / hop {
+            metrics.shed(ShedClass::Shutdown);
+        }
+    }
+
+    let batches = metrics.batches.load(Ordering::Relaxed);
+    Ok(ServeReport {
+        model: cfg.model.clone(),
+        platform,
+        windows: detections.len(),
+        ingested: metrics.windows_in.load(Ordering::Relaxed),
+        dropped: metrics.dropped.load(Ordering::Relaxed),
+        sheds: metrics.shed_breakdown(),
         batches,
         mean_batch: detections.len() as f64 / batches.max(1) as f64,
         threshold: detector.threshold,
@@ -392,7 +748,9 @@ where
             ready.wait();
             let exe = exe?;
             let mut flat: Vec<f32> = Vec::new();
-            while let Some(job) = q.recv() {
+            // Err(Disconnected) from recv() is orderly shutdown (producer
+            // dropped the router), so the loop just ends — no unwrap.
+            while let Ok(job) = q.recv() {
                 let batch = job.payload;
                 let bsz = batch.len();
                 if bsz == 0 {
@@ -506,17 +864,28 @@ where
     }
     let throughput = metrics.throughput_per_s(started);
 
-    producer.join().expect("producer panicked");
+    // A panicked thread must surface as a serve error, not take the whole
+    // process down with a propagated panic (same discipline as recv()'s
+    // Disconnected: shutdown paths return, they don't unwrap).
+    producer
+        .join()
+        .map_err(|_| anyhow::anyhow!("serving producer thread panicked"))?;
     for h in worker_handles {
-        h.join().expect("worker panicked").context("worker failed")?;
+        h.join()
+            .map_err(|_| anyhow::anyhow!("serving worker thread panicked"))?
+            .context("worker failed")?;
     }
 
     let batches = metrics.batches.load(Ordering::Relaxed);
+    let dropped = metrics.dropped.load(Ordering::Relaxed);
     Ok(ServeReport {
         model: cfg.model.clone(),
         platform,
         windows: detections.len(),
-        dropped: metrics.dropped.load(Ordering::Relaxed),
+        ingested: metrics.windows_in.load(Ordering::Relaxed),
+        dropped,
+        // the stateless pipeline's only shed path is queue backpressure
+        sheds: ShedBreakdown { queue: dropped, ..Default::default() },
         batches,
         mean_batch: detections.len() as f64 / batches.max(1) as f64,
         threshold: detector.threshold,

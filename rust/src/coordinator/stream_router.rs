@@ -72,12 +72,20 @@ impl StreamRouter {
     /// Build a router whose sessions resume from `exe`'s zero state
     /// (native backend only — errors on PJRT, which cannot host state).
     pub fn new(exe: &ModelExecutor, cfg: StreamConfig) -> Result<StreamRouter> {
-        let proto = exe.stream_state(1)?;
-        Ok(StreamRouter {
+        Ok(StreamRouter::from_proto(exe.stream_state(1)?, cfg))
+    }
+
+    /// Build a router from an explicit batch-1 zero-state prototype. The
+    /// pipelined ingress path uses this: its engine lives on a dedicated
+    /// compute thread, so the leader-side router can never hold an
+    /// executor reference — only the prototype the engine reported at
+    /// startup.
+    pub fn from_proto(proto: StreamState, cfg: StreamConfig) -> StreamRouter {
+        StreamRouter {
             registry: SessionRegistry::new(cfg, proto),
             gather: Vec::new(),
             group: None,
-        })
+        }
     }
 
     /// Read access to the session registry (tests, reporting).
@@ -91,6 +99,82 @@ impl StreamRouter {
         self.registry.ingest(id, samples, now);
     }
 
+    /// Admission-controlled ingest (see [`SessionRegistry::try_ingest`]):
+    /// `false` means the session's backlog cap refused the samples and the
+    /// caller should shed them.
+    pub fn try_ingest(&mut self, id: u64, samples: &[f32], now: u64) -> bool {
+        self.registry.try_ingest(id, samples, now)
+    }
+
+    // ---- pipeline stages ------------------------------------------------
+    //
+    // dispatch() = take_ready + gather_group + engine call + complete, and
+    // the double-buffered ingress loop runs the SAME stages with the
+    // engine call displaced onto its compute thread. Sharing the stage
+    // code is what makes pipelined-vs-serial bit-exactness hold by
+    // construction: pipelining moves call boundaries, never an operand.
+    // take_ready touches only pending sample buffers and gather_group only
+    // *reads* resident states, so preparing tick N+1 commutes with
+    // completing tick N — the scatter (the only state write) happens in
+    // complete(), strictly before the next gather.
+
+    /// Stage 1 — consume one hop-sized chunk from every ready session into
+    /// `flat` (cleared first; `(B, hop)` row-major in ascending-id order)
+    /// and return the ids. No resident state is read or written.
+    pub fn take_ready(&mut self, flat: &mut Vec<f32>) -> Vec<u64> {
+        let hop = self.registry.config().hop;
+        let ids = self.registry.ready_ids();
+        flat.clear();
+        for id in &ids {
+            let sess = self.registry.get_mut(*id).expect("ready session exists");
+            let took = sess.take_chunk_into(hop, flat);
+            debug_assert!(took, "ready_ids promised a full hop");
+        }
+        ids
+    }
+
+    /// Stage 2 — gather the resident states of `ids` into the lockstep
+    /// group state, row `b` <- session `ids[b]`. Rebuilds `group` (from
+    /// the registry's batch-1 prototype) only when the batch size changed;
+    /// otherwise every row is fully overwritten, so reuse is safe.
+    pub fn gather_group(&self, ids: &[u64], group: &mut Option<StreamState>) {
+        if group.as_ref().map(|g| g.batch) != Some(ids.len()) {
+            *group = Some(self.registry.proto().zeros_like(ids.len()));
+        }
+        let g = group.as_mut().expect("group state just ensured");
+        for (b, id) in ids.iter().enumerate() {
+            let sess = self.registry.get(*id).expect("gathered session exists");
+            g.load_row(b, &sess.state, 0);
+        }
+    }
+
+    /// Stage 3 — scatter the advanced group state back into the sessions
+    /// and stamp their activity tick, returning the per-stream scores in
+    /// the ids' (ascending) order. A session evicted while its tick was in
+    /// flight is skipped: its score is still reported (the chunk WAS
+    /// scored) but there is no resident state left to advance.
+    pub fn complete(
+        &mut self,
+        ids: &[u64],
+        scores: &[f32],
+        group: &StreamState,
+        now: u64,
+    ) -> Vec<StreamScore> {
+        assert_eq!(ids.len(), scores.len(), "one score per dispatched id");
+        let mut out = Vec::with_capacity(ids.len());
+        for (b, id) in ids.iter().enumerate() {
+            if let Some(sess) = self.registry.get_mut(*id) {
+                sess.state.load_row(0, group, b);
+                sess.last_tick = now;
+            }
+            out.push(StreamScore {
+                stream: *id,
+                score: scores[b],
+            });
+        }
+        out
+    }
+
     /// Advance every ready session (≥ one hop pending) by exactly one
     /// chunk through ONE lockstep stateful engine call; returns per-stream
     /// scores in ascending session-id order. Sessions with more than one
@@ -101,34 +185,26 @@ impl StreamRouter {
     /// backend the only error sources are construction-time shape
     /// mismatches, not data-dependent failures).
     pub fn dispatch(&mut self, exe: &ModelExecutor, now: u64) -> Result<Vec<StreamScore>> {
-        let hop = self.registry.config().hop;
-        let ids = self.registry.ready_ids();
+        let mut flat = std::mem::take(&mut self.gather);
+        let ids = self.take_ready(&mut flat);
         if ids.is_empty() {
+            self.gather = flat;
             return Ok(Vec::new());
         }
-        let batch = ids.len();
-        self.gather.clear();
-        if self.group.as_ref().map(|g| g.batch) != Some(batch) {
-            self.group = Some(exe.stream_state(batch)?);
-        }
-        let group = self.group.as_mut().expect("group state just ensured");
-        for (b, id) in ids.iter().enumerate() {
-            let sess = self.registry.get_mut(*id).expect("ready session exists");
-            let took = sess.take_chunk_into(hop, &mut self.gather);
-            debug_assert!(took, "ready_ids promised a full hop");
-            group.load_row(b, &sess.state, 0);
-        }
-        let scores = exe.score_batch_stateful(&self.gather, batch, group)?;
-        let mut out = Vec::with_capacity(batch);
-        for (b, id) in ids.iter().enumerate() {
-            let sess = self.registry.get_mut(*id).expect("ready session exists");
-            sess.state.load_row(0, group, b);
-            sess.last_tick = now;
-            out.push(StreamScore {
-                stream: *id,
-                score: scores[b],
-            });
-        }
+        let mut group = self.group.take();
+        self.gather_group(&ids, &mut group);
+        let g = group.as_mut().expect("gather_group ensures the group");
+        let result = exe.score_batch_stateful(&flat, ids.len(), g);
+        self.gather = flat;
+        let scores = match result {
+            Ok(s) => s,
+            Err(e) => {
+                self.group = group;
+                return Err(e);
+            }
+        };
+        let out = self.complete(&ids, &scores, group.as_ref().expect("group"), now);
+        self.group = group;
         Ok(out)
     }
 
@@ -215,6 +291,50 @@ mod tests {
             assert_eq!(got[0], want_a[0], "tick {tick}");
             assert_eq!(got[1], want_b[0], "tick {tick}");
         }
+    }
+
+    #[test]
+    fn staged_api_composes_to_dispatch() {
+        // take_ready + gather_group + engine + complete (the pipelined
+        // path's stages) must equal one dispatch() call bit-for-bit.
+        let exe = exe();
+        let mut staged = StreamRouter::new(&exe, cfg(4)).unwrap();
+        let mut serial = StreamRouter::new(&exe, cfg(4)).unwrap();
+        let chunk: Vec<f32> = (0..4).map(|i| (i as f32 * 0.6).sin()).collect();
+        for tick in 0..3u64 {
+            staged.ingest(1, &chunk, tick);
+            staged.ingest(2, &chunk, tick);
+            serial.ingest(1, &chunk, tick);
+            serial.ingest(2, &chunk, tick);
+            let mut flat = Vec::new();
+            let ids = staged.take_ready(&mut flat);
+            let mut group = None;
+            staged.gather_group(&ids, &mut group);
+            let g = group.as_mut().unwrap();
+            let scores = exe.score_batch_stateful(&flat, ids.len(), g).unwrap();
+            let got = staged.complete(&ids, &scores, group.as_ref().unwrap(), tick);
+            let want = serial.dispatch(&exe, tick).unwrap();
+            assert_eq!(got, want, "tick {tick}");
+        }
+    }
+
+    #[test]
+    fn complete_skips_sessions_evicted_in_flight() {
+        let exe = exe();
+        let mut r = StreamRouter::new(&exe, cfg(4)).unwrap();
+        r.ingest(1, &[0.1; 4], 0);
+        r.ingest(2, &[0.2; 4], 0);
+        let mut flat = Vec::new();
+        let ids = r.take_ready(&mut flat);
+        let mut group = None;
+        r.gather_group(&ids, &mut group);
+        let g = group.as_mut().unwrap();
+        let scores = exe.score_batch_stateful(&flat, ids.len(), g).unwrap();
+        r.evict(1); // session vanishes while its tick is "in flight"
+        let out = r.complete(&ids, &scores, group.as_ref().unwrap(), 0);
+        assert_eq!(out.len(), 2, "scored chunks still reported");
+        assert!(r.registry().get(1).is_none());
+        assert_eq!(r.registry().get(2).unwrap().last_tick, 0);
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //!                            streaming state service: S resident per-stream
 //!                            (h, c) sessions, one lockstep stateful call per
 //!                            tick, O(hop) per new chunk (requires --native)
+//!              [--ingress]   async ingest front door for the streaming
+//!                            service: bounded-MPSC producers, admission
+//!                            control, double-buffered ticks (requires
+//!                            --streaming)
+//!              [--slo-us N]  shed queued chunks older than N us instead of
+//!                            scoring them (0 = never; requires --ingress)
+//!              [--arrival uniform|bursty]   arrival process of the synthetic
+//!                            ingress feeds (requires --ingress)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -347,6 +355,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let hop_flag = args.get("hop").is_some();
     cfg.stream_sessions = args.usize_or("sessions", cfg.stream_sessions)?;
     cfg.stream_hop = args.usize_or("hop", cfg.stream_hop)?;
+    // --ingress puts the async front door (bounded queues, SLO shedding,
+    // double-buffered ticks) in front of the streaming service.
+    if args.flag("ingress") {
+        cfg.ingress = true;
+    }
+    let slo_flag = args.get("slo-us").is_some();
+    cfg.slo_us = args.usize_or("slo-us", cfg.slo_us as usize)? as u64;
+    let arrival_flag = args.get("arrival").map(str::to_string);
+    if let Some(a) = &arrival_flag {
+        cfg.arrival = gwlstm::coordinator::Arrival::parse(a)?;
+    }
     let arch = if cfg.model.contains("nominal") { "nominal" } else { "small" };
     let ts_flag = args.get("ts").map(str::to_string);
     let ts = args.usize_or("ts", if arch == "nominal" { 100 } else { 8 })?;
@@ -380,6 +399,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if (sessions_flag || hop_flag) && !cfg.streaming {
         bail!("--sessions/--hop only apply with --streaming (the stateless pipeline has no resident sessions)");
+    }
+    if cfg.ingress && !cfg.streaming {
+        // Reject-don't-ignore: the front door pipelines the streaming tick
+        // loop; there is no tick to pipeline in the stateless pipeline.
+        bail!("--ingress requires --streaming (it pipelines the streaming tick loop)");
+    }
+    if (slo_flag || arrival_flag.is_some()) && !cfg.ingress {
+        bail!("--slo-us/--arrival only apply with --ingress (the serial loop has no admission queue)");
     }
     let policy = if max_batch > 1 {
         Policy::MicroBatch {

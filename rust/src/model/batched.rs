@@ -403,6 +403,34 @@ impl StreamState {
             dst.copy_row_from(row, s, src_row);
         }
     }
+
+    /// A zero state with the same per-layer widths as `self` but `batch`
+    /// lockstep rows. Lets the stream router size lockstep group states
+    /// off its batch-1 session prototype without holding an engine
+    /// reference (the pipelined ingress path owns the engine on another
+    /// thread).
+    ///
+    /// ```
+    /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+    ///
+    /// let w = AutoencoderWeights::synthetic(2, "small");
+    /// let eng = PackedAutoencoder::from_weights(&w);
+    /// let proto = eng.zero_state(1);
+    /// let group = proto.zeros_like(3);
+    /// assert_eq!(group.batch, 3);
+    /// assert_eq!(group.layers[0].lh, proto.layers[0].lh);
+    /// assert!(group.layers[0].h.iter().all(|&v| v == 0.0));
+    /// ```
+    pub fn zeros_like(&self, batch: usize) -> StreamState {
+        StreamState {
+            batch,
+            layers: self
+                .layers
+                .iter()
+                .map(|l| BatchedState::zeros(batch, l.lh))
+                .collect(),
+        }
+    }
 }
 
 /// Per-layer working buffers for one lockstep run. Part of

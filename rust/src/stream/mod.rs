@@ -68,6 +68,13 @@ pub struct StreamConfig {
     /// Registry capacity: creating a session beyond this evicts the
     /// least-recently-active one first.
     pub max_sessions: usize,
+    /// Per-session backlog cap in full hops: admission-controlled ingest
+    /// ([`SessionRegistry::try_ingest`]) refuses samples that would push a
+    /// session's pending buffer past `max_pending_hops * hop` samples, so
+    /// one stalled or bursty stream cannot grow unbounded memory. The
+    /// uncontrolled [`SessionRegistry::ingest`] path ignores this knob
+    /// (trusted callers: calibration, tests).
+    pub max_pending_hops: usize,
 }
 
 impl Default for StreamConfig {
@@ -76,6 +83,7 @@ impl Default for StreamConfig {
             hop: 25,
             ttl_ticks: 256,
             max_sessions: 1024,
+            max_pending_hops: 64,
         }
     }
 }

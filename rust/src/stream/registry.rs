@@ -122,9 +122,39 @@ impl SessionRegistry {
         }
     }
 
+    /// The batch-1 zero-state template new sessions are cloned from (the
+    /// router's pipelined path sizes lockstep group states off it).
+    pub fn proto(&self) -> &StreamState {
+        &self.proto
+    }
+
+    /// Live session ids, ascending (reporting and shutdown accounting).
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.sessions.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Ingest raw samples for stream `id` at tick `now` (get-or-create).
     pub fn ingest(&mut self, id: u64, samples: &[f32], now: u64) {
         self.touch(id, now).push(samples);
+    }
+
+    /// Admission-controlled ingest: refuses (returns `false`, touching
+    /// nothing — not even the session's activity tick) when accepting
+    /// `samples` would push the session's pending backlog past
+    /// [`StreamConfig::max_pending_hops`] full hops. This is the
+    /// registry-side backpressure hook of the ingress pipeline: a stream
+    /// whose chunks arrive faster than dispatch drains them gets its
+    /// overflow shed at admission instead of buffering unboundedly.
+    pub fn try_ingest(&mut self, id: u64, samples: &[f32], now: u64) -> bool {
+        let cap = self.cfg.max_pending_hops.saturating_mul(self.cfg.hop);
+        let pending = self.sessions.get(&id).map_or(0, StreamSession::pending_len);
+        if pending + samples.len() > cap {
+            return false;
+        }
+        self.ingest(id, samples, now);
+        true
     }
 
     /// Ids of every session with a full hop pending, ascending — the
@@ -189,6 +219,7 @@ mod tests {
                 hop,
                 ttl_ticks: ttl,
                 max_sessions: cap,
+                ..Default::default()
             },
             proto,
         )
@@ -240,6 +271,38 @@ mod tests {
         assert_eq!(reg.len(), 2, "restore must not exceed max_sessions");
         assert!(reg.get(2).is_none());
         assert!(reg.get(1).is_some() && reg.get(3).is_some());
+    }
+
+    #[test]
+    fn try_ingest_enforces_backlog_cap() {
+        let mut reg = registry(2, 100, 8);
+        reg.cfg.max_pending_hops = 3; // cap = 6 samples
+        assert!(reg.try_ingest(1, &[0.0; 4], 0));
+        assert!(reg.try_ingest(1, &[0.0; 2], 1), "exactly at cap admits");
+        assert!(!reg.try_ingest(1, &[0.0; 1], 2), "past cap refuses");
+        assert_eq!(reg.get(1).unwrap().pending_len(), 6);
+        assert_eq!(
+            reg.get(1).unwrap().last_tick,
+            1,
+            "refused ingest must not stamp activity"
+        );
+        // draining a chunk frees capacity again
+        let mut out = Vec::new();
+        assert!(reg.get_mut(1).unwrap().take_chunk_into(2, &mut out));
+        assert!(reg.try_ingest(1, &[0.0; 2], 3));
+        // a brand-new session obeys the same cap
+        assert!(!reg.try_ingest(9, &[0.0; 7], 3));
+        assert!(reg.get(9).is_none(), "refused creation leaves no session");
+        assert!(reg.try_ingest(9, &[0.0; 6], 3));
+    }
+
+    #[test]
+    fn ids_are_ascending() {
+        let mut reg = registry(2, 100, 8);
+        reg.touch(9, 0);
+        reg.touch(1, 0);
+        reg.touch(4, 0);
+        assert_eq!(reg.ids(), vec![1, 4, 9]);
     }
 
     #[test]

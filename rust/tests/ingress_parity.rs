@@ -1,0 +1,306 @@
+//! Ingress-pipeline parity and conservation: the async front door must
+//! change *nothing* numerically and must lose *nothing* silently.
+//!
+//! Contracts pinned here (the acceptance criteria of the ingress tentpole):
+//!
+//! 1. **Pipelined parity** — with shedding disabled, the double-buffered
+//!    tick pipeline ([`run_pipelined_schedule`]) is bit-identical to the
+//!    serial dispatch loop over the same ingest schedule, in both math
+//!    tiers, at engine threads ∈ {1, 4}, under ragged schedules (sessions
+//!    skipping ticks, multi-hop pushes, late joiners).
+//! 2. **Conservation** — every window the producers create is either
+//!    scored or counted in exactly one shed class:
+//!    `ingested == windows + dropped` and `sheds.total() == dropped`.
+//! 3. **SLO property** — conservation holds under randomized bursty
+//!    arrivals, queue depths, and SLO budgets; with `slo_us == 0` the SLO
+//!    shed class stays empty.
+//! 4. **Reject-don't-ignore** — the stateless entry points refuse an
+//!    ingress config instead of silently serving without the front door.
+
+use gwlstm::config::ServeConfig;
+use gwlstm::coordinator::ingress::run_pipelined_schedule;
+use gwlstm::coordinator::{
+    run_serving_native, run_serving_streaming, Arrival, Policy, StreamRouter, StreamScore,
+};
+use gwlstm::model::{AutoencoderWeights, MathPolicy};
+use gwlstm::runtime::ModelExecutor;
+use gwlstm::stream::StreamConfig;
+use gwlstm::util::prop;
+use gwlstm::util::rng::Rng;
+
+/// Serial reference: the exact `dispatch()` tick loop over the same
+/// schedule, draining the backlog afterwards (one dispatch per remaining
+/// ready set) — mirrors `run_pipelined_schedule`'s drive loop minus the
+/// pipeline.
+fn run_serial_schedule(
+    exe: &ModelExecutor,
+    cfg: StreamConfig,
+    schedule: &[Vec<(u64, Vec<f32>)>],
+) -> Vec<StreamScore> {
+    let mut router = StreamRouter::new(exe, cfg).unwrap();
+    let mut out = Vec::new();
+    let mut tick = 0u64;
+    let mut feed = schedule.iter();
+    loop {
+        let fed = match feed.next() {
+            Some(items) => {
+                for (id, samples) in items {
+                    router.ingest(*id, samples, tick);
+                }
+                true
+            }
+            None => false,
+        };
+        let scored = router.dispatch(exe, tick).unwrap();
+        let drained = scored.is_empty();
+        out.extend(scored);
+        if !fed && drained {
+            break;
+        }
+        tick += 1;
+    }
+    out
+}
+
+/// A ragged multi-session schedule: sessions skip ticks, push multiple
+/// hops at once (backlog), and join late.
+fn ragged_schedule(seed: u64, hop: usize, sessions: usize, ticks: usize) -> Vec<Vec<(u64, Vec<f32>)>> {
+    let mut rng = Rng::new(seed);
+    let mut schedule = Vec::with_capacity(ticks);
+    for t in 0..ticks {
+        let mut items = Vec::new();
+        for s in 0..sessions {
+            if t < s {
+                continue; // session s joins at tick s (late joiner)
+            }
+            if rng.bool(0.3) {
+                continue; // skipped tick
+            }
+            // 1..=3 hops in one push: multi-hop backlog
+            let hops = 1 + rng.below(3) as usize;
+            let chunk: Vec<f32> = (0..hop * hops).map(|_| rng.gaussian() as f32).collect();
+            items.push((s as u64, chunk));
+        }
+        schedule.push(items);
+    }
+    schedule
+}
+
+#[test]
+fn pipelined_schedule_bitidentical_to_serial_loop() {
+    // Both math tiers x engine threads {1, 4} x ragged schedules: the
+    // pipeline moves call boundaries, never an operand, so equality is
+    // exact — not approximate — everywhere.
+    let hop = 6usize;
+    let w = AutoencoderWeights::synthetic(0x1A61, "small");
+    for policy in [MathPolicy::BitExact, MathPolicy::FastSimd] {
+        for threads in [1usize, 4] {
+            let exe = ModelExecutor::native_from_weights_policy_threads(
+                &w, "ingress_ref", hop, policy, threads,
+            );
+            for seed in [7u64, 8, 9] {
+                let schedule = ragged_schedule(seed, hop, 3, 8);
+                let cfg = StreamConfig {
+                    hop,
+                    ..Default::default()
+                };
+                let want = run_serial_schedule(&exe, cfg, &schedule);
+                let wf = w.clone();
+                let got = run_pipelined_schedule(
+                    move || {
+                        Ok(ModelExecutor::native_from_weights_policy_threads(
+                            &wf,
+                            "ingress_pipe",
+                            hop,
+                            policy,
+                            threads,
+                        ))
+                    },
+                    cfg,
+                    &schedule,
+                )
+                .unwrap();
+                assert!(!want.is_empty(), "schedule {seed} produced no work");
+                assert_eq!(
+                    got, want,
+                    "{policy:?} threads={threads} seed={seed}: pipelined diverged from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_session_pipeline_matches_serial() {
+    // Degenerate pipeline (B = 1 every tick): the steady-state ping-pong of
+    // the two buffers with no grouping at all.
+    let hop = 4usize;
+    let w = AutoencoderWeights::synthetic(0x1A62, "small");
+    let exe = ModelExecutor::native_from_weights(&w, "ingress_b1", hop);
+    let mut rng = Rng::new(11);
+    let schedule: Vec<Vec<(u64, Vec<f32>)>> = (0..6)
+        .map(|_| {
+            vec![(
+                5u64,
+                (0..hop).map(|_| rng.gaussian() as f32).collect::<Vec<f32>>(),
+            )]
+        })
+        .collect();
+    let cfg = StreamConfig {
+        hop,
+        ..Default::default()
+    };
+    let want = run_serial_schedule(&exe, cfg, &schedule);
+    let wf = w.clone();
+    let got = run_pipelined_schedule(
+        move || Ok(ModelExecutor::native_from_weights(&wf, "ingress_b1p", hop)),
+        cfg,
+        &schedule,
+    )
+    .unwrap();
+    assert_eq!(want.len(), 6);
+    assert_eq!(got, want);
+}
+
+fn ingress_cfg() -> ServeConfig {
+    ServeConfig {
+        model: "small_ingress".into(),
+        calib_windows: 16,
+        max_windows: 64,
+        inject_prob: 0.4,
+        stream_sessions: 3,
+        stream_hop: 8,
+        streaming: true,
+        ingress: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn ingress_serving_end_to_end_conserves_every_window() {
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = ingress_cfg();
+    let report = run_serving_streaming(&weights, &cfg).unwrap();
+    assert!(report.platform.contains("ingress"), "{}", report.platform);
+    assert!(report.windows >= cfg.max_windows, "quota not served");
+    // conservation: every produced window scored or in exactly one shed class
+    assert_eq!(
+        report.ingested,
+        report.windows as u64 + report.dropped,
+        "windows leaked: ingested {} != served {} + dropped {}",
+        report.ingested,
+        report.windows,
+        report.dropped
+    );
+    assert_eq!(report.sheds.total(), report.dropped, "shed classes must sum");
+    assert_eq!(report.sheds.slo, 0, "slo_us = 0 must never SLO-shed");
+    assert!(report.auc > 0.0 && report.auc <= 1.0);
+    assert!(report.throughput_per_s > 0.0);
+    assert!(report.infer.n >= report.windows as u64);
+}
+
+#[test]
+fn ingress_serving_fast_tier_and_bursty_arrivals() {
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = ServeConfig {
+        math_policy: MathPolicy::FastSimd,
+        arrival: Arrival::Bursty,
+        slo_us: 50_000,
+        ..ingress_cfg()
+    };
+    let report = run_serving_streaming(&weights, &cfg).unwrap();
+    assert!(report.platform.contains("fastsimd"), "{}", report.platform);
+    assert_eq!(report.ingested, report.windows as u64 + report.dropped);
+    assert_eq!(report.sheds.total(), report.dropped);
+}
+
+/// One randomized ingress serving scenario.
+#[derive(Debug)]
+struct IngressCase {
+    sessions: usize,
+    hop: usize,
+    max_windows: usize,
+    queue_depth: usize,
+    slo_us: u64,
+    bursty: bool,
+    pace_us: u64,
+}
+
+#[test]
+fn prop_ingress_conservation_under_random_arrivals() {
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    prop::check_with(
+        prop::Config {
+            cases: 10, // each case spawns a full serving pipeline
+            ..Default::default()
+        },
+        "ingress-conservation",
+        |d| IngressCase {
+            sessions: d.usize_in(1, 4),
+            hop: d.usize_in(4, 10),
+            max_windows: d.usize_in(8, 48),
+            queue_depth: d.usize_in(2, 16),
+            // 0 (shedding off) or a tight-to-loose budget
+            slo_us: if d.bool() { 0 } else { d.usize_in(50, 20_000) as u64 },
+            bursty: d.bool(),
+            pace_us: if d.bool() { 0 } else { d.usize_in(1, 200) as u64 },
+        },
+        |case| {
+            let cfg = ServeConfig {
+                model: "prop_ingress".into(),
+                calib_windows: 8,
+                max_windows: case.max_windows,
+                inject_prob: 0.3,
+                stream_sessions: case.sessions,
+                stream_hop: case.hop,
+                queue_depth: case.queue_depth,
+                slo_us: case.slo_us,
+                pace_us: case.pace_us,
+                arrival: if case.bursty {
+                    Arrival::Bursty
+                } else {
+                    Arrival::Uniform
+                },
+                streaming: true,
+                ingress: true,
+                ..Default::default()
+            };
+            let report = run_serving_streaming(&weights, &cfg).map_err(|e| e.to_string())?;
+            if report.ingested != report.windows as u64 + report.dropped {
+                return Err(format!(
+                    "conservation violated: ingested {} != served {} + dropped {}",
+                    report.ingested, report.windows, report.dropped
+                ));
+            }
+            if report.sheds.total() != report.dropped {
+                return Err(format!(
+                    "shed classes {:?} do not sum to dropped {}",
+                    report.sheds, report.dropped
+                ));
+            }
+            if case.slo_us == 0 && report.sheds.slo != 0 {
+                return Err(format!(
+                    "slo_us = 0 but {} windows SLO-shed",
+                    report.sheds.slo
+                ));
+            }
+            if report.windows == 0 {
+                return Err("served nothing".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stateless_entry_points_reject_ingress_config() {
+    // Reject-don't-ignore: a config asking for the async front door must
+    // not silently serve through a pipeline that has no tick to pipeline.
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = ServeConfig {
+        streaming: false,
+        ingress: true,
+        ..Default::default()
+    };
+    assert!(run_serving_native(&weights, 8, &cfg, Policy::Immediate).is_err());
+}
