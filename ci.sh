@@ -74,6 +74,19 @@ if command -v cargo >/dev/null 2>&1; then
             cargo bench --bench e2e_serving) \
             || failures=$((failures + 1))
     fi
+
+    # Fault-injection smoke: a seeded chaos campaign (NaN bursts, stalls,
+    # misframed chunks, one scheduled engine panic) through the ingress
+    # pipeline in both math tiers. Survival = exit 0; the binary itself
+    # asserts the conservation ledger (ingested == served + dropped +
+    # quarantined) and exits nonzero on a leak. See coordinator::chaos.
+    note "rust: fault-injection smoke (seeded chaos campaign, both math tiers)"
+    for tier in bitexact fast_simd; do
+        (cd rust && cargo run --release --quiet -- serve --native --streaming \
+            --ingress --sessions 100 --hop 8 --windows 400 --math "$tier" \
+            --faults "seed=7,nan=0.02,stall=0.01,stall_us=100,badlen=0.01,panic@12") \
+            || failures=$((failures + 1))
+    done
 else
     echo "WARNING: cargo not found in PATH — rust tier-1 skipped" >&2
 fi

@@ -1,0 +1,218 @@
+"""Numpy twin of the rust fault-tolerance layer (PR 6): validates the
+*algebra* of the recovery design independently of the rust implementation.
+
+The rust streaming service (``stream::StreamSession`` + ``coordinator``)
+claims three things this file re-derives in plain float32 numpy:
+
+1. a finiteness sweep over ``(h, c)`` after each engine call is a
+   sufficient detector for state poisoned by NaN/Inf input — once any
+   non-finite value enters the recurrent state, the sweep sees it;
+2. restoring the last-good snapshot (taken every ``snapshot_ticks``) and
+   excising the faulty window reproduces the clean stream's subsequent
+   outputs **bitwise** — quarantine + snapshot-restore loses only the
+   poisoned window, nothing downstream;
+3. rows of a lockstep batched step are independent: a NaN burst in one
+   session's row never perturbs any other row's output, bitwise (the
+   PR 1 isolation contract that makes per-session quarantine sound).
+
+The LSTM here is a self-contained stateful float32 cell (gate order
+i, f, g, o — same as ``compile.kernels.ref``), NOT the jax model:
+``compile.model`` is stateless by design (fresh zeros per window), while
+these properties are about *resident* state carried across hops.
+"""
+
+import numpy as np
+
+LH = 9  # hidden units, matching the "small" arch's encoder
+D_IN = 1
+
+
+def make_weights(seed):
+    """Deterministic float32 cell weights, forget-gate bias slab +1."""
+    rng = np.random.default_rng(seed)
+    wx = rng.standard_normal((D_IN, 4 * LH)).astype(np.float32) * np.float32(0.4)
+    wh = rng.standard_normal((LH, 4 * LH)).astype(np.float32) * np.float32(0.4)
+    b = np.zeros(4 * LH, dtype=np.float32)
+    b[LH : 2 * LH] = 1.0  # forget gate
+    return wx, wh, b
+
+
+def sigmoid(z):
+    return (np.float32(1.0) / (np.float32(1.0) + np.exp(-z))).astype(np.float32)
+
+
+def step(weights, x, h, c):
+    """One batched LSTM step: x (B, D_IN), h/c (B, LH) -> new (h, c)."""
+    wx, wh, b = weights
+    z = (x @ wx + h @ wh + b).astype(np.float32)
+    i = sigmoid(z[:, :LH])
+    f = sigmoid(z[:, LH : 2 * LH])
+    g = np.tanh(z[:, 2 * LH : 3 * LH]).astype(np.float32)
+    o = sigmoid(z[:, 3 * LH :])
+    c_new = (f * c + i * g).astype(np.float32)
+    h_new = (o * np.tanh(c_new)).astype(np.float32)
+    return h_new, c_new
+
+
+def advance_chunk(weights, chunk, h, c):
+    """Advance resident state through one hop of samples (the stateful-
+    continuation hot path): chunk (B, hop) -> final (h, c) after hop steps."""
+    for t in range(chunk.shape[1]):
+        h, c = step(weights, chunk[:, t : t + 1], h, c)
+    return h, c
+
+
+def clean_stream(seed, sessions, ticks, hop):
+    """(ticks, sessions, hop) float32 strain-like chunks, deterministic."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((ticks, sessions, hop)).astype(np.float32)
+
+
+def state_is_finite(h, c):
+    """The rust finiteness sweep (stream::StreamSession poisoned-state
+    check): every lane of both halves of the recurrent state is finite."""
+    return bool(np.isfinite(h).all() and np.isfinite(c).all())
+
+
+def test_finiteness_sweep_detects_nan_poisoned_state():
+    """NaN anywhere in an input chunk propagates into (h, c) within that
+    chunk (every gate of the step is NaN-transparent), and the sweep flags
+    it — for every injection position, on a developed state."""
+    weights = make_weights(0xD0E)
+    chunks = clean_stream(7, 1, 4, 8)
+    for pos in range(8):
+        h = np.zeros((1, LH), dtype=np.float32)
+        c = np.zeros((1, LH), dtype=np.float32)
+        # two clean chunks first: poison must be caught on top of a
+        # developed state, not just from zeros
+        for k in range(2):
+            h, c = advance_chunk(weights, chunks[k], h, c)
+        assert state_is_finite(h, c)
+        bad = chunks[2].copy()
+        bad[0, pos] = np.nan
+        h, c = advance_chunk(weights, bad, h, c)
+        assert not state_is_finite(h, c), f"sweep missed NaN at sample {pos}"
+
+
+def test_inf_input_is_absorbed_so_the_dq_gate_must_catch_it():
+    """Why the design layers an *input* gate in front of the state sweep:
+    an Inf sample saturates the gates (sigmoid(+-inf) and tanh(+-inf) are
+    finite), so it can pass through the step leaving (h, c) entirely finite
+    — the sweep alone is blind to it. The DQ gate's input-side finiteness
+    check (rust ``gw::dq::classify`` -> NonFinite, refused pre-engine)
+    catches every non-finite sample at every position."""
+    weights = make_weights(0xD0E)
+    chunks = clean_stream(7, 1, 4, 8)
+    h = np.zeros((1, LH), dtype=np.float32)
+    c = np.zeros((1, LH), dtype=np.float32)
+    for k in range(2):
+        h, c = advance_chunk(weights, chunks[k], h, c)
+    bad = chunks[2].copy()
+    bad[0, 0] = np.inf
+    h_after, c_after = advance_chunk(weights, bad, h, c)
+    # the sweep's blind spot, demonstrated: state stays finite
+    assert state_is_finite(h_after, c_after)
+    # the DQ-gate twin has no such blind spot
+    for poison in (np.nan, np.inf, -np.inf):
+        for pos in range(8):
+            chunk = chunks[2].copy()
+            chunk[0, pos] = poison
+            assert not np.isfinite(chunk).all()
+
+
+def test_snapshot_restore_reproduces_excised_clean_stream_bitwise():
+    """The quarantine recovery contract: snapshot after chunk k-1, poison
+    chunk k, restore the snapshot, resume at k+1 — every subsequent (h, c)
+    is bitwise identical to a clean run that simply never saw chunk k."""
+    weights = make_weights(0xBEEF)
+    ticks, hop, fault_tick = 10, 8, 4
+    chunks = clean_stream(21, 1, ticks, hop)
+
+    # clean reference: the fault window excised from the stream
+    rh = np.zeros((1, LH), dtype=np.float32)
+    rc = np.zeros((1, LH), dtype=np.float32)
+    ref_states = []
+    for k in range(ticks):
+        if k == fault_tick:
+            continue
+        rh, rc = advance_chunk(weights, chunks[k], rh, rc)
+        ref_states.append((rh.copy(), rc.copy()))
+
+    # faulty run: snapshot every tick (the rust snapshot_ticks cadence at
+    # its tightest), poison chunk fault_tick, sweep, restore, continue
+    h = np.zeros((1, LH), dtype=np.float32)
+    c = np.zeros((1, LH), dtype=np.float32)
+    snapshot = (h.copy(), c.copy())
+    got_states = []
+    for k in range(ticks):
+        chunk = chunks[k].copy()
+        if k == fault_tick:
+            chunk[0, 3] = np.nan
+        h, c = advance_chunk(weights, chunk, h, c)
+        if not state_is_finite(h, c):
+            h, c = snapshot[0].copy(), snapshot[1].copy()  # quarantine + restore
+            continue  # the poisoned window is lost, nothing else
+        snapshot = (h.copy(), c.copy())
+        got_states.append((h.copy(), c.copy()))
+
+    assert len(got_states) == len(ref_states) == ticks - 1
+    for (gh, gc), (eh, ec) in zip(got_states, ref_states):
+        np.testing.assert_array_equal(gh, eh)
+        np.testing.assert_array_equal(gc, ec)
+
+
+def test_zero_reset_rejoins_clean_trajectory_only_approximately():
+    """Reset-from-zeros (the no-snapshot fallback) is NOT bitwise recovery:
+    the restarted trajectory differs from the clean one immediately after
+    the fault. This is why the rust default keeps snapshot_ticks > 0 — the
+    twin documents what the fallback gives up."""
+    weights = make_weights(0xBEEF)
+    ticks, hop, fault_tick = 8, 8, 3
+    chunks = clean_stream(33, 1, ticks, hop)
+
+    rh = np.zeros((1, LH), dtype=np.float32)
+    rc = np.zeros((1, LH), dtype=np.float32)
+    for k in range(ticks):
+        if k != fault_tick:
+            rh, rc = advance_chunk(weights, chunks[k], rh, rc)
+
+    h = np.zeros((1, LH), dtype=np.float32)
+    c = np.zeros((1, LH), dtype=np.float32)
+    for k in range(ticks):
+        chunk = chunks[k].copy()
+        if k == fault_tick:
+            chunk[0, 0] = np.nan
+        h, c = advance_chunk(weights, chunk, h, c)
+        if not state_is_finite(h, c):
+            h = np.zeros((1, LH), dtype=np.float32)  # zero reset, no snapshot
+            c = np.zeros((1, LH), dtype=np.float32)
+
+    assert state_is_finite(h, c)  # it does recover to finite operation...
+    assert not np.array_equal(h, rh)  # ...but not onto the clean trajectory
+
+
+def test_batch_row_isolation_under_nan_burst():
+    """Lockstep batched rows are independent: poisoning one session's chunk
+    leaves every other row's (h, c) bitwise identical to the clean batched
+    run — the property that makes per-session quarantine sound."""
+    weights = make_weights(0xABCD)
+    sessions, ticks, hop, victim, fault_tick = 5, 6, 8, 2, 3
+    chunks = clean_stream(55, sessions, ticks, hop)
+
+    ch = np.zeros((sessions, LH), dtype=np.float32)
+    cc = np.zeros((sessions, LH), dtype=np.float32)
+    for k in range(ticks):
+        ch, cc = advance_chunk(weights, chunks[k], ch, cc)
+
+    fh = np.zeros((sessions, LH), dtype=np.float32)
+    fc = np.zeros((sessions, LH), dtype=np.float32)
+    for k in range(ticks):
+        chunk = chunks[k].copy()
+        if k == fault_tick:
+            chunk[victim, :] = np.nan
+        fh, fc = advance_chunk(weights, chunk, fh, fc)
+
+    assert not state_is_finite(fh[victim : victim + 1], fc[victim : victim + 1])
+    others = [s for s in range(sessions) if s != victim]
+    np.testing.assert_array_equal(fh[others], ch[others])
+    np.testing.assert_array_equal(fc[others], cc[others])

@@ -31,8 +31,8 @@ use std::time::Duration;
 
 use gwlstm::config::{Manifest, ServeConfig};
 use gwlstm::coordinator::{
-    run_serving_native, run_serving_streaming, run_serving_with_policy, Arrival, Policy,
-    ServeReport,
+    run_serving_native, run_serving_streaming, run_serving_with_policy, Arrival, FaultSpec,
+    Policy, ServeReport,
 };
 use gwlstm::model::{AutoencoderWeights, MathPolicy};
 use gwlstm::util::bench::Table;
@@ -167,7 +167,7 @@ fn main() {
         let r = run_serving_streaming(&weights, &icfg).expect("ingress serving run");
         assert_eq!(
             r.ingested,
-            r.windows as u64 + r.dropped,
+            r.windows as u64 + r.dropped + r.quarantined,
             "ingress conservation violated in bench"
         );
         let prefix = format!("ingress/{}", arrival.label());
@@ -198,11 +198,59 @@ fn main() {
         };
         rows.push((label, r));
     }
+    // Fault arms: seeded chaos campaigns through the same ingress pipeline
+    // (coordinator::chaos) — what the fault-tolerance layer COSTS and how
+    // much it catches, per tier. `GWLSTM_FAULTS=<spec>` adds a custom arm.
+    let mut fault_arms: Vec<(String, String)> = vec![
+        ("nan_burst".into(), "seed=11,nan=0.05".into()),
+        ("stall".into(), "seed=12,stall=0.05,stall_us=200".into()),
+        ("panic".into(), "seed=13,panic@3,panic@7,panic@20".into()),
+    ];
+    if let Ok(s) = std::env::var("GWLSTM_FAULTS") {
+        if !s.trim().is_empty() {
+            fault_arms.push(("custom".into(), s));
+        }
+    }
+    println!("\n=== chaos campaigns (ingress + seeded faults, {} tier) ===", math.label());
+    for (arm, spec) in &fault_arms {
+        let fcfg = ServeConfig {
+            model: format!("small_faults_{arm}"),
+            arrival: Arrival::Uniform,
+            ingress: true,
+            pace_us: 50,
+            slo_us: 0,
+            faults: Some(FaultSpec::parse(spec).expect("bench fault spec")),
+            ..scfg.clone()
+        };
+        let r = run_serving_streaming(&weights, &fcfg).expect("chaos serving run");
+        assert_eq!(
+            r.ingested,
+            r.windows as u64 + r.dropped + r.quarantined,
+            "chaos arm {arm}: conservation violated"
+        );
+        println!(
+            "  {arm:<10} served {} quarantined {} recovered {} panics {} e2e p99 {:.1} us",
+            r.windows, r.quarantined, r.recovered, r.engine_panics, r.e2e.p99_ns / 1e3
+        );
+        let tier = math.label();
+        bench_keys.insert(
+            format!("faults/{arm}/quarantined/{tier}"),
+            Value::Num(r.quarantined as f64),
+        );
+        bench_keys.insert(
+            format!("faults/{arm}/recovered/{tier}"),
+            Value::Num(r.recovered as f64),
+        );
+        bench_keys.insert(
+            format!("faults/{arm}/e2e_p99_us/{tier}"),
+            Value::Num(r.e2e.p99_ns / 1e3),
+        );
+    }
     bench_keys.insert(
         "_meta".to_string(),
         Value::Str(
-            "ingress serving keys from benches/e2e_serving.rs; tiers merge \
-             across ci.sh passes (see BENCHMARKS.md)"
+            "ingress + faults serving keys from benches/e2e_serving.rs; tiers \
+             merge across ci.sh passes (see BENCHMARKS.md)"
                 .to_string(),
         ),
     );

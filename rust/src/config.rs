@@ -8,7 +8,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::Arrival;
+use crate::coordinator::{Arrival, FaultSpec};
 use crate::model::MathPolicy;
 use crate::util::json::Value;
 
@@ -153,6 +153,13 @@ pub struct ServeConfig {
     /// cadence or `"bursty"` 1–8-chunk bursts at the same mean rate. JSON
     /// key `arrival`.
     pub arrival: Arrival,
+    /// Seeded fault-injection plan for the chaos harness
+    /// (`coordinator::chaos`): NaN bursts, feed stalls, misframed chunks,
+    /// scheduled engine panics. `None` (the default) injects nothing and
+    /// keeps the datapath bit-identical to a build without the
+    /// fault-tolerance layer. Ingress pipeline only. JSON key `faults`
+    /// (the spec string, e.g. `"seed=7,nan=0.02,panic@5"`).
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for ServeConfig {
@@ -176,6 +183,7 @@ impl Default for ServeConfig {
             ingress: false,
             slo_us: 0,
             arrival: Arrival::Uniform,
+            faults: None,
         }
     }
 }
@@ -211,6 +219,7 @@ impl ServeConfig {
                 "ingress" => self.ingress = val.as_bool()?,
                 "slo_us" => self.slo_us = val.as_usize()? as u64,
                 "arrival" => self.arrival = Arrival::parse(val.as_str()?)?,
+                "faults" => self.faults = Some(FaultSpec::parse(val.as_str()?)?),
                 other => return Err(anyhow!("unknown serve-config key {other:?}")),
             }
         }
@@ -355,6 +364,21 @@ mod tests {
         let bad = Value::parse(r#"{"arrival": "poisson"}"#).unwrap();
         assert!(cfg.apply_json(&bad).is_err());
         assert_eq!(cfg.arrival, Arrival::Bursty, "failed apply must not reset");
+    }
+
+    #[test]
+    fn faults_override() {
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.faults.is_none(), "no chaos by default");
+        let v = Value::parse(r#"{"faults": "seed=7,nan=0.02,panic@5"}"#).unwrap();
+        cfg.apply_json(&v).unwrap();
+        let spec = cfg.faults.as_ref().unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.nan_prob, 0.02);
+        assert_eq!(spec.panic_calls, vec![5]);
+        // reject-don't-ignore: a typo'd spec is a config error
+        let bad = Value::parse(r#"{"faults": "nna=0.5"}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Deterministic fault-injection harness.
+//!
+//! Every failure scenario the fault-tolerance layer claims to survive must
+//! be a *reproducible test*, not an anecdote. This module turns a compact
+//! spec string into a seeded chaos plan:
+//!
+//! ```text
+//!   seed=7,nan=0.02,stall=0.01,stall_us=200,badlen=0.01,panic@5,panic@40
+//! ```
+//!
+//! * `nan=<p>` — with probability `p` per produced chunk, overwrite a
+//!   random burst with NaN/±inf ([`crate::gw::dq::inject_nan_burst`]).
+//! * `stall=<p>` / `stall_us=<µs>` — with probability `p`, the feed
+//!   producer sleeps `stall_us` after sending a chunk (a feed dropout:
+//!   exercises SLO shedding and idle ticks, not data corruption).
+//! * `badlen=<p>` — with probability `p`, misframe the chunk to a wrong
+//!   length ([`crate::gw::dq::inject_bad_length`]).
+//! * `panic@<k>` — the engine thread panics on its `k`-th stateful call
+//!   (0-based, counted on the engine thread), exercising supervised
+//!   restart. Repeatable: `panic@5,panic@40`.
+//! * `seed=<s>` — base seed for all random draws (default `0xC4405`).
+//!
+//! Determinism: each feed stream draws from its own substream
+//! ([`FaultSpec::for_stream`] → `Rng::new(seed ^ hash(stream))`-style
+//! split), so the fault sequence a stream sees depends only on
+//! `(seed, stream id, chunk index)` — never on producer-thread
+//! interleaving. Engine panics are scheduled by call *index*, which the
+//! engine thread counts itself — independent of timing.
+//!
+//! Consumed by `serve --faults <spec>` (CLI), the `GWLSTM_FAULTS` env var
+//! (benches), and the fault-tolerance test suite.
+
+use anyhow::{anyhow, Result};
+
+use crate::gw::dq;
+use crate::util::rng::Rng;
+
+/// Default chaos seed when the spec doesn't set one.
+pub const DEFAULT_CHAOS_SEED: u64 = 0xC4405;
+
+/// Parsed fault-injection plan (see the module docs for the spec syntax).
+///
+/// ```
+/// use gwlstm::coordinator::chaos::FaultSpec;
+///
+/// let spec = FaultSpec::parse("seed=7,nan=0.5,panic@3").unwrap();
+/// assert_eq!(spec.seed, 7);
+/// assert_eq!(spec.nan_prob, 0.5);
+/// assert_eq!(spec.panic_calls, vec![3]);
+/// assert!(FaultSpec::parse("nan=0.5,flub=1").is_err(), "unknown key");
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Base seed for every fault draw.
+    pub seed: u64,
+    /// Per-chunk probability of a NaN/±inf burst.
+    pub nan_prob: f64,
+    /// Per-chunk probability of a feed stall after sending.
+    pub stall_prob: f64,
+    /// Stall duration in microseconds.
+    pub stall_us: u64,
+    /// Per-chunk probability of a misframed (wrong-length) chunk.
+    pub badlen_prob: f64,
+    /// Engine-call indices (0-based) at which the engine thread panics.
+    pub panic_calls: Vec<u64>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: DEFAULT_CHAOS_SEED,
+            nan_prob: 0.0,
+            stall_prob: 0.0,
+            stall_us: 100,
+            badlen_prob: 0.0,
+            panic_calls: Vec::new(),
+        }
+    }
+}
+
+fn prob(key: &str, v: &str) -> Result<f64> {
+    let p: f64 = v
+        .parse()
+        .map_err(|_| anyhow!("fault spec: {key}={v:?} is not a number"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(anyhow!("fault spec: {key}={v} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+impl FaultSpec {
+    /// Parse a spec string (comma-separated `key=value` / `panic@k`
+    /// entries). Unknown keys are rejected, not ignored — a typo'd chaos
+    /// plan that silently injects nothing would make every "survived the
+    /// campaign" result meaningless.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(k) = part.strip_prefix("panic@") {
+                let call: u64 = k
+                    .parse()
+                    .map_err(|_| anyhow!("fault spec: bad panic index {k:?}"))?;
+                spec.panic_calls.push(call);
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("fault spec: expected key=value, got {part:?}"))?;
+            match key {
+                "seed" => {
+                    spec.seed = val
+                        .parse()
+                        .map_err(|_| anyhow!("fault spec: bad seed {val:?}"))?;
+                }
+                "nan" => spec.nan_prob = prob("nan", val)?,
+                "stall" => spec.stall_prob = prob("stall", val)?,
+                "badlen" => spec.badlen_prob = prob("badlen", val)?,
+                "stall_us" => {
+                    spec.stall_us = val
+                        .parse()
+                        .map_err(|_| anyhow!("fault spec: bad stall_us {val:?}"))?;
+                }
+                other => {
+                    return Err(anyhow!(
+                        "fault spec: unknown key {other:?} \
+                         (known: seed, nan, stall, stall_us, badlen, panic@<k>)"
+                    ))
+                }
+            }
+        }
+        spec.panic_calls.sort_unstable();
+        spec.panic_calls.dedup();
+        Ok(spec)
+    }
+
+    /// Read `GWLSTM_FAULTS` (the bench hook); `Ok(None)` when unset/empty.
+    pub fn from_env() -> Result<Option<FaultSpec>> {
+        match std::env::var("GWLSTM_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultSpec::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Whether the plan injects nothing (parsing `""` yields this).
+    pub fn is_noop(&self) -> bool {
+        self.nan_prob == 0.0
+            && self.stall_prob == 0.0
+            && self.badlen_prob == 0.0
+            && self.panic_calls.is_empty()
+    }
+
+    /// The feed-side fault injector for one stream: an independent
+    /// substream of the plan's seed, so the faults stream `id` sees are a
+    /// pure function of `(seed, id, chunk index)`.
+    pub fn for_stream(&self, id: u64) -> StreamFaults {
+        let mut base = Rng::new(self.seed);
+        StreamFaults {
+            rng: base.split(id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ id),
+            nan_prob: self.nan_prob,
+            stall_prob: self.stall_prob,
+            stall_us: self.stall_us,
+            badlen_prob: self.badlen_prob,
+        }
+    }
+
+    /// The engine-side panic schedule (indices of engine calls to kill).
+    pub fn panic_schedule(&self) -> PanicSchedule {
+        // sorted + deduped here so should_panic's binary_search is valid
+        // for any spec order ("panic@7,panic@3" must still fire both)
+        let mut calls = self.panic_calls.clone();
+        calls.sort_unstable();
+        calls.dedup();
+        PanicSchedule { calls }
+    }
+}
+
+/// What a feed-side injection did to a chunk (for logging/assertions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Chunk now contains NaN/±inf samples.
+    NanBurst,
+    /// Chunk length no longer matches the hop.
+    BadLength,
+}
+
+/// Per-stream feed-side fault injector (see [`FaultSpec::for_stream`]).
+///
+/// Draw order per chunk is fixed (`nan`, `badlen`, `stall`) so the rng
+/// stream stays aligned regardless of which faults fire.
+#[derive(Debug, Clone)]
+pub struct StreamFaults {
+    rng: Rng,
+    nan_prob: f64,
+    stall_prob: f64,
+    stall_us: u64,
+    badlen_prob: f64,
+}
+
+impl StreamFaults {
+    /// Possibly corrupt one produced chunk in place. At most one
+    /// corruption fires per chunk (NaN burst wins over misframing).
+    /// Returns what was done, if anything.
+    pub fn corrupt(&mut self, samples: &mut Vec<f32>, hop: usize) -> Option<FaultKind> {
+        let nan = self.rng.bool(self.nan_prob);
+        let badlen = self.rng.bool(self.badlen_prob);
+        if nan {
+            dq::inject_nan_burst(samples, &mut self.rng);
+            Some(FaultKind::NanBurst)
+        } else if badlen {
+            dq::inject_bad_length(samples, hop, &mut self.rng);
+            Some(FaultKind::BadLength)
+        } else {
+            None
+        }
+    }
+
+    /// Duration the producer should stall after sending this chunk, if
+    /// the stall fault fires.
+    pub fn stall(&mut self) -> Option<std::time::Duration> {
+        if self.rng.bool(self.stall_prob) {
+            Some(std::time::Duration::from_micros(self.stall_us))
+        } else {
+            None
+        }
+    }
+}
+
+/// Scheduled engine-thread panics, by 0-based engine-call index.
+///
+/// ```
+/// use gwlstm::coordinator::chaos::FaultSpec;
+///
+/// let plan = FaultSpec::parse("panic@1,panic@4").unwrap().panic_schedule();
+/// let fired: Vec<bool> = (0..6).map(|i| plan.should_panic(i)).collect();
+/// assert_eq!(fired, [false, true, false, false, true, false]);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct PanicSchedule {
+    calls: Vec<u64>,
+}
+
+impl PanicSchedule {
+    /// Whether the engine should panic on call `idx` (sorted, deduped).
+    pub fn should_panic(&self, idx: u64) -> bool {
+        self.calls.binary_search(&idx).is_ok()
+    }
+
+    /// Whether any panic is scheduled at all.
+    pub fn is_empty(&self) -> bool {
+        self.calls.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let s = FaultSpec::parse("seed=9,nan=0.25,stall=0.125,stall_us=50,badlen=0.5,panic@7,panic@2,panic@7")
+            .unwrap();
+        assert_eq!(s.seed, 9);
+        assert_eq!(s.nan_prob, 0.25);
+        assert_eq!(s.stall_prob, 0.125);
+        assert_eq!(s.stall_us, 50);
+        assert_eq!(s.badlen_prob, 0.5);
+        assert_eq!(s.panic_calls, vec![2, 7], "sorted + deduped");
+        assert!(!s.is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultSpec::parse("nan=2.0").is_err(), "prob out of range");
+        assert!(FaultSpec::parse("nan=x").is_err());
+        assert!(FaultSpec::parse("panic@x").is_err());
+        assert!(FaultSpec::parse("unknown=1").is_err());
+        assert!(FaultSpec::parse("nan").is_err(), "missing value");
+        assert!(FaultSpec::parse("").unwrap().is_noop());
+    }
+
+    #[test]
+    fn stream_faults_deterministic_and_independent() {
+        let spec = FaultSpec::parse("seed=3,nan=0.5,badlen=0.25").unwrap();
+        let run = |stream: u64| {
+            let mut f = spec.for_stream(stream);
+            (0..32u64)
+                .map(|i| {
+                    let mut chunk: Vec<f32> = (0..8).map(|j| (i * 8 + j) as f32 * 0.1 + 0.01).collect();
+                    f.corrupt(&mut chunk, 8)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(1), "same stream, same fault sequence");
+        assert_ne!(run(1), run(2), "different streams draw independently");
+    }
+
+    #[test]
+    fn corrupted_chunks_classify_as_injected() {
+        use crate::gw::dq::{classify, ChunkClass, DqConfig};
+        let spec = FaultSpec::parse("seed=5,nan=1.0").unwrap();
+        let mut f = spec.for_stream(0);
+        let mut chunk = vec![0.5f32; 8];
+        assert_eq!(f.corrupt(&mut chunk, 8), Some(FaultKind::NanBurst));
+        assert_eq!(
+            classify(&chunk, 8, &DqConfig::default()),
+            ChunkClass::NonFinite
+        );
+    }
+}

@@ -34,6 +34,7 @@
 //! tiers — pinned by `tests/ingress_parity.rs` via
 //! [`run_pipelined_schedule`].
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -42,6 +43,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::chaos::{FaultSpec, PanicSchedule, StreamFaults};
 use super::metrics::{Metrics, ShedClass};
 use super::stream_router::{StreamRouter, StreamScore};
 use crate::gw::dataset::StrainStream;
@@ -115,6 +117,10 @@ pub struct FeedConfig {
     /// Chunks each feed may produce before retiring — the termination
     /// bound that guarantees the serve loop ends even under 100% shed.
     pub quota_per_feed: usize,
+    /// Seeded feed-side fault plan ([`super::chaos`]): NaN bursts,
+    /// misframed chunks and stalls injected per stream. `None` injects
+    /// nothing (and costs nothing on the produce path).
+    pub faults: Option<FaultSpec>,
 }
 
 /// Spawn the ingress producers: `min(sessions, 4)` threads multiplexing
@@ -142,22 +148,28 @@ pub fn spawn_feeds(
         let metrics = metrics.clone();
         let cfg = cfg.clone();
         handles.push(std::thread::spawn(move || {
-            let mut feeds: Vec<(u64, StrainStream)> = (p..cfg.sessions.max(1))
-                .step_by(n_prod)
-                .map(|s| {
-                    let seed = 0x57EA4 ^ (s as u64).wrapping_mul(0x9E37_79B9);
-                    (
-                        s as u64,
-                        StrainStream::new(seed, cfg.hop, cfg.snr, cfg.inject_prob),
-                    )
-                })
-                .collect();
+            // Fault injectors are split per STREAM (not per producer
+            // thread), so the fault sequence a stream sees is a pure
+            // function of (chaos seed, stream id, chunk index) no matter
+            // how the feeds are multiplexed over threads.
+            let mut feeds: Vec<(u64, StrainStream, Option<StreamFaults>)> =
+                (p..cfg.sessions.max(1))
+                    .step_by(n_prod)
+                    .map(|s| {
+                        let seed = 0x57EA4 ^ (s as u64).wrapping_mul(0x9E37_79B9);
+                        (
+                            s as u64,
+                            StrainStream::new(seed, cfg.hop, cfg.snr, cfg.inject_prob),
+                            cfg.faults.as_ref().map(|f| f.for_stream(s as u64)),
+                        )
+                    })
+                    .collect();
             let mut rng = Rng::new(0x1A6E55 ^ p as u64);
             let pace = Duration::from_micros(cfg.pace_us);
             let quota = cfg.quota_per_feed.saturating_mul(feeds.len());
             let mut produced = 0usize;
             'produce: while produced < quota && !stop.load(Ordering::Relaxed) {
-                for (id, feed) in feeds.iter_mut() {
+                for (id, feed, faults) in feeds.iter_mut() {
                     if produced >= quota || stop.load(Ordering::Relaxed) {
                         break 'produce;
                     }
@@ -172,9 +184,15 @@ pub fn spawn_feeds(
                         let w = feed.next_window();
                         produced += 1;
                         metrics.windows_in.fetch_add(1, Ordering::Relaxed);
+                        let mut samples = w.samples;
+                        let mut stall = None;
+                        if let Some(f) = faults.as_mut() {
+                            f.corrupt(&mut samples, cfg.hop);
+                            stall = f.stall();
+                        }
                         let chunk = IngressChunk {
                             stream: *id,
-                            samples: w.samples,
+                            samples,
                             label: w.label,
                             admitted: Instant::now(),
                         };
@@ -183,6 +201,11 @@ pub fn spawn_feeds(
                             // real-time feed sheds at the source rather
                             // than buffering stale strain
                             metrics.shed(ShedClass::Queue);
+                        }
+                        if let Some(d) = stall {
+                            // injected feed dropout: the producer goes
+                            // quiet after this chunk
+                            std::thread::sleep(d);
                         }
                     }
                     if !pace.is_zero() {
@@ -249,6 +272,46 @@ pub struct FinishedTick {
     pub infer_ns: u64,
 }
 
+/// Consecutive engine-call panics the supervisor absorbs by warm restart
+/// before escalating to clean shutdown. A panic *storm* (every restart
+/// panics again) means something is systematically broken — restarting
+/// forever would spin the service on a dead engine.
+pub const MAX_ENGINE_RESTARTS: u64 = 8;
+
+/// A tick whose engine call panicked (caught at the supervision boundary).
+/// The tick's chunks were consumed but never scored, and `group` may hold
+/// a half-written pass — the leader must NOT scatter it; the buffers come
+/// back only for reuse. The leader attributes every id's window to the
+/// `quarantined` class and marks the sessions Suspect (their resident
+/// states were never touched, so they are still finite).
+pub struct FailedTick {
+    /// Ids of the prepared tick, unchanged.
+    pub ids: Vec<u64>,
+    /// The chunk buffer, returned for reuse (contents are dead).
+    pub flat: Vec<f32>,
+    /// The group state buffer, returned for reuse (possibly half-written
+    /// — never scatter it).
+    pub group: StreamState,
+    /// The tick number of the prepared tick.
+    pub tick: u64,
+    /// Engine panics so far, including this one.
+    pub restarts: u64,
+    /// The panic budget ([`MAX_ENGINE_RESTARTS`]) is exhausted: the
+    /// engine thread exits after this message and the leader must run its
+    /// orderly shutdown (every pending window still gets attributed).
+    pub escalated: bool,
+}
+
+/// What [`TickPipeline::wait`] yields: a scored tick, or a supervised
+/// engine panic the leader must account for.
+pub enum TickOutcome {
+    /// The tick was scored normally.
+    Done(FinishedTick),
+    /// The engine call panicked; the engine was warm-restarted (unless
+    /// `escalated`) and the leader owns the fallout.
+    Panicked(FailedTick),
+}
+
 /// The compute half of the double-buffered tick pipeline: a dedicated
 /// thread owning the [`ModelExecutor`], fed one [`PreparedTick`] at a
 /// time. While it computes tick N, the leader ingests and gathers tick
@@ -260,9 +323,18 @@ pub struct FinishedTick {
 /// [`TickPipeline::wait`]); the leader must complete tick N (scattering
 /// its states) before gathering tick N+1, which is what makes pipelined
 /// output bit-identical to the serial loop.
+///
+/// Supervision (PR 6): the engine call runs under `catch_unwind`, so a
+/// panic — a worker-lane panic re-raised at the pool's dispatch barrier,
+/// or a chaos-scheduled one — surfaces as [`TickOutcome::Panicked`]
+/// instead of tearing down the thread. The engine is rebuilt from the
+/// retained factory (a warm restart: same weights, fresh scratch + fresh
+/// pool lanes via the normal construction path) and serving continues;
+/// after [`MAX_ENGINE_RESTARTS`] consecutive panics the supervisor
+/// escalates and the thread exits cleanly.
 pub struct TickPipeline {
     tx: Option<SyncSender<PreparedTick>>,
-    rx: Receiver<Result<FinishedTick>>,
+    rx: Receiver<Result<TickOutcome>>,
     handle: Option<JoinHandle<()>>,
     in_flight: usize,
 }
@@ -271,16 +343,34 @@ impl TickPipeline {
     /// Spawn the engine thread. `factory` builds the executor *on* that
     /// thread (PJRT-style backends need not be movable); its zero-state
     /// prototype and platform label come back as [`EngineInfo`]. A factory
-    /// error is returned here, not deferred to the first submit.
+    /// error is returned here, not deferred to the first submit. The
+    /// factory is retained for supervised warm restarts, hence `Fn`
+    /// rather than `FnOnce`.
     pub fn spawn<F>(factory: F) -> Result<(TickPipeline, EngineInfo)>
     where
-        F: FnOnce() -> Result<ModelExecutor> + Send + 'static,
+        F: Fn() -> Result<ModelExecutor> + Send + 'static,
+    {
+        TickPipeline::spawn_supervised(factory, PanicSchedule::default())
+    }
+
+    /// [`TickPipeline::spawn`] with a chaos panic schedule: the engine
+    /// thread panics on the scheduled 0-based call indices (counted on
+    /// the engine thread itself, so the schedule is deterministic under
+    /// any leader/producer timing). An empty schedule is exactly
+    /// `spawn` — supervision is always on; chaos only adds trigger
+    /// points.
+    pub fn spawn_supervised<F>(
+        factory: F,
+        panics: PanicSchedule,
+    ) -> Result<(TickPipeline, EngineInfo)>
+    where
+        F: Fn() -> Result<ModelExecutor> + Send + 'static,
     {
         let (prep_tx, prep_rx) = sync_channel::<PreparedTick>(1);
-        let (done_tx, done_rx) = std::sync::mpsc::channel::<Result<FinishedTick>>();
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<Result<TickOutcome>>();
         let (info_tx, info_rx) = std::sync::mpsc::channel::<Result<EngineInfo>>();
         let handle = std::thread::spawn(move || {
-            let exe = match factory().and_then(|exe| {
+            let mut exe = match factory().and_then(|exe| {
                 let proto = exe.stream_state(1)?;
                 Ok((exe, proto))
             }) {
@@ -300,10 +390,24 @@ impl TickPipeline {
                     return;
                 }
             };
+            let mut call_idx = 0u64;
+            let mut panics_caught = 0u64;
             while let Ok(mut t) = prep_rx.recv() {
+                let chaos_kill = panics.should_panic(call_idx);
+                call_idx += 1;
                 let t0 = Instant::now();
-                match exe.score_batch_stateful(&t.flat, t.ids.len(), &mut t.group) {
-                    Ok(scores) => {
+                // The supervision boundary: a panic inside the engine
+                // call (incl. one re-raised at the worker pool's dispatch
+                // barrier) is caught HERE, at the tick granularity —
+                // `t`'s buffers survive and travel back to the leader.
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    if chaos_kill {
+                        panic!("chaos: scheduled engine panic at call {}", call_idx - 1);
+                    }
+                    exe.score_batch_stateful(&t.flat, t.ids.len(), &mut t.group)
+                }));
+                match result {
+                    Ok(Ok(scores)) => {
                         let fin = FinishedTick {
                             ids: t.ids,
                             scores,
@@ -312,13 +416,49 @@ impl TickPipeline {
                             tick: t.tick,
                             infer_ns: t0.elapsed().as_nanos() as u64,
                         };
-                        if done_tx.send(Ok(fin)).is_err() {
+                        if done_tx.send(Ok(TickOutcome::Done(fin))).is_err() {
                             return; // leader gone: orderly shutdown
                         }
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
+                        // A clean engine error (construction-time shape
+                        // contract): fatal as before — restarts can't fix
+                        // a wrong-shaped call.
                         let _ = done_tx.send(Err(e));
                         return;
+                    }
+                    Err(_panic) => {
+                        panics_caught += 1;
+                        let escalated = panics_caught > MAX_ENGINE_RESTARTS;
+                        if !escalated {
+                            // Warm restart: rebuild from the retained
+                            // factory — same weights, fresh scratch,
+                            // fresh pool lanes. The old executor (and any
+                            // poisoned lock) is dropped here.
+                            match factory() {
+                                Ok(fresh) => exe = fresh,
+                                Err(e) => {
+                                    let _ = done_tx.send(Err(e.context(
+                                        "rebuilding engine after caught panic",
+                                    )));
+                                    return;
+                                }
+                            }
+                        }
+                        let fail = FailedTick {
+                            ids: t.ids,
+                            flat: t.flat,
+                            group: t.group,
+                            tick: t.tick,
+                            restarts: panics_caught,
+                            escalated,
+                        };
+                        if done_tx.send(Ok(TickOutcome::Panicked(fail))).is_err() {
+                            return;
+                        }
+                        if escalated {
+                            return; // panic storm: clean shutdown
+                        }
                     }
                 }
             }
@@ -355,10 +495,10 @@ impl TickPipeline {
         Ok(())
     }
 
-    /// Block until the oldest in-flight tick finishes. Errors if nothing
-    /// is in flight, if the engine call failed, or if the engine thread
-    /// died.
-    pub fn wait(&mut self) -> Result<FinishedTick> {
+    /// Block until the oldest in-flight tick finishes, scored or
+    /// panicked ([`TickOutcome`]). Errors if nothing is in flight, if the
+    /// engine call failed cleanly, or if the engine thread died.
+    pub fn wait(&mut self) -> Result<TickOutcome> {
         if self.in_flight == 0 {
             bail!("no tick in flight");
         }
@@ -394,7 +534,7 @@ pub fn run_pipelined_schedule<F>(
     schedule: &[Vec<(u64, Vec<f32>)>],
 ) -> Result<Vec<StreamScore>>
 where
-    F: FnOnce() -> Result<ModelExecutor> + Send + 'static,
+    F: Fn() -> Result<ModelExecutor> + Send + 'static,
 {
     let (mut pipe, info) = TickPipeline::spawn(factory)?;
     let mut router = StreamRouter::from_proto(info.proto, cfg);
@@ -416,10 +556,16 @@ where
             }
             None => false,
         };
-        let ids = router.take_ready(&mut cur_flat);
+        let ids = router.take_ready(&mut cur_flat, tick);
         // ... then retire tick N (the only state write), ...
         if pipe.in_flight() > 0 {
-            let fin = pipe.wait()?;
+            let fin = match pipe.wait()? {
+                TickOutcome::Done(fin) => fin,
+                // No chaos plan here: a panic in the harness is a real bug.
+                TickOutcome::Panicked(_) => {
+                    bail!("engine panicked under the schedule harness")
+                }
+            };
             out.extend(router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick));
             spare_flat = fin.flat;
             spare_group = Some(fin.group);

@@ -169,6 +169,21 @@ pub struct Metrics {
     pub shed_slo: AtomicU64,
     pub shed_backlog: AtomicU64,
     pub shed_shutdown: AtomicU64,
+    /// Windows attributed to the fault-tolerance layer: refused at the
+    /// data-quality gate (non-finite / misframed chunk), discarded in a
+    /// quarantine sweep, or lost to a supervised engine-panic tick. A
+    /// *separate* top-level conservation class, deliberately NOT part of
+    /// `dropped`/[`ShedBreakdown`]: shedding is a capacity decision about
+    /// good data, quarantine is a correctness decision about bad data.
+    /// The PR 6 conservation contract is
+    /// `ingested == served + dropped + quarantined`.
+    pub quarantined: AtomicU64,
+    /// Engine-thread panics survived by supervised restart.
+    pub engine_panics: AtomicU64,
+    /// Finite-but-suspicious chunks admitted with a DQ flag (dropout gap).
+    pub dq_gap: AtomicU64,
+    /// Finite-but-suspicious chunks admitted with a DQ flag (saturation).
+    pub dq_saturated: AtomicU64,
     /// Micro-batches dispatched through the batched engine (one
     /// `score_batch` call each; == windows_done under batch-1 policy).
     pub batches: AtomicU64,
@@ -189,6 +204,12 @@ impl Metrics {
             ShedClass::Shutdown => &self.shed_shutdown,
         };
         c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one quarantined window (NOT a shed: `dropped` is untouched —
+    /// see the `quarantined` field docs for the conservation contract).
+    pub fn quarantine(&self) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn shed_breakdown(&self) -> ShedBreakdown {
@@ -218,6 +239,22 @@ pub enum ShedClass {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn quarantine_is_not_a_shed() {
+        let m = Metrics::new();
+        m.shed(ShedClass::Queue);
+        m.shed(ShedClass::Slo);
+        m.quarantine();
+        m.quarantine();
+        m.quarantine();
+        assert_eq!(m.dropped.load(Ordering::Relaxed), 2);
+        assert_eq!(m.shed_breakdown().total(), 2);
+        assert_eq!(m.quarantined.load(Ordering::Relaxed), 3);
+        // The extended conservation classes stay disjoint: served +
+        // dropped + quarantined partitions ingested, and the shed
+        // breakdown still sums to dropped exactly.
+    }
 
     #[test]
     fn bucket_monotone() {

@@ -32,8 +32,15 @@
 //!   [`run_serving_ingress`] (`gwlstm serve --native --streaming
 //!   --ingress`). With shedding disabled the pipelined output is
 //!   bit-identical to the serial tick loop.
+//! * [`chaos`] — deterministic fault-injection harness (`serve --faults`,
+//!   `GWLSTM_FAULTS`): seeded NaN bursts, feed stalls, misframed chunks
+//!   and scheduled engine panics, so the fault-tolerance layer (data-
+//!   quality gate, state quarantine, supervised engine restart — see
+//!   ARCHITECTURE.md "Fault tolerance & data quality") is exercised by
+//!   reproducible tests instead of anecdotes.
 
 pub mod batcher;
+pub mod chaos;
 pub mod detector;
 pub mod ingress;
 pub mod metrics;
@@ -42,8 +49,9 @@ pub mod server;
 pub mod stream_router;
 
 pub use batcher::Policy;
+pub use chaos::FaultSpec;
 pub use detector::{Detection, DetectionSummary, Detector};
-pub use ingress::{Arrival, TickPipeline};
+pub use ingress::{Arrival, TickOutcome, TickPipeline};
 pub use metrics::ShedBreakdown;
 pub use server::{
     run_serving, run_serving_ingress, run_serving_native, run_serving_streaming,

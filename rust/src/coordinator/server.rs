@@ -30,7 +30,8 @@ use anyhow::{Context, Result};
 use super::batcher::{Batcher, Policy};
 use super::detector::{Detection, DetectionSummary, Detector};
 use super::ingress::{
-    spawn_feeds, FeedConfig, FinishedTick, IngressChunk, PreparedTick, TickPipeline,
+    spawn_feeds, FeedConfig, FinishedTick, IngressChunk, PreparedTick, TickOutcome,
+    TickPipeline,
 };
 use super::metrics::{LatencySnapshot, Metrics, ShedBreakdown, ShedClass};
 use super::router::{Job, RouteResult, Router};
@@ -38,6 +39,7 @@ use super::stream_router::StreamRouter;
 use crate::config::{Manifest, ServeConfig};
 use crate::eval::roc::auc;
 use crate::gw::dataset::StrainStream;
+use crate::gw::dq::{classify, ChunkClass, DqConfig};
 use crate::model::{AutoencoderWeights, StreamState};
 use crate::runtime::{Engine, ModelExecutor};
 use crate::stream::StreamConfig;
@@ -65,13 +67,23 @@ pub struct ServeReport {
     pub model: String,
     pub platform: String,
     pub windows: usize,
-    /// Windows produced at the source (`Metrics::windows_in`). The ingress
-    /// pipeline's conservation contract: `ingested == windows + dropped`.
+    /// Windows produced at the source (`Metrics::windows_in`). The
+    /// streaming pipelines' conservation contract (PR 5, extended by
+    /// PR 6): `ingested == windows + dropped + quarantined`.
     pub ingested: u64,
     pub dropped: u64,
     /// Why the dropped windows were shed (all zeros outside the ingress
     /// pipeline except `queue`, which also counts stateless backpressure).
     pub sheds: ShedBreakdown,
+    /// Windows attributed to the fault-tolerance layer (refused at the DQ
+    /// gate, discarded by a quarantine sweep, or lost to a supervised
+    /// engine panic). A separate conservation class from `dropped` — see
+    /// `Metrics::quarantined`.
+    pub quarantined: u64,
+    /// Quarantine recoveries performed (snapshot restores + zero resets).
+    pub recovered: u64,
+    /// Engine-thread panics survived by supervised warm restart.
+    pub engine_panics: u64,
     /// Micro-batches dispatched to workers (== windows under batch-1).
     pub batches: u64,
     /// Mean dispatched batch size (1.0 under Policy::Immediate).
@@ -97,6 +109,12 @@ impl ServeReport {
             println!(
                 "sheds          : queue {}, slo {}, backlog {}, shutdown {}",
                 self.sheds.queue, self.sheds.slo, self.sheds.backlog, self.sheds.shutdown
+            );
+        }
+        if self.quarantined > 0 || self.engine_panics > 0 {
+            println!(
+                "faults         : quarantined {}, recovered {}, engine panics {}",
+                self.quarantined, self.recovered, self.engine_panics
             );
         }
         println!(
@@ -337,6 +355,12 @@ pub fn run_serving_streaming(
             metrics.batches.fetch_add(1, Ordering::Relaxed);
             let per_ns = batch_ns / scored.len() as u64;
             for sc in &scored {
+                if sc.quarantined {
+                    // the finiteness sweep caught a poisoned row — the
+                    // window leaves through the quarantine class
+                    metrics.quarantine();
+                    continue;
+                }
                 metrics.infer.record_ns(per_ns);
                 metrics.windows_done.fetch_add(1, Ordering::Relaxed);
                 let meta = tick_meta.get(&sc.stream);
@@ -358,14 +382,26 @@ pub fn run_serving_streaming(
         router.evict_expired(tick);
         tick += 1;
     }
+    // conservation at exit: a chunk still pending in a session (admitted
+    // while its owner was in quarantine backoff) was ingested but never
+    // scored — it leaves through the shutdown shed class
+    for id in router.registry().ids() {
+        let pending = router.registry().get(id).map_or(0, |s| s.pending_len());
+        for _ in 0..pending / hop {
+            metrics.shed(ShedClass::Shutdown);
+        }
+    }
     let batches = metrics.batches.load(Ordering::Relaxed);
     Ok(ServeReport {
         model: cfg.model.clone(),
         platform,
         windows: detections.len(),
         ingested: metrics.windows_in.load(Ordering::Relaxed),
-        dropped: 0,
-        sheds: ShedBreakdown::default(),
+        dropped: metrics.dropped.load(Ordering::Relaxed),
+        sheds: metrics.shed_breakdown(),
+        quarantined: metrics.quarantined.load(Ordering::Relaxed),
+        recovered: router.fault_stats().recovered(),
+        engine_panics: 0,
         batches,
         mean_batch: detections.len() as f64 / batches.max(1) as f64,
         threshold: detector.threshold,
@@ -378,11 +414,17 @@ pub fn run_serving_streaming(
     })
 }
 
-/// Admit one ingress chunk at the leader: SLO check first (a chunk older
-/// than the latency budget is worthless — shed it before it wastes a
-/// lockstep slot), then the registry's per-session backlog cap. Admitted
-/// chunks record their `(label, admitted)` meta FIFO-per-stream, matching
-/// the strict arrival-order consumption of `take_chunk_into`.
+/// Admit one ingress chunk at the leader: data-quality gate first (a
+/// NaN/±inf or misframed chunk would poison resident `(h, c)` state or
+/// desync the hop framing — refuse it at the front door and count it
+/// `quarantined`), then the SLO check (a chunk older than the latency
+/// budget is worthless — shed it before it wastes a lockstep slot), then
+/// the registry's per-session backlog cap. Finite-but-suspicious chunks
+/// (gaps, saturation) are admitted and only counted — dropping them would
+/// change fault-free output. Admitted chunks record their
+/// `(label, admitted)` meta FIFO-per-stream, matching the strict
+/// arrival-order consumption of `take_chunk_into`.
+#[allow(clippy::too_many_arguments)]
 fn admit_chunk(
     c: IngressChunk,
     router: &mut StreamRouter,
@@ -390,7 +432,22 @@ fn admit_chunk(
     metas: &mut HashMap<u64, VecDeque<(u8, Instant)>>,
     slo: Duration,
     now: u64,
+    hop: usize,
+    dq: &DqConfig,
 ) {
+    match classify(&c.samples, hop, dq) {
+        cls if cls.poisons_state() => {
+            metrics.quarantine();
+            return;
+        }
+        ChunkClass::Gap => {
+            metrics.dq_gap.fetch_add(1, Ordering::Relaxed);
+        }
+        ChunkClass::Saturated => {
+            metrics.dq_saturated.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {}
+    }
     if !slo.is_zero() && c.admitted.elapsed() > slo {
         metrics.shed(ShedClass::Slo);
         return;
@@ -427,10 +484,17 @@ fn retire_ingress_tick(
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     let per_ns = fin.infer_ns / fin.ids.len().max(1) as u64;
     for sc in &out {
-        metrics.infer.record_ns(per_ns);
-        metrics.windows_done.fetch_add(1, Ordering::Relaxed);
         // chunks drain FIFO per stream, so the oldest meta is this score's
         let meta = metas.get_mut(&sc.stream).and_then(VecDeque::pop_front);
+        if sc.quarantined {
+            // the finiteness sweep caught a poisoned row: the window was
+            // consumed but produced nothing servable — it leaves through
+            // the quarantine class, never through the detector
+            metrics.quarantine();
+            continue;
+        }
+        metrics.infer.record_ns(per_ns);
+        metrics.windows_done.fetch_add(1, Ordering::Relaxed);
         if let Some((_, admitted)) = meta {
             metrics.e2e.record_ns(admitted.elapsed().as_nanos() as u64);
         }
@@ -466,10 +530,18 @@ fn retire_ingress_tick(
 ///   disabled the scores are bit-identical to the serial loop
 ///   (`tests/ingress_parity.rs`).
 ///
-/// Conservation contract (pinned by the SLO property test): every chunk
-/// the producers create is either scored or counted in exactly one shed
-/// class — `report.ingested == report.windows + report.dropped` and
-/// `report.sheds.total() == report.dropped`.
+/// Conservation contract (pinned by the SLO property test, extended by the
+/// fault-tolerance layer): every chunk the producers create is either
+/// scored, counted in exactly one shed class, or attributed to the
+/// quarantine class — `report.ingested == report.windows + report.dropped
+/// + report.quarantined` and `report.sheds.total() == report.dropped`.
+///
+/// With `cfg.faults` set, the seeded chaos plan ([`super::chaos`]) injects
+/// NaN bursts, feed stalls, and misframed chunks at the producers and
+/// scheduled panics on the engine thread; the pipeline survives via the DQ
+/// gate, state quarantine, and supervised warm restart
+/// ([`TickPipeline::spawn_supervised`]). With faults unset the datapath is
+/// bit-identical to before the fault-tolerance layer existed.
 pub fn run_serving_ingress(
     weights: &AutoencoderWeights,
     cfg: &ServeConfig,
@@ -485,9 +557,15 @@ pub fn run_serving_ingress(
             &w, &name, hop, math, threads,
         ))
     };
-    let (mut pipe, info) = TickPipeline::spawn(factory)?;
+    let panic_sched = cfg
+        .faults
+        .as_ref()
+        .map(super::chaos::FaultSpec::panic_schedule)
+        .unwrap_or_default();
+    let (mut pipe, info) = TickPipeline::spawn_supervised(factory, panic_sched)?;
     let platform = format!("{}+ingress", info.platform);
     let compile_ms = info.compile_ms;
+    let dq = DqConfig::default();
     let scfg = StreamConfig {
         hop,
         ttl_ticks: cfg.stream_ttl.max(1),
@@ -495,6 +573,8 @@ pub fn run_serving_ingress(
         // backlog cap per stream mirrors the ingress queue depth: the two
         // bounded buffers are the whole memory footprint of the front door
         max_pending_hops: cfg.queue_depth.max(1),
+        // last-good snapshot cadence for quarantine recovery (default 16)
+        ..StreamConfig::default()
     };
     let mut router = StreamRouter::from_proto(info.proto, scfg);
     let metrics = Arc::new(Metrics::new());
@@ -509,7 +589,7 @@ pub fn run_serving_ingress(
     let mut cur_group: Option<StreamState> = None;
     for i in 0..cfg.calib_windows as u64 {
         router.ingest(CALIB_ID, &calib_stream.next_window().samples, i);
-        let ids = router.take_ready(&mut cur_flat);
+        let ids = router.take_ready(&mut cur_flat, i);
         if ids.is_empty() {
             continue;
         }
@@ -520,12 +600,34 @@ pub fn run_serving_ingress(
             group: cur_group.take().expect("gather_group ensures the group"),
             tick: i,
         })?;
-        let fin = pipe.wait()?;
-        for s in router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick) {
-            bg_scores.push(s.score as f64);
+        match pipe.wait()? {
+            TickOutcome::Done(fin) => {
+                for s in router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick) {
+                    if !s.quarantined {
+                        bg_scores.push(s.score as f64);
+                    }
+                }
+                cur_flat = fin.flat;
+                cur_group = Some(fin.group);
+            }
+            TickOutcome::Panicked(fail) => {
+                // a scheduled chaos panic can land during calibration; the
+                // window is lost (state was never scattered, so the resident
+                // session stays finite) and the supervisor already restarted
+                // the engine — keep calibrating on the remaining windows
+                metrics.engine_panics.fetch_add(1, Ordering::Relaxed);
+                router.mark_suspect(&fail.ids);
+                if fail.escalated {
+                    anyhow::bail!(
+                        "engine panic storm during calibration (supervisor \
+                         gave up after {} restarts)",
+                        fail.restarts
+                    );
+                }
+                cur_flat = fail.flat;
+                cur_group = Some(fail.group);
+            }
         }
-        cur_flat = fin.flat;
-        cur_group = Some(fin.group);
     }
     router.evict(CALIB_ID);
     let detector = Detector::calibrate(&bg_scores, cfg.target_fpr);
@@ -547,6 +649,7 @@ pub fn run_serving_ingress(
             .div_ceil(sessions)
             .saturating_mul(4)
             .saturating_add(8),
+        faults: cfg.faults.clone(),
     };
     let (rx, feed_handles) = spawn_feeds(&fcfg, stop.clone(), metrics.clone());
 
@@ -563,12 +666,15 @@ pub fn run_serving_ingress(
     let mut spare_flat: Vec<f32> = Vec::new();
     let mut spare_group: Option<StreamState> = None;
     let mut producers_live = true;
+    let mut engine_dead = false;
     while served < max_windows {
         // 1. drain the ingress queue (non-blocking: overlaps the in-flight
         //    engine call)
         loop {
             match rx.try_recv() {
-                Ok(c) => admit_chunk(c, &mut router, &metrics, &mut metas, slo, tick),
+                Ok(c) => {
+                    admit_chunk(c, &mut router, &metrics, &mut metas, slo, tick, hop, &dq)
+                }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     producers_live = false;
@@ -577,24 +683,51 @@ pub fn run_serving_ingress(
             }
         }
         // 2. prepare tick N+1 (consumes chunks; touches no resident state)
-        let ids = router.take_ready(&mut cur_flat);
+        let ids = router.take_ready(&mut cur_flat, tick);
         // 3. retire tick N — the scatter, the only state write
         if pipe.in_flight() > 0 {
-            let fin = pipe.wait()?;
-            let (f, g) = retire_ingress_tick(
-                fin,
-                &mut router,
-                &metrics,
-                &mut metas,
-                &detector,
-                &mut scores,
-                &mut labels,
-                &mut detections,
-                &mut seq,
-                &mut served,
-            );
-            spare_flat = f;
-            spare_group = Some(g);
+            match pipe.wait()? {
+                TickOutcome::Done(fin) => {
+                    let (f, g) = retire_ingress_tick(
+                        fin,
+                        &mut router,
+                        &metrics,
+                        &mut metas,
+                        &detector,
+                        &mut scores,
+                        &mut labels,
+                        &mut detections,
+                        &mut seq,
+                        &mut served,
+                    );
+                    spare_flat = f;
+                    spare_group = Some(g);
+                }
+                TickOutcome::Panicked(fail) => {
+                    // the tick's windows are lost (consumed, never scored);
+                    // resident state was never scattered, so the sessions
+                    // stay on their last finite state — Suspect, not reset
+                    metrics.engine_panics.fetch_add(1, Ordering::Relaxed);
+                    router.mark_suspect(&fail.ids);
+                    for id in &fail.ids {
+                        metrics.quarantine();
+                        metas.get_mut(id).and_then(VecDeque::pop_front);
+                    }
+                    engine_dead = fail.escalated;
+                    spare_flat = fail.flat;
+                    spare_group = Some(fail.group);
+                }
+            }
+        }
+        if engine_dead {
+            // panic storm: the supervisor gave up and the engine thread is
+            // gone. The chunks just gathered for the next tick were admitted
+            // but can never be scored — account them before the drain.
+            for id in &ids {
+                metrics.shed(ShedClass::Shutdown);
+                metas.get_mut(id).and_then(VecDeque::pop_front);
+            }
+            break;
         }
         // 4. gather N+1 against the freshly scattered states and launch it
         if !ids.is_empty() {
@@ -614,7 +747,9 @@ pub fn run_serving_ingress(
             // idle tick: nothing ready, nothing computing — block briefly
             // for new arrivals instead of spinning
             match rx.recv_timeout(Duration::from_millis(1)) {
-                Ok(c) => admit_chunk(c, &mut router, &metrics, &mut metas, slo, tick),
+                Ok(c) => {
+                    admit_chunk(c, &mut router, &metrics, &mut metas, slo, tick, hop, &dq)
+                }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => producers_live = false,
             }
@@ -642,19 +777,30 @@ pub fn run_serving_ingress(
     // account every still-buffered chunk so conservation holds exactly ----
     stop.store(true, Ordering::Relaxed);
     while pipe.in_flight() > 0 {
-        let fin = pipe.wait()?;
-        let _ = retire_ingress_tick(
-            fin,
-            &mut router,
-            &metrics,
-            &mut metas,
-            &detector,
-            &mut scores,
-            &mut labels,
-            &mut detections,
-            &mut seq,
-            &mut served,
-        );
+        match pipe.wait()? {
+            TickOutcome::Done(fin) => {
+                let _ = retire_ingress_tick(
+                    fin,
+                    &mut router,
+                    &metrics,
+                    &mut metas,
+                    &detector,
+                    &mut scores,
+                    &mut labels,
+                    &mut detections,
+                    &mut seq,
+                    &mut served,
+                );
+            }
+            TickOutcome::Panicked(fail) => {
+                metrics.engine_panics.fetch_add(1, Ordering::Relaxed);
+                router.mark_suspect(&fail.ids);
+                for id in &fail.ids {
+                    metrics.quarantine();
+                    metas.get_mut(id).and_then(VecDeque::pop_front);
+                }
+            }
+        }
     }
     for h in feed_handles {
         h.join()
@@ -680,6 +826,9 @@ pub fn run_serving_ingress(
         ingested: metrics.windows_in.load(Ordering::Relaxed),
         dropped: metrics.dropped.load(Ordering::Relaxed),
         sheds: metrics.shed_breakdown(),
+        quarantined: metrics.quarantined.load(Ordering::Relaxed),
+        recovered: router.fault_stats().recovered(),
+        engine_panics: metrics.engine_panics.load(Ordering::Relaxed),
         batches,
         mean_batch: detections.len() as f64 / batches.max(1) as f64,
         threshold: detector.threshold,
@@ -886,6 +1035,11 @@ where
         dropped,
         // the stateless pipeline's only shed path is queue backpressure
         sheds: ShedBreakdown { queue: dropped, ..Default::default() },
+        // no resident state, no supervised engine thread: the fault-
+        // tolerance layer is a streaming-pipeline concern
+        quarantined: 0,
+        recovered: 0,
+        engine_panics: 0,
         batches,
         mean_batch: detections.len() as f64 / batches.max(1) as f64,
         threshold: detector.threshold,

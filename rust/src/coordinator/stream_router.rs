@@ -33,8 +33,33 @@ pub struct StreamScore {
     /// Stream (session) id the chunk belongs to.
     pub stream: u64,
     /// Reconstruction-MSE anomaly score of the chunk, conditioned on the
-    /// session's resident state.
+    /// session's resident state. `NaN` iff `quarantined` — a quarantined
+    /// entry's score must never reach the detector.
     pub score: f32,
+    /// The post-call finiteness sweep found this row's `(h, c)` or score
+    /// non-finite: the row was discarded (not scattered), the session
+    /// quarantined + recovered, and the window must be attributed to the
+    /// `quarantined` conservation class instead of being served.
+    pub quarantined: bool,
+}
+
+/// Quarantine/recovery counters accumulated by [`StreamRouter::complete`]
+/// (reported through `ServeReport`; reset never — they span the run).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Windows discarded by the post-call finiteness sweep.
+    pub quarantine_events: u64,
+    /// Recoveries that restored the last-good checkpoint.
+    pub recovered_snapshot: u64,
+    /// Recoveries that fell back to the zero state (no checkpoint yet).
+    pub recovered_zeros: u64,
+}
+
+impl FaultStats {
+    /// Total recoveries (every quarantine recovers one way or the other).
+    pub fn recovered(&self) -> u64 {
+        self.recovered_snapshot + self.recovered_zeros
+    }
 }
 
 /// Groups same-tick chunks from different sessions into one lockstep
@@ -66,6 +91,8 @@ pub struct StreamRouter {
     /// the ready-set size changes). Safe to reuse: every row is fully
     /// overwritten by the per-session gather before the engine reads it.
     group: Option<StreamState>,
+    /// Quarantine/recovery counters (see [`FaultStats`]).
+    stats: FaultStats,
 }
 
 impl StreamRouter {
@@ -85,12 +112,31 @@ impl StreamRouter {
             registry: SessionRegistry::new(cfg, proto),
             gather: Vec::new(),
             group: None,
+            stats: FaultStats::default(),
         }
     }
 
     /// Read access to the session registry (tests, reporting).
     pub fn registry(&self) -> &SessionRegistry {
         &self.registry
+    }
+
+    /// Quarantine/recovery counters accumulated so far.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// Mark every listed session Suspect: they rode a tick whose engine
+    /// call panicked, so their chunks were consumed but never scored and
+    /// their states never advanced (the supervised-execution path calls
+    /// this after catching an engine panic). Missing ids (evicted in
+    /// flight) are skipped.
+    pub fn mark_suspect(&mut self, ids: &[u64]) {
+        for id in ids {
+            if let Some(sess) = self.registry.get_mut(*id) {
+                sess.mark_suspect();
+            }
+        }
     }
 
     /// Ingest raw samples for stream `id` at tick `now` (sessions are
@@ -120,10 +166,13 @@ impl StreamRouter {
 
     /// Stage 1 — consume one hop-sized chunk from every ready session into
     /// `flat` (cleared first; `(B, hop)` row-major in ascending-id order)
-    /// and return the ids. No resident state is read or written.
-    pub fn take_ready(&mut self, flat: &mut Vec<f32>) -> Vec<u64> {
+    /// and return the ids. No resident state is read or written. `now` is
+    /// only used to hold back sessions in quarantine backoff
+    /// ([`SessionRegistry::ready_ids`]); with no quarantines it has no
+    /// effect on the result.
+    pub fn take_ready(&mut self, flat: &mut Vec<f32>, now: u64) -> Vec<u64> {
         let hop = self.registry.config().hop;
-        let ids = self.registry.ready_ids();
+        let ids = self.registry.ready_ids(now);
         flat.clear();
         for id in &ids {
             let sess = self.registry.get_mut(*id).expect("ready session exists");
@@ -153,6 +202,20 @@ impl StreamRouter {
     /// the ids' (ascending) order. A session evicted while its tick was in
     /// flight is skipped: its score is still reported (the chunk WAS
     /// scored) but there is no resident state left to advance.
+    ///
+    /// This is also the fault-tolerance sweep (the ONLY site that writes
+    /// resident state, so the only site that can poison it): each row's
+    /// advanced `(h, c)` and score are checked for finiteness *before*
+    /// the scatter. A finite row scatters normally, clears any Suspect
+    /// flag, and refreshes the session's last-good checkpoint on the
+    /// configured cadence ([`crate::stream::StreamConfig::snapshot_ticks`]).
+    /// A non-finite row is discarded, the session recovers from its
+    /// checkpoint (or zeros) and enters quarantine backoff, and the entry
+    /// comes back with `quarantined: true` + a `NaN` score so the caller
+    /// attributes the window to the `quarantined` class instead of
+    /// serving it. The sweep reads only values both the serial and
+    /// pipelined paths compute identically, so fault-free parity is
+    /// untouched.
     pub fn complete(
         &mut self,
         ids: &[u64],
@@ -161,15 +224,34 @@ impl StreamRouter {
         now: u64,
     ) -> Vec<StreamScore> {
         assert_eq!(ids.len(), scores.len(), "one score per dispatched id");
+        let snapshot_ticks = self.registry.config().snapshot_ticks;
         let mut out = Vec::with_capacity(ids.len());
         for (b, id) in ids.iter().enumerate() {
+            let finite = scores[b].is_finite() && group.row_is_finite(b);
             if let Some(sess) = self.registry.get_mut(*id) {
-                sess.state.load_row(0, group, b);
                 sess.last_tick = now;
+                if finite {
+                    sess.state.load_row(0, group, b);
+                    sess.note_finite();
+                    sess.maybe_snapshot(now, snapshot_ticks);
+                } else {
+                    let from_snapshot = sess.quarantine(now);
+                    self.stats.quarantine_events += 1;
+                    if from_snapshot {
+                        self.stats.recovered_snapshot += 1;
+                    } else {
+                        self.stats.recovered_zeros += 1;
+                    }
+                }
+            } else if !finite {
+                // Evicted in flight AND non-finite: no state to recover,
+                // but the window is still attributed quarantined below.
+                self.stats.quarantine_events += 1;
             }
             out.push(StreamScore {
                 stream: *id,
-                score: scores[b],
+                score: if finite { scores[b] } else { f32::NAN },
+                quarantined: !finite,
             });
         }
         out
@@ -186,7 +268,7 @@ impl StreamRouter {
     /// mismatches, not data-dependent failures).
     pub fn dispatch(&mut self, exe: &ModelExecutor, now: u64) -> Result<Vec<StreamScore>> {
         let mut flat = std::mem::take(&mut self.gather);
-        let ids = self.take_ready(&mut flat);
+        let ids = self.take_ready(&mut flat, now);
         if ids.is_empty() {
             self.gather = flat;
             return Ok(Vec::new());
@@ -307,7 +389,7 @@ mod tests {
             serial.ingest(1, &chunk, tick);
             serial.ingest(2, &chunk, tick);
             let mut flat = Vec::new();
-            let ids = staged.take_ready(&mut flat);
+            let ids = staged.take_ready(&mut flat, tick);
             let mut group = None;
             staged.gather_group(&ids, &mut group);
             let g = group.as_mut().unwrap();
@@ -325,7 +407,7 @@ mod tests {
         r.ingest(1, &[0.1; 4], 0);
         r.ingest(2, &[0.2; 4], 0);
         let mut flat = Vec::new();
-        let ids = r.take_ready(&mut flat);
+        let ids = r.take_ready(&mut flat, 0);
         let mut group = None;
         r.gather_group(&ids, &mut group);
         let g = group.as_mut().unwrap();
@@ -352,6 +434,123 @@ mod tests {
         r.ingest(1, &chunk, 2);
         let fresh = r.dispatch(&exe, 2).unwrap()[0].score;
         assert_eq!(fresh, first, "recreated session must re-encode from zeros");
+    }
+
+    #[test]
+    fn nan_chunk_quarantines_and_recovers_without_perturbing_neighbors() {
+        let exe = exe();
+        let clean: Vec<f32> = (0..4).map(|i| (i as f32 * 0.4).sin()).collect();
+        let mut poisoned = vec![0.3f32; 4];
+        poisoned[2] = f32::NAN;
+        let mut shared = StreamRouter::new(&exe, cfg(4)).unwrap();
+        let mut solo = StreamRouter::new(&exe, cfg(4)).unwrap();
+
+        // Tick 0: both sessions clean — establishes state + checkpoint.
+        shared.ingest(1, &clean, 0);
+        shared.ingest(2, &clean, 0);
+        solo.ingest(2, &clean, 0);
+        let s0 = shared.dispatch(&exe, 0).unwrap();
+        let r0 = solo.dispatch(&exe, 0).unwrap();
+        assert_eq!(s0[1], r0[0]);
+
+        // Tick 1: session 1 eats a NaN chunk, session 2 stays clean.
+        shared.ingest(1, &poisoned, 1);
+        shared.ingest(2, &clean, 1);
+        solo.ingest(2, &clean, 1);
+        let s1 = shared.dispatch(&exe, 1).unwrap();
+        let r1 = solo.dispatch(&exe, 1).unwrap();
+        assert!(s1[0].quarantined, "poisoned row must be quarantined");
+        assert!(s1[0].score.is_nan(), "quarantined score is NaN-marked");
+        assert!(!s1[1].quarantined);
+        assert_eq!(s1[1], r1[0], "neighbor must be bitwise unperturbed");
+        let st = shared.fault_stats();
+        assert_eq!(st.quarantine_events, 1);
+        assert_eq!(st.recovered(), 1);
+        let sess = shared.registry().get(1).unwrap();
+        assert_eq!(sess.health, crate::stream::SessionHealth::Quarantined);
+        assert!(sess.state.row_is_finite(0), "recovered state is finite");
+
+        // Tick 2: backoff (1 tick) holds session 1 out even if ready.
+        shared.ingest(1, &clean, 1);
+        let held = shared.dispatch(&exe, 1).unwrap();
+        assert!(held.is_empty(), "in backoff at tick 1 (quarantined at 1)");
+
+        // Tick 2: backoff expired — session scores finite again.
+        shared.ingest(2, &clean, 2);
+        solo.ingest(2, &clean, 2);
+        let s2 = shared.dispatch(&exe, 2).unwrap();
+        let r2 = solo.dispatch(&exe, 2).unwrap();
+        let one = s2.iter().find(|s| s.stream == 1).unwrap();
+        assert!(!one.quarantined && one.score.is_finite());
+        assert_eq!(
+            *s2.iter().find(|s| s.stream == 2).unwrap(),
+            r2[0],
+            "neighbor still bitwise unperturbed after recovery"
+        );
+        assert_eq!(
+            shared.registry().get(1).unwrap().health,
+            crate::stream::SessionHealth::Healthy
+        );
+    }
+
+    #[test]
+    fn recovery_restores_checkpoint_state_bitexact() {
+        // With a checkpoint taken at tick 0, a quarantine at tick 1 must
+        // put the session back in exactly its post-tick-0 state: the next
+        // chunk then scores identically to a run where the poisoned chunk
+        // never existed.
+        let exe = exe();
+        let chunk: Vec<f32> = (0..4).map(|i| (i as f32 * 0.7).cos()).collect();
+        let scfg = StreamConfig {
+            hop: 4,
+            snapshot_ticks: 1,
+            ..Default::default()
+        };
+        let mut faulty = StreamRouter::new(&exe, scfg).unwrap();
+        let mut reference = StreamRouter::new(&exe, scfg).unwrap();
+
+        faulty.ingest(1, &chunk, 0);
+        reference.ingest(1, &chunk, 0);
+        assert_eq!(
+            faulty.dispatch(&exe, 0).unwrap(),
+            reference.dispatch(&exe, 0).unwrap()
+        );
+
+        // Only the faulty router sees the poisoned chunk.
+        faulty.ingest(1, &[f32::INFINITY; 4], 1);
+        assert!(faulty.dispatch(&exe, 1).unwrap()[0].quarantined);
+        assert_eq!(faulty.fault_stats().recovered_snapshot, 1);
+
+        // Both score the same next chunk; backoff is over by tick 3.
+        faulty.ingest(1, &chunk, 3);
+        reference.ingest(1, &chunk, 3);
+        assert_eq!(
+            faulty.dispatch(&exe, 3).unwrap(),
+            reference.dispatch(&exe, 3).unwrap(),
+            "post-recovery continuation must be bit-identical to a \
+             clean stream with the fault window excised"
+        );
+    }
+
+    #[test]
+    fn mark_suspect_clears_on_next_finite_score() {
+        let exe = exe();
+        let chunk: Vec<f32> = (0..4).map(|i| (i as f32 * 0.5).sin()).collect();
+        let mut r = StreamRouter::new(&exe, cfg(4)).unwrap();
+        r.ingest(1, &chunk, 0);
+        r.dispatch(&exe, 0).unwrap();
+        r.mark_suspect(&[1, 999]); // unknown id skipped
+        assert_eq!(
+            r.registry().get(1).unwrap().health,
+            crate::stream::SessionHealth::Suspect
+        );
+        r.ingest(1, &chunk, 1);
+        let out = r.dispatch(&exe, 1).unwrap();
+        assert!(!out[0].quarantined);
+        assert_eq!(
+            r.registry().get(1).unwrap().health,
+            crate::stream::SessionHealth::Healthy
+        );
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! Data-quality gating for incoming hop chunks.
+//!
+//! Real detector strain arrives with glitches, gaps, saturations and
+//! dropouts at unknown times; the streaming service keeps per-stream
+//! `(h, c)` resident across windows, so a single non-finite sample would
+//! poison a session's state *permanently* if it reached the lockstep
+//! batch. This module classifies every chunk **before** admission:
+//!
+//! * [`ChunkClass::NonFinite`] / [`ChunkClass::BadLength`] — poisonous;
+//!   the coordinator refuses them and attributes the window to the
+//!   `quarantined` conservation class.
+//! * [`ChunkClass::Gap`] / [`ChunkClass::Saturated`] — suspicious but
+//!   finite; the engine can score them safely, so they are admitted and
+//!   only counted (a real pipeline would set DQ flags on the trigger).
+//! * [`ChunkClass::Clean`] — the normal case.
+//!
+//! The thresholds in [`DqConfig`] are chosen so that the synthetic
+//! whitened strain produced by [`super::dataset::StrainStream`] (z-scored,
+//! continuous noise) can never trip them: fault-free runs classify every
+//! chunk `Clean` and remain bit-identical to a build without the gate.
+//!
+//! The same module hosts the seeded fault *synthesis* helpers used by the
+//! chaos harness (`coordinator/chaos.rs`) and the fault-tolerance tests,
+//! so injection and detection agree on what each fault looks like.
+
+use crate::util::rng::Rng;
+
+/// Classification of one hop chunk, in decreasing severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkClass {
+    /// Wrong number of samples for the session hop (framing fault).
+    BadLength,
+    /// Contains at least one NaN or infinity — would poison `(h, c)`.
+    NonFinite,
+    /// A run of exactly-zero samples long enough to indicate a dropout.
+    Gap,
+    /// Too many samples at or beyond the saturation rail.
+    Saturated,
+    /// Finite, unremarkable data.
+    Clean,
+}
+
+impl ChunkClass {
+    /// Whether a chunk of this class must be kept out of the lockstep
+    /// batch (it would corrupt resident state or the batch layout).
+    ///
+    /// ```
+    /// use gwlstm::gw::dq::ChunkClass;
+    /// assert!(ChunkClass::NonFinite.poisons_state());
+    /// assert!(ChunkClass::BadLength.poisons_state());
+    /// assert!(!ChunkClass::Gap.poisons_state());
+    /// assert!(!ChunkClass::Clean.poisons_state());
+    /// ```
+    pub fn poisons_state(self) -> bool {
+        matches!(self, ChunkClass::BadLength | ChunkClass::NonFinite)
+    }
+
+    /// Stable lowercase label for reports and bench keys.
+    pub fn label(self) -> &'static str {
+        match self {
+            ChunkClass::BadLength => "bad_length",
+            ChunkClass::NonFinite => "non_finite",
+            ChunkClass::Gap => "gap",
+            ChunkClass::Saturated => "saturated",
+            ChunkClass::Clean => "clean",
+        }
+    }
+}
+
+/// Thresholds for the gap / saturation heuristics.
+///
+/// Defaults are far outside anything the synthetic z-scored strain can
+/// produce (continuous gaussian noise has no exact-zero runs and unit-ish
+/// scale), so the gate is invisible on clean data.
+#[derive(Debug, Clone, Copy)]
+pub struct DqConfig {
+    /// |sample| at or above this counts as railed.
+    pub saturation_abs: f32,
+    /// Fraction of railed samples at which the chunk is `Saturated`.
+    pub saturation_frac: f64,
+    /// Length of a consecutive exact-zero run that counts as a `Gap`.
+    pub gap_run: usize,
+}
+
+impl Default for DqConfig {
+    fn default() -> Self {
+        DqConfig { saturation_abs: 1.0e4, saturation_frac: 0.25, gap_run: 8 }
+    }
+}
+
+/// Classify one hop chunk against the expected `hop` length.
+///
+/// Checks run in severity order; the first hit wins. `BadLength` is
+/// checked first because a misframed chunk's contents are meaningless.
+///
+/// ```
+/// use gwlstm::gw::dq::{classify, ChunkClass, DqConfig};
+/// let cfg = DqConfig::default();
+/// assert_eq!(classify(&[0.1, -0.2, 0.3], 3, &cfg), ChunkClass::Clean);
+/// assert_eq!(classify(&[0.1, -0.2], 3, &cfg), ChunkClass::BadLength);
+/// assert_eq!(classify(&[0.1, f32::NAN, 0.3], 3, &cfg), ChunkClass::NonFinite);
+/// ```
+pub fn classify(samples: &[f32], hop: usize, cfg: &DqConfig) -> ChunkClass {
+    if samples.len() != hop {
+        return ChunkClass::BadLength;
+    }
+    if samples.iter().any(|x| !x.is_finite()) {
+        return ChunkClass::NonFinite;
+    }
+    let mut zero_run = 0usize;
+    let mut railed = 0usize;
+    for &x in samples {
+        if x == 0.0 {
+            zero_run += 1;
+            if zero_run >= cfg.gap_run {
+                return ChunkClass::Gap;
+            }
+        } else {
+            zero_run = 0;
+        }
+        if x.abs() >= cfg.saturation_abs {
+            railed += 1;
+        }
+    }
+    if !samples.is_empty()
+        && railed as f64 >= cfg.saturation_frac * samples.len() as f64
+        && railed > 0
+    {
+        return ChunkClass::Saturated;
+    }
+    ChunkClass::Clean
+}
+
+// ---------------------------------------------------------------------------
+// Seeded fault synthesis (used by coordinator/chaos.rs and tests).
+// ---------------------------------------------------------------------------
+
+/// Overwrite a random contiguous burst of samples with non-finite values.
+///
+/// Burst position, length (1..=len/4, at least 1) and the NaN/±inf mix are
+/// drawn from `rng`, so a given rng state always produces the same burst.
+pub fn inject_nan_burst(samples: &mut [f32], rng: &mut Rng) {
+    if samples.is_empty() {
+        return;
+    }
+    let max_len = (samples.len() / 4).max(1);
+    let len = 1 + rng.below(max_len as u64) as usize;
+    let start = rng.below((samples.len() - len + 1) as u64) as usize;
+    for x in &mut samples[start..start + len] {
+        *x = match rng.below(3) {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            _ => f32::NEG_INFINITY,
+        };
+    }
+}
+
+/// Zero out a dropout window of at least `gap_run` samples (clamped to the
+/// chunk length), starting at a random offset.
+pub fn inject_gap(samples: &mut [f32], gap_run: usize, rng: &mut Rng) {
+    if samples.is_empty() {
+        return;
+    }
+    let len = gap_run.min(samples.len());
+    let start = rng.below((samples.len() - len + 1) as u64) as usize;
+    for x in &mut samples[start..start + len] {
+        *x = 0.0;
+    }
+}
+
+/// Rail a random fraction (at least `frac`) of samples to ±`rail`.
+///
+/// Rails a contiguous (wrapping) run from a random start so exactly
+/// `ceil(len * frac)` *distinct* samples end up at the rail — drawing
+/// indices independently could collide and leave the chunk below the
+/// [`classify`] saturation threshold.
+pub fn inject_saturation(samples: &mut [f32], rail: f32, frac: f64, rng: &mut Rng) {
+    if samples.is_empty() {
+        return;
+    }
+    let n = ((samples.len() as f64 * frac).ceil() as usize).clamp(1, samples.len());
+    let start = rng.below(samples.len() as u64) as usize;
+    for k in 0..n {
+        let i = (start + k) % samples.len();
+        samples[i] = if rng.bool(0.5) { rail } else { -rail };
+    }
+}
+
+/// Truncate or extend the chunk to a wrong length (a framing fault).
+///
+/// The result is never `hop` samples long, so [`classify`] always reports
+/// [`ChunkClass::BadLength`] for it.
+pub fn inject_bad_length(samples: &mut Vec<f32>, hop: usize, rng: &mut Rng) {
+    debug_assert!(hop > 0);
+    if rng.bool(0.5) && hop > 1 {
+        let keep = 1 + rng.below((hop - 1) as u64) as usize;
+        samples.truncate(keep);
+    } else {
+        let extra = 1 + rng.below(hop.max(1) as u64) as usize;
+        samples.extend(std::iter::repeat(0.0).take(extra));
+    }
+    debug_assert_ne!(samples.len(), hop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clean_chunk(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn clean_synthetic_data_never_trips_the_gate() {
+        let cfg = DqConfig::default();
+        for seed in 0..32 {
+            let chunk = clean_chunk(25, 0xD0_0D + seed);
+            assert_eq!(classify(&chunk, 25, &cfg), ChunkClass::Clean);
+        }
+    }
+
+    #[test]
+    fn classify_orders_by_severity() {
+        let cfg = DqConfig::default();
+        // NaN inside a gap: framing is fine, non-finite wins over gap.
+        let mut chunk = vec![0.0f32; 25];
+        chunk[3] = f32::NAN;
+        assert_eq!(classify(&chunk, 25, &cfg), ChunkClass::NonFinite);
+        // Wrong length wins over everything.
+        assert_eq!(classify(&chunk, 24, &cfg), ChunkClass::BadLength);
+    }
+
+    #[test]
+    fn gap_requires_a_consecutive_run() {
+        let cfg = DqConfig { gap_run: 4, ..DqConfig::default() };
+        let mut chunk = clean_chunk(16, 7);
+        // Scattered zeros: no run of 4.
+        chunk[0] = 0.0;
+        chunk[5] = 0.0;
+        chunk[10] = 0.0;
+        chunk[15] = 0.0;
+        assert_eq!(classify(&chunk, 16, &cfg), ChunkClass::Clean);
+        for x in &mut chunk[6..10] {
+            *x = 0.0;
+        }
+        assert_eq!(classify(&chunk, 16, &cfg), ChunkClass::Gap);
+    }
+
+    #[test]
+    fn saturation_counts_railed_fraction() {
+        let cfg = DqConfig { saturation_abs: 100.0, saturation_frac: 0.5, ..DqConfig::default() };
+        let mut chunk = clean_chunk(8, 9);
+        for x in &mut chunk[0..3] {
+            *x = 150.0;
+        }
+        assert_eq!(classify(&chunk, 8, &cfg), ChunkClass::Clean, "3/8 < 0.5");
+        chunk[3] = -200.0;
+        assert_eq!(classify(&chunk, 8, &cfg), ChunkClass::Saturated, "4/8 >= 0.5");
+    }
+
+    #[test]
+    fn injectors_produce_what_classify_detects() {
+        let cfg = DqConfig::default();
+        let mut rng = Rng::new(0xFA_17);
+        for round in 0..16u64 {
+            let mut sub = rng.split(round);
+
+            let mut c = clean_chunk(25, round);
+            inject_nan_burst(&mut c, &mut sub);
+            assert_eq!(classify(&c, 25, &cfg), ChunkClass::NonFinite);
+
+            let mut c = clean_chunk(25, round);
+            inject_gap(&mut c, cfg.gap_run, &mut sub);
+            assert_eq!(classify(&c, 25, &cfg), ChunkClass::Gap);
+
+            let mut c = clean_chunk(25, round);
+            inject_saturation(&mut c, cfg.saturation_abs, cfg.saturation_frac, &mut sub);
+            assert_eq!(classify(&c, 25, &cfg), ChunkClass::Saturated);
+
+            let mut c = clean_chunk(25, round);
+            inject_bad_length(&mut c, 25, &mut sub);
+            assert_eq!(classify(&c, 25, &cfg), ChunkClass::BadLength);
+        }
+    }
+
+    #[test]
+    fn injection_is_deterministic_for_a_seed() {
+        let mut a = clean_chunk(25, 1);
+        let mut b = a.clone();
+        inject_nan_burst(&mut a, &mut Rng::new(42));
+        inject_nan_burst(&mut b, &mut Rng::new(42));
+        let bits =
+            |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+}

@@ -10,9 +10,11 @@
 //! * [`chirp`]   — compact-binary inspiral waveform.
 //! * [`filter`]  — streaming biquads: Butterworth band-pass, decimator.
 //! * [`dataset`] — batch event windows + the endless [`dataset::StrainStream`].
+//! * [`dq`]      — data-quality gate + seeded fault synthesis (PR 6).
 
 pub mod chirp;
 pub mod dataset;
+pub mod dq;
 pub mod fft;
 pub mod filter;
 pub mod psd;

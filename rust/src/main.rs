@@ -32,6 +32,10 @@
 //!                            scoring them (0 = never; requires --ingress)
 //!              [--arrival uniform|bursty]   arrival process of the synthetic
 //!                            ingress feeds (requires --ingress)
+//!              [--faults SPEC]  seeded chaos harness: NaN bursts, feed
+//!                            stalls, misframed chunks, scheduled engine
+//!                            panics, e.g. "seed=7,nan=0.02,panic@5"
+//!                            (coordinator::chaos; requires --ingress)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -362,6 +366,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let slo_flag = args.get("slo-us").is_some();
     cfg.slo_us = args.usize_or("slo-us", cfg.slo_us as usize)? as u64;
+    // --faults arms the seeded chaos harness (coordinator::chaos); parse
+    // errors surface here, not mid-campaign.
+    let faults_flag = args.get("faults").map(str::to_string);
+    if let Some(f) = &faults_flag {
+        cfg.faults = Some(gwlstm::coordinator::FaultSpec::parse(f)?);
+    }
     let arrival_flag = args.get("arrival").map(str::to_string);
     if let Some(a) = &arrival_flag {
         cfg.arrival = gwlstm::coordinator::Arrival::parse(a)?;
@@ -408,6 +418,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if (slo_flag || arrival_flag.is_some()) && !cfg.ingress {
         bail!("--slo-us/--arrival only apply with --ingress (the serial loop has no admission queue)");
     }
+    if cfg.faults.is_some() && !cfg.ingress {
+        // Reject-don't-ignore: fault injection lives in the ingress
+        // producers and the supervised engine thread.
+        bail!("--faults requires --ingress (the chaos harness injects at the ingress producers)");
+    }
     let policy = if max_batch > 1 {
         Policy::MicroBatch {
             max_batch,
@@ -428,6 +443,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         run_serving_with_policy(&manifest, &cfg, policy)?
     };
     report.print();
+    if cfg.faults.is_some() {
+        // The chaos campaign's survival criterion: every produced window
+        // attributed to exactly one class. A violated ledger exits nonzero
+        // so the CI fault-smoke stage fails loudly.
+        let attributed = report.windows as u64 + report.dropped + report.quarantined;
+        if report.ingested != attributed {
+            bail!(
+                "conservation violated under faults: ingested {} != served {} \
+                 + dropped {} + quarantined {}",
+                report.ingested,
+                report.windows,
+                report.dropped,
+                report.quarantined
+            );
+        }
+        if report.sheds.total() != report.dropped {
+            bail!(
+                "shed ledger violated under faults: sheds total {} != dropped {}",
+                report.sheds.total(),
+                report.dropped
+            );
+        }
+    }
     Ok(())
 }
 

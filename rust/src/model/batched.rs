@@ -348,6 +348,31 @@ impl BatchedState {
         self.c[row * lh..(row + 1) * lh]
             .copy_from_slice(&src.c[src_row * lh..(src_row + 1) * lh]);
     }
+
+    /// Whether every `h` and `c` element of stream row `row` is finite.
+    ///
+    /// The per-tick health sweep the quarantine machinery runs after each
+    /// lockstep call ([`crate::coordinator::StreamRouter`]): one pass over
+    /// the rows about to be scattered back into resident session state,
+    /// so a NaN/Inf can never take up residence.
+    ///
+    /// ```
+    /// use gwlstm::model::batched::BatchedState;
+    ///
+    /// let mut st = BatchedState::zeros(2, 4);
+    /// assert!(st.row_is_finite(0) && st.row_is_finite(1));
+    /// st.c[5] = f32::NAN; // row 1
+    /// assert!(st.row_is_finite(0));
+    /// assert!(!st.row_is_finite(1));
+    /// ```
+    pub fn row_is_finite(&self, row: usize) -> bool {
+        assert!(row < self.batch, "row out of range");
+        let lh = self.lh;
+        self.h[row * lh..(row + 1) * lh]
+            .iter()
+            .chain(&self.c[row * lh..(row + 1) * lh])
+            .all(|x| x.is_finite())
+    }
 }
 
 /// Resident all-layer state of one detector stream (or a lockstep group of
@@ -430,6 +455,25 @@ impl StreamState {
                 .map(|l| BatchedState::zeros(batch, l.lh))
                 .collect(),
         }
+    }
+
+    /// Whether stream row `row` is finite across **every** layer's `(h, c)`.
+    /// The quarantine sweep's unit check: a row that fails here must not be
+    /// scattered back into a resident session.
+    ///
+    /// ```
+    /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
+    ///
+    /// let w = AutoencoderWeights::synthetic(2, "small");
+    /// let eng = PackedAutoencoder::from_weights(&w);
+    /// let mut group = eng.zero_state(2);
+    /// assert!(group.row_is_finite(0));
+    /// group.layers[1].h[group.layers[1].lh] = f32::INFINITY; // row 1, layer 1
+    /// assert!(group.row_is_finite(0));
+    /// assert!(!group.row_is_finite(1));
+    /// ```
+    pub fn row_is_finite(&self, row: usize) -> bool {
+        self.layers.iter().all(|l| l.row_is_finite(row))
     }
 }
 
@@ -957,8 +1001,26 @@ impl PackedAutoencoder {
     /// assert_eq!(rec.len(), 3 * 8);
     /// ```
     pub fn forward_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
-        let mut guard = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        let mut guard = self.lock_scratch();
         self.forward_batch_with(windows, batch, &mut guard)
+    }
+
+    /// Take the shared scratch lock, recovering from poisoning.
+    ///
+    /// If a previous caller panicked mid-forward (e.g. a chaos-injected
+    /// engine panic), the scratch buffers may hold a half-written pass.
+    /// Scratch carries no cross-call state — every pass fully rewrites the
+    /// regions it reads — but rather than reason about partial writes we
+    /// discard the contents and start from an empty scratch, which the
+    /// next pass regrows. This keeps one panic from cascading into every
+    /// subsequent caller of the engine (the supervised-execution
+    /// contract).
+    fn lock_scratch(&self) -> std::sync::MutexGuard<'_, BatchedScratch> {
+        self.scratch.lock().unwrap_or_else(|poison| {
+            let mut guard = poison.into_inner();
+            *guard = BatchedScratch::new();
+            guard
+        })
     }
 
     /// [`PackedAutoencoder::forward_batch`] against caller-owned scratch
@@ -1005,7 +1067,7 @@ impl PackedAutoencoder {
         batch: usize,
         state: &mut StreamState,
     ) -> Vec<f32> {
-        let mut guard = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        let mut guard = self.lock_scratch();
         self.forward_batch_stateful_with(windows, batch, state, &mut guard)
     }
 

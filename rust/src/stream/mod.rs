@@ -45,7 +45,7 @@ pub mod registry;
 pub mod session;
 
 pub use registry::SessionRegistry;
-pub use session::{SessionSnapshot, StreamSession};
+pub use session::{SessionHealth, SessionSnapshot, StreamSession, MAX_BACKOFF_TICKS};
 
 /// Knobs of the streaming state service.
 ///
@@ -75,6 +75,12 @@ pub struct StreamConfig {
     /// uncontrolled [`SessionRegistry::ingest`] path ignores this knob
     /// (trusted callers: calibration, tests).
     pub max_pending_hops: usize,
+    /// Last-good checkpoint cadence in ticks: after a finite scatter, a
+    /// session whose checkpoint is at least this old clones its resident
+    /// state as the quarantine-recovery point
+    /// ([`StreamSession::maybe_snapshot`]). `0` disables checkpointing
+    /// (quarantined sessions then recover from zeros).
+    pub snapshot_ticks: u64,
 }
 
 impl Default for StreamConfig {
@@ -84,6 +90,7 @@ impl Default for StreamConfig {
             ttl_ticks: 256,
             max_sessions: 1024,
             max_pending_hops: 64,
+            snapshot_ticks: 16,
         }
     }
 }

@@ -159,12 +159,17 @@ impl SessionRegistry {
 
     /// Ids of every session with a full hop pending, ascending — the
     /// deterministic grouping order of the next lockstep dispatch.
-    pub fn ready_ids(&self) -> Vec<u64> {
+    /// Sessions still serving out a quarantine backoff at tick `now` are
+    /// held back ([`StreamSession::in_backoff`]); their pending samples
+    /// stay buffered (subject to the backlog cap) until the backoff
+    /// expires. Healthy sessions never have a backoff, so fault-free
+    /// behavior is unchanged by the `now` argument.
+    pub fn ready_ids(&self, now: u64) -> Vec<u64> {
         let hop = self.cfg.hop;
         let mut ids: Vec<u64> = self
             .sessions
             .values()
-            .filter(|s| s.ready(hop))
+            .filter(|s| s.ready(hop) && !s.in_backoff(now))
             .map(|s| s.id)
             .collect();
         ids.sort_unstable();
@@ -232,7 +237,17 @@ mod tests {
         reg.ingest(3, &[0.0; 2], 0);
         reg.ingest(5, &[0.0; 1], 0); // below hop: not ready
         assert_eq!(reg.len(), 3);
-        assert_eq!(reg.ready_ids(), vec![3, 9], "ascending, ready only");
+        assert_eq!(reg.ready_ids(0), vec![3, 9], "ascending, ready only");
+    }
+
+    #[test]
+    fn ready_ids_holds_back_quarantine_backoff() {
+        let mut reg = registry(2, 100, 8);
+        reg.ingest(1, &[0.0; 2], 0);
+        reg.ingest(2, &[0.0; 2], 0);
+        reg.get_mut(1).unwrap().quarantine(0); // 1-tick backoff
+        assert_eq!(reg.ready_ids(0), vec![2], "1 held out during backoff");
+        assert_eq!(reg.ready_ids(1), vec![1, 2], "backoff expired");
     }
 
     #[test]

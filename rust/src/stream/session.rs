@@ -8,6 +8,51 @@
 
 use crate::model::batched::StreamState;
 
+/// Exponential quarantine backoff cap, in ticks: the n-th consecutive
+/// quarantine of a session keeps it out of dispatch for
+/// `min(2^(n-1), MAX_BACKOFF_TICKS)` ticks, so a persistently poisoned
+/// feed retries with bounded frequency instead of burning a lockstep row
+/// every tick.
+pub const MAX_BACKOFF_TICKS: u64 = 32;
+
+/// Health of a session's resident state (the PR 6 fault-tolerance state
+/// machine; see ARCHITECTURE.md "Fault tolerance & data quality").
+///
+/// * `Healthy` — normal operation.
+/// * `Suspect` — this session rode a tick whose engine call panicked; its
+///   state was *not* advanced (the tick's scatter never happened) so it is
+///   still finite, but the window it lost is attributed `quarantined`.
+///   The next finite scored chunk clears it back to `Healthy`.
+/// * `Quarantined` — a non-finite `(h, c)` or score was detected after a
+///   lockstep call; the poisoned row was discarded and the state restored
+///   from the last-good snapshot (or zeros), and the session sits out an
+///   exponential backoff before re-entering dispatch.
+///
+/// ```
+/// use gwlstm::stream::SessionHealth;
+/// assert_eq!(SessionHealth::default(), SessionHealth::Healthy);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SessionHealth {
+    /// Normal operation.
+    #[default]
+    Healthy,
+    /// Rode a panicked tick; state untouched, watching the next score.
+    Suspect,
+    /// Non-finite state detected; recovered + sitting out a backoff.
+    Quarantined,
+}
+
+/// Periodic last-good checkpoint for quarantine recovery: the resident
+/// state (plus progress counter) as of the most recent snapshot tick.
+/// Private to the session — recovery is only reachable through
+/// [`StreamSession::quarantine`].
+#[derive(Debug, Clone)]
+struct LastGood {
+    state: StreamState,
+    tick: u64,
+}
+
 /// Resident per-stream serving state. Fields the router mutates directly
 /// (`state`, `last_tick`) are public; the sample buffer is private so the
 /// consume-each-sample-exactly-once discipline cannot be bypassed.
@@ -41,6 +86,19 @@ pub struct StreamSession {
     pub created_tick: u64,
     /// Chunks scored through this session since creation/restore.
     pub windows_done: u64,
+    /// Health state machine (Healthy → Suspect → Quarantined); see
+    /// [`SessionHealth`].
+    pub health: SessionHealth,
+    /// Quarantine events since creation/restore.
+    pub quarantines: u64,
+    /// Last-good state checkpoint for recovery (taken every
+    /// `snapshot_ticks`; see [`StreamSession::maybe_snapshot`]).
+    last_good: Option<Box<LastGood>>,
+    /// Consecutive quarantines without an intervening finite score —
+    /// drives the exponential backoff.
+    consecutive_quarantines: u32,
+    /// Tick before which the session is held out of dispatch.
+    backoff_until: u64,
 }
 
 impl StreamSession {
@@ -52,6 +110,11 @@ impl StreamSession {
             last_tick: now,
             created_tick: now,
             windows_done: 0,
+            health: SessionHealth::Healthy,
+            quarantines: 0,
+            last_good: None,
+            consecutive_quarantines: 0,
+            backoff_until: 0,
         }
     }
 
@@ -92,10 +155,86 @@ impl StreamSession {
         }
     }
 
+    /// Record the current state as the last-good checkpoint if it is due:
+    /// no checkpoint yet, or the previous one is at least `every` ticks
+    /// old. `every == 0` disables checkpointing (quarantine then recovers
+    /// from zeros). Call only after a *finite* scatter — the router does.
+    pub fn maybe_snapshot(&mut self, now: u64, every: u64) {
+        if every == 0 {
+            return;
+        }
+        let due = match &self.last_good {
+            None => true,
+            Some(lg) => now.saturating_sub(lg.tick) >= every,
+        };
+        if due {
+            self.last_good = Some(Box::new(LastGood {
+                state: self.state.clone(),
+                tick: now,
+            }));
+        }
+    }
+
+    /// Whether a last-good checkpoint exists (test/report hook).
+    pub fn has_last_good(&self) -> bool {
+        self.last_good.is_some()
+    }
+
+    /// Mark the session Suspect: it rode a tick whose engine call
+    /// panicked. Its state was never advanced (no scatter happened), so
+    /// nothing is reset; the next finite scored chunk clears the flag. A
+    /// session already Quarantined stays Quarantined (the stronger state).
+    pub fn mark_suspect(&mut self) {
+        if self.health == SessionHealth::Healthy {
+            self.health = SessionHealth::Suspect;
+        }
+    }
+
+    /// Record a finite scored chunk: clears Suspect/Quarantined back to
+    /// Healthy and resets the consecutive-quarantine backoff ladder.
+    pub fn note_finite(&mut self) {
+        self.health = SessionHealth::Healthy;
+        self.consecutive_quarantines = 0;
+    }
+
+    /// Quarantine the session after a non-finite `(h, c)`/score was
+    /// detected: restore the resident state from the last-good checkpoint
+    /// (returns `true`) or zero it (returns `false`), and hold the session
+    /// out of dispatch for an exponential backoff
+    /// (`min(2^(n-1), MAX_BACKOFF_TICKS)` ticks for the n-th consecutive
+    /// quarantine). Pending samples are kept — the stream keeps flowing
+    /// once the backoff expires.
+    pub fn quarantine(&mut self, now: u64) -> bool {
+        self.health = SessionHealth::Quarantined;
+        self.quarantines += 1;
+        self.consecutive_quarantines = self.consecutive_quarantines.saturating_add(1);
+        let exp = (self.consecutive_quarantines - 1).min(63);
+        let backoff = (1u64 << exp).min(MAX_BACKOFF_TICKS);
+        self.backoff_until = now.saturating_add(backoff);
+        match &self.last_good {
+            Some(lg) => {
+                self.state = lg.state.clone();
+                true
+            }
+            None => {
+                self.reset_state();
+                false
+            }
+        }
+    }
+
+    /// Whether the session is still serving out a quarantine backoff at
+    /// tick `now` (held out of [`super::SessionRegistry::ready_ids`]).
+    pub fn in_backoff(&self, now: u64) -> bool {
+        now < self.backoff_until
+    }
+
     /// Freeze this session into a restorable snapshot (state + unconsumed
     /// samples). Consumes the session — the registry's eviction paths call
     /// this so an evicted stream can later warm-restart exactly where it
-    /// stopped ([`super::SessionRegistry::restore`]).
+    /// stopped ([`super::SessionRegistry::restore`]). Health bookkeeping
+    /// (backoff, last-good checkpoint) is deliberately dropped: a restored
+    /// session starts Healthy and re-earns its checkpoint.
     pub fn into_snapshot(self) -> SessionSnapshot {
         SessionSnapshot {
             id: self.id,
@@ -131,6 +270,11 @@ impl SessionSnapshot {
             last_tick: now,
             created_tick: now,
             windows_done: self.windows_done,
+            health: SessionHealth::Healthy,
+            quarantines: 0,
+            last_good: None,
+            consecutive_quarantines: 0,
+            backoff_until: 0,
         }
     }
 }
@@ -175,6 +319,81 @@ mod tests {
         assert_eq!(back.pending_len(), 2);
         assert_eq!(back.windows_done, 5);
         assert_eq!(back.last_tick, 10);
+    }
+
+    #[test]
+    fn health_machine_suspect_then_recovers() {
+        let mut s = StreamSession::new(1, state1(), 0);
+        assert_eq!(s.health, SessionHealth::Healthy);
+        s.mark_suspect();
+        assert_eq!(s.health, SessionHealth::Suspect);
+        s.note_finite();
+        assert_eq!(s.health, SessionHealth::Healthy);
+    }
+
+    #[test]
+    fn quarantine_restores_last_good_or_zeros() {
+        let mut s = StreamSession::new(1, state1(), 0);
+        s.state.layers[0].h.fill(0.5);
+        // No checkpoint yet: quarantine resets from zeros.
+        assert!(!s.quarantine(0));
+        assert!(s.state.layers[0].h.iter().all(|&v| v == 0.0));
+        assert_eq!(s.health, SessionHealth::Quarantined);
+        assert_eq!(s.quarantines, 1);
+
+        // Checkpoint a known-good state, poison, quarantine: restored.
+        s.state.layers[0].h.fill(0.25);
+        s.maybe_snapshot(4, 2);
+        assert!(s.has_last_good());
+        s.state.layers[0].h.fill(f32::NAN);
+        assert!(s.quarantine(5));
+        assert!(s.state.layers[0].h.iter().all(|&v| v == 0.25));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let mut s = StreamSession::new(1, state1(), 0);
+        s.quarantine(100);
+        assert!(s.in_backoff(100));
+        assert!(!s.in_backoff(101), "first backoff is 1 tick");
+        s.quarantine(101); // consecutive: 2 -> 2 ticks
+        assert!(s.in_backoff(102));
+        assert!(!s.in_backoff(103));
+        for k in 0..10 {
+            s.quarantine(200 + k);
+        }
+        assert!(!s.in_backoff(200 + 9 + MAX_BACKOFF_TICKS), "backoff capped");
+        assert!(s.in_backoff(200 + 9 + MAX_BACKOFF_TICKS - 1));
+        // A finite score resets the ladder.
+        s.note_finite();
+        s.quarantine(400);
+        assert!(!s.in_backoff(401), "ladder reset to 1 tick");
+    }
+
+    #[test]
+    fn maybe_snapshot_respects_cadence_and_disable() {
+        let mut s = StreamSession::new(1, state1(), 0);
+        s.maybe_snapshot(0, 0);
+        assert!(!s.has_last_good(), "every=0 disables checkpoints");
+        s.state.layers[0].h.fill(1.0);
+        s.maybe_snapshot(0, 4);
+        s.state.layers[0].h.fill(2.0);
+        s.maybe_snapshot(2, 4); // not due yet: keeps the tick-0 checkpoint
+        s.state.layers[0].h.fill(f32::NAN);
+        s.quarantine(3);
+        assert!(s.state.layers[0].h.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn snapshot_roundtrip_drops_health_bookkeeping() {
+        let mut s = StreamSession::new(7, state1(), 0);
+        s.maybe_snapshot(0, 1);
+        s.quarantine(1);
+        let back = s.into_snapshot().into_session(2);
+        assert_eq!(back.health, SessionHealth::Healthy);
+        assert_eq!(back.quarantines, 0);
+        assert!(!back.has_last_good());
+        assert!(!back.in_backoff(2));
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Fault-tolerance contracts: corrupted input and crashing compute must
+//! never take the service down, never leak a window from the conservation
+//! ledger, and never perturb a healthy session's output.
+//!
+//! Contracts pinned here (the acceptance criteria of the fault tentpole):
+//!
+//! 1. **Isolation** — a NaN/Inf burst in one session's chunk never changes
+//!    any other session's scores, bit-for-bit, in both math tiers at
+//!    engine threads ∈ {1, 4}. The lockstep batch shares weight
+//!    traversals, never operands.
+//! 2. **Recovery** — a quarantined session resumes producing finite
+//!    scores after its backoff, restored from its last-good checkpoint
+//!    (or zeros if none exists yet).
+//! 3. **Supervision** — a panicking engine call is caught, the engine is
+//!    warm-restarted, and the next tick scores bit-identically to a run
+//!    in which the poisoned tick never happened; a panic storm escalates
+//!    to a clean shutdown with the ledger intact.
+//! 4. **Campaign** — a seeded chaos plan (NaN bursts + stalls + misframed
+//!    chunks + scheduled panics across 100 sessions) completes without
+//!    crashing and attributes every produced window to exactly one of
+//!    {served, dropped, quarantined}.
+
+use gwlstm::config::ServeConfig;
+use gwlstm::coordinator::ingress::PreparedTick;
+use gwlstm::coordinator::{
+    run_serving_streaming, FaultSpec, StreamRouter, TickOutcome, TickPipeline,
+};
+use gwlstm::model::{AutoencoderWeights, MathPolicy};
+use gwlstm::runtime::ModelExecutor;
+use gwlstm::stream::{SessionHealth, StreamConfig};
+use gwlstm::util::prop;
+use gwlstm::util::rng::Rng;
+
+/// Deterministic clean chunk for (session, tick).
+fn clean_chunk(seed: u64, session: u64, tick: u64, hop: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ session.wrapping_mul(0x9E37_79B9) ^ tick.wrapping_mul(0xB5));
+    (0..hop).map(|_| rng.gaussian() as f32).collect()
+}
+
+/// One randomized isolation scenario.
+#[derive(Debug)]
+struct IsolationCase {
+    seed: u64,
+    hop: usize,
+    victim: u64,
+    fault_tick: u64,
+}
+
+#[test]
+fn prop_nan_burst_never_perturbs_other_sessions() {
+    // Contract 1: the victim's poisoned row must not move a single bit of
+    // any neighbor's score — in both tiers, single- and multi-threaded.
+    let w = AutoencoderWeights::synthetic(0xFA17, "small");
+    const SESSIONS: u64 = 3;
+    // enough ticks that the victim's 1-tick quarantine backoff always ends
+    // with room to score again (fault_tick <= 3 -> ready again by tick 5)
+    const TICKS: u64 = 7;
+    prop::check_with(
+        prop::Config {
+            cases: 4, // each case runs 2 tiers x 2 thread counts x 4 routers
+            ..Default::default()
+        },
+        "nan-burst-isolation",
+        |d| IsolationCase {
+            seed: d.usize_in(1, 1 << 20) as u64,
+            hop: d.usize_in(4, 8),
+            victim: d.usize_in(0, SESSIONS as usize - 1) as u64,
+            fault_tick: d.usize_in(1, 3) as u64,
+        },
+        |case| {
+            for policy in [MathPolicy::BitExact, MathPolicy::FastSimd] {
+                for threads in [1usize, 4] {
+                    let exe = ModelExecutor::native_from_weights_policy_threads(
+                        &w, "iso", case.hop, policy, threads,
+                    );
+                    let cfg = StreamConfig {
+                        hop: case.hop,
+                        ..Default::default()
+                    };
+                    let mut shared = StreamRouter::new(&exe, cfg).map_err(|e| e.to_string())?;
+                    let mut solos: Vec<StreamRouter> = (0..SESSIONS)
+                        .map(|_| StreamRouter::new(&exe, cfg))
+                        .collect::<Result<_, _>>()
+                        .map_err(|e| e.to_string())?;
+                    let mut victim_recovered = false;
+                    for tick in 0..TICKS {
+                        for s in 0..SESSIONS {
+                            let mut chunk = clean_chunk(case.seed, s, tick, case.hop);
+                            if s == case.victim && tick == case.fault_tick {
+                                // poison straight past the DQ gate: the
+                                // finiteness sweep is the last line
+                                chunk[case.hop / 2] = f32::NAN;
+                                chunk[0] = f32::INFINITY;
+                            } else {
+                                // solo twins see only clean traffic
+                                solos[s as usize].ingest(s, &chunk, tick);
+                            }
+                            shared.ingest(s, &chunk, tick);
+                        }
+                        let got = shared.dispatch(&exe, tick).map_err(|e| e.to_string())?;
+                        for sc in &got {
+                            if sc.stream == case.victim {
+                                if tick > case.fault_tick && !sc.quarantined {
+                                    victim_recovered = sc.score.is_finite();
+                                }
+                                continue;
+                            }
+                            let want = solos[sc.stream as usize]
+                                .dispatch(&exe, tick)
+                                .map_err(|e| e.to_string())?;
+                            let w0 = want.first().ok_or("solo produced nothing")?;
+                            if w0.score.to_bits() != sc.score.to_bits() {
+                                return Err(format!(
+                                    "{policy:?} t{threads} tick {tick}: neighbor {} \
+                                     perturbed ({} != {})",
+                                    sc.stream, sc.score, w0.score
+                                ));
+                            }
+                        }
+                    }
+                    let stats = shared.fault_stats();
+                    if stats.quarantine_events == 0 {
+                        return Err("poisoned row never quarantined".into());
+                    }
+                    if !victim_recovered {
+                        return Err("victim never resumed finite scores".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quarantined_session_recovers_through_backoff_both_tiers() {
+    // Contract 2 at the integration level: poison -> quarantine -> backoff
+    // holds the session out -> clean chunks score finite again and health
+    // returns to Healthy.
+    let hop = 6usize;
+    let w = AutoencoderWeights::synthetic(0xFA18, "small");
+    for policy in [MathPolicy::BitExact, MathPolicy::FastSimd] {
+        let exe =
+            ModelExecutor::native_from_weights_policy_threads(&w, "recover", hop, policy, 1);
+        let cfg = StreamConfig {
+            hop,
+            snapshot_ticks: 1, // checkpoint every tick: recovery restores it
+            ..Default::default()
+        };
+        let mut router = StreamRouter::new(&exe, cfg).unwrap();
+        // two clean ticks (builds a last-good checkpoint), then poison
+        for tick in 0..2u64 {
+            router.ingest(9, &clean_chunk(5, 9, tick, hop), tick);
+            let out = router.dispatch(&exe, tick).unwrap();
+            assert!(out[0].score.is_finite(), "{policy:?}: clean tick not finite");
+        }
+        let mut bad = clean_chunk(5, 9, 2, hop);
+        bad[1] = f32::NEG_INFINITY;
+        router.ingest(9, &bad, 2);
+        let out = router.dispatch(&exe, 2).unwrap();
+        assert!(out[0].quarantined, "{policy:?}: poison not quarantined");
+        assert_eq!(
+            router.registry().get(9).unwrap().health,
+            SessionHealth::Quarantined
+        );
+        // backoff after the first quarantine is 1 tick; feed clean chunks
+        // until the session scores again
+        let mut resumed = false;
+        for tick in 3..8u64 {
+            router.ingest(9, &clean_chunk(5, 9, tick, hop), tick);
+            for sc in router.dispatch(&exe, tick).unwrap() {
+                assert!(!sc.quarantined, "{policy:?}: clean chunk re-quarantined");
+                assert!(sc.score.is_finite());
+                resumed = true;
+            }
+        }
+        assert!(resumed, "{policy:?}: session never resumed after backoff");
+        assert_eq!(
+            router.registry().get(9).unwrap().health,
+            SessionHealth::Healthy
+        );
+        let stats = router.fault_stats();
+        assert_eq!(stats.quarantine_events, 1);
+        assert_eq!(
+            stats.recovered_snapshot, 1,
+            "{policy:?}: with snapshot_ticks=1 recovery must restore the checkpoint"
+        );
+    }
+}
+
+#[test]
+fn supervised_pipeline_survives_scheduled_panic_bitexactly() {
+    // Contract 3: tick 1's engine call panics (chaos-scheduled); the
+    // supervisor rebuilds the engine and tick 2 scores exactly as if the
+    // panicked tick's chunk had never been fed (state was never scattered).
+    let hop = 5usize;
+    let w = AutoencoderWeights::synthetic(0xFA19, "small");
+    let chunks: Vec<Vec<f32>> = (0..3).map(|t| clean_chunk(11, 1, t, hop)).collect();
+
+    // serial reference: feed chunk 0 and chunk 2 only
+    let exe = ModelExecutor::native_from_weights(&w, "sup_ref", hop);
+    let cfg = StreamConfig {
+        hop,
+        ..Default::default()
+    };
+    let mut reference = StreamRouter::new(&exe, cfg).unwrap();
+    reference.ingest(1, &chunks[0], 0);
+    let want0 = reference.dispatch(&exe, 0).unwrap()[0].score;
+    reference.ingest(1, &chunks[2], 1);
+    let want2 = reference.dispatch(&exe, 1).unwrap()[0].score;
+
+    // supervised pipeline: all three chunks, engine call 1 panics
+    let wf = w.clone();
+    let sched = FaultSpec::parse("panic@1").unwrap().panic_schedule();
+    let (mut pipe, info) = TickPipeline::spawn_supervised(
+        move || Ok(ModelExecutor::native_from_weights(&wf, "sup", hop)),
+        sched,
+    )
+    .unwrap();
+    let mut router = StreamRouter::from_proto(info.proto, cfg);
+    let mut flat = Vec::new();
+    let mut group = None;
+    let mut got = Vec::new();
+    for (tick, chunk) in chunks.iter().enumerate() {
+        let tick = tick as u64;
+        router.ingest(1, chunk, tick);
+        let ids = router.take_ready(&mut flat, tick);
+        assert_eq!(ids.len(), 1);
+        router.gather_group(&ids, &mut group);
+        pipe.submit(PreparedTick {
+            ids,
+            flat: std::mem::take(&mut flat),
+            group: group.take().unwrap(),
+            tick,
+        })
+        .unwrap();
+        match pipe.wait().unwrap() {
+            TickOutcome::Done(fin) => {
+                got.extend(router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick));
+                flat = fin.flat;
+                group = Some(fin.group);
+            }
+            TickOutcome::Panicked(fail) => {
+                assert_eq!(tick, 1, "only call 1 is scheduled to panic");
+                assert!(!fail.escalated, "one panic must not escalate");
+                assert_eq!(fail.restarts, 1);
+                router.mark_suspect(&fail.ids);
+                flat = fail.flat;
+                group = Some(fail.group);
+            }
+        }
+    }
+    assert_eq!(got.len(), 2, "ticks 0 and 2 scored, tick 1 lost");
+    assert_eq!(got[0].score.to_bits(), want0.to_bits());
+    assert_eq!(
+        got[1].score.to_bits(),
+        want2.to_bits(),
+        "post-restart tick must score as if the panicked tick never happened"
+    );
+    assert_eq!(
+        router.registry().get(1).unwrap().health,
+        SessionHealth::Healthy,
+        "a finite post-restart score clears Suspect"
+    );
+}
+
+fn chaos_cfg(sessions: usize, max_windows: usize, spec: &str) -> ServeConfig {
+    ServeConfig {
+        model: "chaos".into(),
+        calib_windows: 8,
+        max_windows,
+        inject_prob: 0.3,
+        stream_sessions: sessions,
+        stream_hop: 8,
+        streaming: true,
+        ingress: true,
+        faults: Some(FaultSpec::parse(spec).unwrap()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn seeded_chaos_campaign_survives_and_conserves() {
+    // Contract 4: NaN bursts + stalls + misframed chunks across 100
+    // sessions plus scheduled engine panics (one inside calibration, one
+    // while serving). The run must complete and the ledger must balance.
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = chaos_cfg(
+        100,
+        400,
+        "seed=7,nan=0.05,stall=0.02,stall_us=50,badlen=0.03,panic@6,panic@10",
+    );
+    let report = run_serving_streaming(&weights, &cfg).unwrap();
+    assert!(report.platform.contains("ingress"));
+    assert_eq!(
+        report.ingested,
+        report.windows as u64 + report.dropped + report.quarantined,
+        "ledger violated: ingested {} != served {} + dropped {} + quarantined {}",
+        report.ingested,
+        report.windows,
+        report.dropped,
+        report.quarantined
+    );
+    assert_eq!(report.sheds.total(), report.dropped, "shed classes must sum");
+    assert!(report.quarantined > 0, "5% NaN + 3% badlen must gate something");
+    assert!(report.engine_panics >= 1, "a scheduled panic must have fired");
+    assert!(report.windows > 0, "the campaign must still serve");
+    // quarantine refusals carry no detector output, so every SERVED score
+    // came from a clean lockstep row
+    assert!(report.auc > 0.0 && report.auc <= 1.0);
+}
+
+#[test]
+fn engine_panic_storm_escalates_to_clean_shutdown() {
+    // Contract 3b: panics on every engine call past calibration. After
+    // MAX_ENGINE_RESTARTS consecutive restarts the supervisor gives up;
+    // the leader must shut down cleanly with the ledger still balanced.
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let spec: Vec<String> = (8..40).map(|k| format!("panic@{k}")).collect();
+    let cfg = chaos_cfg(4, 64, &format!("seed=3,{}", spec.join(",")));
+    let report = run_serving_streaming(&weights, &cfg).unwrap();
+    assert!(
+        report.engine_panics > gwlstm::coordinator::ingress::MAX_ENGINE_RESTARTS,
+        "storm must exhaust the restart budget (got {} panics)",
+        report.engine_panics
+    );
+    assert_eq!(
+        report.ingested,
+        report.windows as u64 + report.dropped + report.quarantined,
+        "escalated shutdown leaked windows"
+    );
+    assert_eq!(report.sheds.total(), report.dropped);
+}
+
+#[test]
+fn fault_free_ingress_run_reports_no_fault_activity() {
+    // The fault-tolerance layer must be invisible when nothing is
+    // injected: no quarantines, no panics, no recoveries — and the PR 5
+    // conservation identity degenerates back to ingested == served +
+    // dropped.
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = ServeConfig {
+        model: "clean".into(),
+        calib_windows: 8,
+        max_windows: 48,
+        stream_sessions: 3,
+        stream_hop: 8,
+        streaming: true,
+        ingress: true,
+        ..Default::default()
+    };
+    let report = run_serving_streaming(&weights, &cfg).unwrap();
+    assert_eq!(report.quarantined, 0);
+    assert_eq!(report.engine_panics, 0);
+    assert_eq!(report.recovered, 0);
+    assert_eq!(report.ingested, report.windows as u64 + report.dropped);
+}
