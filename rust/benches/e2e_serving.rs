@@ -21,6 +21,11 @@
 //! design (`run_serving_with_policy` would reject it) and always serves
 //! with the default single-threaded config.
 //!
+//! The sharded-tier arms sweep `GWLSTM_SHARDS` (default `1,2,4`) shard
+//! lanes over a `GWLSTM_SHARD_SESSIONS` (default 100 000) resident-session
+//! population — one full pass so every session is resident — and emit
+//! `shard/<n>/...` scaling keys per math tier.
+//!
 //! Emits `BENCH_serving.json` with the ingress pipeline's headline keys
 //! (`ingress/<arrival>/e2e_p99_us/<tier>` etc.), merged with any existing
 //! file contents so ci.sh's two tier passes accumulate instead of
@@ -246,11 +251,79 @@ fn main() {
             Value::Num(r.e2e.p99_ns / 1e3),
         );
     }
+    // Shard arms: the sharded serving tier at shards ∈ GWLSTM_SHARDS
+    // (default "1,2,4") over a 100k-resident-session population
+    // (GWLSTM_SHARD_SESSIONS overrides) — the registry-scale workload one
+    // lane's lockstep batch cannot hold comfortably. max_windows == the
+    // population, so one full pass makes every session resident; the
+    // `shards=1` row is the unsharded baseline on the identical workload.
+    let shard_counts: Vec<usize> = match std::env::var("GWLSTM_SHARDS") {
+        Ok(s) if !s.trim().is_empty() => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("GWLSTM_SHARDS: comma-separated shard counts"))
+            .collect(),
+        _ => vec![1, 2, 4],
+    };
+    let shard_sessions: usize = std::env::var("GWLSTM_SHARD_SESSIONS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(100_000);
+    println!(
+        "\n=== sharded serving tier ({} resident sessions, {} tier) ===",
+        shard_sessions,
+        math.label()
+    );
+    for &shards in &shard_counts {
+        let shcfg = ServeConfig {
+            model: format!("small_shard{shards}"),
+            calib_windows: 16,
+            max_windows: shard_sessions,
+            stream_sessions: shard_sessions,
+            arrival: Arrival::Uniform,
+            ingress: true,
+            shards,
+            pace_us: 0,
+            slo_us: 0,
+            queue_depth: 256,
+            ..scfg.clone()
+        };
+        let r = run_serving_streaming(&weights, &shcfg).expect("sharded serving run");
+        assert_eq!(
+            r.ingested,
+            r.windows as u64 + r.dropped + r.quarantined,
+            "shards={shards}: conservation violated in bench"
+        );
+        for l in &r.shard_ledgers {
+            assert!(l.conserved(), "shards={shards}: shard {} ledger leaked", l.shard);
+        }
+        println!(
+            "  shards={shards:<2} served {} mean B {:.0} dropped {} e2e p99 {:.1} us \
+             throughput {:.0} win/s",
+            r.windows, r.mean_batch, r.dropped, r.e2e.p99_ns / 1e3, r.throughput_per_s
+        );
+        let tier = math.label();
+        bench_keys.insert(
+            format!("shard/{shards}/throughput_win_per_s/{tier}"),
+            Value::Num(r.throughput_per_s),
+        );
+        bench_keys.insert(
+            format!("shard/{shards}/e2e_p99_us/{tier}"),
+            Value::Num(r.e2e.p99_ns / 1e3),
+        );
+        bench_keys.insert(
+            format!("shard/{shards}/resident_sessions/{tier}"),
+            Value::Num(shard_sessions as f64),
+        );
+        bench_keys.insert(
+            format!("shard/{shards}/dropped/{tier}"),
+            Value::Num(r.dropped as f64),
+        );
+    }
     bench_keys.insert(
         "_meta".to_string(),
         Value::Str(
-            "ingress + faults serving keys from benches/e2e_serving.rs; tiers \
-             merge across ci.sh passes (see BENCHMARKS.md)"
+            "ingress + faults + shard serving keys from benches/e2e_serving.rs; \
+             tiers merge across ci.sh passes (see BENCHMARKS.md)"
                 .to_string(),
         ),
     );

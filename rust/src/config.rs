@@ -160,6 +160,15 @@ pub struct ServeConfig {
     /// fault-tolerance layer. Ingress pipeline only. JSON key `faults`
     /// (the spec string, e.g. `"seed=7,nan=0.02,panic@5"`).
     pub faults: Option<FaultSpec>,
+    /// Shard lanes of the session-serving tier (`coordinator::shard`):
+    /// each lane owns its own engine and session-registry slice; streams
+    /// place deterministically by id hash, and per-shard conservation
+    /// ledgers sum exactly to the global one. `1` (the default) is the
+    /// unsharded PR 5/6 pipeline unchanged. Requires the streaming ingress
+    /// pipeline (`--streaming --ingress`); per-stream scores are bitwise
+    /// identical at any shard count. JSON key `shards`; `0` is rejected at
+    /// parse time.
+    pub shards: usize,
 }
 
 impl Default for ServeConfig {
@@ -184,6 +193,7 @@ impl Default for ServeConfig {
             slo_us: 0,
             arrival: Arrival::Uniform,
             faults: None,
+            shards: 1,
         }
     }
 }
@@ -220,6 +230,15 @@ impl ServeConfig {
                 "slo_us" => self.slo_us = val.as_usize()? as u64,
                 "arrival" => self.arrival = Arrival::parse(val.as_str()?)?,
                 "faults" => self.faults = Some(FaultSpec::parse(val.as_str()?)?),
+                "shards" => {
+                    let s = val.as_usize()?;
+                    if s == 0 {
+                        return Err(anyhow!(
+                            "shards: 0 is invalid (use 1 for the unsharded serving tier)"
+                        ));
+                    }
+                    self.shards = s;
+                }
                 other => return Err(anyhow!("unknown serve-config key {other:?}")),
             }
         }
@@ -392,6 +411,19 @@ mod tests {
         let bad = Value::parse(r#"{"threads": 0}"#).unwrap();
         assert!(cfg.apply_json(&bad).is_err());
         assert_eq!(cfg.threads, 4, "failed apply must not half-commit");
+    }
+
+    #[test]
+    fn shards_override_and_zero_rejection() {
+        let mut cfg = ServeConfig::default();
+        assert_eq!(cfg.shards, 1, "default stays the unsharded pipeline");
+        let v = Value::parse(r#"{"shards": 4}"#).unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.shards, 4);
+        // reject-don't-ignore: 0 is a config error, not silent 1
+        let bad = Value::parse(r#"{"shards": 0}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err());
+        assert_eq!(cfg.shards, 4, "failed apply must not half-commit");
     }
 
     #[test]

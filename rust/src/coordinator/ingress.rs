@@ -18,10 +18,11 @@
 //! Two pieces live here:
 //! * [`spawn_feeds`] — the producer side: synthetic detector feeds
 //!   multiplexed over a few threads, pushing hop-sized
-//!   [`IngressChunk`]s into one bounded MPSC queue with uniform or bursty
-//!   arrivals ([`Arrival`]). A full queue sheds at the source (real
-//!   detector data is a lossy real-time feed; stale windows are
-//!   worthless).
+//!   [`IngressChunk`]s into per-shard bounded MPSC queues (one per shard
+//!   lane, routed by the stream's static home placement) with uniform or
+//!   bursty arrivals ([`Arrival`]). A full queue sheds at the source
+//!   (real detector data is a lossy real-time feed; stale windows are
+//!   worthless), booked on the home shard's ledger.
 //! * [`TickPipeline`] — the compute side: the engine owned by a dedicated
 //!   thread, one tick in flight, prepared-tick buffers travelling down and
 //!   finished-tick buffers travelling back (that round trip IS the double
@@ -44,7 +45,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::chaos::{FaultSpec, PanicSchedule, StreamFaults};
-use super::metrics::{Metrics, ShedClass};
+use super::metrics::ShedClass;
+use super::shard::{shard_of, ShardAccounting};
 use super::stream_router::{StreamRouter, StreamScore};
 use crate::gw::dataset::StrainStream;
 use crate::model::batched::StreamState;
@@ -121,31 +123,52 @@ pub struct FeedConfig {
     /// misframed chunks and stalls injected per stream. `None` injects
     /// nothing (and costs nothing on the produce path).
     pub faults: Option<FaultSpec>,
+    /// Shard lanes the serving tier runs (`>= 1`). Producers route every
+    /// chunk to its stream's home shard queue ([`super::shard::shard_of`])
+    /// and book its accounting on the home shard's metrics — the
+    /// per-shard conservation ledgers start at the source.
+    pub shards: usize,
 }
 
 /// Spawn the ingress producers: `min(sessions, 4)` threads multiplexing
-/// the synthetic feeds, all pushing into ONE bounded MPSC queue whose
-/// receiver the leader drains. Every produced chunk is counted in
-/// `metrics.windows_in`; a full queue sheds the chunk at the source
-/// ([`ShedClass::Queue`]). Producers retire when `stop` is raised or their
-/// quota is exhausted; the receiver observing disconnection after a full
-/// drain is the leader's end-of-input signal.
+/// the synthetic feeds, each pushing into the PER-SHARD bounded MPSC
+/// queue of the chunk's home shard (`cfg.shards` queues of depth
+/// `cfg.queue_depth` each; one queue total when unsharded). Every
+/// produced chunk is counted in its home shard's `windows_in`; a full
+/// queue sheds the chunk at the source ([`ShedClass::Queue`]), also on
+/// the home shard — so each per-shard conservation ledger closes exactly
+/// no matter how the leader rebalances serving. Producers retire when
+/// `stop` is raised or their quota is exhausted; every receiver observing
+/// disconnection after a full drain is the leader's end-of-input signal.
+///
+/// Producers route by the STATIC home placement, never the dynamic one: a
+/// drained shard's queue keeps filling and the leader keeps draining it,
+/// admitting those chunks onto survivor lanes. Routing at the source
+/// would race the rebalance; draining the dead lane's queue doesn't.
 ///
 /// Feed `s` uses the same seed as the serial streaming loop
 /// (`0x57EA4 ^ s * 0x9E37_79B9`), so ingress serving scores the same
-/// synthetic streams the serial path does.
+/// synthetic streams the serial path does — at any shard count.
 pub fn spawn_feeds(
     cfg: &FeedConfig,
     stop: Arc<AtomicBool>,
-    metrics: Arc<Metrics>,
-) -> (Receiver<IngressChunk>, Vec<JoinHandle<()>>) {
-    let (tx, rx) = sync_channel::<IngressChunk>(cfg.queue_depth.max(1));
+    acct: Arc<ShardAccounting>,
+) -> (Vec<Receiver<IngressChunk>>, Vec<JoinHandle<()>>) {
+    let shards = cfg.shards.max(1);
+    assert_eq!(acct.shards(), shards, "accounting must match shard count");
+    let mut txs = Vec::with_capacity(shards);
+    let mut rxs = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = sync_channel::<IngressChunk>(cfg.queue_depth.max(1));
+        txs.push(tx);
+        rxs.push(rx);
+    }
     let n_prod = cfg.sessions.clamp(1, 4);
     let mut handles = Vec::with_capacity(n_prod);
     for p in 0..n_prod {
-        let tx = tx.clone();
+        let txs = txs.clone();
         let stop = stop.clone();
-        let metrics = metrics.clone();
+        let acct = acct.clone();
         let cfg = cfg.clone();
         handles.push(std::thread::spawn(move || {
             // Fault injectors are split per STREAM (not per producer
@@ -183,7 +206,8 @@ pub fn spawn_feeds(
                         }
                         let w = feed.next_window();
                         produced += 1;
-                        metrics.windows_in.fetch_add(1, Ordering::Relaxed);
+                        let home = acct.home(*id);
+                        home.windows_in.fetch_add(1, Ordering::Relaxed);
                         let mut samples = w.samples;
                         let mut stall = None;
                         if let Some(f) = faults.as_mut() {
@@ -196,11 +220,12 @@ pub fn spawn_feeds(
                             label: w.label,
                             admitted: Instant::now(),
                         };
-                        if tx.try_send(chunk).is_err() {
+                        let lane = shard_of(*id, shards);
+                        if txs[lane].try_send(chunk).is_err() {
                             // bounded queue full (or leader gone): a
                             // real-time feed sheds at the source rather
                             // than buffering stale strain
-                            metrics.shed(ShedClass::Queue);
+                            home.shed(ShedClass::Queue);
                         }
                         if let Some(d) = stall {
                             // injected feed dropout: the producer goes
@@ -226,8 +251,8 @@ pub fn spawn_feeds(
             }
         }));
     }
-    drop(tx); // leader's rx disconnects exactly when every producer retires
-    (rx, handles)
+    drop(txs); // every rx disconnects exactly when every producer retires
+    (rxs, handles)
 }
 
 /// What the engine thread reports once its executor is built: everything

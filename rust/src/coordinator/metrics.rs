@@ -140,6 +140,12 @@ pub struct ShedBreakdown {
     /// Session pending-backlog cap refused admission
     /// (`StreamConfig::max_pending_hops`).
     pub backlog: u64,
+    /// Pending windows lost when the session registry LRU-evicted their
+    /// session at capacity (`StreamConfig::max_sessions`): the victim's
+    /// unconsumed full hops, booked by the caller from the returned
+    /// `SessionSnapshot`. Before this class existed those windows leaked
+    /// out of the conservation ledger entirely.
+    pub evicted: u64,
     /// Unserved backlog discarded at orderly shutdown.
     pub shutdown: u64,
 }
@@ -148,7 +154,18 @@ impl ShedBreakdown {
     /// Sum of all shed classes (== `Metrics::dropped` when every drop path
     /// goes through a classified counter).
     pub fn total(&self) -> u64 {
-        self.queue + self.slo + self.backlog + self.shutdown
+        self.queue + self.slo + self.backlog + self.evicted + self.shutdown
+    }
+
+    /// Field-wise sum of two breakdowns (per-shard ledger roll-up).
+    pub fn plus(&self, o: &ShedBreakdown) -> ShedBreakdown {
+        ShedBreakdown {
+            queue: self.queue + o.queue,
+            slo: self.slo + o.slo,
+            backlog: self.backlog + o.backlog,
+            evicted: self.evicted + o.evicted,
+            shutdown: self.shutdown + o.shutdown,
+        }
     }
 }
 
@@ -168,6 +185,7 @@ pub struct Metrics {
     pub shed_queue: AtomicU64,
     pub shed_slo: AtomicU64,
     pub shed_backlog: AtomicU64,
+    pub shed_evicted: AtomicU64,
     pub shed_shutdown: AtomicU64,
     /// Windows attributed to the fault-tolerance layer: refused at the
     /// data-quality gate (non-finite / misframed chunk), discarded in a
@@ -201,9 +219,27 @@ impl Metrics {
             ShedClass::Queue => &self.shed_queue,
             ShedClass::Slo => &self.shed_slo,
             ShedClass::Backlog => &self.shed_backlog,
+            ShedClass::Evicted => &self.shed_evicted,
             ShedClass::Shutdown => &self.shed_shutdown,
         };
         c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` shed windows of one class in one go (capacity-eviction
+    /// victims shed whole backlogs at once).
+    pub fn shed_n(&self, class: ShedClass, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.dropped.fetch_add(n, Ordering::Relaxed);
+        let c = match class {
+            ShedClass::Queue => &self.shed_queue,
+            ShedClass::Slo => &self.shed_slo,
+            ShedClass::Backlog => &self.shed_backlog,
+            ShedClass::Evicted => &self.shed_evicted,
+            ShedClass::Shutdown => &self.shed_shutdown,
+        };
+        c.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Count one quarantined window (NOT a shed: `dropped` is untouched —
@@ -217,6 +253,7 @@ impl Metrics {
             queue: self.shed_queue.load(Ordering::Relaxed),
             slo: self.shed_slo.load(Ordering::Relaxed),
             backlog: self.shed_backlog.load(Ordering::Relaxed),
+            evicted: self.shed_evicted.load(Ordering::Relaxed),
             shutdown: self.shed_shutdown.load(Ordering::Relaxed),
         }
     }
@@ -233,6 +270,9 @@ pub enum ShedClass {
     Queue,
     Slo,
     Backlog,
+    /// Capacity (LRU) eviction of a resident session discarded its
+    /// pending windows without warm restart.
+    Evicted,
     Shutdown,
 }
 
@@ -399,8 +439,21 @@ mod tests {
         m.shed(ShedClass::Slo);
         m.shed(ShedClass::Backlog);
         m.shed(ShedClass::Shutdown);
+        m.shed_n(ShedClass::Evicted, 3);
         let b = m.shed_breakdown();
-        assert_eq!(b, ShedBreakdown { queue: 1, slo: 2, backlog: 1, shutdown: 1 });
+        assert_eq!(
+            b,
+            ShedBreakdown { queue: 1, slo: 2, backlog: 1, evicted: 3, shutdown: 1 }
+        );
         assert_eq!(b.total(), m.dropped.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn breakdown_plus_is_fieldwise() {
+        let a = ShedBreakdown { queue: 1, slo: 2, backlog: 3, evicted: 4, shutdown: 5 };
+        let b = ShedBreakdown { queue: 10, ..Default::default() };
+        let s = a.plus(&b);
+        assert_eq!(s.queue, 11);
+        assert_eq!(s.total(), a.total() + b.total());
     }
 }

@@ -32,6 +32,13 @@
 //!   [`run_serving_ingress`] (`gwlstm serve --native --streaming
 //!   --ingress`). With shedding disabled the pipelined output is
 //!   bit-identical to the serial tick loop.
+//! * [`shard`] — the sharded session-serving tier above ingress:
+//!   deterministic stream→shard placement ([`shard_of`]), N shard lanes
+//!   each owning an engine + a registry slice ([`ShardSet`]), per-home-
+//!   shard conservation ledgers ([`ShardAccounting`]) that sum exactly to
+//!   the global ledger, and drain/rebalance via snapshot warm restart —
+//!   served end-to-end by [`run_serving_ingress`] with `--shards N`
+//!   (bit-identical per stream to the unsharded path).
 //! * [`chaos`] — deterministic fault-injection harness (`serve --faults`,
 //!   `GWLSTM_FAULTS`): seeded NaN bursts, feed stalls, misframed chunks
 //!   and scheduled engine panics, so the fault-tolerance layer (data-
@@ -46,6 +53,7 @@ pub mod ingress;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod shard;
 pub mod stream_router;
 
 pub use batcher::Policy;
@@ -56,5 +64,9 @@ pub use metrics::ShedBreakdown;
 pub use server::{
     run_serving, run_serving_ingress, run_serving_native, run_serving_streaming,
     run_serving_with_policy, ServeReport,
+};
+pub use shard::{
+    run_sharded_schedule, shard_of, Placement, ShardAccounting, ShardLedger,
+    ShardScheduleReport, ShardSet,
 };
 pub use stream_router::{StreamRouter, StreamScore};

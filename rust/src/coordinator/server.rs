@@ -21,7 +21,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, RecvTimeoutError, TryRecvError};
+use std::sync::mpsc::{channel, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -31,11 +31,12 @@ use super::batcher::{Batcher, Policy};
 use super::detector::{Detection, DetectionSummary, Detector};
 use super::ingress::{
     spawn_feeds, FeedConfig, FinishedTick, IngressChunk, PreparedTick, TickOutcome,
-    TickPipeline,
 };
 use super::metrics::{LatencySnapshot, Metrics, ShedBreakdown, ShedClass};
 use super::router::{Job, RouteResult, Router};
+use super::shard::{ShardAccounting, ShardLedger, ShardSet};
 use super::stream_router::StreamRouter;
+use crate::stream::IngestOutcome;
 use crate::config::{Manifest, ServeConfig};
 use crate::eval::roc::auc;
 use crate::gw::dataset::StrainStream;
@@ -95,6 +96,13 @@ pub struct ServeReport {
     pub infer: LatencySnapshot,
     pub throughput_per_s: f64,
     pub compile_ms: f64,
+    /// Shard lanes the serving tier ran (1 everywhere but `--shards N`).
+    pub shards: usize,
+    /// Per-home-shard conservation ledgers (empty when unsharded). Each
+    /// conserves on its own, and their field-wise sum IS the global
+    /// ledger above — `ingested`, `dropped`, `sheds`, `quarantined` and
+    /// `windows` are exactly the roll-up of these.
+    pub shard_ledgers: Vec<ShardLedger>,
 }
 
 impl ServeReport {
@@ -107,9 +115,27 @@ impl ServeReport {
         );
         if self.sheds.total() > 0 {
             println!(
-                "sheds          : queue {}, slo {}, backlog {}, shutdown {}",
-                self.sheds.queue, self.sheds.slo, self.sheds.backlog, self.sheds.shutdown
+                "sheds          : queue {}, slo {}, backlog {}, evicted {}, shutdown {}",
+                self.sheds.queue,
+                self.sheds.slo,
+                self.sheds.backlog,
+                self.sheds.evicted,
+                self.sheds.shutdown
             );
+        }
+        if self.shard_ledgers.len() > 1 {
+            println!("shards         : {}", self.shards);
+            for l in &self.shard_ledgers {
+                println!(
+                    "  shard {:>2}     : in {} served {} dropped {} quarantined {}{}",
+                    l.shard,
+                    l.ingested,
+                    l.served,
+                    l.dropped(),
+                    l.quarantined,
+                    if l.conserved() { "" } else { "  [LEDGER LEAK]" }
+                );
+            }
         }
         if self.quarantined > 0 || self.engine_panics > 0 {
             println!(
@@ -195,6 +221,16 @@ pub fn run_serving_with_policy(
             cfg.threads
         );
     }
+    if cfg.shards > 1 {
+        // Reject-don't-ignore: shard lanes partition the session registry,
+        // which only exists in the streaming state service.
+        anyhow::bail!(
+            "shards = {} requires the streaming ingress pipeline \
+             (run_serving_ingress); the stateless window pipeline has no \
+             session registry to shard",
+            cfg.shards
+        );
+    }
     let spec = manifest.variant(&cfg.model)?.clone();
     let dir = manifest.dir.clone();
     let model = cfg.model.clone();
@@ -234,6 +270,15 @@ pub fn run_serving_native(
         anyhow::bail!(
             "cfg.ingress is set — use run_serving_ingress (this entry point \
              has no streaming tick to pipeline)"
+        );
+    }
+    if cfg.shards > 1 {
+        // Reject-don't-ignore: same rule — no session registry here.
+        anyhow::bail!(
+            "shards = {} requires the streaming ingress pipeline \
+             (run_serving_ingress); this entry point has no session \
+             registry to shard",
+            cfg.shards
         );
     }
     let w = weights.clone();
@@ -278,6 +323,16 @@ pub fn run_serving_streaming(
         // engine, pipelined ticks); delegating keeps `--streaming
         // --ingress` a strict superset instead of a silent ignore.
         return run_serving_ingress(weights, cfg);
+    }
+    if cfg.shards > 1 {
+        // Reject-don't-ignore: shard lanes are fed by the per-shard
+        // ingress queues; the serial tick loop has no front door to fan
+        // out, so accepting `shards` here would silently serve one lane.
+        anyhow::bail!(
+            "shards = {} requires the ingress front door (`--ingress`); \
+             the serial streaming loop is single-lane by construction",
+            cfg.shards
+        );
     }
     let hop = cfg.stream_hop.max(1);
     let sessions = cfg.stream_sessions.max(1);
@@ -344,7 +399,14 @@ pub fn run_serving_streaming(
             }
             let w = feed.next_window();
             metrics.windows_in.fetch_add(1, Ordering::Relaxed);
-            router.ingest(s as u64, &w.samples, tick);
+            if let Some(victim) = router.ingest(s as u64, &w.samples, tick) {
+                // capacity eviction: the LRU victim's unconsumed backlog
+                // was ingested but can never be scored — without this the
+                // ledger leaks one window per lost hop (the bug this PR
+                // fixes: make_room_for used to drop the victim silently)
+                let lost = victim.pending.len() / hop;
+                metrics.shed_n(ShedClass::Evicted, lost as u64);
+            }
             tick_meta.insert(s as u64, (w.label, Instant::now()));
         }
         // ONE lockstep stateful call over every ready session
@@ -411,6 +473,8 @@ pub fn run_serving_streaming(
         infer: metrics.infer.snapshot(),
         throughput_per_s: metrics.throughput_per_s(started),
         compile_ms,
+        shards: 1,
+        shard_ledgers: Vec::new(),
     })
 }
 
@@ -424,21 +488,34 @@ pub fn run_serving_streaming(
 /// change fault-free output. Admitted chunks record their
 /// `(label, admitted)` meta FIFO-per-stream, matching the strict
 /// arrival-order consumption of `take_chunk_into`.
+///
+/// Accounting is split: conservation classes (quarantine, SLO/backlog
+/// sheds, capacity evictions) book on the chunk's HOME shard via `acct`
+/// so per-shard ledgers close; observability counters (DQ tallies) book
+/// on the run-global `metrics`. The chunk itself is admitted to the lane
+/// the dynamic placement currently routes its stream to — home and lane
+/// differ only after a drain.
+///
+/// A capacity eviction raised by the admission (the registry LRU-evicting
+/// another session to make room) books the victim's unconsumed whole hops
+/// as [`ShedClass::Evicted`] on the VICTIM's home shard and trims the
+/// victim's newest metas — the never-to-be-scored tail.
 #[allow(clippy::too_many_arguments)]
 fn admit_chunk(
     c: IngressChunk,
-    router: &mut StreamRouter,
+    set: &mut ShardSet,
+    acct: &ShardAccounting,
     metrics: &Metrics,
     metas: &mut HashMap<u64, VecDeque<(u8, Instant)>>,
     slo: Duration,
     now: u64,
     hop: usize,
     dq: &DqConfig,
-) {
+) -> Result<()> {
     match classify(&c.samples, hop, dq) {
         cls if cls.poisons_state() => {
-            metrics.quarantine();
-            return;
+            acct.home(c.stream).quarantine();
+            return Ok(());
         }
         ChunkClass::Gap => {
             metrics.dq_gap.fetch_add(1, Ordering::Relaxed);
@@ -449,28 +526,47 @@ fn admit_chunk(
         _ => {}
     }
     if !slo.is_zero() && c.admitted.elapsed() > slo {
-        metrics.shed(ShedClass::Slo);
-        return;
+        acct.home(c.stream).shed(ShedClass::Slo);
+        return Ok(());
     }
-    if router.try_ingest(c.stream, &c.samples, now) {
-        metas
-            .entry(c.stream)
-            .or_default()
-            .push_back((c.label, c.admitted));
-    } else {
-        metrics.shed(ShedClass::Backlog);
+    let lane_k = set.route(c.stream);
+    let lane = set.lane_mut(lane_k)?;
+    match lane.router.try_ingest(c.stream, &c.samples, now) {
+        IngestOutcome::Admitted { evicted } => {
+            metas
+                .entry(c.stream)
+                .or_default()
+                .push_back((c.label, c.admitted));
+            if let Some(victim) = evicted {
+                let lost = acct.book_eviction(&victim, hop);
+                if let Some(q) = metas.get_mut(&victim.id) {
+                    for _ in 0..lost {
+                        q.pop_back();
+                    }
+                }
+            }
+        }
+        IngestOutcome::Refused => {
+            acct.home(c.stream).shed(ShedClass::Backlog);
+        }
     }
+    Ok(())
 }
 
-/// Retire one finished tick: scatter states back (`complete`), classify
+///// Retire one finished tick: scatter states back (`complete`), classify
 /// and account every score, and hand the tick's buffers back to the
 /// caller for reuse (the double buffer's return leg). A free function
 /// (not a closure) because the leader loop and the shutdown drain both
 /// call it between other mutable uses of the router.
+///
+/// Conservation counters (served windows, quarantines) book on each
+/// score's HOME shard via `acct`; latency histograms and dispatch
+/// counters book on the run-global `metrics`.
 #[allow(clippy::too_many_arguments)]
 fn retire_ingress_tick(
     fin: FinishedTick,
     router: &mut StreamRouter,
+    acct: &ShardAccounting,
     metrics: &Metrics,
     metas: &mut HashMap<u64, VecDeque<(u8, Instant)>>,
     detector: &Detector,
@@ -486,15 +582,16 @@ fn retire_ingress_tick(
     for sc in &out {
         // chunks drain FIFO per stream, so the oldest meta is this score's
         let meta = metas.get_mut(&sc.stream).and_then(VecDeque::pop_front);
+        let home = acct.home(sc.stream);
         if sc.quarantined {
             // the finiteness sweep caught a poisoned row: the window was
             // consumed but produced nothing servable — it leaves through
             // the quarantine class, never through the detector
-            metrics.quarantine();
+            home.quarantine();
             continue;
         }
         metrics.infer.record_ns(per_ns);
-        metrics.windows_done.fetch_add(1, Ordering::Relaxed);
+        home.windows_done.fetch_add(1, Ordering::Relaxed);
         if let Some((_, admitted)) = meta {
             metrics.e2e.record_ns(admitted.elapsed().as_nanos() as u64);
         }
@@ -514,18 +611,29 @@ fn retire_ingress_tick(
 
 /// Async-ingress streaming serving: the production front door of the
 /// streaming state service ([`run_serving_streaming`] with the serial
-/// loop replaced by [`super::ingress`]).
+/// loop replaced by [`super::ingress`]), fanned out over `cfg.shards`
+/// shard lanes ([`super::shard`]; 1 lane == the PR 5/6 pipeline
+/// unchanged).
 ///
 /// * **Non-blocking ingestion** — `min(sessions, 4)` producer threads push
-///   hop-sized chunks into one bounded MPSC queue ([`spawn_feeds`]); a
+///   hop-sized chunks into per-shard bounded MPSC queues
+///   ([`spawn_feeds`]), routed by the stream's static home placement; a
 ///   full queue sheds at the source instead of buffering a live feed.
+/// * **Shard lanes** — each lane owns its engine (same cloneable factory:
+///   identical weights, math tier, threads), its registry slice, and its
+///   double buffer; the leader steps every live lane per tick in
+///   ascending order. Lockstep rows are independent, so any stream's
+///   score sequence is bitwise identical at any shard count
+///   (`tests/shard_parity.rs`). If a lane's supervisor escalates (panic
+///   storm), the lane is drained: every resident session snapshots and
+///   warm-restores onto the survivors, bit-identical continuation.
 /// * **Admission control** — the leader drains the queue between ticks:
 ///   chunks older than `cfg.slo_us` are shed ([`ShedClass::Slo`]; FIFO
 ///   drain order means oldest-pending sheds first), and a stream whose
 ///   backlog exceeds `cfg.queue_depth` hops sheds at the registry
 ///   ([`ShedClass::Backlog`]).
 /// * **Double-buffered ticks** — while the engine thread computes tick N
-///   ([`TickPipeline`]), the leader ingests and gathers tick N+1; the
+///   ([`super::ingress::TickPipeline`]), the leader ingests and gathers tick N+1; the
 ///   scatter of N strictly precedes the gather of N+1, so with shedding
 ///   disabled the scores are bit-identical to the serial loop
 ///   (`tests/ingress_parity.rs`).
@@ -535,12 +643,16 @@ fn retire_ingress_tick(
 /// scored, counted in exactly one shed class, or attributed to the
 /// quarantine class — `report.ingested == report.windows + report.dropped
 /// + report.quarantined` and `report.sheds.total() == report.dropped`.
+/// Sharded, the contract holds PER SHARD: every counter books on the
+/// stream's home shard ([`ShardAccounting`]), each `report.shard_ledgers`
+/// entry conserves on its own, and their field-wise sum is exactly the
+/// global numbers above.
 ///
 /// With `cfg.faults` set, the seeded chaos plan ([`super::chaos`]) injects
 /// NaN bursts, feed stalls, and misframed chunks at the producers and
 /// scheduled panics on the engine thread; the pipeline survives via the DQ
 /// gate, state quarantine, and supervised warm restart
-/// ([`TickPipeline::spawn_supervised`]). With faults unset the datapath is
+/// ([`super::ingress::TickPipeline::spawn_supervised`]). With faults unset the datapath is
 /// bit-identical to before the fault-tolerance layer existed.
 pub fn run_serving_ingress(
     weights: &AutoencoderWeights,
@@ -548,27 +660,26 @@ pub fn run_serving_ingress(
 ) -> Result<ServeReport> {
     let hop = cfg.stream_hop.max(1);
     let sessions = cfg.stream_sessions.max(1);
-    let math = cfg.math_policy;
-    let threads = cfg.threads.max(1);
-    let w = weights.clone();
-    let name = cfg.model.clone();
-    let factory = move || -> Result<ModelExecutor> {
-        Ok(ModelExecutor::native_from_weights_policy_threads(
-            &w, &name, hop, math, threads,
-        ))
-    };
+    let shards = cfg.shards.max(1);
+    let factory = ModelExecutor::native_factory(
+        weights,
+        &cfg.model,
+        hop,
+        cfg.math_policy,
+        cfg.threads.max(1),
+    );
     let panic_sched = cfg
         .faults
         .as_ref()
         .map(super::chaos::FaultSpec::panic_schedule)
         .unwrap_or_default();
-    let (mut pipe, info) = TickPipeline::spawn_supervised(factory, panic_sched)?;
-    let platform = format!("{}+ingress", info.platform);
-    let compile_ms = info.compile_ms;
     let dq = DqConfig::default();
     let scfg = StreamConfig {
         hop,
         ttl_ticks: cfg.stream_ttl.max(1),
+        // per-LANE capacity: kept at the full session count (not divided
+        // by shards) so hash imbalance and post-drain refugees never force
+        // capacity evictions the unsharded run wouldn't have had
         max_sessions: sessions + 1,
         // backlog cap per stream mirrors the ingress queue depth: the two
         // bounded buffers are the whole memory footprint of the front door
@@ -576,60 +687,77 @@ pub fn run_serving_ingress(
         // last-good snapshot cadence for quarantine recovery (default 16)
         ..StreamConfig::default()
     };
-    let mut router = StreamRouter::from_proto(info.proto, scfg);
+    let (mut set, info) = ShardSet::spawn(factory, scfg, shards, panic_sched)?;
+    let platform = if shards > 1 {
+        format!("{}+ingress+shard{shards}", info.platform)
+    } else {
+        format!("{}+ingress", info.platform)
+    };
+    let compile_ms = info.compile_ms;
+    // Conservation counters live per home shard; the run-global `metrics`
+    // carries only observability (histograms, dispatch counts, DQ tallies,
+    // engine panics) — report ledger fields are the per-shard roll-up.
+    let acct = Arc::new(ShardAccounting::new(shards));
     let metrics = Arc::new(Metrics::new());
 
     // ---- calibration: the background session scored THROUGH the pipeline
-    // (depth 1: submit then wait), so the threshold is calibrated on the
-    // exact datapath that serves ----
+    // (depth 1: submit then wait) on the lane that will serve it, so the
+    // threshold is calibrated on the exact datapath that serves ----
     const CALIB_ID: u64 = u64::MAX;
+    let k_cal = set.route(CALIB_ID);
     let mut calib_stream = StrainStream::new(0xCA11B, hop, cfg.snr, 0.0);
     let mut bg_scores = Vec::with_capacity(cfg.calib_windows);
-    let mut cur_flat: Vec<f32> = Vec::new();
-    let mut cur_group: Option<StreamState> = None;
-    for i in 0..cfg.calib_windows as u64 {
-        router.ingest(CALIB_ID, &calib_stream.next_window().samples, i);
-        let ids = router.take_ready(&mut cur_flat, i);
-        if ids.is_empty() {
-            continue;
-        }
-        router.gather_group(&ids, &mut cur_group);
-        pipe.submit(PreparedTick {
-            ids,
-            flat: std::mem::take(&mut cur_flat),
-            group: cur_group.take().expect("gather_group ensures the group"),
-            tick: i,
-        })?;
-        match pipe.wait()? {
-            TickOutcome::Done(fin) => {
-                for s in router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick) {
-                    if !s.quarantined {
-                        bg_scores.push(s.score as f64);
+    {
+        let lane = set.lane_mut(k_cal)?;
+        for i in 0..cfg.calib_windows as u64 {
+            lane.router
+                .ingest(CALIB_ID, &calib_stream.next_window().samples, i);
+            let ids = lane.router.take_ready(&mut lane.cur_flat, i);
+            if ids.is_empty() {
+                continue;
+            }
+            lane.router.gather_group(&ids, &mut lane.cur_group);
+            lane.pipe.submit(PreparedTick {
+                ids,
+                flat: std::mem::take(&mut lane.cur_flat),
+                group: lane
+                    .cur_group
+                    .take()
+                    .expect("gather_group ensures the group"),
+                tick: i,
+            })?;
+            match lane.pipe.wait()? {
+                TickOutcome::Done(fin) => {
+                    for s in lane.router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick) {
+                        if !s.quarantined {
+                            bg_scores.push(s.score as f64);
+                        }
                     }
+                    lane.cur_flat = fin.flat;
+                    lane.cur_group = Some(fin.group);
                 }
-                cur_flat = fin.flat;
-                cur_group = Some(fin.group);
-            }
-            TickOutcome::Panicked(fail) => {
-                // a scheduled chaos panic can land during calibration; the
-                // window is lost (state was never scattered, so the resident
-                // session stays finite) and the supervisor already restarted
-                // the engine — keep calibrating on the remaining windows
-                metrics.engine_panics.fetch_add(1, Ordering::Relaxed);
-                router.mark_suspect(&fail.ids);
-                if fail.escalated {
-                    anyhow::bail!(
-                        "engine panic storm during calibration (supervisor \
-                         gave up after {} restarts)",
-                        fail.restarts
-                    );
+                TickOutcome::Panicked(fail) => {
+                    // a scheduled chaos panic can land during calibration;
+                    // the window is lost (state was never scattered, so the
+                    // resident session stays finite) and the supervisor
+                    // already restarted the engine — keep calibrating on
+                    // the remaining windows
+                    metrics.engine_panics.fetch_add(1, Ordering::Relaxed);
+                    lane.router.mark_suspect(&fail.ids);
+                    if fail.escalated {
+                        anyhow::bail!(
+                            "engine panic storm during calibration (supervisor \
+                             gave up after {} restarts)",
+                            fail.restarts
+                        );
+                    }
+                    lane.cur_flat = fail.flat;
+                    lane.cur_group = Some(fail.group);
                 }
-                cur_flat = fail.flat;
-                cur_group = Some(fail.group);
             }
         }
+        lane.router.evict(CALIB_ID);
     }
-    router.evict(CALIB_ID);
     let detector = Detector::calibrate(&bg_scores, cfg.target_fpr);
 
     // ---- producers ----
@@ -650,10 +778,16 @@ pub fn run_serving_ingress(
             .saturating_mul(4)
             .saturating_add(8),
         faults: cfg.faults.clone(),
+        shards,
     };
-    let (rx, feed_handles) = spawn_feeds(&fcfg, stop.clone(), metrics.clone());
+    let (rxs, feed_handles) = spawn_feeds(&fcfg, stop.clone(), acct.clone());
+    // `None` marks a disconnected (fully retired) per-shard queue; input
+    // has ended only when every queue is gone AND drained.
+    let mut rxs: Vec<Option<std::sync::mpsc::Receiver<IngressChunk>>> =
+        rxs.into_iter().map(Some).collect();
 
-    // ---- leader: prepare tick N+1 while the engine computes tick N ----
+    // ---- leader: step every live lane per tick, ascending — per lane the
+    // exact PR 5 protocol (take_ready N+1, retire N, gather+submit N+1) ----
     let slo = Duration::from_micros(cfg.slo_us);
     let mut metas: HashMap<u64, VecDeque<(u8, Instant)>> = HashMap::new();
     let mut detections: Vec<Detection> = Vec::with_capacity(max_windows);
@@ -663,34 +797,179 @@ pub fn run_serving_ingress(
     let mut served = 0usize;
     let mut seq = 0u64;
     let mut tick = cfg.calib_windows as u64;
-    let mut spare_flat: Vec<f32> = Vec::new();
-    let mut spare_group: Option<StreamState> = None;
-    let mut producers_live = true;
-    let mut engine_dead = false;
-    while served < max_windows {
-        // 1. drain the ingress queue (non-blocking: overlaps the in-flight
-        //    engine call)
-        loop {
-            match rx.try_recv() {
-                Ok(c) => {
-                    admit_chunk(c, &mut router, &metrics, &mut metas, slo, tick, hop, &dq)
+    'serve: while served < max_windows {
+        // 1. drain every per-shard ingress queue (non-blocking: overlaps
+        //    the in-flight engine calls). A drained lane's queue is still
+        //    consumed here — its chunks re-route to survivor lanes.
+        for slot in rxs.iter_mut() {
+            let Some(rx) = slot.as_ref() else { continue };
+            let mut disconnected = false;
+            loop {
+                match rx.try_recv() {
+                    Ok(c) => admit_chunk(
+                        c, &mut set, &acct, &metrics, &mut metas, slo, tick, hop, &dq,
+                    )?,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
                 }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
-                    producers_live = false;
-                    break;
+            }
+            if disconnected {
+                *slot = None;
+            }
+        }
+        let producers_live = rxs.iter().any(Option::is_some);
+        // 2-4. step each live lane; collect lanes whose supervisor gave up
+        let mut any_active = false;
+        let mut dead_lanes: Vec<usize> = Vec::new();
+        for k in set.live_shards() {
+            let lane = set.lane_mut(k)?;
+            // 2. prepare this lane's tick N+1 (consumes chunks; touches no
+            //    resident state)
+            let ids = lane.router.take_ready(&mut lane.cur_flat, tick);
+            // 3. retire its tick N — the scatter, the only state write
+            let mut escalated = false;
+            if lane.pipe.in_flight() > 0 {
+                match lane.pipe.wait()? {
+                    TickOutcome::Done(fin) => {
+                        let (f, g) = retire_ingress_tick(
+                            fin,
+                            &mut lane.router,
+                            &acct,
+                            &metrics,
+                            &mut metas,
+                            &detector,
+                            &mut scores,
+                            &mut labels,
+                            &mut detections,
+                            &mut seq,
+                            &mut served,
+                        );
+                        lane.spare_flat = f;
+                        lane.spare_group = Some(g);
+                    }
+                    TickOutcome::Panicked(fail) => {
+                        // the tick's windows are lost (consumed, never
+                        // scored); resident state was never scattered, so
+                        // the sessions stay on their last finite state —
+                        // Suspect, not reset
+                        metrics.engine_panics.fetch_add(1, Ordering::Relaxed);
+                        lane.router.mark_suspect(&fail.ids);
+                        for id in &fail.ids {
+                            acct.home(*id).quarantine();
+                            metas.get_mut(id).and_then(VecDeque::pop_front);
+                        }
+                        escalated = fail.escalated;
+                        lane.spare_flat = fail.flat;
+                        lane.spare_group = Some(fail.group);
+                    }
+                }
+            }
+            if escalated {
+                // panic storm: this lane's supervisor gave up and its
+                // engine thread is gone. The chunks just taken for its next
+                // tick can never be scored here — account them, then drain
+                // the lane onto the survivors below.
+                for id in &ids {
+                    acct.home(*id).shed(ShedClass::Shutdown);
+                    metas.get_mut(id).and_then(VecDeque::pop_front);
+                }
+                dead_lanes.push(k);
+                continue;
+            }
+            // 4. gather N+1 against the freshly scattered states, launch it
+            if !ids.is_empty() {
+                lane.router.gather_group(&ids, &mut lane.cur_group);
+                lane.pipe.submit(PreparedTick {
+                    ids,
+                    flat: std::mem::take(&mut lane.cur_flat),
+                    group: lane
+                        .cur_group
+                        .take()
+                        .expect("gather_group ensures the group"),
+                    tick,
+                })?;
+                lane.cur_flat = std::mem::take(&mut lane.spare_flat);
+                lane.cur_group = lane.spare_group.take();
+                any_active = true;
+            } else if lane.pipe.in_flight() > 0 {
+                any_active = true;
+            }
+        }
+        // Drain dead lanes: snapshot every resident session and
+        // warm-restore on the survivors (bit-identical continuation; metas
+        // stay keyed by stream, so they follow for free). With no
+        // survivors the service is over — leftover sessions' backlogs are
+        // booked below with the rest of the shutdown accounting.
+        for k in dead_lanes {
+            let survivors = set.live_shards().len() > 1;
+            let snaps = set.drain(k, tick)?;
+            if survivors {
+                for victim in snaps {
+                    let lost = acct.book_eviction(&victim, hop);
+                    if let Some(q) = metas.get_mut(&victim.id) {
+                        for _ in 0..lost {
+                            q.pop_back();
+                        }
+                    }
+                }
+            } else {
+                for snap in snaps {
+                    let lost = snap.pending.len() / hop;
+                    acct.home(snap.id).shed_n(ShedClass::Shutdown, lost as u64);
+                    if let Some(q) = metas.get_mut(&snap.id) {
+                        for _ in 0..lost {
+                            q.pop_back();
+                        }
+                    }
+                }
+                break 'serve;
+            }
+        }
+        if !any_active {
+            if !producers_live {
+                break; // input ended and every backlog fully drained
+            }
+            // idle tick: nothing ready, nothing computing on any lane —
+            // sleep briefly for new arrivals instead of spinning (can't
+            // block on N queues at once)
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // TTL housekeeping per lane: an evicted session's unconsumed
+        // backlog is admitted-but-never-scored work, so it must leave
+        // through a shed class for conservation to hold (producers emit
+        // whole hops, so pending/hop is exact)
+        for k in set.live_shards() {
+            let lane = set.lane_mut(k)?;
+            for snap in lane.router.evict_expired(tick) {
+                let lost = snap.pending.len() / hop;
+                acct.home(snap.id).shed_n(ShedClass::Backlog, lost as u64);
+                if let Some(q) = metas.get_mut(&snap.id) {
+                    // newest metas correspond to the never-consumed tail
+                    for _ in 0..lost {
+                        q.pop_back();
+                    }
                 }
             }
         }
-        // 2. prepare tick N+1 (consumes chunks; touches no resident state)
-        let ids = router.take_ready(&mut cur_flat, tick);
-        // 3. retire tick N — the scatter, the only state write
-        if pipe.in_flight() > 0 {
-            match pipe.wait()? {
+        tick += 1;
+    }
+
+    // ---- orderly shutdown: stop producers, retire in-flight work on every
+    // live lane, then account every still-buffered chunk so conservation
+    // holds exactly — per shard ----
+    stop.store(true, Ordering::Relaxed);
+    for k in set.live_shards() {
+        let lane = set.lane_mut(k)?;
+        while lane.pipe.in_flight() > 0 {
+            match lane.pipe.wait()? {
                 TickOutcome::Done(fin) => {
-                    let (f, g) = retire_ingress_tick(
+                    let _ = retire_ingress_tick(
                         fin,
-                        &mut router,
+                        &mut lane.router,
+                        &acct,
                         &metrics,
                         &mut metas,
                         &detector,
@@ -700,104 +979,14 @@ pub fn run_serving_ingress(
                         &mut seq,
                         &mut served,
                     );
-                    spare_flat = f;
-                    spare_group = Some(g);
                 }
                 TickOutcome::Panicked(fail) => {
-                    // the tick's windows are lost (consumed, never scored);
-                    // resident state was never scattered, so the sessions
-                    // stay on their last finite state — Suspect, not reset
                     metrics.engine_panics.fetch_add(1, Ordering::Relaxed);
-                    router.mark_suspect(&fail.ids);
+                    lane.router.mark_suspect(&fail.ids);
                     for id in &fail.ids {
-                        metrics.quarantine();
+                        acct.home(*id).quarantine();
                         metas.get_mut(id).and_then(VecDeque::pop_front);
                     }
-                    engine_dead = fail.escalated;
-                    spare_flat = fail.flat;
-                    spare_group = Some(fail.group);
-                }
-            }
-        }
-        if engine_dead {
-            // panic storm: the supervisor gave up and the engine thread is
-            // gone. The chunks just gathered for the next tick were admitted
-            // but can never be scored — account them before the drain.
-            for id in &ids {
-                metrics.shed(ShedClass::Shutdown);
-                metas.get_mut(id).and_then(VecDeque::pop_front);
-            }
-            break;
-        }
-        // 4. gather N+1 against the freshly scattered states and launch it
-        if !ids.is_empty() {
-            router.gather_group(&ids, &mut cur_group);
-            pipe.submit(PreparedTick {
-                ids,
-                flat: std::mem::take(&mut cur_flat),
-                group: cur_group.take().expect("gather_group ensures the group"),
-                tick,
-            })?;
-            cur_flat = std::mem::take(&mut spare_flat);
-            cur_group = spare_group.take();
-        } else if pipe.in_flight() == 0 {
-            if !producers_live {
-                break; // input ended and the backlog fully drained
-            }
-            // idle tick: nothing ready, nothing computing — block briefly
-            // for new arrivals instead of spinning
-            match rx.recv_timeout(Duration::from_millis(1)) {
-                Ok(c) => {
-                    admit_chunk(c, &mut router, &metrics, &mut metas, slo, tick, hop, &dq)
-                }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => producers_live = false,
-            }
-        }
-        // TTL housekeeping: an evicted session's unconsumed backlog is
-        // admitted-but-never-scored work, so it must leave through a shed
-        // class for conservation to hold (producers emit whole hops, so
-        // pending/hop is exact)
-        for snap in router.evict_expired(tick) {
-            let lost = snap.pending.len() / hop;
-            for _ in 0..lost {
-                metrics.shed(ShedClass::Backlog);
-            }
-            if let Some(q) = metas.get_mut(&snap.id) {
-                // newest metas correspond to the lost (never-consumed) tail
-                for _ in 0..lost {
-                    q.pop_back();
-                }
-            }
-        }
-        tick += 1;
-    }
-
-    // ---- orderly shutdown: stop producers, retire in-flight work, then
-    // account every still-buffered chunk so conservation holds exactly ----
-    stop.store(true, Ordering::Relaxed);
-    while pipe.in_flight() > 0 {
-        match pipe.wait()? {
-            TickOutcome::Done(fin) => {
-                let _ = retire_ingress_tick(
-                    fin,
-                    &mut router,
-                    &metrics,
-                    &mut metas,
-                    &detector,
-                    &mut scores,
-                    &mut labels,
-                    &mut detections,
-                    &mut seq,
-                    &mut served,
-                );
-            }
-            TickOutcome::Panicked(fail) => {
-                metrics.engine_panics.fetch_add(1, Ordering::Relaxed);
-                router.mark_suspect(&fail.ids);
-                for id in &fail.ids {
-                    metrics.quarantine();
-                    metas.get_mut(id).and_then(VecDeque::pop_front);
                 }
             }
         }
@@ -808,26 +997,39 @@ pub fn run_serving_ingress(
     }
     // producers retired: whatever is still queued or pending was admitted
     // into a buffer but never scored
-    while rx.try_recv().is_ok() {
-        metrics.shed(ShedClass::Shutdown);
-    }
-    for id in router.registry().ids() {
-        let pending = router.registry().get(id).map_or(0, |s| s.pending_len());
-        for _ in 0..pending / hop {
-            metrics.shed(ShedClass::Shutdown);
+    for slot in rxs.iter_mut() {
+        let Some(rx) = slot.as_ref() else { continue };
+        while let Ok(c) = rx.try_recv() {
+            acct.home(c.stream).shed(ShedClass::Shutdown);
         }
     }
+    let mut recovered = 0u64;
+    for k in set.live_shards() {
+        let lane = set.lane_mut(k)?;
+        for id in lane.router.registry().ids() {
+            let pending = lane
+                .router
+                .registry()
+                .get(id)
+                .map_or(0, |s| s.pending_len());
+            acct.home(id)
+                .shed_n(ShedClass::Shutdown, (pending / hop) as u64);
+        }
+        recovered += lane.router.fault_stats().recovered();
+    }
+    set.assert_slice_invariants();
 
+    let total = acct.total();
     let batches = metrics.batches.load(Ordering::Relaxed);
     Ok(ServeReport {
         model: cfg.model.clone(),
         platform,
         windows: detections.len(),
-        ingested: metrics.windows_in.load(Ordering::Relaxed),
-        dropped: metrics.dropped.load(Ordering::Relaxed),
-        sheds: metrics.shed_breakdown(),
-        quarantined: metrics.quarantined.load(Ordering::Relaxed),
-        recovered: router.fault_stats().recovered(),
+        ingested: total.ingested,
+        dropped: total.dropped(),
+        sheds: total.sheds,
+        quarantined: total.quarantined,
+        recovered,
         engine_panics: metrics.engine_panics.load(Ordering::Relaxed),
         batches,
         mean_batch: detections.len() as f64 / batches.max(1) as f64,
@@ -838,6 +1040,8 @@ pub fn run_serving_ingress(
         infer: metrics.infer.snapshot(),
         throughput_per_s: metrics.throughput_per_s(started),
         compile_ms,
+        shards,
+        shard_ledgers: acct.ledgers(),
     })
 }
 
@@ -1049,5 +1253,7 @@ where
         infer: metrics.infer.snapshot(),
         throughput_per_s: throughput,
         compile_ms,
+        shards: 1,
+        shard_ledgers: Vec::new(),
     })
 }

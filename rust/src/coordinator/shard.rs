@@ -1,0 +1,711 @@
+//! Sharded session-serving tier: deterministic stream→shard placement,
+//! N shard lanes each owning an engine + a session-registry slice, and
+//! drain/rebalance built on snapshot warm restart.
+//!
+//! The single-lane stack (PR 5's ingress + PR 6's supervision) tops out
+//! at one `SessionRegistry` and one engine's worker pool. This module is
+//! the level above: the paper balances initiation intervals *across LSTM
+//! layers* so no stage stalls the pipeline; here the same argument runs
+//! one level up — balance resident sessions across shard lanes so no
+//! lane's lockstep batch starves the others. `shards × threads` is the
+//! compute budget.
+//!
+//! ```text
+//!   producers --per-shard bounded queues--> leader
+//!       leader: route(stream) -> lane k     (static home placement)
+//!       lane k: TickPipeline + StreamRouter (its registry slice)
+//!       drain(k): snapshot every session -> restore on survivors
+//! ```
+//!
+//! **Placement.** [`shard_of`] is a pure splitmix-style hash of the
+//! stream id modulo the shard count: a stream's *home* shard. A session's
+//! resident `(h, c)` lives on exactly one lane at any instant (state
+//! locality — it never crosses shards mid-flight). [`Placement`] adds the
+//! dynamic view: when a lane is drained, streams homed on it re-route
+//! deterministically onto the survivors; everyone else keeps their home.
+//!
+//! **Bit-exactness.** Every lane's engine is built by the same cloneable
+//! factory (`ModelExecutor::native_factory`) — identical weights, math
+//! tier, and thread count — and lockstep rows are independent in the
+//! engine. A stream's score sequence is therefore a pure function of
+//! (weights, its own chunk sequence, its own resident state), invariant
+//! under the shard count and under which lane serves it. Draining a lane
+//! between a retire and the next gather moves sessions via the PR 3
+//! snapshot warm restart, which is bit-identical to never having moved —
+//! pinned by `tests/shard_parity.rs`.
+//!
+//! **Ledger roll-up.** Conservation (`ingested == served + dropped +
+//! quarantined`) is booked per HOME shard through [`ShardAccounting`]:
+//! every counter a stream generates — produced windows, queue sheds, SLO
+//! and backlog sheds, capacity evictions, quarantines, served windows —
+//! lands on `shard_of(stream, n)` regardless of which lane actually
+//! served it after a rebalance. Each [`ShardLedger`] then conserves
+//! exactly on its own, and the field-wise sum of all per-shard ledgers
+//! IS the global ledger (no double counting, no leakage).
+//!
+//! **Chaos caveat.** Engine-panic schedules are per engine *thread* (call
+//! indices are counted by each lane's own engine), so `panic@k` fires
+//! once per lane — the per-shard quarantine attribution still conserves.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::chaos::PanicSchedule;
+use super::ingress::{EngineInfo, PreparedTick, TickOutcome, TickPipeline};
+use super::metrics::{Metrics, ShedBreakdown, ShedClass};
+use super::stream_router::{StreamRouter, StreamScore};
+use crate::model::batched::StreamState;
+use crate::runtime::ModelExecutor;
+use crate::stream::{SessionSnapshot, StreamConfig};
+
+/// Deterministic home shard of a stream: splitmix64-finalized hash of the
+/// id, modulo the shard count. Pure and stable — producers, leader, and
+/// tests all compute the same placement with no shared state.
+///
+/// ```
+/// use gwlstm::coordinator::shard_of;
+/// assert_eq!(shard_of(42, 1), 0, "one shard owns everything");
+/// let k = shard_of(42, 4);
+/// assert!(k < 4);
+/// assert_eq!(k, shard_of(42, 4), "pure function of (id, shards)");
+/// ```
+pub fn shard_of(stream: u64, shards: usize) -> usize {
+    assert!(shards > 0, "shard count must be positive");
+    if shards == 1 {
+        return 0;
+    }
+    // splitmix64 finalizer: avalanches sequential ids (0, 1, 2, ...) so
+    // synthetic feeds spread evenly instead of striping.
+    let mut x = stream.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x % shards as u64) as usize
+}
+
+/// Dynamic stream→lane routing: the static home placement plus the set of
+/// lanes still serving. While every lane is live, `route == home`; after
+/// a drain, streams homed on the dead lane re-route deterministically
+/// onto the survivors (re-hashing into the live list), and everyone else
+/// stays put — a drain never moves a session whose lane survived.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    shards: usize,
+    /// Live lane indices, ascending.
+    live: Vec<usize>,
+}
+
+impl Placement {
+    /// All `shards` lanes live.
+    pub fn new(shards: usize) -> Placement {
+        assert!(shards > 0, "shard count must be positive");
+        Placement {
+            shards,
+            live: (0..shards).collect(),
+        }
+    }
+
+    /// Total lane count (live + drained).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Live lane indices, ascending.
+    pub fn live(&self) -> &[usize] {
+        &self.live
+    }
+
+    /// Whether lane `k` is still serving.
+    pub fn is_live(&self, k: usize) -> bool {
+        self.live.binary_search(&k).is_ok()
+    }
+
+    /// The static home shard (ledger attribution key — never changes).
+    pub fn home(&self, stream: u64) -> usize {
+        shard_of(stream, self.shards)
+    }
+
+    /// The lane currently serving `stream`: its home if live, otherwise a
+    /// deterministic re-hash onto the survivors. Panics when no lane is
+    /// live (the service is shut down at that point).
+    pub fn route(&self, stream: u64) -> usize {
+        assert!(!self.live.is_empty(), "no live shard to route to");
+        let home = self.home(stream);
+        if self.is_live(home) {
+            home
+        } else {
+            self.live[shard_of(stream, self.live.len())]
+        }
+    }
+
+    /// Mark lane `k` drained. Errors if it already was (a double drain
+    /// means the caller lost track of lane lifecycle).
+    pub fn drain(&mut self, k: usize) -> Result<()> {
+        match self.live.binary_search(&k) {
+            Ok(i) => {
+                self.live.remove(i);
+                Ok(())
+            }
+            Err(_) => bail!("shard {k} is not live (already drained?)"),
+        }
+    }
+}
+
+/// One shard's conservation ledger, read from its [`Metrics`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardLedger {
+    /// Lane index the ledger belongs to.
+    pub shard: usize,
+    /// Windows produced for streams homed on this shard.
+    pub ingested: u64,
+    /// Windows scored and served.
+    pub served: u64,
+    /// Windows attributed to the fault-tolerance layer (DQ refusals,
+    /// quarantine sweeps, panicked ticks).
+    pub quarantined: u64,
+    /// Shed-class breakdown behind `dropped`.
+    pub sheds: ShedBreakdown,
+}
+
+impl ShardLedger {
+    /// Windows dropped (== the shed breakdown's total by construction).
+    pub fn dropped(&self) -> u64 {
+        self.sheds.total()
+    }
+
+    /// The PR 6 conservation contract, per shard:
+    /// `ingested == served + dropped + quarantined`.
+    pub fn conserved(&self) -> bool {
+        self.ingested == self.served + self.dropped() + self.quarantined
+    }
+
+    /// Field-wise sum (the global roll-up; `shard` keeps the left index).
+    pub fn plus(&self, o: &ShardLedger) -> ShardLedger {
+        ShardLedger {
+            shard: self.shard,
+            ingested: self.ingested + o.ingested,
+            served: self.served + o.served,
+            quarantined: self.quarantined + o.quarantined,
+            sheds: self.sheds.plus(&o.sheds),
+        }
+    }
+}
+
+/// Per-home-shard metrics: one [`Metrics`] per shard, indexed by
+/// [`shard_of`]. Producers and the leader book every conservation
+/// counter here (global report numbers are the sum), so each shard's
+/// ledger closes exactly — even when a drain moves the *serving* of a
+/// stream to another lane, its accounting stays on its home shard.
+pub struct ShardAccounting {
+    per_shard: Vec<Arc<Metrics>>,
+}
+
+impl ShardAccounting {
+    /// One fresh `Metrics` per shard.
+    pub fn new(shards: usize) -> ShardAccounting {
+        assert!(shards > 0, "shard count must be positive");
+        ShardAccounting {
+            per_shard: (0..shards).map(|_| Arc::new(Metrics::new())).collect(),
+        }
+    }
+
+    /// Shard count.
+    pub fn shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    /// Metrics of shard `k`.
+    pub fn metrics(&self, k: usize) -> &Metrics {
+        &self.per_shard[k]
+    }
+
+    /// Metrics of `stream`'s home shard (the attribution rule: always the
+    /// static home, never the serving lane).
+    pub fn home(&self, stream: u64) -> &Metrics {
+        &self.per_shard[shard_of(stream, self.per_shard.len())]
+    }
+
+    /// Book a capacity-eviction victim: its unconsumed full hops are shed
+    /// as [`ShedClass::Evicted`] on the victim's home shard. Returns the
+    /// number of windows lost (for meta-queue trimming by the caller).
+    pub fn book_eviction(&self, victim: &SessionSnapshot, hop: usize) -> u64 {
+        let lost = (victim.pending.len() / hop.max(1)) as u64;
+        self.home(victim.id).shed_n(ShedClass::Evicted, lost);
+        lost
+    }
+
+    /// Read shard `k`'s ledger.
+    pub fn ledger(&self, k: usize) -> ShardLedger {
+        let m = &self.per_shard[k];
+        ShardLedger {
+            shard: k,
+            ingested: m.windows_in.load(Ordering::Relaxed),
+            served: m.windows_done.load(Ordering::Relaxed),
+            quarantined: m.quarantined.load(Ordering::Relaxed),
+            sheds: m.shed_breakdown(),
+        }
+    }
+
+    /// Every shard's ledger, ascending.
+    pub fn ledgers(&self) -> Vec<ShardLedger> {
+        (0..self.per_shard.len()).map(|k| self.ledger(k)).collect()
+    }
+
+    /// The global roll-up: field-wise sum of every per-shard ledger.
+    pub fn total(&self) -> ShardLedger {
+        self.ledgers()
+            .iter()
+            .fold(ShardLedger::default(), |acc, l| acc.plus(l))
+    }
+}
+
+/// One shard lane: a supervised engine pipeline, the lane's session
+/// registry slice (via its router), and the lane's double-buffer scratch.
+/// Owned by [`ShardSet`]; the leader drives all lanes from one thread
+/// while each lane's engine computes on its own thread.
+pub struct ShardLane {
+    /// Lane index (== the home shard of every session it holds, until a
+    /// drain re-homes refugees here).
+    pub shard: usize,
+    /// Supervised engine pipeline (one tick in flight).
+    pub pipe: TickPipeline,
+    /// The lane's registry slice + stage methods.
+    pub router: StreamRouter,
+    /// Double-buffer scratch: the tick being prepared.
+    pub cur_flat: Vec<f32>,
+    /// Group-state buffer of the tick being prepared.
+    pub cur_group: Option<StreamState>,
+    /// Returned buffers from the last finished tick (reused next prepare).
+    pub spare_flat: Vec<f32>,
+    /// Returned group state from the last finished tick.
+    pub spare_group: Option<StreamState>,
+}
+
+/// N shard lanes plus the dynamic placement that routes streams to them.
+///
+/// Lifecycle: [`ShardSet::spawn`] brings every lane up from one cloneable
+/// engine factory; [`ShardSet::drain`] retires a lane mid-run by
+/// snapshotting its sessions and warm-restoring them on the survivors
+/// (bit-identical continuation); dropping the set joins every engine
+/// thread.
+pub struct ShardSet {
+    lanes: Vec<Option<ShardLane>>,
+    placement: Placement,
+    hop: usize,
+}
+
+impl ShardSet {
+    /// Spawn `shards` lanes, each with its own engine built by `factory`
+    /// on its own thread and its own registry slice configured by `cfg`.
+    /// Every lane gets the same chaos panic schedule (indices counted per
+    /// engine thread). Returns the first lane's [`EngineInfo`] for
+    /// reporting — all lanes are identical by construction.
+    pub fn spawn<F>(
+        factory: F,
+        cfg: StreamConfig,
+        shards: usize,
+        panics: PanicSchedule,
+    ) -> Result<(ShardSet, EngineInfo)>
+    where
+        F: Fn() -> Result<ModelExecutor> + Send + Sync + Clone + 'static,
+    {
+        assert!(shards > 0, "shard count must be positive");
+        let mut lanes = Vec::with_capacity(shards);
+        let mut first_info: Option<EngineInfo> = None;
+        for k in 0..shards {
+            let (pipe, info) = TickPipeline::spawn_supervised(factory.clone(), panics.clone())?;
+            let router = StreamRouter::from_proto(info.proto.clone(), cfg);
+            if first_info.is_none() {
+                first_info = Some(info);
+            }
+            lanes.push(Some(ShardLane {
+                shard: k,
+                pipe,
+                router,
+                cur_flat: Vec::new(),
+                cur_group: None,
+                spare_flat: Vec::new(),
+                spare_group: None,
+            }));
+        }
+        Ok((
+            ShardSet {
+                lanes,
+                placement: Placement::new(shards),
+                hop: cfg.hop,
+            },
+            first_info.expect("shards > 0 spawned at least one lane"),
+        ))
+    }
+
+    /// Total lane count (live + drained).
+    pub fn shards(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The dynamic routing view.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Live lane indices, ascending.
+    pub fn live_shards(&self) -> Vec<usize> {
+        self.placement.live().to_vec()
+    }
+
+    /// The lane currently serving `stream` (see [`Placement::route`]).
+    pub fn route(&self, stream: u64) -> usize {
+        self.placement.route(stream)
+    }
+
+    /// Mutable access to live lane `k`. Errors on a drained lane — the
+    /// caller's routing table is stale if this happens.
+    pub fn lane_mut(&mut self, k: usize) -> Result<&mut ShardLane> {
+        self.lanes
+            .get_mut(k)
+            .and_then(Option::as_mut)
+            .ok_or_else(|| anyhow!("shard {k} is drained"))
+    }
+
+    /// Read access to live lane `k`.
+    pub fn lane(&self, k: usize) -> Option<&ShardLane> {
+        self.lanes.get(k).and_then(Option::as_ref)
+    }
+
+    /// Drain lane `k`: snapshot every resident session (ascending id, so
+    /// the move order is deterministic) and warm-restore each on the
+    /// survivor lane the new placement routes it to. The lane's engine
+    /// thread is joined here. Continuing any moved stream afterwards is
+    /// bit-identical to never having drained (snapshot warm restart;
+    /// health bookkeeping resets per the PR 3 snapshot contract).
+    ///
+    /// The lane must have no tick in flight (retire it first) — draining
+    /// under an in-flight tick would lose consumed chunks. `now` is the
+    /// current logical tick: refugees restore with it as their activity
+    /// stamp so TTL housekeeping doesn't reap them as ancient on arrival.
+    ///
+    /// Returns any victims LRU-evicted from survivor registries to make
+    /// room for the refugees; the caller books them as `Evicted` sheds.
+    pub fn drain(&mut self, k: usize, now: u64) -> Result<Vec<SessionSnapshot>> {
+        let lane = self
+            .lanes
+            .get_mut(k)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow!("shard {k} is drained"))?;
+        if lane.pipe.in_flight() > 0 {
+            // put it back before erroring: the set stays consistent
+            self.lanes[k] = Some(lane);
+            bail!("shard {k} has a tick in flight; retire it before draining");
+        }
+        self.placement.drain(k)?;
+        if self.placement.live().is_empty() {
+            // Last lane out: nothing to restore onto. Dropping the lane
+            // (and its sessions) is the caller's shutdown path; pending
+            // accounting is the caller's job via the returned snapshots.
+            let mut router = lane.router;
+            let ids = router.registry().ids();
+            let snaps = ids.into_iter().filter_map(|id| router.evict(id)).collect();
+            return Ok(snaps);
+        }
+        let mut router = lane.router;
+        let mut displaced = Vec::new();
+        for id in router.registry().ids() {
+            let snap = router.evict(id).expect("listed session exists");
+            let dst = self.placement.route(id);
+            let dst_lane = self
+                .lanes
+                .get_mut(dst)
+                .and_then(Option::as_mut)
+                .expect("route() returns live lanes");
+            // activity re-stamps to `now`; resident state, pending buffer
+            // and windows_done ride the snapshot untouched, so the session
+            // re-enters the survivor's ready set bit-identically
+            if let Some(victim) = dst_lane.router.restore(snap, now) {
+                displaced.push(victim);
+            }
+        }
+        // `lane.pipe` drops here: engine thread joins.
+        Ok(displaced)
+    }
+
+    /// Slice invariant: every session resident on a live lane routes to
+    /// that lane under the current placement — a session's `(h, c)` lives
+    /// exactly where the router would look for it. Panics on violation
+    /// (tests call this after churn/drains).
+    pub fn assert_slice_invariants(&self) {
+        for lane in self.lanes.iter().flatten() {
+            for id in lane.router.registry().ids() {
+                assert_eq!(
+                    self.placement.route(id),
+                    lane.shard,
+                    "session {id} resident on shard {} but routed to {}",
+                    lane.shard,
+                    self.placement.route(id)
+                );
+            }
+        }
+    }
+
+    /// The streaming hop every lane was configured with.
+    pub fn hop(&self) -> usize {
+        self.hop
+    }
+}
+
+/// Result of [`run_sharded_schedule`]: every score in completion order
+/// (per-lane retire order is ascending lane index within a tick) plus the
+/// per-shard conservation ledgers.
+pub struct ShardScheduleReport {
+    /// All scores; group by `stream` for per-stream sequences.
+    pub scores: Vec<StreamScore>,
+    /// Per-home-shard ledgers (each conserves; their sum is the run).
+    pub ledgers: Vec<ShardLedger>,
+}
+
+/// Test/bench harness: drive an explicit per-tick ingest schedule through
+/// N shard lanes and return every score plus per-shard ledgers. The
+/// sharded twin of `run_pipelined_schedule` — same leader protocol per
+/// lane (take_ready(N+1), retire N, gather+submit N+1), no queues, no
+/// shedding, so parity with the unsharded path is free of timing
+/// nondeterminism.
+///
+/// `drain_at` lists `(tick, shard)` rebalance events: at the top of that
+/// tick the named lane retires its in-flight tick, snapshots every
+/// session, and warm-restores them on the survivors — the mid-run
+/// drain/rebalance path of the production loop, made deterministic.
+///
+/// Every scheduled push must be whole hops (`samples.len() % hop == 0`)
+/// so the ingested-window count is exact; leftover pending at the end is
+/// booked as `Shutdown` sheds. Capacity evictions (small `max_sessions`)
+/// are booked as `Evicted` on the victim's home shard.
+pub fn run_sharded_schedule<F>(
+    factory: F,
+    cfg: StreamConfig,
+    shards: usize,
+    schedule: &[Vec<(u64, Vec<f32>)>],
+    drain_at: &[(u64, usize)],
+) -> Result<ShardScheduleReport>
+where
+    F: Fn() -> Result<ModelExecutor> + Send + Sync + Clone + 'static,
+{
+    let (mut set, _info) = ShardSet::spawn(factory, cfg, shards, PanicSchedule::default())?;
+    let acct = ShardAccounting::new(shards);
+    let hop = cfg.hop;
+    let mut out: Vec<StreamScore> = Vec::new();
+    let mut tick = 0u64;
+    let mut feed = schedule.iter();
+    loop {
+        // Rebalance events first: retire the draining lane's in-flight
+        // tick (its scatter must land before its sessions move), then
+        // move every session to the survivors.
+        for &(t, k) in drain_at {
+            if t != tick || !set.placement().is_live(k) {
+                continue;
+            }
+            let lane = set.lane_mut(k)?;
+            if lane.pipe.in_flight() > 0 {
+                let fin = match lane.pipe.wait()? {
+                    TickOutcome::Done(fin) => fin,
+                    TickOutcome::Panicked(_) => {
+                        bail!("engine panicked under the shard schedule harness")
+                    }
+                };
+                for s in lane.router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick) {
+                    book_score(&acct, &s);
+                    out.push(s);
+                }
+            }
+            for victim in set.drain(k, tick)? {
+                acct.book_eviction(&victim, hop);
+            }
+        }
+
+        // Ingest this tick's schedule: windows_in on the home shard, the
+        // chunks onto the serving lane. Whole hops only — the ledger
+        // counts windows, not samples.
+        let fed = match feed.next() {
+            Some(items) => {
+                for (id, samples) in items {
+                    assert_eq!(
+                        samples.len() % hop,
+                        0,
+                        "schedule pushes must be whole hops for exact ledgers"
+                    );
+                    acct.home(*id)
+                        .windows_in
+                        .fetch_add((samples.len() / hop) as u64, Ordering::Relaxed);
+                    let dst = set.route(*id);
+                    let lane = set.lane_mut(dst)?;
+                    if let Some(victim) = lane.router.ingest(*id, samples, tick) {
+                        acct.book_eviction(&victim, hop);
+                    }
+                }
+                true
+            }
+            None => false,
+        };
+
+        // Per live lane, ascending: the exact pipelined leader protocol.
+        // take_ready(N+1) touches only pending buffers, then the retire
+        // of N is the only state write, then gather+submit N+1 — so the
+        // scatter of N strictly precedes the gather of N+1 on every lane
+        // and pipelined == serial holds per stream.
+        let mut all_idle = true;
+        for k in set.live_shards() {
+            let lane = set.lane_mut(k)?;
+            let ids = lane.router.take_ready(&mut lane.cur_flat, tick);
+            if lane.pipe.in_flight() > 0 {
+                let fin = match lane.pipe.wait()? {
+                    TickOutcome::Done(fin) => fin,
+                    TickOutcome::Panicked(_) => {
+                        bail!("engine panicked under the shard schedule harness")
+                    }
+                };
+                for s in lane.router.complete(&fin.ids, &fin.scores, &fin.group, fin.tick) {
+                    book_score(&acct, &s);
+                    out.push(s);
+                }
+                lane.spare_flat = fin.flat;
+                lane.spare_group = Some(fin.group);
+            }
+            if !ids.is_empty() {
+                lane.router.gather_group(&ids, &mut lane.cur_group);
+                let group = lane.cur_group.take().expect("gather_group ensures the group");
+                lane.pipe.submit(PreparedTick {
+                    ids,
+                    flat: std::mem::take(&mut lane.cur_flat),
+                    group,
+                    tick,
+                })?;
+                lane.cur_flat = std::mem::take(&mut lane.spare_flat);
+                lane.cur_group = lane.spare_group.take();
+                all_idle = false;
+            } else if lane.pipe.in_flight() > 0 {
+                all_idle = false;
+            }
+        }
+        if !fed && all_idle {
+            break; // schedule exhausted, backlogs drained, nothing in flight
+        }
+        tick += 1;
+    }
+    // Leftover partial backlogs (below one hop they were never counted as
+    // windows; full hops that never dispatched are shutdown sheds).
+    for k in set.live_shards() {
+        let lane = set.lane_mut(k)?;
+        for id in lane.router.registry().ids() {
+            let pending = lane
+                .router
+                .registry()
+                .get(id)
+                .map_or(0, |s| s.pending_len());
+            acct.home(id)
+                .shed_n(ShedClass::Shutdown, (pending / hop) as u64);
+        }
+    }
+    set.assert_slice_invariants();
+    Ok(ShardScheduleReport {
+        scores: out,
+        ledgers: acct.ledgers(),
+    })
+}
+
+/// Book one completed score on its stream's home shard: served when
+/// finite, quarantined when the fault sweep discarded it.
+fn book_score(acct: &ShardAccounting, s: &StreamScore) {
+    let m = acct.home(s.stream);
+    if s.quarantined {
+        m.quarantine();
+    } else {
+        m.windows_done.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_deterministic_and_covers_all_shards() {
+        for shards in [1usize, 2, 4, 7] {
+            let mut seen = vec![0u64; shards];
+            for id in 0..4096u64 {
+                let k = shard_of(id, shards);
+                assert!(k < shards);
+                assert_eq!(k, shard_of(id, shards), "pure function");
+                seen[k] += 1;
+            }
+            // splitmix avalanche: no shard starves on sequential ids
+            // (perfectly even would be 4096/shards each).
+            let floor = 4096 / shards as u64 / 2;
+            for (k, &n) in seen.iter().enumerate() {
+                assert!(n > floor, "shard {k} starved: {n} of 4096");
+            }
+        }
+    }
+
+    #[test]
+    fn route_sticks_to_home_until_drained() {
+        let mut p = Placement::new(4);
+        let id = 12345u64;
+        let home = p.home(id);
+        assert_eq!(p.route(id), home);
+        // Drain a lane the stream is NOT homed on: route unchanged.
+        let other = (home + 1) % 4;
+        p.drain(other).unwrap();
+        assert_eq!(p.route(id), home, "survivor-homed streams never move");
+        // Drain the home lane: re-routes deterministically to a survivor.
+        p.drain(home).unwrap();
+        let rerouted = p.route(id);
+        assert_ne!(rerouted, home);
+        assert!(p.is_live(rerouted));
+        assert_eq!(rerouted, p.route(id), "re-route is stable");
+        // Double drain is an error, not a silent no-op.
+        assert!(p.drain(home).is_err());
+    }
+
+    #[test]
+    fn ledger_conservation_math() {
+        let acct = ShardAccounting::new(2);
+        acct.metrics(0).windows_in.fetch_add(10, Ordering::Relaxed);
+        acct.metrics(0).windows_done.fetch_add(6, Ordering::Relaxed);
+        acct.metrics(0).shed_n(ShedClass::Evicted, 3);
+        acct.metrics(0).quarantine();
+        acct.metrics(1).windows_in.fetch_add(4, Ordering::Relaxed);
+        acct.metrics(1).windows_done.fetch_add(4, Ordering::Relaxed);
+        let l0 = acct.ledger(0);
+        let l1 = acct.ledger(1);
+        assert!(l0.conserved(), "{l0:?}");
+        assert!(l1.conserved(), "{l1:?}");
+        assert_eq!(l0.dropped(), 3);
+        let total = acct.total();
+        assert_eq!(total.ingested, 14);
+        assert_eq!(total.served, 10);
+        assert!(total.conserved());
+    }
+
+    #[test]
+    fn book_eviction_counts_whole_hops_on_home_shard() {
+        use crate::model::batched::BatchedState;
+        let acct = ShardAccounting::new(4);
+        let victim = SessionSnapshot {
+            id: 99,
+            state: StreamState {
+                batch: 1,
+                layers: vec![BatchedState::zeros(1, 2)],
+            },
+            pending: vec![0.0; 11], // hop 4 -> 2 whole windows lost
+            windows_done: 0,
+        };
+        assert_eq!(acct.book_eviction(&victim, 4), 2);
+        let home = shard_of(99, 4);
+        assert_eq!(acct.ledger(home).sheds.evicted, 2);
+        for k in 0..4 {
+            if k != home {
+                assert_eq!(acct.ledger(k).sheds.evicted, 0, "only the home books");
+            }
+        }
+    }
+}

@@ -25,7 +25,7 @@ use anyhow::Result;
 
 use crate::model::StreamState;
 use crate::runtime::ModelExecutor;
-use crate::stream::{SessionRegistry, SessionSnapshot, StreamConfig};
+use crate::stream::{IngestOutcome, SessionRegistry, SessionSnapshot, StreamConfig};
 
 /// One scored streaming chunk.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -53,6 +53,10 @@ pub struct FaultStats {
     pub recovered_snapshot: u64,
     /// Recoveries that fell back to the zero state (no checkpoint yet).
     pub recovered_zeros: u64,
+    /// TTL evictions deferred because the session was still serving out a
+    /// quarantine backoff (reaping it would have destroyed the last-good
+    /// state it just recovered; see `SessionRegistry::evict_expired`).
+    pub backoff_ttl_deferrals: u64,
 }
 
 impl FaultStats {
@@ -121,9 +125,12 @@ impl StreamRouter {
         &self.registry
     }
 
-    /// Quarantine/recovery counters accumulated so far.
+    /// Quarantine/recovery counters accumulated so far (TTL-deferral
+    /// count is folded in from the registry at read time).
     pub fn fault_stats(&self) -> FaultStats {
-        self.stats
+        let mut stats = self.stats;
+        stats.backoff_ttl_deferrals = self.registry.ttl_deferrals();
+        stats
     }
 
     /// Mark every listed session Suspect: they rode a tick whose engine
@@ -140,15 +147,19 @@ impl StreamRouter {
     }
 
     /// Ingest raw samples for stream `id` at tick `now` (sessions are
-    /// created on first contact).
-    pub fn ingest(&mut self, id: u64, samples: &[f32], now: u64) {
-        self.registry.ingest(id, samples, now);
+    /// created on first contact). Returns the capacity-eviction victim's
+    /// snapshot, if creating the session displaced one — the caller must
+    /// book the victim's pending windows as an `Evicted` shed (or restore
+    /// it elsewhere) to keep the conservation ledger exact.
+    pub fn ingest(&mut self, id: u64, samples: &[f32], now: u64) -> Option<SessionSnapshot> {
+        self.registry.ingest(id, samples, now)
     }
 
     /// Admission-controlled ingest (see [`SessionRegistry::try_ingest`]):
-    /// `false` means the session's backlog cap refused the samples and the
-    /// caller should shed them.
-    pub fn try_ingest(&mut self, id: u64, samples: &[f32], now: u64) -> bool {
+    /// [`IngestOutcome::Refused`] means the session's backlog cap refused
+    /// the samples and the caller should shed them; an admission may
+    /// carry a capacity-eviction victim to account.
+    pub fn try_ingest(&mut self, id: u64, samples: &[f32], now: u64) -> IngestOutcome {
         self.registry.try_ingest(id, samples, now)
     }
 
@@ -302,9 +313,12 @@ impl StreamRouter {
     }
 
     /// Warm restart: reinstall an evicted session; continuing the stream
-    /// is bit-identical to never having evicted it.
-    pub fn restore(&mut self, snap: SessionSnapshot, now: u64) {
-        self.registry.restore(snap, now);
+    /// is bit-identical to never having evicted it. Returns the victim
+    /// LRU-evicted to make room, if the registry was at capacity — the
+    /// shard drain/rebalance path accounts (or re-homes) it.
+    pub fn restore(&mut self, snap: SessionSnapshot, now: u64) -> Option<SessionSnapshot> {
+        let (_, evicted) = self.registry.restore(snap, now);
+        evicted
     }
 }
 

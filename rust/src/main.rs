@@ -36,6 +36,12 @@
 //!                            stalls, misframed chunks, scheduled engine
 //!                            panics, e.g. "seed=7,nan=0.02,panic@5"
 //!                            (coordinator::chaos; requires --ingress)
+//!              [--shards N]  shard the session-serving tier over N lanes,
+//!                            each owning its own engine + registry slice
+//!                            (coordinator::shard); per-stream scores are
+//!                            bitwise identical at any N, and per-shard
+//!                            conservation ledgers sum exactly to the
+//!                            global one (N > 1 requires --ingress)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -376,6 +382,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(a) = &arrival_flag {
         cfg.arrival = gwlstm::coordinator::Arrival::parse(a)?;
     }
+    // --shards N fans the streaming ingress tier out over N shard lanes
+    // (coordinator::shard), each with its own engine and registry slice.
+    let shards_flag = args.get("shards").is_some();
+    cfg.shards = args.usize_or("shards", cfg.shards)?;
     let arch = if cfg.model.contains("nominal") { "nominal" } else { "small" };
     let ts_flag = args.get("ts").map(str::to_string);
     let ts = args.usize_or("ts", if arch == "nominal" { 100 } else { 8 })?;
@@ -423,6 +433,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // producers and the supervised engine thread.
         bail!("--faults requires --ingress (the chaos harness injects at the ingress producers)");
     }
+    if cfg.shards == 0 {
+        bail!("--shards 0 is invalid (use 1 for the unsharded serving tier)");
+    }
+    if shards_flag && !cfg.streaming {
+        // Reject-don't-ignore: shard lanes partition the session registry,
+        // which exists only in the streaming state service.
+        bail!("--shards requires --streaming (shard lanes partition the session registry)");
+    }
+    if cfg.shards > 1 && !cfg.ingress {
+        bail!(
+            "--shards N > 1 requires --ingress (shard lanes are fed by the \
+             per-shard ingress queues; the serial loop is single-lane)"
+        );
+    }
     let policy = if max_batch > 1 {
         Policy::MicroBatch {
             max_batch,
@@ -464,6 +488,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 report.sheds.total(),
                 report.dropped
             );
+        }
+        // Sharded: the contract must hold per shard AND roll up exactly —
+        // a leak that cancels across shards is still a leak.
+        for l in &report.shard_ledgers {
+            if !l.conserved() {
+                bail!(
+                    "per-shard conservation violated under faults on shard {}: \
+                     ingested {} != served {} + dropped {} + quarantined {}",
+                    l.shard,
+                    l.ingested,
+                    l.served,
+                    l.dropped(),
+                    l.quarantined
+                );
+            }
+        }
+        if !report.shard_ledgers.is_empty() {
+            let sum_in: u64 = report.shard_ledgers.iter().map(|l| l.ingested).sum();
+            let sum_q: u64 = report.shard_ledgers.iter().map(|l| l.quarantined).sum();
+            let sum_drop: u64 = report.shard_ledgers.iter().map(|l| l.dropped()).sum();
+            if sum_in != report.ingested
+                || sum_q != report.quarantined
+                || sum_drop != report.dropped
+            {
+                bail!(
+                    "shard ledgers do not sum to the global ledger: \
+                     in {sum_in}/{} quarantined {sum_q}/{} dropped {sum_drop}/{}",
+                    report.ingested,
+                    report.quarantined,
+                    report.dropped
+                );
+            }
         }
     }
     Ok(())

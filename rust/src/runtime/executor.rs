@@ -135,6 +135,29 @@ impl ModelExecutor {
         ModelExecutor::native(weights, spec, policy, threads)
     }
 
+    /// A cloneable factory producing identical native executors on
+    /// demand — the multi-engine ownership hook of the sharded serving
+    /// tier. Each shard lane (and each supervised restart within a lane)
+    /// calls the factory to get its own `PackedAutoencoder` packed from
+    /// the same weights with the same math tier and thread count, so
+    /// every engine in the fleet is bit-identical by construction: a
+    /// stream's scores cannot depend on which lane served it.
+    pub fn native_factory(
+        weights: &AutoencoderWeights,
+        name: &str,
+        ts: usize,
+        policy: MathPolicy,
+        threads: usize,
+    ) -> impl Fn() -> Result<ModelExecutor> + Send + Sync + Clone + 'static {
+        let weights = weights.clone();
+        let name = name.to_string();
+        move || {
+            Ok(ModelExecutor::native_from_weights_policy_threads(
+                &weights, &name, ts, policy, threads,
+            ))
+        }
+    }
+
     fn native(
         weights: &AutoencoderWeights,
         spec: VariantSpec,

@@ -44,7 +44,7 @@ use crate::model::batched::StreamState;
 pub mod registry;
 pub mod session;
 
-pub use registry::SessionRegistry;
+pub use registry::{IngestOutcome, SessionRegistry};
 pub use session::{SessionHealth, SessionSnapshot, StreamSession, MAX_BACKOFF_TICKS};
 
 /// Knobs of the streaming state service.
@@ -64,9 +64,13 @@ pub struct StreamConfig {
     pub hop: usize,
     /// Idle ticks after which a session is evicted (its resident state is
     /// returned as a [`SessionSnapshot`] for optional warm restart).
+    /// Idleness is judged on [`StreamSession::activity`] — the latest of
+    /// accepted progress and *refused* admission offers — and sessions
+    /// serving out a quarantine backoff are exempt until it ends.
     pub ttl_ticks: u64,
     /// Registry capacity: creating a session beyond this evicts the
-    /// least-recently-active one first.
+    /// least-recently-active one first, handing the victim's snapshot
+    /// back to the caller for shed accounting / warm restart.
     pub max_sessions: usize,
     /// Per-session backlog cap in full hops: admission-controlled ingest
     /// ([`SessionRegistry::try_ingest`]) refuses samples that would push a

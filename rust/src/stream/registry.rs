@@ -14,14 +14,59 @@ use crate::model::batched::StreamState;
 use super::session::{SessionSnapshot, StreamSession};
 use super::StreamConfig;
 
+/// Outcome of an admission-controlled ingest
+/// ([`SessionRegistry::try_ingest`]).
+///
+/// Admission can *succeed and still evict*: creating the session past
+/// capacity LRU-evicts another stream, whose snapshot is returned here so
+/// the caller can account its lost pending windows (and, if it wants,
+/// park the snapshot for warm restart) instead of leaking them from the
+/// conservation ledger.
+#[derive(Debug)]
+pub enum IngestOutcome {
+    /// Samples admitted. `evicted` carries the capacity-eviction victim,
+    /// if admission had to make room.
+    Admitted {
+        /// LRU victim displaced by this admission, if any.
+        evicted: Option<SessionSnapshot>,
+    },
+    /// Samples refused by the per-session backlog cap; nothing admitted.
+    /// An existing session still gets its offer clock stamped
+    /// ([`StreamSession::activity`]) so saturation is not mistaken for
+    /// idleness by TTL eviction.
+    Refused,
+}
+
+impl IngestOutcome {
+    /// Whether the samples were admitted.
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, IngestOutcome::Admitted { .. })
+    }
+
+    /// The capacity-eviction victim, if admission displaced one.
+    pub fn into_evicted(self) -> Option<SessionSnapshot> {
+        match self {
+            IngestOutcome::Admitted { evicted } => evicted,
+            IngestOutcome::Refused => None,
+        }
+    }
+}
+
 /// Streaming sessions keyed by stream id.
 ///
 /// Eviction has two triggers, both returning [`SessionSnapshot`]s so the
 /// caller can warm-restart later instead of losing stream history:
-/// * **TTL** — [`SessionRegistry::evict_expired`] removes sessions idle
-///   longer than [`StreamConfig::ttl_ticks`];
+/// * **TTL** — [`SessionRegistry::evict_expired`] removes sessions whose
+///   [`StreamSession::activity`] clock is idle longer than
+///   [`StreamConfig::ttl_ticks`]; sessions serving out a quarantine
+///   backoff are exempt (they are *deliberately* idle — reaping them
+///   would destroy the state they are about to recover from);
 /// * **capacity** — creating a session past
-///   [`StreamConfig::max_sessions`] evicts the least-recently-active one.
+///   [`StreamConfig::max_sessions`] evicts the least-recently-active one,
+///   returning its snapshot through [`SessionRegistry::touch`] /
+///   [`SessionRegistry::ingest`] / [`SessionRegistry::try_ingest`] /
+///   [`SessionRegistry::restore`] so the displaced pending samples can be
+///   booked against a shed class instead of silently vanishing.
 ///
 /// ```
 /// use gwlstm::model::{AutoencoderWeights, PackedAutoencoder};
@@ -47,6 +92,10 @@ pub struct SessionRegistry {
     /// Batch-1 zero-state template cloned into every new session.
     proto: StreamState,
     sessions: HashMap<u64, StreamSession>,
+    /// Cumulative count of TTL evictions *deferred* because the session
+    /// was serving out a quarantine backoff (see
+    /// [`SessionRegistry::evict_expired`]).
+    ttl_deferrals: u64,
 }
 
 impl SessionRegistry {
@@ -61,6 +110,7 @@ impl SessionRegistry {
             cfg,
             proto,
             sessions: HashMap::new(),
+            ttl_deferrals: 0,
         }
     }
 
@@ -91,35 +141,41 @@ impl SessionRegistry {
 
     /// Get-or-create the session for `id` and stamp its activity tick.
     /// Creating past capacity first evicts the least-recently-active
-    /// session (its snapshot is dropped here — use
-    /// [`SessionRegistry::evict`] for an orderly handover).
-    pub fn touch(&mut self, id: u64, now: u64) -> &mut StreamSession {
-        self.make_room_for(id);
+    /// session, whose snapshot is returned so the caller can account its
+    /// pending samples (booking them as an `Evicted` shed) and optionally
+    /// warm-restart it later — dropping it silently would leak the
+    /// `ingested == served + dropped + quarantined` conservation ledger.
+    pub fn touch(&mut self, id: u64, now: u64) -> (&mut StreamSession, Option<SessionSnapshot>) {
+        let evicted = self.make_room_for(id);
         let proto = &self.proto;
         let sess = self
             .sessions
             .entry(id)
             .or_insert_with(|| StreamSession::new(id, proto.clone(), now));
         sess.last_tick = now;
-        sess
+        (sess, evicted)
     }
 
     /// Evict the least-recently-active session if inserting `id` would
-    /// exceed capacity (no-op when `id` is already resident). Every
-    /// insertion path — [`SessionRegistry::touch`] and
-    /// [`SessionRegistry::restore`] — goes through this, so the
-    /// max_sessions memory bound cannot be bypassed.
-    fn make_room_for(&mut self, id: u64) {
+    /// exceed capacity (no-op when `id` is already resident), returning
+    /// the victim's snapshot. Every insertion path —
+    /// [`SessionRegistry::touch`] and [`SessionRegistry::restore`] — goes
+    /// through this, so the max_sessions memory bound cannot be bypassed.
+    /// The LRU key is [`StreamSession::activity`] (not raw `last_tick`),
+    /// so a saturated-but-offering stream outranks a truly idle one.
+    fn make_room_for(&mut self, id: u64) -> Option<SessionSnapshot> {
         if !self.sessions.contains_key(&id) && self.sessions.len() >= self.cfg.max_sessions {
-            if let Some(idlest) = self
+            let idlest = self
                 .sessions
                 .values()
-                .min_by_key(|s| (s.last_tick, s.id))
-                .map(|s| s.id)
-            {
-                self.sessions.remove(&idlest);
-            }
+                .min_by_key(|s| (s.activity(), s.id))
+                .map(|s| s.id)?;
+            return self
+                .sessions
+                .remove(&idlest)
+                .map(StreamSession::into_snapshot);
         }
+        None
     }
 
     /// The batch-1 zero-state template new sessions are cloned from (the
@@ -136,25 +192,40 @@ impl SessionRegistry {
     }
 
     /// Ingest raw samples for stream `id` at tick `now` (get-or-create).
-    pub fn ingest(&mut self, id: u64, samples: &[f32], now: u64) {
-        self.touch(id, now).push(samples);
+    /// Returns the capacity-eviction victim's snapshot, if creating the
+    /// session displaced one (see [`SessionRegistry::touch`]).
+    pub fn ingest(&mut self, id: u64, samples: &[f32], now: u64) -> Option<SessionSnapshot> {
+        let (sess, evicted) = self.touch(id, now);
+        sess.push(samples);
+        evicted
     }
 
-    /// Admission-controlled ingest: refuses (returns `false`, touching
-    /// nothing — not even the session's activity tick) when accepting
-    /// `samples` would push the session's pending backlog past
-    /// [`StreamConfig::max_pending_hops`] full hops. This is the
+    /// Admission-controlled ingest: refuses ([`IngestOutcome::Refused`])
+    /// when accepting `samples` would push the session's pending backlog
+    /// past [`StreamConfig::max_pending_hops`] full hops. This is the
     /// registry-side backpressure hook of the ingress pipeline: a stream
     /// whose chunks arrive faster than dispatch drains them gets its
     /// overflow shed at admission instead of buffering unboundedly.
-    pub fn try_ingest(&mut self, id: u64, samples: &[f32], now: u64) -> bool {
+    ///
+    /// Refusal does *not* advance `last_tick` (no progress was made), but
+    /// it does stamp the session's offer clock so
+    /// [`StreamSession::activity`] stays fresh — a producer bouncing off
+    /// a full backlog is hot, and TTL-evicting it mid-saturation would
+    /// destroy the very state its queued windows need. A refused
+    /// *creation* (brand-new id whose first chunk already exceeds the
+    /// cap) leaves no session behind and therefore nothing to stamp.
+    pub fn try_ingest(&mut self, id: u64, samples: &[f32], now: u64) -> IngestOutcome {
         let cap = self.cfg.max_pending_hops.saturating_mul(self.cfg.hop);
         let pending = self.sessions.get(&id).map_or(0, StreamSession::pending_len);
         if pending + samples.len() > cap {
-            return false;
+            if let Some(sess) = self.sessions.get_mut(&id) {
+                sess.note_offered(now);
+            }
+            return IngestOutcome::Refused;
         }
-        self.ingest(id, samples, now);
-        true
+        IngestOutcome::Admitted {
+            evicted: self.ingest(id, samples, now),
+        }
     }
 
     /// Ids of every session with a full hop pending, ascending — the
@@ -181,31 +252,65 @@ impl SessionRegistry {
         self.sessions.remove(&id).map(StreamSession::into_snapshot)
     }
 
-    /// Remove every session idle for more than
-    /// [`StreamConfig::ttl_ticks`] at tick `now`; returns their snapshots
-    /// in ascending id order.
+    /// Remove every session whose [`StreamSession::activity`] clock is
+    /// idle for more than [`StreamConfig::ttl_ticks`] at tick `now`;
+    /// returns their snapshots in ascending id order.
+    ///
+    /// Sessions still serving out a quarantine backoff are exempt: they
+    /// are held out of [`SessionRegistry::ready_ids`] *by design*, so
+    /// their idleness is the recovery protocol working, not abandonment.
+    /// Reaping one mid-backoff would destroy the freshly restored
+    /// last-good state before it ever gets a chance to score again (the
+    /// snapshot taken here drops health bookkeeping, so the restore point
+    /// would be lost). Each deferral-that-would-have-expired is counted
+    /// in [`SessionRegistry::ttl_deferrals`]; the session becomes
+    /// TTL-eligible again the tick its backoff ends.
     pub fn evict_expired(&mut self, now: u64) -> Vec<SessionSnapshot> {
         let ttl = self.cfg.ttl_ticks;
+        let mut deferred = 0u64;
         let mut dead: Vec<u64> = self
             .sessions
             .values()
-            .filter(|s| now.saturating_sub(s.last_tick) > ttl)
+            .filter(|s| {
+                let expired = now.saturating_sub(s.activity()) > ttl;
+                if expired && s.in_backoff(now) {
+                    deferred += 1;
+                    return false;
+                }
+                expired
+            })
             .map(|s| s.id)
             .collect();
+        self.ttl_deferrals += deferred;
         dead.sort_unstable();
         dead.into_iter().filter_map(|id| self.evict(id)).collect()
+    }
+
+    /// Cumulative count of TTL evictions deferred because the session was
+    /// mid-backoff (surfaced through `FaultStats`).
+    pub fn ttl_deferrals(&self) -> u64 {
+        self.ttl_deferrals
     }
 
     /// Warm restart: reinstall an evicted session with its resident state
     /// and unconsumed samples. Continuing the stream afterwards is
     /// bit-identical to never having evicted it. Replaces any session
     /// currently holding the same id, and enforces the same capacity
-    /// bound as [`SessionRegistry::touch`] (LRU-evicts first if full).
-    pub fn restore(&mut self, snap: SessionSnapshot, now: u64) -> &mut StreamSession {
+    /// bound as [`SessionRegistry::touch`] (LRU-evicts first if full,
+    /// returning the victim's snapshot so a drain/rebalance loop can
+    /// keep its ledger exact).
+    pub fn restore(
+        &mut self,
+        snap: SessionSnapshot,
+        now: u64,
+    ) -> (&mut StreamSession, Option<SessionSnapshot>) {
         let id = snap.id;
-        self.make_room_for(id);
+        let evicted = self.make_room_for(id);
         self.sessions.insert(id, snap.into_session(now));
-        self.sessions.get_mut(&id).expect("just inserted")
+        (
+            self.sessions.get_mut(&id).expect("just inserted"),
+            evicted,
+        )
     }
 }
 
@@ -268,10 +373,37 @@ mod tests {
         reg.touch(1, 0);
         reg.touch(2, 1);
         reg.touch(1, 2); // 1 is now fresher than 2
-        reg.touch(3, 3); // over capacity: evicts 2
+        let (_, evicted) = reg.touch(3, 3); // over capacity: evicts 2
         assert_eq!(reg.len(), 2);
         assert!(reg.get(2).is_none());
         assert!(reg.get(1).is_some() && reg.get(3).is_some());
+        assert_eq!(
+            evicted.expect("victim snapshot must be returned").id,
+            2,
+            "capacity eviction must hand the victim back, not drop it"
+        );
+    }
+
+    #[test]
+    fn capacity_eviction_returns_victim_pending_for_accounting() {
+        // Satellite-1 regression: the LRU victim's unconsumed samples
+        // must come back up through every insertion path so the caller
+        // can book them as a shed instead of leaking the ledger.
+        let mut reg = registry(2, 1000, 1);
+        reg.ingest(5, &[1.0, 2.0, 3.0, 4.0], 0);
+        let evicted = reg.ingest(6, &[9.0; 2], 1);
+        let snap = evicted.expect("ingest past capacity must return victim");
+        assert_eq!(snap.id, 5);
+        assert_eq!(snap.pending.len(), 4, "victim's backlog rides the snapshot");
+
+        // try_ingest surfaces the same victim through IngestOutcome.
+        let out = reg.try_ingest(7, &[0.0; 2], 2);
+        assert!(out.is_admitted());
+        assert_eq!(out.into_evicted().expect("victim").id, 6);
+
+        // restore past capacity also reports its victim.
+        let (_, bumped) = reg.restore(snap, 3);
+        assert_eq!(bumped.expect("restore victim").id, 7);
     }
 
     #[test]
@@ -292,23 +424,90 @@ mod tests {
     fn try_ingest_enforces_backlog_cap() {
         let mut reg = registry(2, 100, 8);
         reg.cfg.max_pending_hops = 3; // cap = 6 samples
-        assert!(reg.try_ingest(1, &[0.0; 4], 0));
-        assert!(reg.try_ingest(1, &[0.0; 2], 1), "exactly at cap admits");
-        assert!(!reg.try_ingest(1, &[0.0; 1], 2), "past cap refuses");
+        assert!(reg.try_ingest(1, &[0.0; 4], 0).is_admitted());
+        assert!(
+            reg.try_ingest(1, &[0.0; 2], 1).is_admitted(),
+            "exactly at cap admits"
+        );
+        assert!(
+            !reg.try_ingest(1, &[0.0; 1], 2).is_admitted(),
+            "past cap refuses"
+        );
         assert_eq!(reg.get(1).unwrap().pending_len(), 6);
         assert_eq!(
             reg.get(1).unwrap().last_tick,
             1,
-            "refused ingest must not stamp activity"
+            "refused ingest must not stamp last_tick (no progress)"
+        );
+        assert_eq!(
+            reg.get(1).unwrap().activity(),
+            2,
+            "refused ingest must still stamp the offer clock"
         );
         // draining a chunk frees capacity again
         let mut out = Vec::new();
         assert!(reg.get_mut(1).unwrap().take_chunk_into(2, &mut out));
-        assert!(reg.try_ingest(1, &[0.0; 2], 3));
+        assert!(reg.try_ingest(1, &[0.0; 2], 3).is_admitted());
         // a brand-new session obeys the same cap
-        assert!(!reg.try_ingest(9, &[0.0; 7], 3));
+        assert!(!reg.try_ingest(9, &[0.0; 7], 3).is_admitted());
         assert!(reg.get(9).is_none(), "refused creation leaves no session");
-        assert!(reg.try_ingest(9, &[0.0; 6], 3));
+        assert!(reg.try_ingest(9, &[0.0; 6], 3).is_admitted());
+    }
+
+    #[test]
+    fn saturated_session_survives_ttl_while_offering() {
+        // Satellite-3 regression: a producer hammering a full backlog
+        // must not be TTL-reaped as "idle" — its refused offers count as
+        // activity. Once the offers stop, TTL applies normally.
+        let mut reg = registry(2, 5, 8);
+        reg.cfg.max_pending_hops = 1; // cap = 2 samples
+        assert!(reg.try_ingest(1, &[0.0; 2], 0).is_admitted());
+        for now in 1..=20 {
+            assert!(
+                !reg.try_ingest(1, &[0.0; 2], now).is_admitted(),
+                "backlog stays full: every offer refused"
+            );
+            assert!(
+                reg.evict_expired(now).is_empty(),
+                "hot-but-saturated session must survive TTL at tick {now}"
+            );
+        }
+        assert_eq!(reg.get(1).unwrap().last_tick, 0, "no progress was made");
+        // Offers stop at tick 20; ttl_ticks = 5 → expired at tick 26.
+        assert!(reg.evict_expired(25).is_empty());
+        let gone = reg.evict_expired(26);
+        assert_eq!(gone.len(), 1, "idle (no offers) past TTL finally evicts");
+        assert_eq!(gone[0].id, 1);
+    }
+
+    #[test]
+    fn ttl_defers_to_quarantine_backoff() {
+        // Satellite-2 regression with ttl_ticks < max backoff (32): a
+        // session deep in its backoff ladder must not be TTL-reaped
+        // mid-backoff (that would destroy the state it just restored);
+        // it becomes TTL-eligible again once the backoff ends.
+        let mut reg = registry(2, 4, 8);
+        reg.ingest(1, &[0.0; 2], 0);
+        // Climb the ladder to the 32-tick cap (> ttl_ticks = 4).
+        for k in 0..8 {
+            reg.get_mut(1).unwrap().quarantine(k);
+        }
+        let s = reg.get(1).unwrap();
+        assert!(s.in_backoff(7 + 32 - 1), "backoff outlives the TTL window");
+        let backoff_end = 7 + 32;
+
+        assert_eq!(reg.ttl_deferrals(), 0);
+        for now in 12..backoff_end {
+            assert!(
+                reg.evict_expired(now).is_empty(),
+                "mid-backoff session must be TTL-exempt at tick {now}"
+            );
+        }
+        assert!(reg.ttl_deferrals() > 0, "deferrals are counted");
+
+        let gone = reg.evict_expired(backoff_end);
+        assert_eq!(gone.len(), 1, "backoff over: TTL applies again");
+        assert_eq!(gone[0].id, 1);
     }
 
     #[test]
@@ -327,9 +526,10 @@ mod tests {
         reg.get_mut(7).unwrap().state.layers[0].c[1] = 0.5;
         let snap = reg.evict(7).unwrap();
         assert!(reg.is_empty());
-        let s = reg.restore(snap, 9);
+        let (s, bumped) = reg.restore(snap, 9);
         assert_eq!(s.state.layers[0].c[1], 0.5);
         assert_eq!(s.pending_len(), 3);
         assert_eq!(s.last_tick, 9);
+        assert!(bumped.is_none(), "restore under capacity evicts nobody");
     }
 }

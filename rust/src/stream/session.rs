@@ -79,9 +79,17 @@ pub struct StreamSession {
     pub state: StreamState,
     /// Ingested samples not yet consumed by a dispatch.
     pending: Vec<f32>,
-    /// Tick of the last ingest or dispatch touching this session (TTL and
-    /// LRU eviction key).
+    /// Tick of the last *accepted* ingest or dispatch touching this
+    /// session. Consumed-progress clock only; eviction decisions key on
+    /// [`StreamSession::activity`], which also folds in refused offers.
     pub last_tick: u64,
+    /// Tick of the last *refused* admission attempt
+    /// ([`super::SessionRegistry::try_ingest`] bouncing off the backlog
+    /// cap). A saturated-but-hot producer keeps this fresh even though
+    /// `last_tick` stalls, so TTL/LRU eviction — which consults
+    /// [`StreamSession::activity`] — does not reap a stream that is
+    /// actively offering data it cannot yet admit.
+    last_offered: u64,
     /// Tick the session was (re)created at.
     pub created_tick: u64,
     /// Chunks scored through this session since creation/restore.
@@ -108,6 +116,7 @@ impl StreamSession {
             state,
             pending: Vec::new(),
             last_tick: now,
+            last_offered: now,
             created_tick: now,
             windows_done: 0,
             health: SessionHealth::Healthy,
@@ -126,6 +135,22 @@ impl StreamSession {
     /// Samples ingested but not yet consumed.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// The session's activity clock for TTL/LRU eviction: the latest of
+    /// the last accepted ingest/dispatch (`last_tick`) and the last
+    /// *refused* admission offer. A producer hammering a full backlog is
+    /// hot, not idle — evicting it would destroy resident state the very
+    /// stream is waiting to extend.
+    pub fn activity(&self) -> u64 {
+        self.last_tick.max(self.last_offered)
+    }
+
+    /// Record a refused admission offer at tick `now` (monotone). Called
+    /// by [`super::SessionRegistry::try_ingest`] on the refusal path so
+    /// saturation still counts as activity.
+    pub(crate) fn note_offered(&mut self, now: u64) {
+        self.last_offered = self.last_offered.max(now);
     }
 
     /// Whether a full hop-sized chunk is ready to dispatch.
@@ -268,6 +293,7 @@ impl SessionSnapshot {
             state: self.state,
             pending: self.pending,
             last_tick: now,
+            last_offered: now,
             created_tick: now,
             windows_done: self.windows_done,
             health: SessionHealth::Healthy,
@@ -394,6 +420,20 @@ mod tests {
         assert_eq!(back.quarantines, 0);
         assert!(!back.has_last_good());
         assert!(!back.in_backoff(2));
+    }
+
+    #[test]
+    fn activity_folds_in_refused_offers() {
+        let mut s = StreamSession::new(1, state1(), 0);
+        s.last_tick = 3;
+        assert_eq!(s.activity(), 3);
+        s.note_offered(7);
+        assert_eq!(s.last_tick, 3, "refusal must not advance last_tick");
+        assert_eq!(s.activity(), 7, "refused offer counts as activity");
+        s.note_offered(5);
+        assert_eq!(s.activity(), 7, "offer clock is monotone");
+        let back = s.into_snapshot().into_session(10);
+        assert_eq!(back.activity(), 10, "restore re-bases both clocks");
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! Sharded-tier contracts: splitting the session registry across N shard
+//! lanes must change *nothing* numerically and must lose *nothing* from
+//! the conservation ledger — including across a mid-run drain/rebalance.
+//!
+//! Contracts pinned here (the acceptance criteria of the shard tentpole):
+//!
+//! 1. **Shard parity** — any stream's score sequence under
+//!    [`run_sharded_schedule`] at shards ∈ {1, 2, 4} is bit-identical to
+//!    the unsharded pipeline ([`run_pipelined_schedule`]) over the same
+//!    ingest schedule, in both math tiers, at engine threads ∈ {1, 4}.
+//! 2. **Drain bit-exactness** — draining lanes mid-run (snapshot warm
+//!    restart onto the survivors) leaves every stream's sequence
+//!    bit-identical to never having sharded at all.
+//! 3. **Ledger roll-up** — each per-shard ledger conserves on its own
+//!    (`ingested == served + dropped + quarantined`) and the field-wise
+//!    sum of the per-shard ledgers IS the global ledger, exactly — under
+//!    clean runs, capacity-eviction churn, and the seeded chaos plan.
+//! 4. **Eviction accounting** — an LRU victim's unconsumed windows land
+//!    in the `Evicted` shed class instead of vanishing (the PR 8
+//!    `make_room_for` fix), at registry scale (100k churning ids) and
+//!    through the sharded serving path.
+
+use std::collections::HashMap;
+
+use gwlstm::config::ServeConfig;
+use gwlstm::coordinator::ingress::run_pipelined_schedule;
+use gwlstm::coordinator::{
+    run_serving_streaming, run_sharded_schedule, shard_of, FaultSpec, StreamScore,
+};
+use gwlstm::model::batched::{BatchedState, StreamState};
+use gwlstm::model::{AutoencoderWeights, MathPolicy};
+use gwlstm::runtime::ModelExecutor;
+use gwlstm::stream::{SessionRegistry, StreamConfig};
+use gwlstm::util::rng::Rng;
+
+/// Per-stream score sequences, bit-cast: scores arrive interleaved across
+/// lanes (retire order is per-tick, ascending lane), but within one stream
+/// the order is its chunk order — the only order parity can promise.
+fn per_stream(scores: &[StreamScore]) -> HashMap<u64, Vec<(u32, bool)>> {
+    let mut by: HashMap<u64, Vec<(u32, bool)>> = HashMap::new();
+    for s in scores {
+        by.entry(s.stream)
+            .or_default()
+            .push((s.score.to_bits(), s.quarantined));
+    }
+    by
+}
+
+/// A ragged multi-session schedule: sessions skip ticks, push 1–3 whole
+/// hops at once (backlog), and join late. Whole hops only — the sharded
+/// harness requires it for exact window ledgers.
+fn ragged_schedule(seed: u64, hop: usize, sessions: usize, ticks: usize) -> Vec<Vec<(u64, Vec<f32>)>> {
+    let mut rng = Rng::new(seed);
+    let mut schedule = Vec::with_capacity(ticks);
+    for t in 0..ticks {
+        let mut items = Vec::new();
+        for s in 0..sessions {
+            if t < s % 4 {
+                continue; // staggered late joiners
+            }
+            if rng.bool(0.3) {
+                continue; // skipped tick
+            }
+            let hops = 1 + rng.below(3) as usize;
+            let chunk: Vec<f32> = (0..hop * hops).map(|_| rng.gaussian() as f32).collect();
+            items.push((s as u64, chunk));
+        }
+        schedule.push(items);
+    }
+    schedule
+}
+
+/// Windows a schedule produces (whole hops by construction).
+fn schedule_windows(schedule: &[Vec<(u64, Vec<f32>)>], hop: usize) -> u64 {
+    schedule
+        .iter()
+        .flatten()
+        .map(|(_, samples)| (samples.len() / hop) as u64)
+        .sum()
+}
+
+#[test]
+fn sharded_schedule_bitidentical_to_unsharded_pipeline() {
+    // Contract 1: shards x threads x math tiers. The lockstep batch shares
+    // weight traversals, never operands, and every lane runs an identical
+    // engine — so a stream's sequence is invariant under the shard count.
+    let hop = 6usize;
+    let sessions = 6usize;
+    let w = AutoencoderWeights::synthetic(0x54A2D, "small");
+    for policy in [MathPolicy::BitExact, MathPolicy::FastSimd] {
+        for threads in [1usize, 4] {
+            let schedule = ragged_schedule(21, hop, sessions, 10);
+            let windows = schedule_windows(&schedule, hop);
+            let cfg = StreamConfig {
+                hop,
+                ..Default::default()
+            };
+            let factory = ModelExecutor::native_factory(&w, "shard_ref", hop, policy, threads);
+            let want = per_stream(&run_pipelined_schedule(factory.clone(), cfg, &schedule).unwrap());
+            assert!(!want.is_empty(), "reference produced no work");
+            for shards in [1usize, 2, 4] {
+                let report =
+                    run_sharded_schedule(factory.clone(), cfg, shards, &schedule, &[]).unwrap();
+                let got = per_stream(&report.scores);
+                assert_eq!(
+                    got, want,
+                    "{policy:?} threads={threads} shards={shards}: sharded diverged"
+                );
+                // Contract 3 on the same run: each ledger closes, the sum
+                // is the schedule, nothing was shed on a clean run.
+                assert_eq!(report.ledgers.len(), shards);
+                for l in &report.ledgers {
+                    assert!(l.conserved(), "shard {} ledger leaked: {l:?}", l.shard);
+                }
+                let total = report
+                    .ledgers
+                    .iter()
+                    .fold(gwlstm::coordinator::ShardLedger::default(), |a, l| a.plus(l));
+                assert_eq!(total.ingested, windows, "every scheduled window counted");
+                assert_eq!(total.served, report.scores.len() as u64);
+                assert_eq!(total.quarantined, 0, "clean run");
+                assert_eq!(total.dropped(), 0, "clean run sheds nothing");
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_run_drain_is_bit_exact_and_conserves() {
+    // Contract 2: drain two of four lanes mid-schedule. Refugees move via
+    // snapshot warm restart; their continuation must be bit-identical to
+    // the unsharded run, and the home-shard ledgers must still close.
+    let hop = 5usize;
+    let sessions = 16usize; // enough ids that every lane homes several
+    let w = AutoencoderWeights::synthetic(0xD4A1, "small");
+    for policy in [MathPolicy::BitExact, MathPolicy::FastSimd] {
+        let schedule = ragged_schedule(33, hop, sessions, 12);
+        let windows = schedule_windows(&schedule, hop);
+        let cfg = StreamConfig {
+            hop,
+            ..Default::default()
+        };
+        let factory = ModelExecutor::native_factory(&w, "drain_ref", hop, policy, 1);
+        let want = per_stream(&run_pipelined_schedule(factory.clone(), cfg, &schedule).unwrap());
+        // Sanity: the drained lanes actually homed streams, so the drain
+        // moved real state instead of vacuously passing.
+        assert!(
+            (0..sessions as u64).any(|id| shard_of(id, 4) == 1),
+            "no stream homed on lane 1 — drain test is vacuous"
+        );
+        let report =
+            run_sharded_schedule(factory, cfg, 4, &schedule, &[(3, 1), (7, 2)]).unwrap();
+        let got = per_stream(&report.scores);
+        assert_eq!(
+            got, want,
+            "{policy:?}: drained run diverged from the unsharded pipeline"
+        );
+        for l in &report.ledgers {
+            assert!(l.conserved(), "shard {} ledger leaked: {l:?}", l.shard);
+        }
+        let total = report
+            .ledgers
+            .iter()
+            .fold(gwlstm::coordinator::ShardLedger::default(), |a, l| a.plus(l));
+        assert_eq!(total.ingested, windows);
+        assert_eq!(total.served, report.scores.len() as u64);
+        assert_eq!(total.dropped(), 0, "default capacity: drains evict no one");
+    }
+}
+
+#[test]
+fn eviction_churn_books_victims_and_conserves() {
+    // Contracts 3 + 4: squeeze the per-lane registries so LRU churn fires
+    // constantly. Victims' unconsumed windows must land in the Evicted
+    // shed class (never vanish), and every per-shard ledger must still
+    // close exactly.
+    let hop = 4usize;
+    let w = AutoencoderWeights::synthetic(0xEC7, "small");
+    let cfg = StreamConfig {
+        hop,
+        max_sessions: 2, // per lane: 24 streams churn hard through 2 slots
+        ..Default::default()
+    };
+    let mut rng = Rng::new(9);
+    let schedule: Vec<Vec<(u64, Vec<f32>)>> = (0..10)
+        .map(|t| {
+            (0..24u64)
+                .filter(|s| (s + t) % 3 != 0)
+                .map(|s| {
+                    // two hops per push: one can dispatch next tick, one
+                    // sits pending — so evictions always strand windows
+                    let chunk: Vec<f32> =
+                        (0..hop * 2).map(|_| rng.gaussian() as f32).collect();
+                    (s, chunk)
+                })
+                .collect()
+        })
+        .collect();
+    let windows = schedule_windows(&schedule, hop);
+    let factory = ModelExecutor::native_factory(&w, "churn", hop, MathPolicy::BitExact, 1);
+    let report = run_sharded_schedule(factory, cfg, 2, &schedule, &[]).unwrap();
+    let total = report
+        .ledgers
+        .iter()
+        .fold(gwlstm::coordinator::ShardLedger::default(), |a, l| a.plus(l));
+    assert!(
+        total.sheds.evicted > 0,
+        "24 streams through 2-slot registries must evict: {total:?}"
+    );
+    for l in &report.ledgers {
+        assert!(l.conserved(), "shard {} ledger leaked under churn: {l:?}", l.shard);
+    }
+    assert_eq!(
+        total.ingested, windows,
+        "window count drifted under churn"
+    );
+    assert_eq!(
+        total.ingested,
+        total.served + total.dropped() + total.quarantined,
+        "global roll-up leaked: {total:?}"
+    );
+}
+
+#[test]
+fn registry_scale_churn_conserves_100k_ids() {
+    // Contract 4 at scale, no engine: 100k distinct ids churn through a
+    // 64-slot registry, one window each. Every window is either still
+    // resident or came back in an eviction victim's snapshot — the
+    // `make_room_for` fix means no third bucket exists.
+    let hop = 4usize;
+    let cfg = StreamConfig {
+        hop,
+        max_sessions: 64,
+        ..Default::default()
+    };
+    let proto = StreamState {
+        batch: 1,
+        layers: vec![BatchedState::zeros(1, 2)],
+    };
+    let mut reg = SessionRegistry::new(cfg, proto);
+    let chunk = vec![0.5f32; hop];
+    let mut evicted_windows = 0u64;
+    for id in 0..100_000u64 {
+        if let Some(victim) = reg.ingest(id, &chunk, id) {
+            evicted_windows += (victim.pending.len() / hop) as u64;
+        }
+    }
+    assert_eq!(reg.len(), 64, "registry must sit exactly at capacity");
+    let resident_windows: u64 = reg
+        .ids()
+        .iter()
+        .map(|&id| (reg.get(id).unwrap().pending_len() / hop) as u64)
+        .sum();
+    assert_eq!(
+        evicted_windows + resident_windows,
+        100_000,
+        "windows leaked at scale: {evicted_windows} evicted + {resident_windows} resident"
+    );
+}
+
+fn sharded_cfg(shards: usize) -> ServeConfig {
+    ServeConfig {
+        model: "shard_e2e".into(),
+        calib_windows: 8,
+        max_windows: 96,
+        inject_prob: 0.3,
+        stream_sessions: 12,
+        stream_hop: 8,
+        streaming: true,
+        ingress: true,
+        shards,
+        ..Default::default()
+    }
+}
+
+/// Assert `report.shard_ledgers` each conserve and sum field-wise to the
+/// report's global ledger — the roll-up identity of the sharded tier.
+fn assert_ledger_rollup(report: &gwlstm::coordinator::ServeReport) {
+    assert_eq!(report.shard_ledgers.len(), report.shards);
+    for l in &report.shard_ledgers {
+        assert!(
+            l.conserved(),
+            "shard {} ledger leaked: ingested {} != served {} + dropped {} + quarantined {}",
+            l.shard,
+            l.ingested,
+            l.served,
+            l.dropped(),
+            l.quarantined
+        );
+    }
+    let total = report
+        .shard_ledgers
+        .iter()
+        .fold(gwlstm::coordinator::ShardLedger::default(), |a, l| a.plus(l));
+    assert_eq!(total.ingested, report.ingested, "ingested sum drifted");
+    assert_eq!(total.served, report.windows as u64, "served sum drifted");
+    assert_eq!(total.quarantined, report.quarantined, "quarantine sum drifted");
+    assert_eq!(total.dropped(), report.dropped, "dropped sum drifted");
+    assert_eq!(
+        total.sheds.total(),
+        report.sheds.total(),
+        "shed breakdown sum drifted"
+    );
+}
+
+#[test]
+fn sharded_serving_end_to_end_conserves() {
+    // The full production path at shards = 2: async producers routing to
+    // per-shard queues, two supervised lanes, per-home-shard accounting.
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let report = run_serving_streaming(&weights, &sharded_cfg(2)).unwrap();
+    assert!(
+        report.platform.contains("shard2"),
+        "platform must advertise the tier: {}",
+        report.platform
+    );
+    assert_eq!(report.shards, 2);
+    assert!(report.windows >= 96, "quota not served");
+    assert_eq!(report.quarantined, 0, "clean run");
+    assert_ledger_rollup(&report);
+}
+
+#[test]
+fn sharded_chaos_campaign_conserves_per_shard() {
+    // Contract 3 under fire: NaN bursts, stalls, misframed chunks, and a
+    // scheduled engine panic, across 2 shard lanes. Every per-shard ledger
+    // must close and sum exactly to the global one — fault attribution
+    // lands on the home shard no matter which lane was serving.
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = ServeConfig {
+        stream_sessions: 48,
+        max_windows: 192,
+        faults: Some(
+            FaultSpec::parse("seed=11,nan=0.05,stall=0.02,stall_us=50,badlen=0.03,panic@7")
+                .unwrap(),
+        ),
+        ..sharded_cfg(2)
+    };
+    let report = run_serving_streaming(&weights, &cfg).unwrap();
+    assert!(report.platform.contains("shard2"), "{}", report.platform);
+    assert!(report.windows > 0, "the campaign must still serve");
+    assert!(
+        report.quarantined > 0,
+        "5% NaN + 3% badlen must gate something"
+    );
+    assert_ledger_rollup(&report);
+}
