@@ -60,33 +60,41 @@ if command -v cargo >/dev/null 2>&1; then
         # arrivals — the double-buffered tick pipeline, conservation
         # asserted in-bench) in both tiers; both passes run with 4-lane
         # engine pools (GWLSTM_THREADS) so the thread-sweep serving arm is
-        # part of the smoke, and the two passes merge their tier's keys
+        # part of the smoke, and the tier passes merge their tier's keys
         # into rust/BENCH_serving.json. GWLSTM_SHARDS adds the sharded-tier
         # scaling arms (shard/{1,2,4}/* keys) over a 100k-resident-session
         # population — per-shard ledger conservation asserted in-bench.
         # hotpath also emits the par/* thread-scaling keys (parity-guarded:
-        # it exits nonzero if any thread count diverges bitwise). See
+        # it exits nonzero if any thread count diverges bitwise) and the
+        # quant/* fixed-point keys (accuracy-guarded: it exits nonzero if
+        # the quantized tier drifts past model::fixed's tolerances). See
         # rust/BENCHMARKS.md.
-        note "rust: bench smoke (tiny iteration counts, both math tiers)"
+        note "rust: bench smoke (tiny iteration counts, all three math tiers)"
         (cd rust && GWLSTM_BENCH_SMOKE=1 cargo bench --bench hotpath) \
             || failures=$((failures + 1))
-        (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=bitexact GWLSTM_THREADS=4 \
-            GWLSTM_SHARDS=1,2,4 cargo bench --bench e2e_serving) \
-            || failures=$((failures + 1))
-        (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH=fast_simd GWLSTM_THREADS=4 \
-            GWLSTM_SHARDS=1,2,4 cargo bench --bench e2e_serving) \
-            || failures=$((failures + 1))
+        # quantized runs the SAME serving arms as the f32 tiers — streaming,
+        # ingress, thread sweep, and the 2-shard lane — so the Q6.10 engine
+        # is exercised through every serving entry point, not just unit
+        # tests. The sharded smoke doubles as the "conservation ledger
+        # closes under --math quantized" gate from tests/fixed_parity.rs.
+        for tier in bitexact fast_simd quantized; do
+            (cd rust && GWLSTM_BENCH_SMOKE=1 GWLSTM_MATH="$tier" GWLSTM_THREADS=4 \
+                GWLSTM_SHARDS=1,2,4 cargo bench --bench e2e_serving) \
+                || failures=$((failures + 1))
+        done
     fi
 
     # Fault-injection smoke: a seeded chaos campaign (NaN bursts, stalls,
     # misframed chunks, one scheduled engine panic) through the ingress
-    # pipeline in both math tiers, across 2 shard lanes. Survival = exit 0;
-    # the binary itself asserts the conservation ledger (ingested == served
-    # + dropped + quarantined) globally AND per shard (each shard ledger
-    # must conserve and the ledgers must sum to the global one), exiting
-    # nonzero on a leak. See coordinator::chaos and coordinator::shard.
-    note "rust: fault-injection smoke (seeded chaos campaign, both math tiers, 2 shards)"
-    for tier in bitexact fast_simd; do
+    # pipeline in all three math tiers, across 2 shard lanes. Survival =
+    # exit 0; the binary itself asserts the conservation ledger (ingested
+    # == served + dropped + quarantined) globally AND per shard (each shard
+    # ledger must conserve and the ledgers must sum to the global one),
+    # exiting nonzero on a leak. The quantized tier's quarantine sweep runs
+    # on the dequantized f32 state mirror, so the recovery machinery is
+    # tier-agnostic — chaos must not behave differently under Q6.10.
+    note "rust: fault-injection smoke (seeded chaos campaign, all math tiers, 2 shards)"
+    for tier in bitexact fast_simd quantized; do
         (cd rust && cargo run --release --quiet -- serve --native --streaming \
             --ingress --shards 2 --sessions 100 --hop 8 --windows 400 --math "$tier" \
             --faults "seed=7,nan=0.02,stall=0.01,stall_us=100,badlen=0.01,panic@12") \

@@ -28,11 +28,21 @@ FRAC_BITS = TOTAL_BITS - INT_BITS  # 10 fractional bits -> lsb = 1/1024
 
 
 def quantize_tensor(x: jnp.ndarray, frac_bits: int = FRAC_BITS, total_bits: int = TOTAL_BITS):
-    """Round to the signed fixed-point grid Q(total-frac).frac, saturating."""
+    """Round to the signed fixed-point grid Q(total-frac).frac, saturating.
+
+    Rounding is half **away from zero** — ``sign(v) * floor(|v| + 0.5)`` on
+    the scaled value — the rule rust's ``f32::round`` applies in
+    ``model::fixed::to_q16``/``to_q32``. ``jnp.round`` rounds half to even
+    instead, which disagrees on every even-integer tie (0.5 lsb, 2.5 lsb,
+    ...), so the two quantizers would silently produce different grids.
+    The shared golden vectors in ``tests/test_quant.py`` pin this choice on
+    both sides.
+    """
     scale = float(1 << frac_bits)
     lo = -float(1 << (total_bits - 1)) / scale
     hi = (float(1 << (total_bits - 1)) - 1.0) / scale
-    return jnp.clip(jnp.round(x * scale) / scale, lo, hi)
+    v = jnp.sign(x) * jnp.floor(jnp.abs(x) * scale + 0.5) / scale
+    return jnp.clip(v, lo, hi)
 
 
 def quantize_params(params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:

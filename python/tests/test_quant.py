@@ -65,3 +65,146 @@ def test_max_abs_quant_error_reported():
     p = model.init_params(jax.random.key(0), "small")
     err = quant.max_abs_quant_error(p)
     assert 0.0 <= err <= 1.0 / (1 << quant.FRAC_BITS)
+
+
+def test_quantize_rounds_ties_away_from_zero():
+    """The rounding contract: exactly-half lsb values move AWAY from zero
+    on both sides, matching rust's ``f32::round`` in ``model::fixed`` —
+    ``jnp.round`` (half to even) would send 0.5 lsb to 0 and 2.5 lsb to 2."""
+    lsb = 1.0 / (1 << quant.FRAC_BITS)
+    ties = jnp.asarray(
+        np.array([0.5, -0.5, 2.5, -2.5, 1.5], dtype=np.float32) * np.float32(lsb)
+    )
+    got = np.asarray(quant.quantize_tensor(ties)) / lsb
+    np.testing.assert_allclose(got, [1.0, -1.0, 3.0, -3.0, 2.0], atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# numpy twin of rust's integer datapath (model/fixed.rs), pinned by shared
+# golden vectors. The same constants appear verbatim in
+# rust/tests/fixed_parity.rs (quantizer grids, i64 GEMM) and in
+# rust/src/model/fixed.rs::tail_algebra_cross_language_golden (gate tail).
+# Everything here is pure integer/f32 arithmetic — no exp(), no LUT — so
+# both languages can reproduce the numbers exactly.
+# ---------------------------------------------------------------------------
+
+FRAC16 = 10
+FRAC32 = 20
+
+
+def _round_half_away(v: np.ndarray) -> np.ndarray:
+    """sign(v) * floor(|v| + 0.5) — the rule of rust's f32::round."""
+    return np.sign(v) * np.floor(np.abs(v) + 0.5)
+
+
+def to_q16(x: float) -> int:
+    """Twin of ``model::fixed::to_q16``: scale in f32, round half away
+    from zero, saturate to i16."""
+    v = _round_half_away(np.float32(x) * np.float32(1 << FRAC16))
+    return int(np.clip(v, -32768, 32767))
+
+
+def to_q32(x: float) -> int:
+    """Twin of ``model::fixed::to_q32``: f32 -> f64 before scaling (the
+    rust side widens the same way), round half away, saturate to i32."""
+    v = _round_half_away(np.float64(np.float32(x)) * np.float64(1 << FRAC32))
+    return int(np.clip(v, -(2**31), 2**31 - 1))
+
+
+def q32_to_f32(x: int) -> np.float32:
+    return np.float32(np.float64(x) / np.float64(1 << FRAC32))
+
+
+def _sat_i32(v: int) -> int:
+    return int(min(max(v, -(2**31)), 2**31 - 1))
+
+
+def _shr20(v: int) -> int:
+    """Arithmetic >> 20 on exact ints: python's ``>>`` floors, same as
+    rust's arithmetic shift on i64."""
+    return v >> 20
+
+
+Q16_GOLDEN = [
+    (0.0, 0),
+    (0.5 / 1024.0, 1),
+    (-0.5 / 1024.0, -1),
+    (2.5 / 1024.0, 3),
+    (-2.5 / 1024.0, -3),
+    (1.5 / 1024.0, 2),
+    (0.25, 256),
+    (-1.0, -1024),
+    (32767.0 / 1024.0, 32767),
+    (32.0, 32767),
+    (-32.0, -32768),
+    (40.0, 32767),
+    (-40.0, -32768),
+]
+
+Q32_GOLDEN = [
+    (0.0, 0),
+    (0.5 / float(1 << 20), 1),
+    (-0.5 / float(1 << 20), -1),
+    (2.5 / float(1 << 20), 3),
+    (1.2345, 1_294_467),
+    (-1.2345, -1_294_467),
+    (2048.0, 2**31 - 1),
+    (-2048.0, -(2**31)),
+    (2047.9999, 2_147_483_520),
+]
+
+# (i_g, f_g, g_g, o_g, c_prev) -> (i_q, f_q, g_q, fc, ig, c_new, h)
+TAIL_GOLDEN = [
+    ((0.5, 0.75, -0.5, 0.5, 1_048_576), (524_288, 786_432, -524_288, 786_432, -262_144, 524_288, 256)),
+    ((0.0, 1.0 / 1_048_576.0, 0.0, 1.0, -1), (0, 1, 0, -1, 0, -1, 0)),
+    ((1.0, 1.0, 1.0, 1.0, 2**31 - 1), (1_048_576, 1_048_576, 1_048_576, 2_147_483_647, 1_048_576, 2**31 - 1, 32_767)),
+    ((1.0, 1.0, -1.0, 1.0, -(2**31)), (1_048_576, 1_048_576, -1_048_576, -2_147_483_648, -1_048_576, -(2**31), -32_768)),
+    ((0.3, 0.9, -0.7, 0.6, -123_456_789), (314_572, 943_718, -734_003, -111_111_064, -220_201, -111_331_265, -32_768)),
+]
+
+
+def test_q16_quantizer_matches_rust_goldens():
+    for x, want in Q16_GOLDEN:
+        assert to_q16(x) == want, f"to_q16({x})"
+
+
+def test_q32_quantizer_matches_rust_goldens():
+    for x, want in Q32_GOLDEN:
+        assert to_q32(x) == want, f"to_q32({x})"
+
+
+def test_quantize_tensor_agrees_with_integer_twin():
+    """The jnp fake-quantizer and the integer twin define the same grid:
+    fake-quant(x) == to_q16(x) / 1024 for every non-saturating input."""
+    xs = np.linspace(-31.9, 31.9, 257, dtype=np.float32)
+    fake = np.asarray(quant.quantize_tensor(jnp.asarray(xs)), dtype=np.float64)
+    twin = np.array([to_q16(float(x)) for x in xs], dtype=np.float64) / 1024.0
+    np.testing.assert_allclose(fake, twin, atol=1e-7)
+
+
+def test_i64_gemm_accumulation_matches_rust_golden():
+    """Exact int64 accumulation at the i16 extremes — the invariant that
+    makes rust's packing/blocking/threading bit-free: the gate totals are
+    exact integers, so summation order cannot matter."""
+    x = np.array([32767, -32768], dtype=np.int64)
+    w = np.array([[32767, -32768, 1], [-32768, 32767, -1]], dtype=np.int64)
+    z = np.full(3, 7, dtype=np.int64)  # bias pre-seeded, as in the rust kernel
+    z = z + x @ w
+    np.testing.assert_array_equal(z, [2_147_418_120, -2_147_418_105, 65_542])
+
+
+def test_gate_tail_algebra_matches_rust_goldens():
+    """The fused gate tail of rust's ``fused_gate_tail``, activation step
+    replaced by identity (pinned separately): truncating f32 -> Q1.20 gate
+    cast, ``>> 20`` products (floor), saturating cell add, Q6.10 output."""
+    for (i_g, f_g, g_g, o_g, c_prev), want in TAIL_GOLDEN:
+        # rust: (gate * (1 << 20) as f32) as i64 — truncation toward zero
+        i_q = int(np.float32(i_g) * np.float32(1 << 20))
+        f_q = int(np.float32(f_g) * np.float32(1 << 20))
+        g_q = int(np.float32(g_g) * np.float32(1 << 20))
+        fc = _shr20(f_q * c_prev)
+        ig = _shr20(i_q * g_q)
+        c_new = _sat_i32(fc + ig)
+        h = to_q16(float(np.float32(o_g) * q32_to_f32(c_new)))
+        got = (i_q, f_q, g_q, fc, ig, c_new, h)
+        assert got == want, f"tail golden for {(i_g, f_g, g_g, o_g, c_prev)}: {got}"

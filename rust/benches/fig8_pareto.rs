@@ -2,11 +2,35 @@
 //! single LSTM layer (Lx = Lh = 32), naive `R_x = R_h` family vs the
 //! balanced family of Eq. 7. Emits the series as CSV for plotting.
 //!
+//! Also emits the *software* speed-vs-accuracy Pareto: the three serving
+//! math tiers (BitExact, FastSimd, Quantized Q6.10) measured on the same
+//! windows — the software mirror of the paper's hardware trade-off, where
+//! the fixed-point datapath buys throughput at a bounded accuracy cost
+//! (Section V-B: "negligible effect" — quantified here as worst per-window
+//! score drift vs BitExact).
+//!
 //! Run: `cargo bench --bench fig8_pareto`
 
+use gwlstm::gw::dataset::{StrainStream, DEFAULT_SNR};
 use gwlstm::hls::pareto::{frontier, max_saving_same_ii};
+use gwlstm::model::{AutoencoderWeights, FixedPackedAutoencoder, MathPolicy, PackedAutoencoder};
 use gwlstm::report::{fig8_series, render_fig8};
 use gwlstm::util::bench::Bench;
+
+/// One software-tier Pareto point: median ns/stream at B=8 plus worst
+/// per-window score drift vs the BitExact reference on the same windows.
+fn tier_point(name: &str, score: impl Fn(&[f32]) -> Vec<f32>, pool: &[f32], reference: &[f32], iters: usize) -> (String, f64, f64) {
+    let scores = score(pool);
+    let maxdiff = scores
+        .iter()
+        .zip(reference)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    let st = Bench::new(&format!("tier {name}: score_batch B=8")).iters(iters).run(|| {
+        std::hint::black_box(score(pool));
+    });
+    (name.to_string(), st.median_ns / 8.0, maxdiff)
+}
 
 fn main() {
     println!("=== Fig. 8: Pareto frontier, naive vs balanced II ===\n");
@@ -42,6 +66,38 @@ fn main() {
         c.dsp,
         c.ii,
         100.0 * (1.0 - c.dsp as f64 / a.dsp as f64)
+    );
+
+    // ---- software math-tier Pareto (speed vs accuracy) ----
+    let ts = 100usize;
+    let batch = 8usize;
+    let weights = AutoencoderWeights::synthetic(0xBA7C, "nominal");
+    let exact = PackedAutoencoder::from_weights(&weights);
+    let fast = PackedAutoencoder::from_weights_policy(&weights, MathPolicy::FastSimd);
+    let quant = FixedPackedAutoencoder::from_weights(&weights);
+    let mut stream = StrainStream::new(9, ts, DEFAULT_SNR, 0.3);
+    let mut pool: Vec<f32> = Vec::with_capacity(batch * ts);
+    for _ in 0..batch {
+        pool.extend_from_slice(&stream.next_window().samples);
+    }
+    let reference = exact.score_batch(&pool, batch);
+    let smoke = std::env::var("GWLSTM_BENCH_SMOKE").is_ok();
+    let iters = if smoke { 2 } else { 30 };
+    let points = [
+        tier_point("bitexact", |w| exact.score_batch(w, batch), &pool, &reference, iters),
+        tier_point("fast_simd", |w| fast.score_batch(w, batch), &pool, &reference, iters),
+        tier_point("quantized", |w| quant.score_batch(w, batch), &pool, &reference, iters),
+    ];
+    println!("\n=== software math-tier Pareto: speed vs accuracy (B=8, TS=100) ===");
+    println!("\n--- CSV (tier,ns_per_stream,score_maxdiff_vs_bitexact) ---");
+    for (name, ns, maxdiff) in &points {
+        println!("{name},{ns:.0},{maxdiff:.3e}");
+    }
+    println!(
+        "\nquantized is the software view of the paper's FPGA datapath: the\n\
+         accuracy axis is bounded by model::fixed::QUANT_SCORE_TOL (asserted\n\
+         in tests/fixed_parity.rs), the speed axis is what the Q6.10 integer\n\
+         engine buys on this host."
     );
 
     println!("\n--- timing ---");

@@ -43,8 +43,8 @@ use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
 use gwlstm::model::batched::reference;
 use gwlstm::model::simd::FAST_FORWARD_TOL;
 use gwlstm::model::{
-    forward_f32, AutoencoderWeights, FixedAutoencoder, MathPolicy, PackedAutoencoder, PlanMode,
-    WorkerPool,
+    forward_f32, AutoencoderWeights, FixedAutoencoder, FixedPackedAutoencoder, MathPolicy,
+    PackedAutoencoder, PlanMode, WorkerPool, QUANT_SCORE_TOL,
 };
 use gwlstm::runtime::{Engine, ModelExecutor};
 use gwlstm::sim::{simulate, SimConfig};
@@ -498,6 +498,83 @@ fn main() {
             std::hint::black_box(fixed.forward_batch(&pool[..8 * ts], 8));
         });
     rec.put("model/q16_forward_batch_b8_per_stream", st.median_ns / 8.0);
+
+    // ---- quantized serving tier (register-blocked Q6.10 engine) ----
+    // The serving-grade fixed-point engine behind MathPolicy::Quantized —
+    // packed-once i16 panels, i64 gate accumulation, same lockstep shapes
+    // as the f32 tiers. Two contracts are enforced BEFORE timing, exactly
+    // like the FastSimd and par/* guards above: (a) the threaded engine is
+    // bitwise the serial one (integer exactness makes this a hard
+    // equality, not a tolerance), and (b) score drift vs BitExact stays
+    // within model::fixed's stated accuracy bound.
+    {
+        let quant = FixedPackedAutoencoder::from_weights(&weights);
+        let quant_par = FixedPackedAutoencoder::from_weights_threads(&weights, 4);
+        let serial_scores = quant.score_batch(&pool[..8 * ts], 8);
+        if quant_par.score_batch(&pool[..8 * ts], 8) != serial_scores {
+            eprintln!(
+                "FATAL: 4-thread quantized engine diverged from serial — \
+                 fixed-point bit-exactness contract broken"
+            );
+            std::process::exit(1);
+        }
+        let exact_scores = packed.score_batch(&pool[..8 * ts], 8);
+        let worst = exact_scores
+            .iter()
+            .zip(&serial_scores)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        if worst > QUANT_SCORE_TOL {
+            eprintln!(
+                "FATAL: quantized tier diverged from BitExact by {worst} \
+                 (tolerance {QUANT_SCORE_TOL}) — math-tier contract broken"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "Quantized vs BitExact score divergence: {worst:.2e} (tol {QUANT_SCORE_TOL:.0e}) — OK"
+        );
+        rec.put("quant/vs_bitexact_score_maxdiff", worst as f64);
+
+        let mut q_b8_per_stream = f64::NAN;
+        for &b in &[1usize, 8, 32] {
+            let st = Bench::new(&format!("quant: blocked lockstep B={b} (q6.10)"))
+                .iters(rec.iters(30))
+                .run(|| {
+                    std::hint::black_box(quant.forward_batch(&pool[..b * ts], b));
+                });
+            let per_stream = st.median_ns / b as f64;
+            rec.put(&format!("quant/packed_b{b}_per_stream"), per_stream);
+            println!(
+                "  -> quant B={b}: {:.0} ns/stream ({:.0} streams/s)",
+                per_stream,
+                1e9 / per_stream
+            );
+            if b == 8 {
+                q_b8_per_stream = per_stream;
+            }
+        }
+        rec.put(
+            "quant/vs_bitexact_b8_speedup",
+            b8_per_stream / q_b8_per_stream,
+        );
+        let mut q_state = quant.zero_state(8);
+        let st = Bench::new("quant: stateful continuation hop=25 B=8 (q6.10)")
+            .iters(rec.iters(30))
+            .run(|| {
+                std::hint::black_box(quant.score_batch_stateful(
+                    &pool[..8 * hop],
+                    8,
+                    &mut q_state,
+                ));
+            });
+        rec.put("quant/stateful_hop25_b8_per_window", st.median_ns / 8.0);
+        println!(
+            "  -> quant vs bitexact @ B=8: {:.2}x per stream (software view of \
+             the paper's fixed-point datapath)",
+            b8_per_stream / q_b8_per_stream
+        );
+    }
 
     // ---- PJRT datapath (artifacts required) ----
     'pjrt: {

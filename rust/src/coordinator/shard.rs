@@ -695,6 +695,7 @@ mod tests {
             state: StreamState {
                 batch: 1,
                 layers: vec![BatchedState::zeros(1, 2)],
+                quant: None,
             },
             pending: vec![0.0; 11], // hop 4 -> 2 whole windows lost
             windows_done: 0,

@@ -6,4 +6,4 @@
 
 pub mod roc;
 
-pub use roc::{auc, calibrate_threshold, roc_curve, RocPoint};
+pub use roc::{auc, calibrate_threshold, roc_curve, tier_accuracy, RocPoint, TierAccuracy};

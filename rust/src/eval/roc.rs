@@ -75,6 +75,45 @@ pub fn roc_curve(scores: &[f64], labels: &[u8], n_points: usize) -> Vec<RocPoint
         .collect()
 }
 
+/// Accuracy of one math tier's anomaly scores against the reference
+/// (BitExact) tier on the same labeled windows — the per-tier output the
+/// tolerance suites (`tests/fastmath_tolerance.rs`, `tests/fixed_parity.rs`)
+/// and the hotpath bench's self-checks assert on: worst per-window score
+/// drift plus both AUCs, so a tier that keeps scores close but reorders
+/// them across the detection threshold still fails loudly.
+#[derive(Debug, Clone, Copy)]
+pub struct TierAccuracy {
+    /// `max_i |tier_score_i - ref_score_i|`.
+    pub max_score_diff: f64,
+    /// ROC AUC of the tier's scores.
+    pub auc: f64,
+    /// ROC AUC of the reference tier's scores.
+    pub ref_auc: f64,
+}
+
+impl TierAccuracy {
+    /// Absolute AUC drift vs the reference tier.
+    pub fn auc_drift(&self) -> f64 {
+        (self.auc - self.ref_auc).abs()
+    }
+}
+
+/// Compare one tier's scores against the reference tier on the same
+/// labeled windows (see [`TierAccuracy`]).
+pub fn tier_accuracy(tier_scores: &[f64], ref_scores: &[f64], labels: &[u8]) -> TierAccuracy {
+    assert_eq!(tier_scores.len(), ref_scores.len(), "score length mismatch");
+    let max_score_diff = tier_scores
+        .iter()
+        .zip(ref_scores)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    TierAccuracy {
+        max_score_diff,
+        auc: auc(tier_scores, labels),
+        ref_auc: auc(ref_scores, labels),
+    }
+}
+
 /// Threshold calibration at a target false-positive rate on *background*
 /// scores (paper Section V-B: "The threshold for flagging an anomaly ...
 /// can be calculated by setting a false positive rate on noise events").
@@ -164,6 +203,23 @@ mod tests {
         let fp = bg.iter().filter(|&&s| s >= th).count() as f64 / bg.len() as f64;
         assert!(fp <= 0.012, "fpr {fp}");
         assert!(fp >= 0.005, "threshold too conservative: fpr {fp}");
+    }
+
+    #[test]
+    fn tier_accuracy_reports_drift_and_aucs() {
+        let labels = [0u8, 0, 1, 1];
+        let reference = [0.1, 0.2, 0.8, 0.9];
+        // identical scores: zero drift, identical AUC
+        let same = tier_accuracy(&reference, &reference, &labels);
+        assert_eq!(same.max_score_diff, 0.0);
+        assert_eq!(same.auc_drift(), 0.0);
+        // a tier that swaps one positive below the negatives: big AUC drift
+        let degraded = [0.1, 0.2, 0.05, 0.9];
+        let t = tier_accuracy(&degraded, &reference, &labels);
+        assert!((t.max_score_diff - 0.75).abs() < 1e-12);
+        assert_eq!(t.ref_auc, 1.0);
+        assert!(t.auc < 1.0);
+        assert!(t.auc_drift() > 0.0);
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //! gwlstm serve [--model m] [--windows n] [--workers k] [--config f.json]
 //!              [--batch N]   micro-batch dispatch through the batched engine
 //!              [--native]    artifact-less native batched backend (synthetic weights)
-//!              [--math bitexact|fast_simd]   native-engine math tier (model::simd)
+//!              [--math bitexact|fast_simd|quantized]   native-engine math
+//!                            tier (model::simd); quantized serves the Q6.10
+//!                            fixed-point engine (model::fixed)
 //!              [--threads N] balanced-partition parallel engine: each lockstep
 //!                            call splits its batch across N worker lanes
 //!                            (model::par), bit-identical to N=1 (requires --native)
@@ -347,7 +349,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // weights — runs in any environment, no artifacts or PJRT needed.
     let native = args.flag("native");
     // --math selects the native engine's tier (bitexact default; fast_simd
-    // is the accuracy-bounded FMA + rational-activation kernel).
+    // is the accuracy-bounded FMA + rational-activation kernel; quantized
+    // is the Q6.10 fixed-point engine — the paper's FPGA datapath in
+    // software, accuracy-bounded vs bitexact by model::fixed's tolerances).
     let math_flag = args.get("math").map(str::to_string);
     if let Some(m) = &math_flag {
         cfg.math_policy = gwlstm::model::MathPolicy::parse(m)?;

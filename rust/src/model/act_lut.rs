@@ -9,6 +9,7 @@
 /// Sigmoid lookup table: `ENTRIES` precomputed values over [-RANGE, RANGE],
 /// nearest-entry indexing (what a BRAM with a truncated address does),
 /// saturating outside.
+#[derive(Debug, Clone)]
 pub struct SigmoidLut {
     table: Vec<f32>,
     range: f32,
@@ -50,6 +51,33 @@ impl SigmoidLut {
         let idx = (cell as usize).min(n - 1);
         self.table[idx]
     }
+
+    /// Slice-wise [`SigmoidLut::eval`]: `out[i] = eval(xs[i])`, written as a
+    /// straight-line loop over the slice so the address computation
+    /// autovectorizes (the gather itself stays scalar — a BRAM port per
+    /// lane in hardware, a scalar load per lane here). Per-element results
+    /// are **bitwise identical** to [`SigmoidLut::eval`]: same clamp, same
+    /// scaled-offset expression, same truncated index
+    /// (`tests::eval_block_bitwise_matches_eval`).
+    #[inline]
+    pub fn eval_block(&self, xs: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        let n = self.table.len();
+        let range = self.range;
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = if x <= -range {
+                self.table[0]
+            } else if x >= range {
+                self.table[n - 1]
+            } else {
+                // same expression as `eval` up to f32 algebra: the scalar
+                // path divides then multiplies; keep its exact order so the
+                // truncated index can never differ by a rounding step.
+                let cell = (x + range) / (2.0 * range) * n as f32;
+                self.table[(cell as usize).min(n - 1)]
+            };
+        }
+    }
 }
 
 impl Default for SigmoidLut {
@@ -90,6 +118,28 @@ pub fn pwl_tanh(x: f32) -> f32 {
         PWL_Y[seg] + slope * (a - x0)
     };
     y.copysign(x)
+}
+
+/// Slice-wise [`pwl_tanh`]: `out[i] = pwl_tanh(xs[i])`. The segment decode
+/// (`abs`, scale, truncate) and the one-multiply-one-add chord are branch-
+/// free per lane except the saturation select, so the loop autovectorizes;
+/// per-element results are **bitwise identical** to [`pwl_tanh`]
+/// (`tests::pwl_tanh_block_bitwise_matches_scalar`).
+#[inline]
+pub fn pwl_tanh_block(xs: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        let a = x.abs();
+        let seg = (a / PWL_KNOT_STEP) as usize;
+        let y = if seg >= PWL_Y.len() - 1 {
+            PWL_Y[PWL_Y.len() - 1]
+        } else {
+            let x0 = seg as f32 * PWL_KNOT_STEP;
+            let slope = (PWL_Y[seg + 1] - PWL_Y[seg]) / PWL_KNOT_STEP;
+            PWL_Y[seg] + slope * (a - x0)
+        };
+        *o = y.copysign(x);
+    }
 }
 
 /// Maximum absolute error of the PWL tanh against libm over a dense grid
@@ -198,6 +248,38 @@ mod tests {
         for i in -600..600 {
             let x = i as f32 / 100.0;
             assert!(pwl_tanh(x).abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn eval_block_bitwise_matches_eval() {
+        // the vectorizable entry point is the same nearest-entry lookup —
+        // bitwise, not approximately, across saturation / boundary / interior
+        let lut = SigmoidLut::default();
+        let mut xs: Vec<f32> = (-2000..=2000).map(|i| i as f32 * 0.005).collect();
+        xs.extend([
+            -100.0,
+            100.0,
+            -8.0,
+            8.0,
+            f32::from_bits(8.0f32.to_bits() - 1),
+            -f32::from_bits(8.0f32.to_bits() - 1),
+        ]);
+        let mut out = vec![0.0f32; xs.len()];
+        lut.eval_block(&xs, &mut out);
+        for (&x, &o) in xs.iter().zip(&out) {
+            assert_eq!(o.to_bits(), lut.eval(x).to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn pwl_tanh_block_bitwise_matches_scalar() {
+        let mut xs: Vec<f32> = (-1200..=1200).map(|i| i as f32 * 0.01).collect();
+        xs.extend([-0.0f32, 0.0, 4.0, -4.0, 3.999, 100.0, -100.0]);
+        let mut out = vec![0.0f32; xs.len()];
+        pwl_tanh_block(&xs, &mut out);
+        for (&x, &o) in xs.iter().zip(&out) {
+            assert_eq!(o.to_bits(), pwl_tanh(x).to_bits(), "x={x}");
         }
     }
 

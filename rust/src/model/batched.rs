@@ -399,7 +399,19 @@ pub struct StreamState {
     /// Lockstep stream rows held by every layer state.
     pub batch: usize,
     /// Per-layer `(h, c)` blocks, one per LSTM layer (encoder then decoder).
+    ///
+    /// For a quantized-tier state (`quant.is_some()`) these hold the
+    /// *dequantized f32 mirror* of the integer state — refreshed after
+    /// every stateful call, always finite — so tier-agnostic machinery
+    /// (finiteness sweeps, snapshots, inspection) reads one shape.
     pub layers: Vec<BatchedState>,
+    /// The authoritative quantized per-layer state when this session is
+    /// served by the `MathPolicy::Quantized` tier
+    /// ([`super::fixed::FixedPackedAutoencoder`]); `None` on the f32
+    /// tiers. Rides through every state-movement primitive below, so the
+    /// session registry, snapshot/restore, quarantine and shard migration
+    /// carry it without tier-specific code.
+    pub quant: Option<super::fixed::FixedStreamState>,
 }
 
 impl StreamState {
@@ -426,6 +438,13 @@ impl StreamState {
         );
         for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
             dst.copy_row_from(row, s, src_row);
+        }
+        // The quantized tier's integer state moves with the same gather/
+        // scatter; mixing tiers in one lockstep group is a logic error.
+        match (&mut self.quant, &src.quant) {
+            (Some(dq), Some(sq)) => dq.load_row(row, sq, src_row),
+            (None, None) => {}
+            _ => panic!("stream-state tier mismatch (quantized vs f32 resident state)"),
         }
     }
 
@@ -454,6 +473,7 @@ impl StreamState {
                 .iter()
                 .map(|l| BatchedState::zeros(batch, l.lh))
                 .collect(),
+            quant: self.quant.as_ref().map(|q| q.zeros_like(batch)),
         }
     }
 
@@ -934,6 +954,13 @@ impl PackedAutoencoder {
         policy: MathPolicy,
         pool: WorkerPool,
     ) -> PackedAutoencoder {
+        // Misuse fails at construction, not mid-inference: the quantized
+        // tier has its own engine with its own packed integer weights.
+        assert!(
+            policy != MathPolicy::Quantized,
+            "MathPolicy::Quantized is served by model::fixed::FixedPackedAutoencoder, \
+             not the f32 engine"
+        );
         PackedAutoencoder {
             layers: w
                 .layers
@@ -984,6 +1011,7 @@ impl PackedAutoencoder {
                 .iter()
                 .map(|l| BatchedState::zeros(batch, l.w.lh))
                 .collect(),
+            quant: None,
         }
     }
 

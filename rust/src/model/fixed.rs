@@ -10,14 +10,75 @@
 //!   ([`super::act_lut`]),
 //! * the `f_t * c_{t-1}` tail product is a 16x32 multiply — the unit the
 //!   paper prices at 2 DSPs per multiplier.
+//!
+//! # Rounding contract (cross-language)
+//!
+//! [`to_q16`]/[`to_q32`] round **half away from zero** (`f32::round`):
+//! a value exactly on a grid midpoint moves to the larger magnitude, then
+//! saturates to the format range. `python/compile/quant.py` implements the
+//! same rule (`sign(v)·floor(|v| + 0.5)`), and `python/tests/test_quant.py`
+//! pins both sides against shared golden vectors (tie values, saturation
+//! extremes) so the two quantizers cannot silently drift.
+//!
+//! # The quantized serving tier
+//!
+//! Since the Quantized `MathPolicy` tier, this module also hosts the
+//! *lockstep* fixed-point engine — the integer twin of
+//! [`super::batched`]:
+//!
+//! * [`PackedMatrixI16`]: i16 weights repacked once into 16-wide column
+//!   panels, walked by a `4×16` register-blocked i64 accumulation kernel.
+//!   Integer accumulation is exact and order-free, so blocking cannot
+//!   change a gate pre-activation — batched output is bit-identical to
+//!   the scalar [`FixedLstm`] **by construction**, not by tolerance.
+//! * [`FixedBatchedLstm`]: B streams advance per weight traversal with
+//!   hoisted input MVMs, balanced-partition threading
+//!   ([`super::par::WorkerPool`]), and stateful continuation against
+//!   [`FixedBatchedState`] (chunked == contiguous bitwise).
+//! * [`FixedPackedAutoencoder`]: the serving engine behind
+//!   `--math quantized` (platform `native-batched+q16`), with resident
+//!   [`FixedStreamState`] threaded through the stream router exactly the
+//!   way the f32 [`super::batched::StreamState`] is.
+//!
+//! `rust/tests/fixed_parity.rs` pins the batched/threaded/streamed
+//! datapath bitwise against the scalar reference at every tested
+//! (B, threads, hop schedule); `tests/fastmath_tolerance.rs`-style
+//! accuracy bounds ([`QUANT_SCORE_TOL`], [`QUANT_AUC_TOL`]) bound the
+//! tier against BitExact on the chirp dataset.
 
-use super::act_lut::{pwl_tanh, SigmoidLut};
-use super::weights::LstmWeights;
+use std::sync::Mutex;
+
+use super::act_lut::{pwl_tanh_block, SigmoidLut};
+use super::batched::{mse_per_stream, BatchedState, StreamState};
+use super::par::WorkerPool;
+use super::weights::{AutoencoderWeights, LstmWeights};
 
 /// Fractional bits of the 16-bit format (Q6.10).
 pub const FRAC16: i32 = 10;
 /// Fractional bits of the 32-bit format (Q12.20).
 pub const FRAC32: i32 = 20;
+
+/// Column tile width of the packed i16 GEMM panels — same 16-wide panels
+/// as the f32 engine ([`super::simd::BLOCK_W`]), one cache line of i64
+/// accumulators per block row.
+pub const QGEMM_TILE: usize = super::simd::BLOCK_W;
+
+/// Stream rows per register block of the i64 kernel
+/// ([`super::simd::BLOCK_RB`]).
+pub const QGEMM_RB: usize = super::simd::BLOCK_RB;
+
+/// Accuracy bound of the Quantized serving tier: max absolute divergence
+/// of a per-window anomaly score from the BitExact tier on chirp-dataset
+/// windows. Conservative versus the module's measured fixed-vs-f32 error
+/// (rel RMS < 0.08 on the hidden sequence, rec RMS < 0.05); pinned by
+/// `tests/fixed_parity.rs` and self-checked by the hotpath bench the same
+/// way [`super::simd::FAST_FORWARD_TOL`] is for FastSimd.
+pub const QUANT_SCORE_TOL: f32 = 0.15;
+
+/// Accuracy bound of the Quantized tier's detection quality: max ROC-AUC
+/// drift vs the BitExact tier on the chirp dataset (the paper's
+/// "quantization has negligible effect" claim, as a testable number).
+pub const QUANT_AUC_TOL: f64 = 0.05;
 
 /// Quantize f32 -> Q6.10 with saturation.
 #[inline]
@@ -192,37 +253,59 @@ impl FixedLstm {
 /// Fused fixed-point gate tail: one pass over a stream's `(4·Lh)` gate
 /// buffer — activation lookup, the paper's 16×32 tail products, cell
 /// saturation and the Q6.10 hidden write-back. The scalar sequence path
-/// ([`FixedLstm::step_into`]) and the lockstep batched path
-/// ([`FixedLstm::run_batch`]) both run exactly this code, so the bitwise
+/// ([`FixedLstm::step_into`]), the scalar lockstep path
+/// ([`FixedLstm::run_batch`]) and the register-blocked serving engine
+/// ([`FixedBatchedLstm`]) all run exactly this code, so the bitwise
 /// scalar/batched parity holds by construction.
+///
+/// Internally the row is processed in chunks of [`QGEMM_TILE`] through
+/// stack buffers and the slice-wise activation entry points
+/// ([`SigmoidLut::eval_block`] / [`pwl_tanh_block`]) so the lookup address
+/// math and the integer tail autovectorize. Per-element expressions and
+/// their order are unchanged from the scalar form (every element is
+/// independent of every other), so chunking cannot alter a single bit.
 #[inline]
 fn fused_gate_tail(lut: &SigmoidLut, zrow: &[i64], lh: usize, c_row: &mut [i32], h_row: &mut [i16]) {
     debug_assert_eq!(zrow.len(), 4 * lh);
     debug_assert_eq!(c_row.len(), lh);
     debug_assert_eq!(h_row.len(), lh);
-    for j in 0..lh {
+    const W: usize = QGEMM_TILE;
+    let (mut zi_f, mut zf_f, mut zg_f, mut zo_f) = ([0f32; W], [0f32; W], [0f32; W], [0f32; W]);
+    let (mut i_g, mut f_g, mut g_g, mut o_g) = ([0f32; W], [0f32; W], [0f32; W], [0f32; W]);
+    let (mut ct_f, mut th_f) = ([0f32; W], [0f32; W]);
+    let mut j0 = 0usize;
+    while j0 < lh {
+        let w = W.min(lh - j0);
         // activations evaluated at Q12.20 -> f32 (the LUT address is a
         // truncation of the fixed-point value; same granularity)
-        let zi = q32_sat(zrow[j]);
-        let zf = q32_sat(zrow[lh + j]);
-        let zg = q32_sat(zrow[2 * lh + j]);
-        let zo = q32_sat(zrow[3 * lh + j]);
-        let i_g = lut.eval(q32_to_f32(zi));
-        let f_g = lut.eval(q32_to_f32(zf));
-        let g_g = pwl_tanh(q32_to_f32(zg));
-        let o_g = lut.eval(q32_to_f32(zo));
-        // tail in fixed point: gates as Q1.20 (range (-1, 1])
-        let i_q = (i_g * (1 << 20) as f32) as i64;
-        let f_q = (f_g * (1 << 20) as f32) as i64;
-        let g_q = (g_g * (1 << 20) as f32) as i64;
-        // f*c: Q1.20 x Q12.20 >> 20 = Q12.20 (the 2-DSP product)
-        let fc = (f_q * c_row[j] as i64) >> 20;
-        // i*g: Q1.20 x Q1.20 = Q2.40 -> Q12.20
-        let ig = (i_q * g_q) >> 20;
-        let c_new = sat_i32(fc + ig);
-        c_row[j] = c_new;
-        let h_f = o_g * pwl_tanh(q32_to_f32(c_new));
-        h_row[j] = to_q16(h_f);
+        for j in 0..w {
+            zi_f[j] = q32_to_f32(q32_sat(zrow[j0 + j]));
+            zf_f[j] = q32_to_f32(q32_sat(zrow[lh + j0 + j]));
+            zg_f[j] = q32_to_f32(q32_sat(zrow[2 * lh + j0 + j]));
+            zo_f[j] = q32_to_f32(q32_sat(zrow[3 * lh + j0 + j]));
+        }
+        lut.eval_block(&zi_f[..w], &mut i_g[..w]);
+        lut.eval_block(&zf_f[..w], &mut f_g[..w]);
+        pwl_tanh_block(&zg_f[..w], &mut g_g[..w]);
+        lut.eval_block(&zo_f[..w], &mut o_g[..w]);
+        for j in 0..w {
+            // tail in fixed point: gates as Q1.20 (range (-1, 1])
+            let i_q = (i_g[j] * (1 << 20) as f32) as i64;
+            let f_q = (f_g[j] * (1 << 20) as f32) as i64;
+            let g_q = (g_g[j] * (1 << 20) as f32) as i64;
+            // f*c: Q1.20 x Q12.20 >> 20 = Q12.20 (the 2-DSP product)
+            let fc = (f_q * c_row[j0 + j] as i64) >> 20;
+            // i*g: Q1.20 x Q1.20 = Q2.40 -> Q12.20
+            let ig = (i_q * g_q) >> 20;
+            let c_new = sat_i32(fc + ig);
+            c_row[j0 + j] = c_new;
+            ct_f[j] = q32_to_f32(c_new);
+        }
+        pwl_tanh_block(&ct_f[..w], &mut th_f[..w]);
+        for j in 0..w {
+            h_row[j0 + j] = to_q16(o_g[j] * th_f[j]);
+        }
+        j0 += w;
     }
 }
 
@@ -234,6 +317,727 @@ fn q32_sat(v: i64) -> i32 {
 #[inline]
 fn sat_i32(v: i64) -> i32 {
     v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// Resize + zero-fill (integer twin of the f32 scratch helpers): for
+/// buffers whose semantics need zeros (GEMM accumulation targets, initial
+/// state).
+#[inline]
+fn reset_q<T: Copy + Default>(buf: &mut Vec<T>, len: usize) {
+    buf.clear();
+    buf.resize(len, T::default());
+}
+
+/// Resize without touching retained elements — for buffers fully
+/// overwritten before their first read (gate staging, layer output).
+#[inline]
+fn resize_only_q<T: Copy + Default>(buf: &mut Vec<T>, len: usize) {
+    buf.resize(len, T::default());
+}
+
+/// One column panel of a packed i16 matrix: `width` output columns
+/// starting at `j0`, stored `(k, width)` row-major at `off`.
+#[derive(Debug, Clone, Copy)]
+struct PanelI16 {
+    off: usize,
+    j0: usize,
+    width: usize,
+}
+
+/// A `(k, n)` i16 matrix repacked into column-tiled panels for the
+/// register-blocked i64-accumulating GEMM kernel — the integer twin of
+/// [`super::batched::PackedMatrix`]. Packing happens once at load time;
+/// the hot loop only ever reads contiguous panel rows.
+///
+/// Because every accumulation is an exact i64 integer add, *any* walk
+/// order over `(k, j)` produces bit-identical totals — blocking here is
+/// purely a locality/vectorization transform, with none of the f32
+/// engine's order-preservation obligations.
+#[derive(Debug, Clone)]
+pub struct PackedMatrixI16 {
+    /// Reduction (input) dimension.
+    pub k: usize,
+    /// Output dimension.
+    pub n: usize,
+    data: Vec<i16>,
+    panels: Vec<PanelI16>,
+}
+
+impl PackedMatrixI16 {
+    /// Pack `src`, a `(k, n)` row-major i16 matrix, with the default tile.
+    ///
+    /// ```
+    /// use gwlstm::model::fixed::PackedMatrixI16;
+    ///
+    /// // z += x @ W for a (1, 2) x, (2, 3) W — matches the naive product
+    /// let w = PackedMatrixI16::pack(&[1, 2, 3, 4, 5, 6], 2, 3);
+    /// let mut z = vec![0i64; 3];
+    /// w.gemm_acc_i64(&[10, 100], 1, &mut z);
+    /// assert_eq!(z, vec![410, 520, 630]);
+    /// ```
+    pub fn pack(src: &[i16], k: usize, n: usize) -> PackedMatrixI16 {
+        PackedMatrixI16::pack_with_tile(src, k, n, QGEMM_TILE)
+    }
+
+    /// Pack with an explicit tile width (exposed for tests/tuning).
+    pub fn pack_with_tile(src: &[i16], k: usize, n: usize, tile: usize) -> PackedMatrixI16 {
+        assert!(tile > 0);
+        assert_eq!(src.len(), k * n, "source shape mismatch");
+        let mut data = Vec::with_capacity(k * n);
+        let mut panels = Vec::new();
+        let mut j0 = 0;
+        while j0 < n {
+            let width = tile.min(n - j0);
+            let off = data.len();
+            for kk in 0..k {
+                data.extend_from_slice(&src[kk * n + j0..kk * n + j0 + width]);
+            }
+            panels.push(PanelI16 { off, j0, width });
+            j0 += width;
+        }
+        PackedMatrixI16 { k, n, data, panels }
+    }
+
+    /// `z += x @ W` for `rows` independent i16 rows (`x` is `(rows, k)`,
+    /// `z` is `(rows, n)` i64, both row-major) through the register-blocked
+    /// kernel. Exact integer accumulation — bit-identical to the naive
+    /// triple loop for any blocking.
+    pub fn gemm_acc_i64(&self, x: &[i16], rows: usize, z: &mut [i64]) {
+        assert_eq!(x.len(), rows * self.k, "x shape mismatch");
+        assert_eq!(z.len(), rows * self.n, "z shape mismatch");
+        for p in &self.panels {
+            let panel = &self.data[p.off..p.off + self.k * p.width];
+            if p.width == QGEMM_TILE {
+                let mut r0 = 0;
+                while r0 < rows {
+                    let rb_n = QGEMM_RB.min(rows - r0);
+                    self.block16(panel, x, z, r0, rb_n, p.j0);
+                    r0 += rb_n;
+                }
+            } else {
+                // Ragged panel (n % tile): row-wise fallback, never the
+                // hot shape.
+                self.panel_rowwise(panel, p.width, x, rows, z, p.j0);
+            }
+        }
+    }
+
+    /// One `rb_n×16` register block of i64 accumulators: loaded from `z`
+    /// once, the whole k-reduction runs in registers (each panel row is
+    /// broadcast-multiplied into all block rows per k-step), stored once.
+    #[inline]
+    fn block16(&self, panel: &[i16], x: &[i16], z: &mut [i64], r0: usize, rb_n: usize, j0: usize) {
+        let mut acc = [[0i64; QGEMM_TILE]; QGEMM_RB];
+        for (rb, a) in acc.iter_mut().enumerate().take(rb_n) {
+            let zo = (r0 + rb) * self.n + j0;
+            a.copy_from_slice(&z[zo..zo + QGEMM_TILE]);
+        }
+        for kk in 0..self.k {
+            let wrow = &panel[kk * QGEMM_TILE..(kk + 1) * QGEMM_TILE];
+            for (rb, a) in acc.iter_mut().enumerate().take(rb_n) {
+                let xv = x[(r0 + rb) * self.k + kk] as i64;
+                for (av, &wv) in a.iter_mut().zip(wrow) {
+                    *av += xv * wv as i64;
+                }
+            }
+        }
+        for (rb, a) in acc.iter().enumerate().take(rb_n) {
+            let zo = (r0 + rb) * self.n + j0;
+            z[zo..zo + QGEMM_TILE].copy_from_slice(a);
+        }
+    }
+
+    /// Row-wise panel walk for ragged widths.
+    fn panel_rowwise(
+        &self,
+        panel: &[i16],
+        width: usize,
+        x: &[i16],
+        rows: usize,
+        z: &mut [i64],
+        j0: usize,
+    ) {
+        for r in 0..rows {
+            let xrow = &x[r * self.k..(r + 1) * self.k];
+            let zrow = &mut z[r * self.n + j0..r * self.n + j0 + width];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                let wrow = &panel[kk * width..(kk + 1) * width];
+                for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                    *zv += xv as i64 * wv as i64;
+                }
+            }
+        }
+    }
+}
+
+/// Mutable lockstep state for B concurrent quantized streams: `(B, Lh)`
+/// row-major Q6.10 hidden and Q12.20 cell tensors — the integer twin of
+/// [`super::batched::BatchedState`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FixedBatchedState {
+    /// Lockstep stream rows in this state block.
+    pub batch: usize,
+    /// Hidden width of the layer this state belongs to.
+    pub lh: usize,
+    /// `(B, Lh)` row-major Q6.10 hidden state.
+    pub h: Vec<i16>,
+    /// `(B, Lh)` row-major Q12.20 cell state.
+    pub c: Vec<i32>,
+}
+
+impl FixedBatchedState {
+    /// The zero initial state.
+    pub fn zeros(batch: usize, lh: usize) -> FixedBatchedState {
+        FixedBatchedState {
+            batch,
+            lh,
+            h: vec![0; batch * lh],
+            c: vec![0; batch * lh],
+        }
+    }
+
+    /// Copy stream row `src_row` of `src` into row `row` of `self` (both
+    /// `h` and `c`) — the router's gather/scatter primitive, same contract
+    /// as [`super::batched::BatchedState::copy_row_from`].
+    pub fn copy_row_from(&mut self, row: usize, src: &FixedBatchedState, src_row: usize) {
+        assert_eq!(self.lh, src.lh, "state width mismatch");
+        assert!(row < self.batch, "destination row out of range");
+        assert!(src_row < src.batch, "source row out of range");
+        let lh = self.lh;
+        self.h[row * lh..(row + 1) * lh]
+            .copy_from_slice(&src.h[src_row * lh..(src_row + 1) * lh]);
+        self.c[row * lh..(row + 1) * lh]
+            .copy_from_slice(&src.c[src_row * lh..(src_row + 1) * lh]);
+    }
+}
+
+/// Resident all-layer quantized state of one stream (or a lockstep group):
+/// one [`FixedBatchedState`] per LSTM layer, encoder layers first. Rides
+/// inside [`super::batched::StreamState`] (its `quant` field), so the
+/// session registry, snapshot/restore, quarantine and shard-migration
+/// machinery carry it without knowing the tier exists — the router's only
+/// state ops (`load_row`, `zeros_like`, clone) are forwarded here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FixedStreamState {
+    /// Lockstep stream rows held by every layer state.
+    pub batch: usize,
+    /// Per-layer `(h, c)` blocks (encoder then decoder).
+    pub layers: Vec<FixedBatchedState>,
+}
+
+impl FixedStreamState {
+    /// Zero state for `batch` rows with per-layer hidden widths `lhs`.
+    pub fn zeros(batch: usize, lhs: &[usize]) -> FixedStreamState {
+        FixedStreamState {
+            batch,
+            layers: lhs
+                .iter()
+                .map(|&lh| FixedBatchedState::zeros(batch, lh))
+                .collect(),
+        }
+    }
+
+    /// Copy stream row `src_row` of `src` into row `row` of `self` across
+    /// every layer (gather/scatter, like
+    /// [`super::batched::StreamState::load_row`]).
+    pub fn load_row(&mut self, row: usize, src: &FixedStreamState, src_row: usize) {
+        assert_eq!(
+            self.layers.len(),
+            src.layers.len(),
+            "state layer count mismatch"
+        );
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            dst.copy_row_from(row, s, src_row);
+        }
+    }
+
+    /// A zero state with the same per-layer widths but `batch` rows.
+    pub fn zeros_like(&self, batch: usize) -> FixedStreamState {
+        FixedStreamState {
+            batch,
+            layers: self
+                .layers
+                .iter()
+                .map(|l| FixedBatchedState::zeros(batch, l.lh))
+                .collect(),
+        }
+    }
+
+    /// Zero every layer's `(h, c)` in place (session reset).
+    pub fn zero_fill(&mut self) {
+        for l in &mut self.layers {
+            l.h.fill(0);
+            l.c.fill(0);
+        }
+    }
+}
+
+/// Per-layer working buffers for one quantized lockstep run (integer twin
+/// of the f32 `LayerScratch`): grown on demand, never shrunk, so
+/// steady-state serving does zero hot-path allocation.
+#[derive(Debug, Clone, Default)]
+pub struct FixedLayerScratch {
+    /// `(B*TS, 4Lh)` hoisted input-MVM result (exact i64 accumulators).
+    xw: Vec<i64>,
+    /// `(B, 4Lh)` gate buffer for the current timestep.
+    z: Vec<i64>,
+    /// `(B, Lh)` lockstep Q6.10 hidden state (stateless runs only).
+    h: Vec<i16>,
+    /// `(B, Lh)` lockstep Q12.20 cell state (stateless runs only).
+    c: Vec<i32>,
+}
+
+/// Stage timestep `t`'s biased gate rows: `z[b] := xw[(b, t)] + bias`,
+/// read straight from the batch-major `(rows·TS, 4Lh)` i64 hoist. Bias
+/// addition is an exact integer add, so staging it before the recurrent
+/// GEMM (the scalar path adds it after) cannot change a total.
+#[inline]
+fn stage_biased_gates_q(xw: &[i64], rows: usize, ts: usize, t: usize, bias: &[i32], z: &mut [i64]) {
+    let l4 = bias.len();
+    for b in 0..rows {
+        let src = &xw[(b * ts + t) * l4..(b * ts + t + 1) * l4];
+        let dst = &mut z[b * l4..(b + 1) * l4];
+        for ((d, &s), &bv) in dst.iter_mut().zip(src).zip(bias) {
+            *d = s + bv as i64;
+        }
+    }
+}
+
+/// The quantized recurrent loop over one contiguous stream-slice — the
+/// single implementation both the single-thread path and every worker
+/// lane run, so thread count cannot change an operand (mirrors the f32
+/// `run_slice`; with integer math even accumulation *order* is free).
+#[allow(clippy::too_many_arguments)]
+fn run_slice_q(
+    w: &FixedBatchedLstm,
+    lut: &SigmoidLut,
+    xw: &[i64],
+    rows: usize,
+    ts: usize,
+    z: &mut [i64],
+    h: &mut [i16],
+    c: &mut [i32],
+    out: &mut [i16],
+) {
+    let lh = w.lh;
+    let l4 = 4 * lh;
+    debug_assert_eq!(xw.len(), rows * ts * l4);
+    debug_assert_eq!(z.len(), rows * l4);
+    debug_assert_eq!(h.len(), rows * lh);
+    debug_assert_eq!(c.len(), rows * lh);
+    debug_assert_eq!(out.len(), rows * ts * lh);
+    for t in 0..ts {
+        stage_biased_gates_q(xw, rows, ts, t, &w.b, z);
+        // z += H @ Wh: one packed-weight traversal feeds every stream.
+        w.wh.gemm_acc_i64(h, rows, z);
+        for b in 0..rows {
+            let zrow = &z[b * l4..(b + 1) * l4];
+            let c_row = &mut c[b * lh..(b + 1) * lh];
+            let h_row = &mut h[b * lh..(b + 1) * lh];
+            fused_gate_tail(lut, zrow, lh, c_row, h_row);
+        }
+        for b in 0..rows {
+            out[(b * ts + t) * lh..(b * ts + t + 1) * lh]
+                .copy_from_slice(&h[b * lh..(b + 1) * lh]);
+        }
+    }
+}
+
+/// One LSTM layer packed for register-blocked quantized lockstep
+/// execution: the serving-tier successor of the scalar
+/// [`FixedLstm::run_batch`] loop. Weights are quantized on the identical
+/// [`to_q16`]/[`to_q32`] grid and every gate total is the same exact i64
+/// sum, so outputs are bit-identical to [`FixedLstm`] at any batch size,
+/// thread count, or chunking.
+#[derive(Debug, Clone)]
+pub struct FixedBatchedLstm {
+    /// Input width of the layer.
+    pub lx: usize,
+    /// Hidden width of the layer.
+    pub lh: usize,
+    /// Q6.10 `(Lx, 4Lh)` input weights, panel-packed.
+    wx: PackedMatrixI16,
+    /// Q6.10 `(Lh, 4Lh)` recurrent weights, panel-packed.
+    wh: PackedMatrixI16,
+    /// Q12.20 gate bias, i|f|g|o.
+    b: Vec<i32>,
+}
+
+impl FixedBatchedLstm {
+    /// Quantize + pack one layer (same grid as [`FixedLstm::from_weights`]).
+    pub fn from_weights(w: &LstmWeights) -> FixedBatchedLstm {
+        let l4 = 4 * w.lh;
+        let wx: Vec<i16> = w.wx.iter().map(|&v| to_q16(v)).collect();
+        let wh: Vec<i16> = w.wh.iter().map(|&v| to_q16(v)).collect();
+        FixedBatchedLstm {
+            lx: w.lx,
+            lh: w.lh,
+            wx: PackedMatrixI16::pack(&wx, w.lx, l4),
+            wh: PackedMatrixI16::pack(&wh, w.lh, l4),
+            b: w.b.iter().map(|&v| to_q32(v)).collect(),
+        }
+    }
+
+    /// Full layer over B sequences in lockstep from the zero state. `xs`
+    /// is `(B, TS, Lx)` batch-major Q6.10; returns `(B, TS, Lh)`
+    /// batch-major hidden vectors, bit-identical per stream to
+    /// [`FixedLstm::run`].
+    pub fn run(&self, lut: &SigmoidLut, xs: &[i16], batch: usize, ts: usize) -> Vec<i16> {
+        let mut scratch = FixedLayerScratch::default();
+        let mut out = Vec::new();
+        self.run_core(lut, xs, batch, ts, &mut scratch, &mut out, None, &WorkerPool::serial());
+        out
+    }
+
+    /// [`FixedBatchedLstm::run`] with the lockstep batch partitioned
+    /// across `pool` by its balanced [`super::par::StagePlan`] — exact
+    /// integer math makes this trivially bit-identical to single-thread.
+    pub fn run_pooled(
+        &self,
+        lut: &SigmoidLut,
+        xs: &[i16],
+        batch: usize,
+        ts: usize,
+        pool: &WorkerPool,
+    ) -> Vec<i16> {
+        let mut scratch = FixedLayerScratch::default();
+        let mut out = Vec::new();
+        self.run_core(lut, xs, batch, ts, &mut scratch, &mut out, None, pool);
+        out
+    }
+
+    /// Stateful continuation: the recurrence starts from the caller's
+    /// resident quantized `state` and the final `(h, c)` is written back.
+    /// Chunking a sequence across stateful calls is bit-identical to one
+    /// contiguous call (integer state carries exactly).
+    pub fn run_stateful(
+        &self,
+        lut: &SigmoidLut,
+        xs: &[i16],
+        batch: usize,
+        ts: usize,
+        state: &mut FixedBatchedState,
+    ) -> Vec<i16> {
+        let mut scratch = FixedLayerScratch::default();
+        let mut out = Vec::new();
+        self.run_core(lut, xs, batch, ts, &mut scratch, &mut out, Some(state), &WorkerPool::serial());
+        out
+    }
+
+    /// The shared layer loop — the integer mirror of the f32
+    /// `BatchedLstm::run_core`: hoisted input GEMM over all `(b, t)` rows,
+    /// then the recurrent loop; under a multi-lane pool every buffer is
+    /// `split_at_mut` at the plan's stream-row boundaries and each worker
+    /// runs the identical [`run_slice_q`] on its slice.
+    #[allow(clippy::too_many_arguments)]
+    fn run_core(
+        &self,
+        lut: &SigmoidLut,
+        xs: &[i16],
+        batch: usize,
+        ts: usize,
+        scratch: &mut FixedLayerScratch,
+        out: &mut Vec<i16>,
+        state: Option<&mut FixedBatchedState>,
+        pool: &WorkerPool,
+    ) {
+        let (lx, lh) = (self.lx, self.lh);
+        let l4 = 4 * lh;
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(xs.len(), batch * ts * lx, "input shape mismatch");
+        let FixedLayerScratch { xw, z, h, c } = scratch;
+        reset_q(xw, batch * ts * l4);
+        resize_only_q(z, batch * l4);
+        let (h, c): (&mut [i16], &mut [i32]) = match state {
+            Some(st) => {
+                assert_eq!(st.batch, batch, "state batch mismatch");
+                assert_eq!(st.lh, lh, "state width mismatch");
+                assert_eq!(st.h.len(), batch * lh, "state h length");
+                assert_eq!(st.c.len(), batch * lh, "state c length");
+                (&mut st.h[..], &mut st.c[..])
+            }
+            None => {
+                reset_q(h, batch * lh);
+                reset_q(c, batch * lh);
+                (&mut h[..], &mut c[..])
+            }
+        };
+        resize_only_q(out, batch * ts * lh);
+        if pool.threads() > 1 {
+            let plan = pool.plan(batch, &[(lx, lh)]);
+            if plan.slices().len() > 1 {
+                let (mut xw_r, mut z_r, mut h_r, mut c_r, mut out_r) =
+                    (&mut xw[..], &mut z[..], h, c, &mut out[..]);
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(plan.slices().len());
+                for &(b0, rows) in plan.slices() {
+                    let (xw_i, rest) = xw_r.split_at_mut(rows * ts * l4);
+                    xw_r = rest;
+                    let (z_i, rest) = z_r.split_at_mut(rows * l4);
+                    z_r = rest;
+                    let (h_i, rest) = h_r.split_at_mut(rows * lh);
+                    h_r = rest;
+                    let (c_i, rest) = c_r.split_at_mut(rows * lh);
+                    c_r = rest;
+                    let (out_i, rest) = out_r.split_at_mut(rows * ts * lh);
+                    out_r = rest;
+                    let xs_i = &xs[b0 * ts * lx..(b0 + rows) * ts * lx];
+                    tasks.push(Box::new(move || {
+                        self.wx.gemm_acc_i64(xs_i, rows * ts, xw_i);
+                        run_slice_q(self, lut, xw_i, rows, ts, z_i, h_i, c_i, out_i);
+                    }));
+                }
+                pool.run_tasks(tasks);
+                return;
+            }
+        }
+        self.wx.gemm_acc_i64(xs, batch * ts, xw);
+        run_slice_q(self, lut, xw, batch, ts, z, h, c, out);
+    }
+}
+
+/// Reusable scratch for a whole quantized autoencoder forward pass.
+#[derive(Debug, Default)]
+pub struct FixedScratch {
+    layer: FixedLayerScratch,
+    /// Current layer input, `(B, TS, width)` batch-major Q6.10.
+    seq: Vec<i16>,
+    /// Next layer output (swapped with `seq` after each layer).
+    seq_next: Vec<i16>,
+}
+
+/// The full autoencoder on the register-blocked quantized datapath — the
+/// engine behind `MathPolicy::Quantized` (`serve --math quantized`,
+/// platform `native-batched+q16`). Mirrors
+/// [`super::batched::PackedAutoencoder`]'s shape exactly (scratch lock,
+/// worker pool, stateless + stateful entry points) so the executor and
+/// every serving layer above it treat the tiers uniformly.
+///
+/// Output contract: bit-identical to the scalar
+/// [`super::autoencoder::FixedAutoencoder`] at any (batch, threads,
+/// chunking) — pinned by
+/// `tests/fixed_parity.rs` — and accuracy-bounded vs the BitExact f32
+/// tier by [`QUANT_SCORE_TOL`] / [`QUANT_AUC_TOL`].
+#[derive(Debug)]
+pub struct FixedPackedAutoencoder {
+    layers: Vec<FixedBatchedLstm>,
+    split: usize,
+    out_w: Vec<f32>,
+    out_b: Vec<f32>,
+    d_out: usize,
+    lut: SigmoidLut,
+    /// Reused across calls; locked once per forward pass. Holding it also
+    /// serializes use of `pool` (one dispatcher at a time).
+    scratch: Mutex<FixedScratch>,
+    pool: WorkerPool,
+}
+
+impl Clone for FixedPackedAutoencoder {
+    fn clone(&self) -> FixedPackedAutoencoder {
+        FixedPackedAutoencoder {
+            layers: self.layers.clone(),
+            split: self.split,
+            out_w: self.out_w.clone(),
+            out_b: self.out_b.clone(),
+            d_out: self.d_out,
+            lut: self.lut.clone(),
+            scratch: Mutex::new(FixedScratch::default()),
+            // same thread count/mode, fresh threads: worker lanes are
+            // never shared between engine instances
+            pool: self.pool.like(),
+        }
+    }
+}
+
+impl FixedPackedAutoencoder {
+    /// Quantize + pack every layer (single-threaded).
+    pub fn from_weights(w: &AutoencoderWeights) -> FixedPackedAutoencoder {
+        FixedPackedAutoencoder::from_weights_pool(w, WorkerPool::serial())
+    }
+
+    /// Quantize + pack with a `threads`-lane balanced-partition pool.
+    pub fn from_weights_threads(w: &AutoencoderWeights, threads: usize) -> FixedPackedAutoencoder {
+        FixedPackedAutoencoder::from_weights_pool(w, WorkerPool::new(threads))
+    }
+
+    /// Quantize + pack with a caller-built pool.
+    pub fn from_weights_pool(w: &AutoencoderWeights, pool: WorkerPool) -> FixedPackedAutoencoder {
+        FixedPackedAutoencoder {
+            layers: w.layers.iter().map(FixedBatchedLstm::from_weights).collect(),
+            split: w.layers.len() / 2,
+            out_w: w.out_w.clone(),
+            out_b: w.out_b.clone(),
+            d_out: w.d_out,
+            lut: SigmoidLut::default(),
+            scratch: Mutex::new(FixedScratch::default()),
+            pool,
+        }
+    }
+
+    /// Worker lanes this engine executes across (1 = single-threaded).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Zero-initialized resident state for `batch` lockstep streams. The
+    /// returned [`StreamState`] carries **both** the authoritative
+    /// quantized per-layer `(h, c)` (its `quant` field) and a dequantized
+    /// f32 mirror in `layers` — the mirror is what the tier-agnostic
+    /// machinery (finiteness sweeps, snapshot inspection, tests) reads;
+    /// it is refreshed after every stateful call and, being a
+    /// dequantization of finite integers, can never go non-finite.
+    pub fn zero_state(&self, batch: usize) -> StreamState {
+        assert!(batch > 0, "batch must be positive");
+        let lhs: Vec<usize> = self.layers.iter().map(|l| l.lh).collect();
+        StreamState {
+            batch,
+            layers: lhs.iter().map(|&lh| BatchedState::zeros(batch, lh)).collect(),
+            quant: Some(FixedStreamState::zeros(batch, &lhs)),
+        }
+    }
+
+    /// Reconstruct B windows in lockstep through the 16-bit datapath.
+    /// `windows` is `(B, TS)` batch-major f32 (quantized on entry exactly
+    /// like [`super::autoencoder::FixedAutoencoder::forward_batch`]);
+    /// reconstruction in f32.
+    pub fn forward_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
+        let mut guard = self.lock_scratch();
+        self.forward_core(windows, batch, &mut guard, None)
+    }
+
+    /// Stateful continuation of B quantized streaming sessions: every
+    /// layer continues from `state.quant` instead of zeros and writes the
+    /// final integer `(h, c)` back (then refreshes the f32 mirror).
+    /// Chunked == contiguous bitwise, as for the f32 engine — but here by
+    /// integer exactness rather than order preservation.
+    pub fn forward_batch_stateful(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        state: &mut StreamState,
+    ) -> Vec<f32> {
+        let mut guard = self.lock_scratch();
+        self.forward_core(windows, batch, &mut guard, Some(state))
+    }
+
+    /// Per-stream reconstruction-MSE anomaly scores for a micro-batch
+    /// (the shared [`mse_per_stream`] definition).
+    pub fn score_batch(&self, windows: &[f32], batch: usize) -> Vec<f32> {
+        let rec = self.forward_batch(windows, batch);
+        mse_per_stream(windows, &rec, batch)
+    }
+
+    /// Stateful per-stream anomaly scores.
+    pub fn score_batch_stateful(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        state: &mut StreamState,
+    ) -> Vec<f32> {
+        let rec = self.forward_batch_stateful(windows, batch, state);
+        mse_per_stream(windows, &rec, batch)
+    }
+
+    /// Take the scratch lock, recovering from poisoning by starting from
+    /// an empty scratch (same supervised-execution contract as the f32
+    /// engine's `lock_scratch`).
+    fn lock_scratch(&self) -> std::sync::MutexGuard<'_, FixedScratch> {
+        self.scratch.lock().unwrap_or_else(|poison| {
+            let mut guard = poison.into_inner();
+            *guard = FixedScratch::default();
+            guard
+        })
+    }
+
+    /// The shared forward pass (integer mirror of the f32 `forward_core`):
+    /// quantize input → encoder → latent repeat → decoder → f32
+    /// TimeDistributed dense, with per-layer quantized state threaded
+    /// through when `state` is `Some`.
+    fn forward_core(
+        &self,
+        windows: &[f32],
+        batch: usize,
+        scratch: &mut FixedScratch,
+        mut state: Option<&mut StreamState>,
+    ) -> Vec<f32> {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(windows.len() % batch, 0, "ragged batch");
+        if let Some(st) = state.as_deref() {
+            assert_eq!(st.batch, batch, "state batch mismatch");
+            assert_eq!(st.layers.len(), self.layers.len(), "state layer count");
+            assert!(
+                st.quant.is_some(),
+                "quantized engine needs a quantized resident state \
+                 (build it with FixedPackedAutoencoder::zero_state)"
+            );
+        }
+        let ts = windows.len() / batch;
+        let FixedScratch {
+            layer,
+            seq,
+            seq_next,
+        } = scratch;
+        seq.clear();
+        seq.extend(windows.iter().map(|&v| to_q16(v)));
+        let mut width = 1usize;
+        for (i, l) in self.layers[..self.split].iter().enumerate() {
+            assert_eq!(width, l.lx, "encoder layer input width");
+            let st = state
+                .as_deref_mut()
+                .and_then(|st| st.quant.as_mut())
+                .map(|q| &mut q.layers[i]);
+            l.run_core(&self.lut, seq, batch, ts, layer, seq_next, st, &self.pool);
+            std::mem::swap(seq, seq_next);
+            width = l.lh;
+        }
+        // Bottleneck per stream: keep the last hidden vector, repeat over
+        // ts (every (b, t) slice is written, so no zero-fill needed).
+        resize_only_q(seq_next, batch * ts * width);
+        for b in 0..batch {
+            let latent = &seq[(b * ts + ts - 1) * width..(b * ts + ts) * width];
+            for t in 0..ts {
+                seq_next[(b * ts + t) * width..(b * ts + t + 1) * width].copy_from_slice(latent);
+            }
+        }
+        std::mem::swap(seq, seq_next);
+        for (j, l) in self.layers[self.split..].iter().enumerate() {
+            assert_eq!(width, l.lx, "decoder layer input width");
+            let st = state
+                .as_deref_mut()
+                .and_then(|st| st.quant.as_mut())
+                .map(|q| &mut q.layers[self.split + j]);
+            l.run_core(&self.lut, seq, batch, ts, layer, seq_next, st, &self.pool);
+            std::mem::swap(seq, seq_next);
+            width = l.lh;
+        }
+        // TimeDistributed dense in f32, same loop order and roundings as
+        // the scalar FixedAutoencoder (parity contract).
+        let mut out = vec![0.0f32; batch * ts * self.d_out];
+        for bt in 0..batch * ts {
+            for o in 0..self.d_out {
+                let mut acc = self.out_b[o];
+                for j in 0..width {
+                    acc += q16_to_f32(seq[bt * width + j]) * self.out_w[j * self.d_out + o];
+                }
+                out[bt * self.d_out + o] = acc;
+            }
+        }
+        // Refresh the dequantized f32 mirror the tier-agnostic state
+        // machinery reads (always finite: it is a cast of live integers).
+        if let Some(st) = state.as_deref_mut() {
+            let StreamState { layers, quant, .. } = st;
+            let q = quant.as_ref().expect("checked above");
+            for (fl, ql) in layers.iter_mut().zip(&q.layers) {
+                for (dst, &src) in fl.h.iter_mut().zip(&ql.h) {
+                    *dst = q16_to_f32(src);
+                }
+                for (dst, &src) in fl.c.iter_mut().zip(&ql.c) {
+                    *dst = q32_to_f32(src);
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -327,5 +1131,187 @@ mod tests {
         let out = f.run(&lut, &xs, 16);
         // |h| <= 1 in Q6.10 (1024), plus LUT slack
         assert!(out.iter().all(|&v| v.unsigned_abs() <= 1100), "{out:?}");
+    }
+
+    #[test]
+    fn packed_i16_gemm_matches_naive_triple_loop() {
+        // blocking is locality-only for integer math: sweep shapes that
+        // exercise full 16-wide panels, ragged tails, and row remainders
+        let mut rng = Rng::new(0xA11CE);
+        for &(rows, k, n) in &[(1usize, 3usize, 36usize), (4, 9, 16), (5, 7, 40), (9, 2, 17)] {
+            let src: Vec<i16> = (0..k * n).map(|_| (rng.gaussian() * 300.0) as i16).collect();
+            let x: Vec<i16> = (0..rows * k).map(|_| (rng.gaussian() * 300.0) as i16).collect();
+            let m = PackedMatrixI16::pack(&src, k, n);
+            let mut z = vec![7i64; rows * n]; // nonzero: gemm accumulates
+            m.gemm_acc_i64(&x, rows, &mut z);
+            let mut want = vec![7i64; rows * n];
+            for r in 0..rows {
+                for kk in 0..k {
+                    for j in 0..n {
+                        want[r * n + j] += x[r * k + kk] as i64 * src[kk * n + j] as i64;
+                    }
+                }
+            }
+            assert_eq!(z, want, "rows={rows} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn batched_engine_bitexact_with_scalar_fixed() {
+        let w = random_weights(11, 3, 9);
+        let scalar = FixedLstm::from_weights(&w);
+        let packed = FixedBatchedLstm::from_weights(&w);
+        let lut = SigmoidLut::default();
+        let ts = 12;
+        let mut rng = Rng::new(42);
+        for batch in [1usize, 3, 8] {
+            let xs: Vec<i16> = (0..batch * ts * 3)
+                .map(|_| to_q16(rng.gaussian() as f32))
+                .collect();
+            let got = packed.run(&lut, &xs, batch, ts);
+            for b in 0..batch {
+                let one = scalar.run(&lut, &xs[b * ts * 3..(b + 1) * ts * 3], ts);
+                assert_eq!(&got[b * ts * 9..(b + 1) * ts * 9], &one[..], "B={batch} stream {b}");
+            }
+            // threading repartitions rows; exact integer sums cannot move
+            let pool = WorkerPool::new(4);
+            assert_eq!(packed.run_pooled(&lut, &xs, batch, ts, &pool), got, "B={batch} threaded");
+        }
+    }
+
+    #[test]
+    fn batched_stateful_chunked_equals_contiguous() {
+        let w = random_weights(13, 2, 8);
+        let packed = FixedBatchedLstm::from_weights(&w);
+        let lut = SigmoidLut::default();
+        let (batch, ts) = (3usize, 16usize);
+        let mut rng = Rng::new(77);
+        let xs: Vec<i16> = (0..batch * ts * 2)
+            .map(|_| to_q16(rng.gaussian() as f32))
+            .collect();
+        let full = packed.run(&lut, &xs, batch, ts);
+        for hops in [vec![16usize], vec![1; 16], vec![5, 1, 9, 1], vec![7, 9]] {
+            let mut st = FixedBatchedState::zeros(batch, 8);
+            let mut got = vec![0i16; batch * ts * 8];
+            let mut t0 = 0usize;
+            for &hop in &hops {
+                // regather the chunk batch-major: stream b's samples t0..t0+hop
+                let mut chunk = vec![0i16; batch * hop * 2];
+                for b in 0..batch {
+                    chunk[b * hop * 2..(b + 1) * hop * 2]
+                        .copy_from_slice(&xs[(b * ts + t0) * 2..(b * ts + t0 + hop) * 2]);
+                }
+                let part = packed.run_stateful(&lut, &chunk, batch, hop, &mut st);
+                for b in 0..batch {
+                    got[(b * ts + t0) * 8..(b * ts + t0 + hop) * 8]
+                        .copy_from_slice(&part[b * hop * 8..(b + 1) * hop * 8]);
+                }
+                t0 += hop;
+            }
+            assert_eq!(t0, ts);
+            assert_eq!(got, full, "hops {hops:?}");
+        }
+    }
+
+    #[test]
+    fn packed_autoencoder_bitexact_with_scalar_fixed_autoencoder() {
+        use crate::model::autoencoder::FixedAutoencoder;
+        let w = AutoencoderWeights::synthetic(23, "small");
+        let scalar = FixedAutoencoder::from_weights(&w);
+        for threads in [1usize, 4] {
+            let eng = FixedPackedAutoencoder::from_weights_threads(&w, threads);
+            let (batch, ts) = (5usize, 8usize);
+            let windows: Vec<f32> = (0..batch * ts)
+                .map(|i| ((i * 13 % 7) as f32 - 3.0) / 3.0)
+                .collect();
+            let got = eng.forward_batch(&windows, batch);
+            for b in 0..batch {
+                let one = scalar.forward(&windows[b * ts..(b + 1) * ts]);
+                assert_eq!(&got[b * ts..(b + 1) * ts], &one[..], "threads {threads} stream {b}");
+            }
+            let scores = eng.score_batch(&windows, batch);
+            for b in 0..batch {
+                assert_eq!(scores[b], scalar.score(&windows[b * ts..(b + 1) * ts]));
+            }
+        }
+    }
+
+    #[test]
+    fn packed_autoencoder_state_mirror_stays_dequantized() {
+        let w = AutoencoderWeights::synthetic(29, "small");
+        let eng = FixedPackedAutoencoder::from_weights(&w);
+        let mut st = eng.zero_state(2);
+        assert!(st.quant.is_some());
+        let chunk = vec![0.3f32; 2 * 6];
+        eng.forward_batch_stateful(&chunk, 2, &mut st);
+        let q = st.quant.as_ref().unwrap();
+        for (fl, ql) in st.layers.iter().zip(&q.layers) {
+            for (&f, &qi) in fl.h.iter().zip(&ql.h) {
+                assert_eq!(f, q16_to_f32(qi));
+            }
+            for (&f, &qc) in fl.c.iter().zip(&ql.c) {
+                assert_eq!(f, q32_to_f32(qc));
+            }
+            // dequantized integers are finite by construction
+            assert!(fl.h.iter().chain(&fl.c).all(|v| v.is_finite()));
+        }
+        // the evolved state changes the next chunk's reconstruction
+        let again = eng.forward_batch_stateful(&chunk, 2, &mut st);
+        assert_ne!(again, eng.forward_batch(&chunk, 2));
+    }
+
+    /// Cross-language golden for the pure-arithmetic gate tail — the exact
+    /// integer algebra [`fused_gate_tail`] applies after the activations:
+    /// truncating f32 -> Q1.20 gate cast, the two `>> 20` products
+    /// (arithmetic shift: floors for negatives), saturating i32 cell add,
+    /// and the Q6.10 output quantizer. The activation step itself is pinned
+    /// separately (`act_lut` block-vs-scalar tests), so the golden replaces
+    /// `pwl_tanh(c_new)` with the identity `q32_to_f32(c_new)` — every
+    /// number below is reproducible in exact integer arithmetic, which is
+    /// what lets the numpy twin in `python/tests/test_quant.py` assert the
+    /// same tuples without sharing an exp() implementation.
+    #[test]
+    fn tail_algebra_cross_language_golden() {
+        // (i_g, f_g, g_g, o_g, c_prev) -> (i_q, f_q, g_q, fc, ig, c_new, h)
+        #[allow(clippy::type_complexity)]
+        let golden: [((f32, f32, f32, f32, i32), (i64, i64, i64, i64, i64, i32, i16)); 5] = [
+            (
+                (0.5, 0.75, -0.5, 0.5, 1_048_576),
+                (524_288, 786_432, -524_288, 786_432, -262_144, 524_288, 256),
+            ),
+            // 1-lsb forget gate on a -1 cell: fc = (1 * -1) >> 20 floors
+            // to -1 (arithmetic shift), not to 0
+            ((0.0, 1.0 / 1_048_576.0, 0.0, 1.0, -1), (0, 1, 0, -1, 0, -1, 0)),
+            (
+                (1.0, 1.0, 1.0, 1.0, i32::MAX),
+                (1_048_576, 1_048_576, 1_048_576, 2_147_483_647, 1_048_576, i32::MAX, 32_767),
+            ),
+            (
+                (1.0, 1.0, -1.0, 1.0, i32::MIN),
+                (1_048_576, 1_048_576, -1_048_576, -2_147_483_648, -1_048_576, i32::MIN, -32_768),
+            ),
+            (
+                (0.3, 0.9, -0.7, 0.6, -123_456_789),
+                (314_572, 943_718, -734_003, -111_111_064, -220_201, -111_331_265, -32_768),
+            ),
+        ];
+        for &((i_g, f_g, g_g, o_g, c_prev), want) in &golden {
+            let i_q = (i_g * (1 << 20) as f32) as i64;
+            let f_q = (f_g * (1 << 20) as f32) as i64;
+            let g_q = (g_g * (1 << 20) as f32) as i64;
+            let fc = (f_q * c_prev as i64) >> 20;
+            let ig = (i_q * g_q) >> 20;
+            let c_new = sat_i32(fc + ig);
+            let h = to_q16(o_g * q32_to_f32(c_new));
+            assert_eq!(
+                (i_q, f_q, g_q, fc, ig, c_new, h),
+                want,
+                "tail golden for gates ({i_g}, {f_g}, {g_g}, {o_g}) c_prev {c_prev}"
+            );
+        }
+        // saturation on c is what fc + ig overflows into: 2 * i32::MAX
+        // worth of Q12.20 must clamp, not wrap
+        assert_eq!(sat_i32(2 * i32::MAX as i64), i32::MAX);
+        assert_eq!(sat_i32(2 * i32::MIN as i64), i32::MIN);
     }
 }

@@ -25,9 +25,15 @@
 //!   tolerances in [`simd`], pinned by tests/fastmath_tolerance.rs),
 //! * [`fixed`] + [`act_lut`] — the paper's 16-bit datapath bit-for-bit:
 //!   Q6.10 weights/activations, Q12.20 bias/cell state, BRAM-LUT sigmoid,
-//!   piecewise-linear tanh (Section IV-A), including a lockstep batched
-//!   sequence path (`FixedLstm::run_batch`) sharing one fused gate tail
-//!   with the scalar path.
+//!   piecewise-linear tanh (Section IV-A). Beyond the scalar reference
+//!   ([`fixed::FixedLstm`]) this is now a full serving tier
+//!   ([`MathPolicy::Quantized`], platform `native-batched+q16`): packed
+//!   i16 panels ([`fixed::PackedMatrixI16`]) drive a register-blocked
+//!   lockstep engine ([`FixedBatchedLstm`] / [`FixedPackedAutoencoder`])
+//!   with resident quantized stream state ([`FixedStreamState`]) — all
+//!   bit-identical to the scalar fixed path at any batch size, thread
+//!   count, or chunking (exact i64 gate accumulation; pinned by
+//!   tests/fixed_parity.rs).
 //!
 //! [`weights`] loads the trained parameters exported by `aot.py`.
 
@@ -44,6 +50,10 @@ pub use autoencoder::{forward_f32, score_f32, FixedAutoencoder};
 pub use batched::{
     forward_f32_batch, BatchedLstm, BatchedState, LstmWeightsPacked, PackedAutoencoder,
     StreamState,
+};
+pub use fixed::{
+    FixedBatchedLstm, FixedBatchedState, FixedPackedAutoencoder, FixedStreamState,
+    PackedMatrixI16, QUANT_AUC_TOL, QUANT_SCORE_TOL,
 };
 pub use par::{PlanMode, StagePlan, WorkerPool};
 pub use simd::MathPolicy;

@@ -29,6 +29,15 @@
 //!   autoencoder reconstructions/scores within [`FAST_FORWARD_TOL`]
 //!   absolute of the `BitExact` result (pinned by
 //!   `tests/fastmath_tolerance.rs`).
+//! * [`MathPolicy::Quantized`]: the paper's Q6.10/Q12.20 fixed-point
+//!   datapath at serving scale — served by a *different engine*
+//!   ([`super::fixed::FixedPackedAutoencoder`], i16 packed panels + exact
+//!   i64 gate accumulation + LUT/PWL activations), not by the f32 kernels
+//!   in this module. Within the tier, batched/threaded/streamed output is
+//!   **bit-identical** to the scalar [`super::fixed::FixedLstm`] reference
+//!   (`tests/fixed_parity.rs`); against `BitExact` it is accuracy-bounded
+//!   by [`super::fixed::QUANT_SCORE_TOL`] /
+//!   [`super::fixed::QUANT_AUC_TOL`].
 
 use super::lstm::sigmoid;
 
@@ -43,25 +52,35 @@ pub enum MathPolicy {
     /// rational sigmoid/tanh. Accuracy-bounded, not bit-exact: see the
     /// module docs for the promised tolerances.
     FastSimd,
+    /// The 16-bit fixed-point datapath (Q6.10 weights/activations, Q12.20
+    /// bias/cell, exact i64 gate accumulation, LUT/PWL activations) as a
+    /// serving tier. Served by [`super::fixed::FixedPackedAutoencoder`] —
+    /// never by this module's f32 kernels. Bit-identical within the tier
+    /// to the scalar [`super::fixed::FixedLstm`] at any batch/threads/
+    /// chunking; accuracy-bounded vs `BitExact` (see the module docs).
+    Quantized,
 }
 
 impl MathPolicy {
-    /// Parse a config/CLI spelling. Accepts `bitexact`/`bit_exact`/`exact`
-    /// and `fast_simd`/`fastsimd`/`fast`.
+    /// Parse a config/CLI spelling. Accepts `bitexact`/`bit_exact`/`exact`,
+    /// `fast_simd`/`fastsimd`/`fast`, and `quantized`/`quant`/`q16`.
     ///
     /// ```
     /// use gwlstm::model::MathPolicy;
     ///
     /// assert_eq!(MathPolicy::parse("bitexact").unwrap(), MathPolicy::BitExact);
     /// assert_eq!(MathPolicy::parse("fast").unwrap(), MathPolicy::FastSimd);
+    /// assert_eq!(MathPolicy::parse("quantized").unwrap(), MathPolicy::Quantized);
+    /// assert_eq!(MathPolicy::parse("q16").unwrap(), MathPolicy::Quantized);
     /// assert!(MathPolicy::parse("warp9").is_err());
     /// ```
     pub fn parse(s: &str) -> anyhow::Result<MathPolicy> {
         match s.to_ascii_lowercase().as_str() {
             "bitexact" | "bit_exact" | "bit-exact" | "exact" => Ok(MathPolicy::BitExact),
             "fastsimd" | "fast_simd" | "fast-simd" | "fast" => Ok(MathPolicy::FastSimd),
+            "quantized" | "quant" | "q16" => Ok(MathPolicy::Quantized),
             other => Err(anyhow::anyhow!(
-                "unknown math policy {other:?} (expected bitexact|fast_simd)"
+                "unknown math policy {other:?} (expected bitexact|fast_simd|quantized)"
             )),
         }
     }
@@ -73,11 +92,13 @@ impl MathPolicy {
     ///
     /// assert_eq!(MathPolicy::BitExact.label(), "bitexact");
     /// assert_eq!(MathPolicy::FastSimd.label(), "fast_simd");
+    /// assert_eq!(MathPolicy::Quantized.label(), "quantized");
     /// ```
     pub fn label(&self) -> &'static str {
         match self {
             MathPolicy::BitExact => "bitexact",
             MathPolicy::FastSimd => "fast_simd",
+            MathPolicy::Quantized => "quantized",
         }
     }
 }
@@ -419,6 +440,12 @@ pub fn lstm_gates(
     match policy {
         MathPolicy::BitExact => lstm_gates_exact(zi, zf, zg, zo, c, h),
         MathPolicy::FastSimd => lstm_gates_fast(zi, zf, zg, zo, c, h),
+        // Unreachable by construction: the quantized tier's engine
+        // (`model::fixed`) never calls the f32 gate path, and the f32
+        // engines refuse to build with this policy.
+        MathPolicy::Quantized => {
+            panic!("MathPolicy::Quantized is served by the fixed-point engine, not the f32 gate path")
+        }
     }
 }
 
@@ -432,9 +459,13 @@ mod tests {
         assert_eq!(MathPolicy::parse("BIT_EXACT").unwrap(), MathPolicy::BitExact);
         assert_eq!(MathPolicy::parse("fast").unwrap(), MathPolicy::FastSimd);
         assert_eq!(MathPolicy::parse("fast_simd").unwrap(), MathPolicy::FastSimd);
+        assert_eq!(MathPolicy::parse("quantized").unwrap(), MathPolicy::Quantized);
+        assert_eq!(MathPolicy::parse("QUANT").unwrap(), MathPolicy::Quantized);
+        assert_eq!(MathPolicy::parse("q16").unwrap(), MathPolicy::Quantized);
         assert!(MathPolicy::parse("turbo").is_err());
         assert_eq!(MathPolicy::default(), MathPolicy::BitExact);
         assert_eq!(MathPolicy::FastSimd.label(), "fast_simd");
+        assert_eq!(MathPolicy::Quantized.label(), "quantized");
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //!   compiled executable has the artifact's fixed `(ts, d_in)` shape, so
 //!   micro-batches execute as a loop of batch-1 calls.
 //! * **Native** — the in-tree batched engine
-//!   ([`crate::model::PackedAutoencoder`]): weights packed once at load
+//!   ([`crate::model::PackedAutoencoder`] for the f32 tiers,
+//!   [`crate::model::FixedPackedAutoencoder`] when the math tier is
+//!   [`MathPolicy::Quantized`] — platform label `native-batched+q16`):
+//!   weights packed once at load
 //!   time into the column-tiled layout, after which
 //!   [`ModelExecutor::score_batch`] advances the whole micro-batch in
 //!   lockstep through every layer (one weight traversal per timestep feeds
@@ -24,7 +27,9 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Manifest, VariantSpec};
-use crate::model::{AutoencoderWeights, MathPolicy, PackedAutoencoder, StreamState};
+use crate::model::{
+    AutoencoderWeights, FixedPackedAutoencoder, MathPolicy, PackedAutoencoder, StreamState,
+};
 use crate::util::json::Value;
 
 /// Shared PJRT client (CPU platform).
@@ -78,6 +83,10 @@ impl Engine {
 enum Backend {
     Pjrt(xla::PjRtLoadedExecutable),
     Native(PackedAutoencoder),
+    /// The Q6.10 fixed-point serving tier (`MathPolicy::Quantized`): the
+    /// software twin of the paper's FPGA datapath, batched and threaded like
+    /// the f32 engine but integer end-to-end through the gates.
+    Quantized(FixedPackedAutoencoder),
 }
 
 /// A compiled/packed model ready for request-path execution.
@@ -166,18 +175,26 @@ impl ModelExecutor {
     ) -> ModelExecutor {
         assert!(threads >= 1, "threads must be positive");
         let t0 = Instant::now();
-        let packed = PackedAutoencoder::from_weights_policy_threads(weights, policy, threads);
+        let backend = match policy {
+            MathPolicy::Quantized => Backend::Quantized(
+                FixedPackedAutoencoder::from_weights_threads(weights, threads),
+            ),
+            _ => Backend::Native(PackedAutoencoder::from_weights_policy_threads(
+                weights, policy, threads,
+            )),
+        };
         let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
         let mut platform = match policy {
             MathPolicy::BitExact => "native-batched".to_string(),
             MathPolicy::FastSimd => "native-batched+fastsimd".to_string(),
+            MathPolicy::Quantized => "native-batched+q16".to_string(),
         };
         if threads > 1 {
             platform.push_str(&format!("+par{threads}"));
         }
         ModelExecutor {
             spec,
-            backend: Backend::Native(packed),
+            backend,
             platform,
             compile_ms,
         }
@@ -210,6 +227,7 @@ impl ModelExecutor {
                 Ok(out.to_vec::<f32>()?)
             }
             Backend::Native(packed) => Ok(packed.forward_batch(window, 1)),
+            Backend::Quantized(fixed) => Ok(fixed.forward_batch(window, 1)),
         }
     }
 
@@ -231,6 +249,7 @@ impl ModelExecutor {
         }
         match &self.backend {
             Backend::Native(packed) => Ok(packed.forward_batch(windows, batch)),
+            Backend::Quantized(fixed) => Ok(fixed.forward_batch(windows, batch)),
             Backend::Pjrt(_) => {
                 let mut out = Vec::with_capacity(windows.len());
                 for b in 0..batch {
@@ -268,6 +287,7 @@ impl ModelExecutor {
     pub fn stream_state(&self, batch: usize) -> Result<StreamState> {
         match &self.backend {
             Backend::Native(packed) => Ok(packed.zero_state(batch)),
+            Backend::Quantized(fixed) => Ok(fixed.zero_state(batch)),
             Backend::Pjrt(_) => bail!(
                 "streaming state requires the native batched backend \
                  (the PJRT artifact is a stateless fixed-shape executable)"
@@ -310,6 +330,7 @@ impl ModelExecutor {
         }
         match &self.backend {
             Backend::Native(packed) => Ok(packed.score_batch_stateful(windows, batch, state)),
+            Backend::Quantized(fixed) => Ok(fixed.score_batch_stateful(windows, batch, state)),
             Backend::Pjrt(_) => bail!(
                 "score_batch_stateful requires the native batched backend \
                  (the PJRT artifact is a stateless fixed-shape executable)"
@@ -435,6 +456,53 @@ mod tests {
             assert_eq!(x.h, y.h, "layer {l} h");
             assert_eq!(x.c, y.c, "layer {l} c");
         }
+    }
+
+    #[test]
+    fn quantized_executor_is_labeled_threadsafe_and_bounded() {
+        let w = AutoencoderWeights::synthetic(9, "small");
+        let exact = ModelExecutor::native_from_weights(&w, "small_synth", 8);
+        let quant = ModelExecutor::native_from_weights_policy(
+            &w,
+            "small_synth",
+            8,
+            MathPolicy::Quantized,
+        );
+        assert_eq!(quant.platform(), "native-batched+q16");
+        let par = ModelExecutor::native_from_weights_policy_threads(
+            &w,
+            "small_synth",
+            8,
+            MathPolicy::Quantized,
+            4,
+        );
+        assert_eq!(par.platform(), "native-batched+q16+par4");
+        let (batch, ts) = (5, 8);
+        let windows: Vec<f32> = (0..batch * ts)
+            .map(|i| ((i * 17 % 29) as f32 - 14.0) / 14.0)
+            .collect();
+        // threading never changes quantized output (exact integer math)
+        let q = quant.score_batch(&windows, batch).unwrap();
+        assert_eq!(q, par.score_batch(&windows, batch).unwrap());
+        // and the tier tracks BitExact within the published bound
+        let e = exact.score_batch(&windows, batch).unwrap();
+        for (x, y) in e.iter().zip(&q) {
+            assert!(
+                (x - y).abs() <= crate::model::fixed::QUANT_SCORE_TOL,
+                "quantized score drift {x} vs {y}"
+            );
+        }
+        // the stateful path mints a quantized resident state and advances it
+        let mut st = quant.stream_state(batch).unwrap();
+        assert!(st.quant.is_some(), "quantized executor must mint quant state");
+        let s1 = quant
+            .score_batch_stateful(&windows[..batch * 4], batch, &mut st)
+            .unwrap();
+        let s2 = quant
+            .score_batch_stateful(&windows[..batch * 4], batch, &mut st)
+            .unwrap();
+        assert_eq!(s1.len(), batch);
+        assert_ne!(s1, s2, "resident state must evolve between chunks");
     }
 
     #[test]

@@ -323,6 +323,7 @@ mod tests {
         let proto = StreamState {
             batch: 1,
             layers: vec![BatchedState::zeros(1, 3)],
+            quant: None,
         };
         SessionRegistry::new(
             StreamConfig {

@@ -178,6 +178,12 @@ impl StreamSession {
             l.h.fill(0.0);
             l.c.fill(0.0);
         }
+        // Quantized tier: the integer state is the authoritative one — a
+        // reset that only cleared the f32 mirror would silently resurrect
+        // the old state on the next stateful call.
+        if let Some(q) = &mut self.state.quant {
+            q.zero_fill();
+        }
     }
 
     /// Record the current state as the last-good checkpoint if it is due:
@@ -314,6 +320,7 @@ mod tests {
         StreamState {
             batch: 1,
             layers: vec![BatchedState::zeros(1, 4)],
+            quant: None,
         }
     }
 
@@ -446,5 +453,19 @@ mod tests {
         assert!(s.state.layers[0].h.iter().all(|&v| v == 0.0));
         assert!(s.state.layers[0].c.iter().all(|&v| v == 0.0));
         assert_eq!(s.pending_len(), 3);
+    }
+
+    #[test]
+    fn reset_state_zeros_quantized_resident_state() {
+        use crate::model::fixed::FixedStreamState;
+        let mut st = state1();
+        st.quant = Some(FixedStreamState::zeros(1, &[4]));
+        let mut s = StreamSession::new(3, st, 0);
+        s.state.quant.as_mut().unwrap().layers[0].h.fill(7);
+        s.state.quant.as_mut().unwrap().layers[0].c.fill(-9);
+        s.reset_state();
+        let q = s.state.quant.as_ref().unwrap();
+        assert!(q.layers[0].h.iter().all(|&v| v == 0));
+        assert!(q.layers[0].c.iter().all(|&v| v == 0));
     }
 }

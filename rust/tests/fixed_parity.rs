@@ -1,0 +1,504 @@
+//! Quantized-tier parity + accuracy contracts: the Q6.10 lockstep serving
+//! engine must be **bitwise** the scalar fixed-point reference, and
+//! accuracy-**bounded** against the BitExact f32 tier.
+//!
+//! Contracts pinned here (the acceptance criteria of the quantized tier):
+//!
+//! 1. **Scalar/batched parity** — `FixedBatchedLstm` and
+//!    `FixedPackedAutoencoder` outputs at B ∈ {1, 3, 8, 32} × threads
+//!    {1, 4}, on chirp-injected and random windows, are bit-identical to
+//!    the scalar `FixedLstm`/`FixedAutoencoder` (exact i64 gate totals:
+//!    blocking, batching and threading are order-free transforms).
+//! 2. **Chunk parity** — stateful continuation over ragged hop schedules
+//!    is bit-identical to one contiguous run (integer state carries
+//!    exactly).
+//! 3. **Isolation (property)** — randomized session interleavings through
+//!    a `StreamRouter` backed by a quantized executor match isolated
+//!    scalar-engine references bitwise.
+//! 4. **Accuracy bounds** — per-window score drift and ROC-AUC drift vs
+//!    the BitExact tier on the chirp dataset stay within
+//!    `QUANT_SCORE_TOL` / `QUANT_AUC_TOL` (`eval::roc::tier_accuracy`).
+//! 5. **Serving** — `streaming + ingress + shards` under
+//!    `MathPolicy::Quantized` closes the conservation ledger end-to-end
+//!    and reports the `q16` platform; the PJRT entry point *rejects* the
+//!    quantized tier (reject-don't-ignore).
+//! 6. **Cross-language goldens** — `to_q16`/`to_q32` (half away from
+//!    zero) and the i64 GEMM accumulation match the shared golden vectors
+//!    that `python/tests/test_quant.py` pins on the numpy side.
+
+use gwlstm::config::{Manifest, ServeConfig};
+use gwlstm::coordinator::{
+    run_serving_streaming, run_serving_with_policy, Policy, ShardLedger, StreamRouter,
+};
+use gwlstm::eval::roc::tier_accuracy;
+use gwlstm::gw::dataset::{make_dataset, DEFAULT_SNR};
+use gwlstm::model::act_lut::SigmoidLut;
+use gwlstm::model::fixed::{
+    to_q16, FixedBatchedLstm, FixedBatchedState, FixedLstm, FixedPackedAutoencoder,
+    PackedMatrixI16, QUANT_AUC_TOL, QUANT_SCORE_TOL,
+};
+use gwlstm::model::weights::LstmWeights;
+use gwlstm::model::{AutoencoderWeights, FixedAutoencoder, MathPolicy, PackedAutoencoder, WorkerPool};
+use gwlstm::runtime::ModelExecutor;
+use gwlstm::stream::StreamConfig;
+use gwlstm::util::prop;
+use gwlstm::util::rng::Rng;
+
+const BATCHES: [usize; 4] = [1, 3, 8, 32];
+const THREADS: [usize; 2] = [1, 4];
+
+fn random_layer(seed: u64, lx: usize, lh: usize) -> LstmWeights {
+    let mut rng = Rng::new(seed);
+    let mut gen = |n: usize, s: f64| -> Vec<f32> {
+        (0..n).map(|_| (rng.gaussian() * s) as f32).collect()
+    };
+    LstmWeights {
+        name: format!("fixed_{lx}x{lh}"),
+        lx,
+        lh,
+        wx: gen(lx * 4 * lh, 0.4),
+        wh: gen(lh * 4 * lh, 0.3),
+        b: gen(4 * lh, 0.1),
+    }
+}
+
+/// Chirp-injected windows quantized to the Q6.10 input grid, flattened
+/// batch-major (`n` windows of `ts` samples each).
+fn chirp_q16(seed: u64, n: usize, ts: usize) -> Vec<i16> {
+    let events = make_dataset(seed, n, ts, DEFAULT_SNR);
+    assert!(events.iter().any(|e| e.label == 1), "need injected windows");
+    events
+        .iter()
+        .flat_map(|e| e.samples.iter().map(|&v| to_q16(v)))
+        .collect()
+}
+
+#[test]
+fn batched_quantized_lstm_bitexact_with_scalar_reference() {
+    // Contract 1 at the layer level: chirp + random substrates, every
+    // serving batch size, both thread counts. lh = 9 exercises the ragged
+    // panel tail (4*9 = 36 = 2*16 + 4); a second ragged-width layer below
+    // covers lh not divisible by anything convenient.
+    let lut = SigmoidLut::default();
+    let ts = 20usize;
+    for (seed, lx, lh) in [(0xF1u64, 1usize, 9usize), (0xF2, 3, 17)] {
+        let w = random_layer(seed, lx, lh);
+        let scalar = FixedLstm::from_weights(&w);
+        let packed = FixedBatchedLstm::from_weights(&w);
+        let mut substrates: Vec<Vec<i16>> = Vec::new();
+        if lx == 1 {
+            substrates.push(chirp_q16(0xF1DE, 32, ts));
+        }
+        let mut rng = Rng::new(seed ^ 0x0F1F);
+        substrates.push(
+            (0..32 * ts * lx)
+                .map(|_| to_q16(rng.gaussian() as f32))
+                .collect(),
+        );
+        for xs in &substrates {
+            for &batch in &BATCHES {
+                let slice = &xs[..batch * ts * lx];
+                let got = packed.run(&lut, slice, batch, ts);
+                for b in 0..batch {
+                    let one = scalar.run(&lut, &slice[b * ts * lx..(b + 1) * ts * lx], ts);
+                    assert_eq!(
+                        &got[b * ts * lh..(b + 1) * ts * lh],
+                        &one[..],
+                        "lx={lx} lh={lh} B={batch} stream {b}"
+                    );
+                }
+                for &threads in &THREADS {
+                    let pool = WorkerPool::new(threads);
+                    assert_eq!(
+                        packed.run_pooled(&lut, slice, batch, ts, &pool),
+                        got,
+                        "lx={lx} lh={lh} B={batch} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_autoencoder_bitexact_with_scalar_through_executor() {
+    // Contract 1 at the serving-engine level, through the ModelExecutor
+    // the coordinator actually calls: reconstructions AND scores equal the
+    // scalar FixedAutoencoder per stream at every (B, threads).
+    let ts = 8usize;
+    let w = AutoencoderWeights::synthetic(0xF3, "small");
+    let scalar = FixedAutoencoder::from_weights(&w);
+    let events = make_dataset(0xF3DE, 32, ts, DEFAULT_SNR);
+    let chirp: Vec<f32> = events.iter().flat_map(|e| e.samples.clone()).collect();
+    let mut rng = Rng::new(0xF3F4);
+    let random: Vec<f32> = (0..32 * ts).map(|_| rng.gaussian() as f32).collect();
+    for &threads in &THREADS {
+        let exe = ModelExecutor::native_from_weights_policy_threads(
+            &w,
+            "fixed_parity",
+            ts,
+            MathPolicy::Quantized,
+            threads,
+        );
+        assert!(exe.platform().contains("q16"), "{}", exe.platform());
+        for windows in [&chirp, &random] {
+            for &batch in &BATCHES {
+                let slice = &windows[..batch * ts];
+                let rec = exe.infer_batch(slice, batch).unwrap();
+                let scores = exe.score_batch(slice, batch).unwrap();
+                for b in 0..batch {
+                    let window = &slice[b * ts..(b + 1) * ts];
+                    assert_eq!(
+                        &rec[b * ts..(b + 1) * ts],
+                        &scalar.forward(window)[..],
+                        "threads={threads} B={batch} stream {b}"
+                    );
+                    assert_eq!(scores[b], scalar.score(window), "threads={threads} B={batch} score {b}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_chunked_stateful_bitexact_over_ragged_hops() {
+    // Contract 2 at the layer level: ragged hop schedules over a stateful
+    // lockstep group equal one contiguous run, bit for bit.
+    let lut = SigmoidLut::default();
+    let ts = 24usize;
+    let schedules: [&[usize]; 4] = [&[24], &[1; 24], &[5, 1, 9, 2, 7], &[11, 13]];
+    for (seed, lx, lh) in [(0xF5u64, 1usize, 9usize), (0xF6, 2, 8)] {
+        let w = random_layer(seed, lx, lh);
+        let packed = FixedBatchedLstm::from_weights(&w);
+        for batch in [1usize, 3, 8] {
+            let mut rng = Rng::new(seed ^ 0x5EED);
+            let xs: Vec<i16> = (0..batch * ts * lx)
+                .map(|_| to_q16(rng.gaussian() as f32))
+                .collect();
+            let contiguous = packed.run(&lut, &xs, batch, ts);
+            for hops in schedules {
+                let mut st = FixedBatchedState::zeros(batch, lh);
+                let mut got = vec![0i16; batch * ts * lh];
+                let mut t0 = 0usize;
+                for &hop in hops {
+                    let mut chunk = vec![0i16; batch * hop * lx];
+                    for b in 0..batch {
+                        chunk[b * hop * lx..(b + 1) * hop * lx].copy_from_slice(
+                            &xs[(b * ts + t0) * lx..(b * ts + t0 + hop) * lx],
+                        );
+                    }
+                    let part = packed.run_stateful(&lut, &chunk, batch, hop, &mut st);
+                    for b in 0..batch {
+                        got[(b * ts + t0) * lh..(b * ts + t0 + hop) * lh]
+                            .copy_from_slice(&part[b * hop * lh..(b + 1) * hop * lh]);
+                    }
+                    t0 += hop;
+                }
+                assert_eq!(got, contiguous, "lx={lx} lh={lh} B={batch} hops={hops:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_stateful_groups_isolate_streams_at_any_thread_count() {
+    // Lockstep grouping + threading must not couple streams: a B-stream
+    // stateful group scores exactly like B isolated batch-1 sessions on a
+    // serial engine, chunk after chunk, with bit-equal evolved states.
+    let ts = 8usize;
+    let hop = 4usize;
+    let batch = 5usize;
+    let w = AutoencoderWeights::synthetic(0xF7, "small");
+    let reference = FixedPackedAutoencoder::from_weights(&w);
+    for &threads in &THREADS {
+        let exe = ModelExecutor::native_from_weights_policy_threads(
+            &w,
+            "fixed_iso",
+            ts,
+            MathPolicy::Quantized,
+            threads,
+        );
+        let mut group = exe.stream_state(batch).unwrap();
+        let mut solos: Vec<_> = (0..batch).map(|_| reference.zero_state(1)).collect();
+        let mut rng = Rng::new(0xF7F8);
+        for tick in 0..4 {
+            let chunks: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..hop).map(|_| rng.gaussian() as f32).collect())
+                .collect();
+            let flat: Vec<f32> = chunks.concat();
+            let scores = exe.score_batch_stateful(&flat, batch, &mut group).unwrap();
+            for (s, chunk) in chunks.iter().enumerate() {
+                let want = reference.score_batch_stateful(chunk, 1, &mut solos[s]);
+                assert_eq!(
+                    scores[s], want[0],
+                    "threads={threads} tick={tick} stream {s}"
+                );
+            }
+        }
+        let gq = group.quant.as_ref().expect("quantized resident state");
+        for (s, solo) in solos.iter().enumerate() {
+            let sq = solo.quant.as_ref().unwrap();
+            for (l, (gl, sl)) in gq.layers.iter().zip(&sq.layers).enumerate() {
+                let lh = gl.lh;
+                assert_eq!(&gl.h[s * lh..(s + 1) * lh], &sl.h[..], "h stream {s} layer {l}");
+                assert_eq!(&gl.c[s * lh..(s + 1) * lh], &sl.c[..], "c stream {s} layer {l}");
+            }
+        }
+    }
+}
+
+/// One randomized interleaving scenario for the quantized isolation
+/// property (same shape as `streaming_parity.rs`).
+#[derive(Debug)]
+struct Interleaving {
+    hop: usize,
+    chunks: Vec<Vec<Vec<f32>>>,
+    schedule: Vec<Vec<usize>>,
+}
+
+#[test]
+fn prop_quantized_interleaved_sessions_match_isolated_scalar_references() {
+    // Contract 3: the StreamRouter on a quantized engine never crosses
+    // session states — per-session score sequences are bitwise what an
+    // isolated scalar-engine session produces, under randomized
+    // arrival interleavings and lockstep groupings.
+    let w = AutoencoderWeights::synthetic(0xF9, "small");
+    let exe = ModelExecutor::native_from_weights_policy(&w, "fixed_prop", 8, MathPolicy::Quantized);
+    let reference = FixedPackedAutoencoder::from_weights(&w);
+    prop::check_with(
+        prop::Config {
+            cases: 16, // each case runs many engine calls; keep the suite fast
+            ..Default::default()
+        },
+        "quantized-interleaved-sessions-isolated",
+        |d| {
+            let hop = d.usize_in(2, 6);
+            let n_sessions = d.usize_in(2, 5);
+            let chunks: Vec<Vec<Vec<f32>>> = (0..n_sessions)
+                .map(|_| {
+                    let n_chunks = d.usize_in(1, 4);
+                    (0..n_chunks)
+                        .map(|_| (0..hop).map(|_| d.f64_in(-2.0, 2.0) as f32).collect())
+                        .collect()
+                })
+                .collect();
+            let mut arrivals: Vec<usize> = Vec::new();
+            for (s, cs) in chunks.iter().enumerate() {
+                arrivals.extend(std::iter::repeat(s).take(cs.len()));
+            }
+            for i in (1..arrivals.len()).rev() {
+                let j = d.usize_in(0, i);
+                arrivals.swap(i, j);
+            }
+            let mut schedule: Vec<Vec<usize>> = Vec::new();
+            while !arrivals.is_empty() {
+                let width = d.usize_in(1, arrivals.len().min(n_sessions));
+                let mut tick: Vec<usize> = Vec::new();
+                let mut remaining: Vec<usize> = Vec::new();
+                for &s in &arrivals {
+                    if tick.len() < width && !tick.contains(&s) {
+                        tick.push(s);
+                    } else {
+                        remaining.push(s);
+                    }
+                }
+                arrivals = remaining;
+                schedule.push(tick);
+            }
+            Interleaving {
+                hop,
+                chunks,
+                schedule,
+            }
+        },
+        |case| {
+            let cfg = StreamConfig {
+                hop: case.hop,
+                ..Default::default()
+            };
+            let mut shared = StreamRouter::new(&exe, cfg).map_err(|e| e.to_string())?;
+            let mut got: Vec<Vec<f32>> = vec![Vec::new(); case.chunks.len()];
+            let mut next_chunk: Vec<usize> = vec![0; case.chunks.len()];
+            for (tick, sessions) in case.schedule.iter().enumerate() {
+                for &s in sessions {
+                    let c = &case.chunks[s][next_chunk[s]];
+                    next_chunk[s] += 1;
+                    shared.ingest(s as u64, c, tick as u64);
+                }
+                for sc in shared.dispatch(&exe, tick as u64).map_err(|e| e.to_string())? {
+                    got[sc.stream as usize].push(sc.score);
+                }
+            }
+            // isolated scalar reference: one serial quantized engine,
+            // batch-1 resident state per session
+            for (s, cs) in case.chunks.iter().enumerate() {
+                let mut st = reference.zero_state(1);
+                let want: Vec<f32> = cs
+                    .iter()
+                    .map(|c| reference.score_batch_stateful(c, 1, &mut st)[0])
+                    .collect();
+                if got[s] != want {
+                    return Err(format!(
+                        "session {s}: routed scores {:?} != isolated {:?}",
+                        got[s], want
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantized_tier_accuracy_bounded_vs_bitexact_on_chirp() {
+    // Contract 4: the paper's "quantization has negligible effect", as
+    // testable numbers — per-window score drift and AUC drift vs BitExact
+    // on chirp-injected windows, at the nominal arch's native TS = 100
+    // (worst case for per-step quantization-error compounding).
+    let ts = 100usize;
+    let n = 24usize;
+    let w = AutoencoderWeights::synthetic(37, "nominal");
+    let exact = PackedAutoencoder::from_weights(&w);
+    let quant = FixedPackedAutoencoder::from_weights(&w);
+    let events = make_dataset(0xFA57C, n, ts, DEFAULT_SNR);
+    let labels: Vec<u8> = events.iter().map(|e| e.label).collect();
+    assert!(labels.iter().any(|&l| l == 1) && labels.iter().any(|&l| l == 0));
+    let flat: Vec<f32> = events.iter().flat_map(|e| e.samples.clone()).collect();
+    let e_scores: Vec<f64> = exact
+        .score_batch(&flat, n)
+        .into_iter()
+        .map(f64::from)
+        .collect();
+    let q_scores: Vec<f64> = quant
+        .score_batch(&flat, n)
+        .into_iter()
+        .map(f64::from)
+        .collect();
+    let acc = tier_accuracy(&q_scores, &e_scores, &labels);
+    assert!(
+        acc.max_score_diff <= QUANT_SCORE_TOL as f64,
+        "score drift {} > {QUANT_SCORE_TOL}",
+        acc.max_score_diff
+    );
+    assert!(
+        acc.auc_drift() <= QUANT_AUC_TOL,
+        "AUC drift {} (q {} vs exact {}) > {QUANT_AUC_TOL}",
+        acc.auc_drift(),
+        acc.auc,
+        acc.ref_auc
+    );
+}
+
+#[test]
+fn quantized_streaming_ingress_sharded_serving_conserves() {
+    // Contract 5, the acceptance criterion: streaming + ingress + shards
+    // under the quantized tier closes the conservation ledger end-to-end.
+    let weights = AutoencoderWeights::synthetic(0xD0E, "small");
+    let cfg = ServeConfig {
+        model: "small_q16".into(),
+        calib_windows: 16,
+        max_windows: 64,
+        inject_prob: 0.4,
+        stream_sessions: 6,
+        stream_hop: 8,
+        streaming: true,
+        ingress: true,
+        shards: 2,
+        math_policy: MathPolicy::Quantized,
+        ..Default::default()
+    };
+    let report = run_serving_streaming(&weights, &cfg).unwrap();
+    assert!(report.platform.contains("q16"), "{}", report.platform);
+    assert!(report.windows >= cfg.max_windows, "quota not served");
+    assert_eq!(
+        report.ingested,
+        report.windows as u64 + report.dropped + report.quarantined,
+        "windows leaked: ingested {} != served {} + dropped {} + quarantined {}",
+        report.ingested,
+        report.windows,
+        report.dropped,
+        report.quarantined
+    );
+    assert_eq!(report.sheds.total(), report.dropped, "shed classes must sum");
+    // per-shard ledgers conserve and roll up to the global ledger
+    assert_eq!(report.shard_ledgers.len(), 2);
+    for l in &report.shard_ledgers {
+        assert!(l.conserved(), "shard {} ledger leaked", l.shard);
+    }
+    let total = report
+        .shard_ledgers
+        .iter()
+        .fold(ShardLedger::default(), |a, l| a.plus(l));
+    assert_eq!(total.ingested, report.ingested, "ingested sum drifted");
+    assert_eq!(total.served, report.windows as u64, "served sum drifted");
+    assert_eq!(total.dropped(), report.dropped, "dropped sum drifted");
+    assert!(report.auc > 0.0 && report.auc <= 1.0);
+}
+
+#[test]
+fn pjrt_entry_point_rejects_quantized_math() {
+    // Reject-don't-ignore: the compiled artifact fixes its own math — an
+    // explicit quantized request must error before any artifact is
+    // touched, exactly like fast_simd and --threads do.
+    let manifest = Manifest {
+        dir: ".".into(),
+        variants: vec![],
+    };
+    let cfg = ServeConfig {
+        math_policy: MathPolicy::Quantized,
+        ..Default::default()
+    };
+    let err = run_serving_with_policy(&manifest, &cfg, Policy::Immediate)
+        .expect_err("quantized math must be rejected under PJRT");
+    assert!(
+        err.to_string().contains("native"),
+        "error should point at the native backend: {err}"
+    );
+}
+
+#[test]
+fn cross_language_quantizer_goldens() {
+    // Contract 6: the shared golden vectors (also asserted by the numpy
+    // twin in python/tests/test_quant.py). Ties round half AWAY FROM ZERO:
+    // 0.5 lsb -> 1, 2.5 lsb -> 3 — round-half-to-even would give 0 and 2,
+    // so any silent drift back to banker's rounding fails here.
+    let q16_golden: [(f32, i16); 13] = [
+        (0.0, 0),
+        (0.5 / 1024.0, 1),
+        (-0.5 / 1024.0, -1),
+        (2.5 / 1024.0, 3),
+        (-2.5 / 1024.0, -3),
+        (1.5 / 1024.0, 2),
+        (0.25, 256),
+        (-1.0, -1024),
+        (32767.0 / 1024.0, 32767),
+        (32.0, 32767), // 32 * 1024 = 32768 saturates
+        (-32.0, -32768),
+        (40.0, 32767),
+        (-40.0, -32768),
+    ];
+    for &(x, want) in &q16_golden {
+        assert_eq!(to_q16(x), want, "to_q16({x})");
+    }
+    let scale32 = (1u32 << 20) as f64;
+    let q32_golden: [(f32, i32); 9] = [
+        (0.0, 0),
+        ((0.5 / scale32) as f32, 1),
+        ((-0.5 / scale32) as f32, -1),
+        ((2.5 / scale32) as f32, 3),
+        (1.2345, 1_294_467),
+        (-1.2345, -1_294_467),
+        (2048.0, i32::MAX), // 2048 * 2^20 = 2^31 saturates
+        (-2048.0, i32::MIN),
+        (2047.9999, 2_147_483_520),
+    ];
+    for &(x, want) in &q32_golden {
+        assert_eq!(gwlstm::model::fixed::to_q32(x), want, "to_q32({x})");
+    }
+    // i64 accumulation at the i16 extremes: exact, no intermediate
+    // saturation (the numpy twin computes the same numbers in int64)
+    let w = PackedMatrixI16::pack(&[32767, -32768, 1, -32768, 32767, -1], 2, 3);
+    let mut z = vec![7i64; 3];
+    w.gemm_acc_i64(&[32767, -32768], 1, &mut z);
+    assert_eq!(z, vec![2_147_418_120, -2_147_418_105, 65_542]);
+}

@@ -236,6 +236,7 @@ fn registry_scale_churn_conserves_100k_ids() {
     let proto = StreamState {
         batch: 1,
         layers: vec![BatchedState::zeros(1, 2)],
+        quant: None,
     };
     let mut reg = SessionRegistry::new(cfg, proto);
     let chunk = vec![0.5f32; hop];
