@@ -30,6 +30,16 @@ if command -v cargo >/dev/null 2>&1; then
     note "rust: cargo test -q (GWLSTM_THREADS=4)"
     (cd rust && GWLSTM_THREADS=4 cargo test -q) || failures=$((failures + 1))
 
+    # The quantized suite runs once per SIMD dispatch arm: the default pass
+    # above takes the AVX2 madd/FMA kernels where the CPU has them; this
+    # pass forces the scalar fallbacks (GWLSTM_FORCE_SCALAR gates both the
+    # f32 kloop16 dispatch and the i16 madd dispatch), so both arms of
+    # every dispatcher are exercised on any machine — and the quantized
+    # outputs must be bitwise identical either way.
+    note "rust: cargo test -q --test fixed_parity (GWLSTM_FORCE_SCALAR=1)"
+    (cd rust && GWLSTM_FORCE_SCALAR=1 cargo test -q --test fixed_parity) \
+        || failures=$((failures + 1))
+
     # Doc tests + rendered docs are tier-1: every public item in the model/
     # stream layers carries runnable examples (ARCHITECTURE.md points at
     # them), and cargo doc warnings (broken intra-doc links) are errors.
@@ -91,8 +101,9 @@ if command -v cargo >/dev/null 2>&1; then
     # == served + dropped + quarantined) globally AND per shard (each shard
     # ledger must conserve and the ledgers must sum to the global one),
     # exiting nonzero on a leak. The quantized tier's quarantine sweep runs
-    # on the dequantized f32 state mirror, so the recovery machinery is
-    # tier-agnostic — chaos must not behave differently under Q6.10.
+    # on the integer state itself (saturation-count health check + score
+    # finiteness — the f32 mirror is only refreshed lazily on snapshot
+    # paths), so chaos must not behave differently under Q6.10.
     note "rust: fault-injection smoke (seeded chaos campaign, all math tiers, 2 shards)"
     for tier in bitexact fast_simd quantized; do
         (cd rust && cargo run --release --quiet -- serve --native --streaming \

@@ -125,6 +125,58 @@ def _shr20(v: int) -> int:
     return v >> 20
 
 
+def q40_to_q16(v: int) -> int:
+    """Twin of ``model::fixed::q40_to_q16``: narrow a Q2.40 product to
+    Q6.10 with half-away-from-zero rounding at the 2^30 grid, then i16
+    saturation."""
+    r = (v + (1 << 29)) >> 30 if v >= 0 else -((-v + (1 << 29)) >> 30)
+    return int(min(max(r, -32768), 32767))
+
+
+# --- integer-domain activation addressing (PR 9) -----------------------------
+# Twin of SigmoidLut::index_q32 at the default sizing (4096 entries, range
+# +-8) and of the integer PWL tanh (act_lut::pwl_tanh_q32). The rust-side
+# goldens live in rust/src/model/act_lut.rs.
+
+LUT_N = 4096
+LUT_RANGE_Q = 8 << 20
+
+
+def lut_index_q32(x_q: int) -> int:
+    """Twin of ``SigmoidLut::index_q32``: saturate outside +-range, else
+    exact integer cell index — no f32 round-trip anywhere."""
+    if x_q <= -LUT_RANGE_Q:
+        return 0
+    if x_q >= LUT_RANGE_Q:
+        return LUT_N - 1
+    return min((x_q + LUT_RANGE_Q) * LUT_N // (2 * LUT_RANGE_Q), LUT_N - 1)
+
+
+# tanh knot table in Q1.20: PWL_Y_Q20[s] = (tanh(s/4) * 2^20) truncated the
+# same way rust builds it ((v * (1 << 20) as f32) as i64); segment width is
+# 1/4 in value = 2^18 in Q12.20.
+PWL_Y_Q20 = [
+    0, 256_816, 484_564, 666_002, 798_589, 889_490, 949_116, 987_104,
+    1_010_856, 1_025_534, 1_034_539, 1_040_049, 1_043_390, 1_045_422,
+    1_046_665, 1_047_416, 1_047_872,
+]
+PWL_KNOT_SHIFT = 18
+
+
+def pwl_tanh_q32(x_q: int) -> int:
+    """Twin of ``act_lut::pwl_tanh_q32``: integer chord interpolation on
+    the Q12.20 pre-activation, Q1.20 out, odd symmetry."""
+    a = abs(int(x_q))
+    seg = a >> PWL_KNOT_SHIFT
+    if seg >= len(PWL_Y_Q20) - 1:
+        y = PWL_Y_Q20[-1]
+    else:
+        y0 = PWL_Y_Q20[seg]
+        frac = a - (seg << PWL_KNOT_SHIFT)
+        y = y0 + (((PWL_Y_Q20[seg + 1] - y0) * frac) >> PWL_KNOT_SHIFT)
+    return -y if x_q < 0 else y
+
+
 Q16_GOLDEN = [
     (0.0, 0),
     (0.5 / 1024.0, 1),
@@ -205,6 +257,90 @@ def test_gate_tail_algebra_matches_rust_goldens():
         fc = _shr20(f_q * c_prev)
         ig = _shr20(i_q * g_q)
         c_new = _sat_i32(fc + ig)
-        h = to_q16(float(np.float32(o_g) * q32_to_f32(c_new)))
+        # rust (PR 9): h stays in the integer domain — Q1.20 gate times
+        # Q12.20 cell is a Q2.40 product, narrowed by q40_to_q16
+        o_q = int(np.float32(o_g) * np.float32(1 << 20))
+        h = q40_to_q16(o_q * c_new)
         got = (i_q, f_q, g_q, fc, ig, c_new, h)
         assert got == want, f"tail golden for {(i_g, f_g, g_g, o_g, c_prev)}: {got}"
+
+
+# the same pairs are asserted by rust/src/model/fixed.rs
+# (q40_to_q16_rounds_half_away_and_saturates)
+Q40_GOLDEN = [
+    (0, 0),
+    (1, 0),
+    ((1 << 29) - 1, 0),
+    (1 << 29, 1),
+    (3 << 29, 2),
+    (-((1 << 29) - 1), 0),
+    (-(1 << 29), -1),
+    (-(3 << 29), -2),
+    (1 << 40, 1024),
+    (-(1 << 40), -1024),
+    ((2**63 - 1) // 2, 32767),
+    (-(2**63) // 2, -32768),
+]
+
+# the same pairs are asserted by rust/src/model/act_lut.rs
+# (index_q32_cross_language_goldens)
+LUT_INDEX_GOLDEN = [
+    (-(2**31), 0),
+    (-LUT_RANGE_Q - 1, 0),
+    (-LUT_RANGE_Q, 0),
+    (-LUT_RANGE_Q + 1, 0),
+    (-1, 2047),
+    (0, 2048),
+    (1, 2048),
+    (2047, 2048),
+    (2048, 2048),
+    (LUT_RANGE_Q - 1, 4095),
+    (LUT_RANGE_Q, 4095),
+    (LUT_RANGE_Q + 1, 4095),
+    (2**31 - 1, 4095),
+]
+
+# the same pairs are asserted by rust/src/model/act_lut.rs
+# (pwl_tanh_q32_cross_language_goldens)
+PWL_GOLDEN = [
+    (0, 0),
+    (1, 0),
+    (-1, 0),
+    (1 << 18, 256_816),
+    (-(1 << 18), -256_816),
+    (629_146, 557_139),
+    (4 << 20, 1_047_872),
+    ((4 << 20) + 1, 1_047_872),
+    (-(2**31), -1_047_872),
+    (2**31 - 1, 1_047_872),
+    (-(1 << 20), -798_589),
+]
+
+
+def test_q40_narrowing_matches_rust_goldens():
+    for v, want in Q40_GOLDEN:
+        assert q40_to_q16(v) == want, f"q40_to_q16({v})"
+
+
+def test_lut_index_q32_matches_rust_goldens():
+    for x_q, want in LUT_INDEX_GOLDEN:
+        assert lut_index_q32(x_q) == want, f"lut_index_q32({x_q})"
+
+
+def test_pwl_tanh_q32_matches_rust_goldens():
+    for x_q, want in PWL_GOLDEN:
+        assert pwl_tanh_q32(x_q) == want, f"pwl_tanh_q32({x_q})"
+
+
+def test_pwl_tanh_q32_tracks_float_reference():
+    """The integer chord must track tanh itself closely and the f32 chord
+    grid exactly enough to be interchangeable: odd, bounded, < 1e-2 from
+    np.tanh across the live range (the PWL approximation error dominates)."""
+    xs = np.linspace(-6.0, 6.0, 1001)
+    for x in xs:
+        x_q = int(_round_half_away(np.float64(np.float32(x)) * np.float64(1 << FRAC32)))
+        x_q = _sat_i32(x_q)
+        got = pwl_tanh_q32(x_q) / float(1 << FRAC32)
+        assert abs(got - np.tanh(x)) < 1e-2, f"x={x}"
+        assert pwl_tanh_q32(x_q) == -pwl_tanh_q32(-x_q) or x_q == -(2**31)
+        assert abs(pwl_tanh_q32(x_q)) <= 1 << 20

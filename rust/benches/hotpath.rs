@@ -40,7 +40,9 @@ use gwlstm::gw::psd::colored_noise;
 use gwlstm::hls::device::Device;
 use gwlstm::hls::dse::partition_model;
 use gwlstm::hls::perf_model::{DesignPoint, LayerDims};
+use gwlstm::model::act_lut::SigmoidLut;
 use gwlstm::model::batched::reference;
+use gwlstm::model::fixed::{fused_gate_tail, gate_tail_f32_reference, to_q16, PackedMatrixI16};
 use gwlstm::model::simd::FAST_FORWARD_TOL;
 use gwlstm::model::{
     forward_f32, AutoencoderWeights, FixedAutoencoder, FixedPackedAutoencoder, MathPolicy,
@@ -573,6 +575,144 @@ fn main() {
             "  -> quant vs bitexact @ B=8: {:.2}x per stream (software view of \
              the paper's fixed-point datapath)",
             b8_per_stream / q_b8_per_stream
+        );
+    }
+
+    // ---- integer SIMD kernels vs their scalar references ----
+    // The PR 9 tentpole measurements, both parity-guarded before timing.
+    {
+        // (a) i16 GEMM: the dispatched kernel (AVX2 madd when the CPU has
+        // it, scalar otherwise — in which case the ratio reads ~1.0x) vs
+        // the explicit scalar reference, on the nominal recurrent shape
+        // (Lh=32 -> (32, 128)) at the serving batch. Bitwise guard first:
+        // the kernels must agree exactly, not approximately.
+        let (k, n, rows) = (32usize, 128usize, 8usize);
+        let mut rng = Rng::new(0x51D);
+        let w_q: Vec<i16> = (0..k * n)
+            .map(|_| to_q16((rng.gaussian() * 0.4) as f32))
+            .collect();
+        let x_q: Vec<i16> = (0..rows * k)
+            .map(|_| to_q16(rng.gaussian() as f32))
+            .collect();
+        let m = PackedMatrixI16::pack(&w_q, k, n);
+        let mut z_simd = vec![0i64; rows * n];
+        let mut z_scalar = vec![0i64; rows * n];
+        m.gemm_acc_i64(&x_q, rows, &mut z_simd);
+        m.gemm_acc_i64_scalar(&x_q, rows, &mut z_scalar);
+        if z_simd != z_scalar {
+            eprintln!(
+                "FATAL: dispatched i16 GEMM diverged bitwise from the scalar \
+                 reference — integer kernel contract broken"
+            );
+            std::process::exit(1);
+        }
+        let mut z = vec![0i64; rows * n];
+        let st_simd = Bench::new("quant: i16 gemm, dispatched kernel")
+            .iters(rec.iters(300))
+            .run(|| {
+                z.iter_mut().for_each(|v| *v = 0);
+                m.gemm_acc_i64(&x_q, rows, &mut z);
+                std::hint::black_box(&z);
+            });
+        let st_scalar = Bench::new("quant: i16 gemm, scalar reference")
+            .iters(rec.iters(300))
+            .run(|| {
+                z.iter_mut().for_each(|v| *v = 0);
+                m.gemm_acc_i64_scalar(&x_q, rows, &mut z);
+                std::hint::black_box(&z);
+            });
+        rec.put(
+            "quant/simd_vs_scalar_speedup",
+            st_scalar.median_ns / st_simd.median_ns,
+        );
+        println!(
+            "  -> i16 gemm dispatched vs scalar: {:.2}x",
+            st_scalar.median_ns / st_simd.median_ns
+        );
+
+        // (b) gate tail: integer-domain LUT/PWL tail vs the frozen f32
+        // round-trip tail. The two may differ only by activation-address
+        // rounding (<= a few Q6.10 lsb on h) — guarded before timing.
+        let lut = SigmoidLut::default();
+        let lh = 32usize;
+        let zrows: Vec<i64> = (0..rows * 4 * lh)
+            .map(|_| (rng.gaussian() * 2.0 * (1u32 << 20) as f64) as i64)
+            .collect();
+        let c0: Vec<i32> = (0..rows * lh)
+            .map(|i| ((i as i64 % 25 - 12) << 18) as i32)
+            .collect();
+        let mut c_int = c0.clone();
+        let mut c_f32 = c0.clone();
+        let mut h_int = vec![0i16; rows * lh];
+        let mut h_f32 = vec![0i16; rows * lh];
+        for r in 0..rows {
+            fused_gate_tail(
+                &lut,
+                &zrows[r * 4 * lh..(r + 1) * 4 * lh],
+                lh,
+                &mut c_int[r * lh..(r + 1) * lh],
+                &mut h_int[r * lh..(r + 1) * lh],
+            );
+            gate_tail_f32_reference(
+                &lut,
+                &zrows[r * 4 * lh..(r + 1) * 4 * lh],
+                lh,
+                &mut c_f32[r * lh..(r + 1) * lh],
+                &mut h_f32[r * lh..(r + 1) * lh],
+            );
+        }
+        let worst_h = h_int
+            .iter()
+            .zip(&h_f32)
+            .map(|(&a, &b)| (a as i32 - b as i32).unsigned_abs())
+            .max()
+            .unwrap_or(0);
+        if worst_h > 8 {
+            eprintln!(
+                "FATAL: integer gate tail diverged from the f32 reference by \
+                 {worst_h} Q6.10 lsb — address-rounding contract broken"
+            );
+            std::process::exit(1);
+        }
+        let mut c_bench = c0.clone();
+        let mut h_bench = vec![0i16; rows * lh];
+        let st_int = Bench::new("quant: gate tail, integer domain")
+            .iters(rec.iters(300))
+            .run(|| {
+                c_bench.copy_from_slice(&c0);
+                for r in 0..rows {
+                    fused_gate_tail(
+                        &lut,
+                        &zrows[r * 4 * lh..(r + 1) * 4 * lh],
+                        lh,
+                        &mut c_bench[r * lh..(r + 1) * lh],
+                        &mut h_bench[r * lh..(r + 1) * lh],
+                    );
+                }
+                std::hint::black_box(&h_bench);
+            });
+        let st_f32 = Bench::new("quant: gate tail, f32 round-trip reference")
+            .iters(rec.iters(300))
+            .run(|| {
+                c_bench.copy_from_slice(&c0);
+                for r in 0..rows {
+                    gate_tail_f32_reference(
+                        &lut,
+                        &zrows[r * 4 * lh..(r + 1) * 4 * lh],
+                        lh,
+                        &mut c_bench[r * lh..(r + 1) * lh],
+                        &mut h_bench[r * lh..(r + 1) * lh],
+                    );
+                }
+                std::hint::black_box(&h_bench);
+            });
+        rec.put(
+            "quant/gate_tail_int_vs_f32_speedup",
+            st_f32.median_ns / st_int.median_ns,
+        );
+        println!(
+            "  -> gate tail integer vs f32 round-trip: {:.2}x",
+            st_f32.median_ns / st_int.median_ns
         );
     }
 

@@ -216,17 +216,24 @@ impl StreamRouter {
     ///
     /// This is also the fault-tolerance sweep (the ONLY site that writes
     /// resident state, so the only site that can poison it): each row's
-    /// advanced `(h, c)` and score are checked for finiteness *before*
-    /// the scatter. A finite row scatters normally, clears any Suspect
-    /// flag, and refreshes the session's last-good checkpoint on the
-    /// configured cadence ([`crate::stream::StreamConfig::snapshot_ticks`]).
-    /// A non-finite row is discarded, the session recovers from its
-    /// checkpoint (or zeros) and enters quarantine backoff, and the entry
-    /// comes back with `quarantined: true` + a `NaN` score so the caller
-    /// attributes the window to the `quarantined` class instead of
-    /// serving it. The sweep reads only values both the serial and
-    /// pipelined paths compute identically, so fault-free parity is
-    /// untouched.
+    /// advanced state and score are health-checked *before* the scatter.
+    /// The check is tier-aware ([`StreamState::row_is_healthy`]): f32
+    /// tiers sweep the row's `(h, c)` for NaN/Inf; the quantized tier —
+    /// whose integer state can never be non-finite and whose f32 mirror is
+    /// stale between snapshots — checks for a railed (majority-saturated)
+    /// cell state instead, at zero dequantization cost. The score
+    /// finiteness check applies to every tier (a NaN input window still
+    /// produces a NaN score on the quantized tier, so input poisoning is
+    /// caught there too). A healthy row scatters normally, clears any
+    /// Suspect flag, and refreshes the session's last-good checkpoint on
+    /// the configured cadence
+    /// ([`crate::stream::StreamConfig::snapshot_ticks`]). An unhealthy row
+    /// is discarded, the session recovers from its checkpoint (or zeros)
+    /// and enters quarantine backoff, and the entry comes back with
+    /// `quarantined: true` + a `NaN` score so the caller attributes the
+    /// window to the `quarantined` class instead of serving it. The sweep
+    /// reads only values both the serial and pipelined paths compute
+    /// identically, so fault-free parity is untouched.
     pub fn complete(
         &mut self,
         ids: &[u64],
@@ -238,10 +245,10 @@ impl StreamRouter {
         let snapshot_ticks = self.registry.config().snapshot_ticks;
         let mut out = Vec::with_capacity(ids.len());
         for (b, id) in ids.iter().enumerate() {
-            let finite = scores[b].is_finite() && group.row_is_finite(b);
+            let healthy = scores[b].is_finite() && group.row_is_healthy(b);
             if let Some(sess) = self.registry.get_mut(*id) {
                 sess.last_tick = now;
-                if finite {
+                if healthy {
                     sess.state.load_row(0, group, b);
                     sess.note_finite();
                     sess.maybe_snapshot(now, snapshot_ticks);
@@ -254,15 +261,15 @@ impl StreamRouter {
                         self.stats.recovered_zeros += 1;
                     }
                 }
-            } else if !finite {
-                // Evicted in flight AND non-finite: no state to recover,
+            } else if !healthy {
+                // Evicted in flight AND unhealthy: no state to recover,
                 // but the window is still attributed quarantined below.
                 self.stats.quarantine_events += 1;
             }
             out.push(StreamScore {
                 stream: *id,
-                score: if finite { scores[b] } else { f32::NAN },
-                quarantined: !finite,
+                score: if healthy { scores[b] } else { f32::NAN },
+                quarantined: !healthy,
             });
         }
         out

@@ -9,29 +9,57 @@
 /// Sigmoid lookup table: `ENTRIES` precomputed values over [-RANGE, RANGE],
 /// nearest-entry indexing (what a BRAM with a truncated address does),
 /// saturating outside.
+///
+/// Two lookup domains share the one table geometry:
+///
+/// * **f32** ([`SigmoidLut::eval`] / [`SigmoidLut::eval_block`]) — the
+///   address is the truncated f32 scaled offset.
+/// * **Q12.20 integer** ([`SigmoidLut::eval_q32`] /
+///   [`SigmoidLut::index_q32`]) — the address is computed in exact integer
+///   arithmetic straight from the fixed-point pre-activation, and the
+///   entry comes back as a Q1.20 gate integer (`table_q20`). This is what
+///   the quantized gate tail uses: no dequantize → f32 → requantize
+///   round-trip, and the per-entry gate values are the *identical*
+///   truncating cast the f32 tail used to apply per call, hoisted to
+///   build time.
 #[derive(Debug, Clone)]
 pub struct SigmoidLut {
     table: Vec<f32>,
+    /// Q1.20 gate integers: `(table[i] * (1 << 20) as f32) as i64` — the
+    /// truncating f32 → Q1.20 cast of the gate tail, applied once at
+    /// build time instead of per lookup.
+    table_q20: Vec<i64>,
     range: f32,
+    /// `range` on the Q12.20 grid (`range * 2^20`, exact for the
+    /// power-of-two default range).
+    range_q: i64,
 }
 
 impl SigmoidLut {
     /// Default hardware sizing: 1024 entries over [-8, 8] — one 36kb BRAM
     /// at 16-bit output width holds 2048 entries, so this is conservative.
     pub fn new(entries: usize, range: f32) -> SigmoidLut {
-        let table = (0..entries)
+        let table: Vec<f32> = (0..entries)
             .map(|i| {
                 let x = -range + 2.0 * range * (i as f32 + 0.5) / entries as f32;
                 1.0 / (1.0 + (-x).exp())
             })
             .collect();
-        SigmoidLut { table, range }
+        let table_q20 = table.iter().map(|&v| (v * (1 << 20) as f32) as i64).collect();
+        let range_q = (range as f64 * (1u32 << 20) as f64) as i64;
+        SigmoidLut {
+            table,
+            table_q20,
+            range,
+            range_q,
+        }
     }
 
-    /// Nearest-entry lookup. The table holds `n` cells of width `2R/n`
-    /// over `[-R, R)`, each entry precomputed at its cell *midpoint*, so
-    /// truncating the scaled offset selects the entry nearest to `x`
-    /// (exactly what a BRAM with a truncated fixed-point address does).
+    /// The shared nearest-entry address decode (f32 domain). The table
+    /// holds `n` cells of width `2R/n` over `[-R, R)`, each entry
+    /// precomputed at its cell *midpoint*, so truncating the scaled offset
+    /// selects the entry nearest to `x` (exactly what a BRAM with a
+    /// truncated fixed-point address does).
     ///
     /// Boundary: for `x` just below `R`, f32 rounding of `(x + R) * n /
     /// (2R)` can land on `n` exactly even though `x < R` — the explicit
@@ -39,44 +67,72 @@ impl SigmoidLut {
     /// behaviour rather than an accidental save (`tests`:
     /// `lut_upper_boundary_hits_last_entry`).
     #[inline]
-    pub fn eval(&self, x: f32) -> f32 {
+    fn index_of(&self, x: f32) -> usize {
         let n = self.table.len();
         if x <= -self.range {
-            return self.table[0];
+            return 0;
         }
         if x >= self.range {
-            return self.table[n - 1];
+            return n - 1;
         }
         let cell = (x + self.range) / (2.0 * self.range) * n as f32;
-        let idx = (cell as usize).min(n - 1);
-        self.table[idx]
+        (cell as usize).min(n - 1)
+    }
+
+    /// Nearest-entry lookup (see [`SigmoidLut::index_of`] for the address
+    /// decode and its boundary contract).
+    #[inline]
+    pub fn eval(&self, x: f32) -> f32 {
+        self.table[self.index_of(x)]
     }
 
     /// Slice-wise [`SigmoidLut::eval`]: `out[i] = eval(xs[i])`, written as a
     /// straight-line loop over the slice so the address computation
     /// autovectorizes (the gather itself stays scalar — a BRAM port per
     /// lane in hardware, a scalar load per lane here). Per-element results
-    /// are **bitwise identical** to [`SigmoidLut::eval`]: same clamp, same
-    /// scaled-offset expression, same truncated index
+    /// are **bitwise identical** to [`SigmoidLut::eval`] by construction:
+    /// both paths run the single [`SigmoidLut::index_of`] decode
     /// (`tests::eval_block_bitwise_matches_eval`).
     #[inline]
     pub fn eval_block(&self, xs: &[f32], out: &mut [f32]) {
         debug_assert_eq!(xs.len(), out.len());
-        let n = self.table.len();
-        let range = self.range;
         for (o, &x) in out.iter_mut().zip(xs) {
-            *o = if x <= -range {
-                self.table[0]
-            } else if x >= range {
-                self.table[n - 1]
-            } else {
-                // same expression as `eval` up to f32 algebra: the scalar
-                // path divides then multiplies; keep its exact order so the
-                // truncated index can never differ by a rounding step.
-                let cell = (x + range) / (2.0 * range) * n as f32;
-                self.table[(cell as usize).min(n - 1)]
-            };
+            *o = self.table[self.index_of(x)];
         }
+    }
+
+    /// Integer-domain address decode: the cell index for a Q12.20
+    /// pre-activation, computed in exact integer arithmetic —
+    /// `(x_q + R_q) * n / (2 R_q)` truncated, saturating outside
+    /// `(-R_q, R_q)`. The same nearest-entry geometry as
+    /// [`SigmoidLut::index_of`]; for the default power-of-two sizing
+    /// (4096 entries over ±8) it reduces to `(x_q + R_q) >> 12`. Pinned
+    /// against the numpy twin in `python/tests/test_quant.py` and, on a
+    /// dense sweep, never differs from the f32 decode by more than one
+    /// cell (`tests::index_q32_tracks_f32_index`).
+    #[inline]
+    pub fn index_q32(&self, x_q: i32) -> usize {
+        let n = self.table.len();
+        let xq = x_q as i64;
+        if xq <= -self.range_q {
+            return 0;
+        }
+        if xq >= self.range_q {
+            return n - 1;
+        }
+        let idx = (xq + self.range_q) * n as i64 / (2 * self.range_q);
+        (idx as usize).min(n - 1)
+    }
+
+    /// Integer-domain lookup: Q12.20 pre-activation in, Q1.20 gate integer
+    /// out — the quantized gate tail's sigmoid, with no f32 round-trip.
+    /// Every entry equals the truncating cast the old f32 tail applied
+    /// (`(eval(x) * 2^20) as i64`), so only the address decode (at most
+    /// one cell, see [`SigmoidLut::index_q32`]) can differ from the
+    /// round-tripped value.
+    #[inline]
+    pub fn eval_q32(&self, x_q: i32) -> i64 {
+        self.table_q20[self.index_q32(x_q)]
     }
 }
 
@@ -139,6 +195,47 @@ pub fn pwl_tanh_block(xs: &[f32], out: &mut [f32]) {
             PWL_Y[seg] + slope * (a - x0)
         };
         *o = y.copysign(x);
+    }
+}
+
+/// The knot values of [`PWL_Y`] on the Q1.20 grid:
+/// `(PWL_Y[i] * (1 << 20) as f32) as i64`. Multiplying an f32 by a power
+/// of two only shifts the exponent, so the scaling is exact and these
+/// literals are reproducible on any platform — `tests::
+/// pwl_y_q20_matches_f32_knots` pins them against the f32 table, and the
+/// numpy twin in `python/tests/test_quant.py` carries the same list.
+const PWL_Y_Q20: [i64; 17] = [
+    0, 256_816, 484_564, 666_002, 798_589, 889_490, 949_116, 987_104, 1_010_856, 1_025_534,
+    1_034_539, 1_040_049, 1_043_390, 1_045_422, 1_046_665, 1_047_416, 1_047_872,
+];
+
+/// [`PWL_KNOT_STEP`] (0.25) on the Q12.20 grid is exactly `1 << 18`, so
+/// the integer segment decode and the chord offset are plain shifts.
+const PWL_KNOT_SHIFT: u32 = 18;
+
+/// Integer-domain [`pwl_tanh`]: Q12.20 in, Q1.20 out, exact integer chord
+/// interpolation between the [`PWL_Y_Q20`] knots — the quantized gate
+/// tail's tanh, with no f32 round-trip. Same segment geometry as the f32
+/// unit (knots every 0.25 up to |x| = 4, saturating beyond); the chord
+/// product `(ΔY · frac) >> 18` floors where the f32 chord rounds, so the
+/// two units agree to ~2 Q1.20 lsb (≈2e-6) everywhere
+/// (`tests::pwl_tanh_q32_tracks_f32_unit`).
+#[inline]
+pub fn pwl_tanh_q32(x_q: i32) -> i64 {
+    // i64 first: |i32::MIN| is not representable in i32
+    let a = (x_q as i64).abs();
+    let seg = (a >> PWL_KNOT_SHIFT) as usize;
+    let y = if seg >= PWL_Y_Q20.len() - 1 {
+        PWL_Y_Q20[PWL_Y_Q20.len() - 1]
+    } else {
+        let y0 = PWL_Y_Q20[seg];
+        let frac = a - ((seg as i64) << PWL_KNOT_SHIFT);
+        y0 + (((PWL_Y_Q20[seg + 1] - y0) * frac) >> PWL_KNOT_SHIFT)
+    };
+    if x_q < 0 {
+        -y
+    } else {
+        y
     }
 }
 
@@ -289,6 +386,114 @@ mod tests {
             let below = pwl_tanh(knee - 1e-4);
             let above = pwl_tanh(knee + 1e-4);
             assert!((below - above).abs() < 1e-3, "jump at {knee}");
+        }
+    }
+
+    #[test]
+    fn pwl_y_q20_matches_f32_knots() {
+        // the Q1.20 literals ARE the f32 knots scaled by an exact power of
+        // two — any edit to one table without the other fails here
+        for (i, (&y, &yq)) in PWL_Y.iter().zip(&PWL_Y_Q20).enumerate() {
+            assert_eq!(yq, (y * (1 << 20) as f32) as i64, "knot {i}");
+        }
+    }
+
+    #[test]
+    fn index_q32_cross_language_goldens() {
+        // the same (x_q, idx) pairs are asserted by the numpy twin in
+        // python/tests/test_quant.py — pure integer arithmetic on both
+        // sides, so a drift in either decode fails one of the two suites
+        let lut = SigmoidLut::default(); // 4096 entries, range 8 => range_q = 8<<20
+        let rq = 8i64 << 20;
+        let golden: [(i64, usize); 13] = [
+            (i32::MIN as i64, 0),
+            (-rq - 1, 0),
+            (-rq, 0),
+            (-rq + 1, 0),
+            (-1, 2047),
+            (0, 2048),
+            (1, 2048),
+            (2047, 2048),
+            (2048, 2048),
+            (rq - 1, 4095),
+            (rq, 4095),
+            (rq + 1, 4095),
+            (i32::MAX as i64, 4095),
+        ];
+        for &(xq, want) in &golden {
+            assert_eq!(lut.index_q32(xq as i32), want, "x_q={xq}");
+        }
+    }
+
+    #[test]
+    fn index_q32_tracks_f32_index() {
+        // the integer decode and the f32 decode may disagree only by f32
+        // rounding of the scaled offset: at most one cell, on any sizing
+        use crate::model::fixed::to_q32;
+        for entries in [7usize, 1000, 1024, 4096] {
+            let lut = SigmoidLut::new(entries, 8.0);
+            let mut x = -9.0f32;
+            while x <= 9.0 {
+                let fi = lut.index_of(x) as i64;
+                let qi = lut.index_q32(to_q32(x)) as i64;
+                assert!((fi - qi).abs() <= 1, "entries={entries} x={x}: f32 {fi} vs int {qi}");
+                x += 0.0137;
+            }
+        }
+    }
+
+    #[test]
+    fn eval_q32_is_the_hoisted_truncating_cast() {
+        // per-entry: the integer lookup returns exactly the truncating
+        // Q1.20 cast of the f32 entry the old gate tail computed per call
+        let lut = SigmoidLut::default();
+        for (i, &v) in lut.table.iter().enumerate().step_by(97) {
+            assert_eq!(lut.table_q20[i], (v * (1 << 20) as f32) as i64, "entry {i}");
+        }
+        // and through the decode, at exact cell midpoints both domains
+        // pick the same entry
+        let entries = lut.table.len();
+        for i in [0usize, 1, 2047, 2048, 4094, 4095] {
+            let mid = -8.0 + 2.0 * 8.0 * (i as f32 + 0.5) / entries as f32;
+            let got = lut.eval_q32(crate::model::fixed::to_q32(mid));
+            assert_eq!(got, (lut.eval(mid) * (1 << 20) as f32) as i64, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn pwl_tanh_q32_cross_language_goldens() {
+        // pure-integer chord results, pinned on both language sides
+        let golden: [(i64, i64); 11] = [
+            (0, 0),
+            (1, 0),
+            (-1, 0),
+            (1 << 18, 256_816),          // exactly the first knot
+            (-(1 << 18), -256_816),
+            (629_146, 557_139),          // mid-segment chord (x ≈ 0.6)
+            (4 << 20, 1_047_872),        // saturation boundary |x| = 4
+            ((4 << 20) + 1, 1_047_872),  // beyond: clamps to the last knot
+            (i32::MIN as i64, -1_047_872),
+            (i32::MAX as i64, 1_047_872),
+            (-(1 << 20), -798_589),      // knot at |x| = 1
+        ];
+        for &(xq, want) in &golden {
+            assert_eq!(pwl_tanh_q32(xq as i32), want, "x_q={xq}");
+        }
+    }
+
+    #[test]
+    fn pwl_tanh_q32_tracks_f32_unit() {
+        // ~2 Q1.20 lsb agreement with the f32 chord, odd symmetry, bounded
+        use crate::model::fixed::to_q32;
+        let mut x = -6.0f32;
+        while x <= 6.0 {
+            let xq = to_q32(x);
+            let got = pwl_tanh_q32(xq) as f64 / (1u32 << 20) as f64;
+            let want = pwl_tanh(x) as f64;
+            assert!((got - want).abs() < 1e-5, "x={x}: int {got} vs f32 {want}");
+            assert_eq!(pwl_tanh_q32(xq), -pwl_tanh_q32(-xq), "odd symmetry at {x}");
+            assert!(pwl_tanh_q32(xq).abs() <= 1 << 20, "bounded at {x}");
+            x += 0.0031;
         }
     }
 }

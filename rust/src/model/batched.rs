@@ -401,9 +401,12 @@ pub struct StreamState {
     /// Per-layer `(h, c)` blocks, one per LSTM layer (encoder then decoder).
     ///
     /// For a quantized-tier state (`quant.is_some()`) these hold the
-    /// *dequantized f32 mirror* of the integer state — refreshed after
-    /// every stateful call, always finite — so tier-agnostic machinery
-    /// (finiteness sweeps, snapshots, inspection) reads one shape.
+    /// *dequantized f32 mirror* of the integer state — refreshed **lazily**
+    /// by [`StreamState::refresh_mirror`] on snapshot paths only, never on
+    /// the per-call hot path (integers cannot go non-finite, so there is
+    /// nothing for a per-call sweep to find). Between refreshes the mirror
+    /// is stale; anything that needs current values must either read
+    /// `quant` or refresh first.
     pub layers: Vec<BatchedState>,
     /// The authoritative quantized per-layer state when this session is
     /// served by the `MathPolicy::Quantized` tier
@@ -494,6 +497,40 @@ impl StreamState {
     /// ```
     pub fn row_is_finite(&self, row: usize) -> bool {
         self.layers.iter().all(|l| l.row_is_finite(row))
+    }
+
+    /// Tier-aware health predicate for the post-call quarantine sweep.
+    ///
+    /// * f32 tiers (`quant.is_none()`): [`StreamState::row_is_finite`] —
+    ///   the NaN/Inf residency check.
+    /// * Quantized tier: integers can never be non-finite (and the f32
+    ///   mirror is stale between snapshots, so sweeping it would be both
+    ///   useless and wrong) — the failure mode that exists is a **railed**
+    ///   cell state, checked on the authoritative integers by
+    ///   [`crate::model::fixed::FixedStreamState::row_is_saturated`].
+    pub fn row_is_healthy(&self, row: usize) -> bool {
+        match &self.quant {
+            Some(q) => !q.row_is_saturated(row),
+            None => self.row_is_finite(row),
+        }
+    }
+
+    /// Dequantize the integer state into the f32 mirror (`layers`), layer
+    /// by layer. No-op for f32-tier states. Called on the *cold* paths
+    /// that actually read the mirror — snapshot capture and session
+    /// freeze — instead of after every lockstep call; the mirror of live
+    /// integers is finite by construction.
+    pub fn refresh_mirror(&mut self) {
+        use super::fixed::{q16_to_f32, q32_to_f32};
+        let Some(q) = &self.quant else { return };
+        for (fl, ql) in self.layers.iter_mut().zip(&q.layers) {
+            for (dst, &src) in fl.h.iter_mut().zip(&ql.h) {
+                *dst = q16_to_f32(src);
+            }
+            for (dst, &src) in fl.c.iter_mut().zip(&ql.c) {
+                *dst = q32_to_f32(src);
+            }
+        }
     }
 }
 

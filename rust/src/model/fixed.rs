@@ -48,7 +48,7 @@
 
 use std::sync::Mutex;
 
-use super::act_lut::{pwl_tanh_block, SigmoidLut};
+use super::act_lut::{pwl_tanh_block, pwl_tanh_q32, SigmoidLut};
 use super::batched::{mse_per_stream, BatchedState, StreamState};
 use super::par::WorkerPool;
 use super::weights::{AutoencoderWeights, LstmWeights};
@@ -66,6 +66,12 @@ pub const QGEMM_TILE: usize = super::simd::BLOCK_W;
 /// Stream rows per register block of the i64 kernel
 /// ([`super::simd::BLOCK_RB`]).
 pub const QGEMM_RB: usize = super::simd::BLOCK_RB;
+
+/// Stream rows per register block of the AVX2 `madd` kernel: 2 rows × 4
+/// i64×4 accumulator registers = 8 live ymm accumulators, leaving room
+/// for the two interleaved weight vectors, the broadcast and the widen/
+/// wrap-fix temporaries inside the 16-register budget.
+pub const QGEMM_SIMD_RB: usize = 2;
 
 /// Accuracy bound of the Quantized serving tier: max absolute divergence
 /// of a per-window anomaly score from the BitExact tier on chirp-dataset
@@ -258,14 +264,65 @@ impl FixedLstm {
 /// ([`FixedBatchedLstm`]) all run exactly this code, so the bitwise
 /// scalar/batched parity holds by construction.
 ///
-/// Internally the row is processed in chunks of [`QGEMM_TILE`] through
-/// stack buffers and the slice-wise activation entry points
-/// ([`SigmoidLut::eval_block`] / [`pwl_tanh_block`]) so the lookup address
-/// math and the integer tail autovectorize. Per-element expressions and
-/// their order are unchanged from the scalar form (every element is
-/// independent of every other), so chunking cannot alter a single bit.
+/// **Integer end to end**: the sigmoid gates index the LUT straight from
+/// the saturated Q12.20 pre-activation ([`SigmoidLut::eval_q32`], Q1.20
+/// gate integers out) and the tanh unit is the integer chord
+/// ([`pwl_tanh_q32`]) — no dequantize → f32 → requantize round-trip
+/// anywhere in the hot loop. The old f32-round-trip tail is kept frozen
+/// as [`gate_tail_f32_reference`] for the
+/// `quant/gate_tail_int_vs_f32_speedup` bench; per-entry gate values are
+/// identical (the truncating Q1.20 cast moved to LUT build time), so the
+/// two tails differ only by activation *address* roundings of at most one
+/// LUT cell / ~2 Q1.20 lsb of the PWL chord — re-pinned against BitExact
+/// by [`QUANT_SCORE_TOL`] / [`QUANT_AUC_TOL`].
 #[inline]
-fn fused_gate_tail(lut: &SigmoidLut, zrow: &[i64], lh: usize, c_row: &mut [i32], h_row: &mut [i16]) {
+pub fn fused_gate_tail(
+    lut: &SigmoidLut,
+    zrow: &[i64],
+    lh: usize,
+    c_row: &mut [i32],
+    h_row: &mut [i16],
+) {
+    debug_assert_eq!(zrow.len(), 4 * lh);
+    debug_assert_eq!(c_row.len(), lh);
+    debug_assert_eq!(h_row.len(), lh);
+    let (zi, rest) = zrow.split_at(lh);
+    let (zf, rest) = rest.split_at(lh);
+    let (zg, zo) = rest.split_at(lh);
+    for ((c, h), ((&zi_q, &zf_q), (&zg_q, &zo_q))) in c_row
+        .iter_mut()
+        .zip(h_row.iter_mut())
+        .zip(zi.iter().zip(zf).zip(zg.iter().zip(zo)))
+    {
+        // gates as Q1.20 integers, addressed by the Q12.20 value directly
+        let i_q = lut.eval_q32(q32_sat(zi_q));
+        let f_q = lut.eval_q32(q32_sat(zf_q));
+        let g_q = pwl_tanh_q32(q32_sat(zg_q));
+        let o_q = lut.eval_q32(q32_sat(zo_q));
+        // f*c: Q1.20 x Q12.20 >> 20 = Q12.20 (the 2-DSP product)
+        let fc = (f_q * *c as i64) >> 20;
+        // i*g: Q1.20 x Q1.20 = Q2.40 -> Q12.20
+        let ig = (i_q * g_q) >> 20;
+        let c_new = sat_i32(fc + ig);
+        *c = c_new;
+        // o*tanh(c): Q1.20 x Q1.20 = Q2.40 -> Q6.10, round half away
+        *h = q40_to_q16(o_q * pwl_tanh_q32(c_new));
+    }
+}
+
+/// The PR 8 f32-round-trip gate tail, frozen verbatim as the measurement
+/// baseline for the `quant/gate_tail_int_vs_f32_speedup` bench key (and
+/// as an accuracy cross-check in tests): dequantize the Q12.20
+/// pre-activations to f32, look the gates up in the f32 domain, truncate
+/// each back to Q1.20 per call. Not on any serving path — the serving
+/// tail is [`fused_gate_tail`].
+pub fn gate_tail_f32_reference(
+    lut: &SigmoidLut,
+    zrow: &[i64],
+    lh: usize,
+    c_row: &mut [i32],
+    h_row: &mut [i16],
+) {
     debug_assert_eq!(zrow.len(), 4 * lh);
     debug_assert_eq!(c_row.len(), lh);
     debug_assert_eq!(h_row.len(), lh);
@@ -276,8 +333,6 @@ fn fused_gate_tail(lut: &SigmoidLut, zrow: &[i64], lh: usize, c_row: &mut [i32],
     let mut j0 = 0usize;
     while j0 < lh {
         let w = W.min(lh - j0);
-        // activations evaluated at Q12.20 -> f32 (the LUT address is a
-        // truncation of the fixed-point value; same granularity)
         for j in 0..w {
             zi_f[j] = q32_to_f32(q32_sat(zrow[j0 + j]));
             zf_f[j] = q32_to_f32(q32_sat(zrow[lh + j0 + j]));
@@ -289,13 +344,10 @@ fn fused_gate_tail(lut: &SigmoidLut, zrow: &[i64], lh: usize, c_row: &mut [i32],
         pwl_tanh_block(&zg_f[..w], &mut g_g[..w]);
         lut.eval_block(&zo_f[..w], &mut o_g[..w]);
         for j in 0..w {
-            // tail in fixed point: gates as Q1.20 (range (-1, 1])
             let i_q = (i_g[j] * (1 << 20) as f32) as i64;
             let f_q = (f_g[j] * (1 << 20) as f32) as i64;
             let g_q = (g_g[j] * (1 << 20) as f32) as i64;
-            // f*c: Q1.20 x Q12.20 >> 20 = Q12.20 (the 2-DSP product)
             let fc = (f_q * c_row[j0 + j] as i64) >> 20;
-            // i*g: Q1.20 x Q1.20 = Q2.40 -> Q12.20
             let ig = (i_q * g_q) >> 20;
             let c_new = sat_i32(fc + ig);
             c_row[j0 + j] = c_new;
@@ -312,6 +364,19 @@ fn fused_gate_tail(lut: &SigmoidLut, zrow: &[i64], lh: usize, c_row: &mut [i32],
 #[inline]
 fn q32_sat(v: i64) -> i32 {
     v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// Narrow a Q2.40 product (two Q1.20 factors) to Q6.10 with the module's
+/// half-away-from-zero rounding ([`to_q16`]'s rule, in pure integers:
+/// `sign(v)·floor(|v|/2^30 + 1/2)`) and i16 saturation.
+#[inline]
+pub fn q40_to_q16(v: i64) -> i16 {
+    let r = if v >= 0 {
+        (v + (1 << 29)) >> 30
+    } else {
+        -((-v + (1 << 29)) >> 30)
+    };
+    r.clamp(i16::MIN as i64, i16::MAX as i64) as i16
 }
 
 #[inline]
@@ -336,12 +401,17 @@ fn resize_only_q<T: Copy + Default>(buf: &mut Vec<T>, len: usize) {
 }
 
 /// One column panel of a packed i16 matrix: `width` output columns
-/// starting at `j0`, stored `(k, width)` row-major at `off`.
+/// starting at `j0`, stored `(k, width)` row-major at `off`. Full-width
+/// panels additionally carry `moff`, the offset of their k-pair
+/// interleaved mirror in [`PackedMatrixI16::madd`] (the AVX2 `madd`
+/// layout); ragged panels set `moff == usize::MAX` and always take the
+/// row-wise scalar walk.
 #[derive(Debug, Clone, Copy)]
 struct PanelI16 {
     off: usize,
     j0: usize,
     width: usize,
+    moff: usize,
 }
 
 /// A `(k, n)` i16 matrix repacked into column-tiled panels for the
@@ -361,6 +431,13 @@ pub struct PackedMatrixI16 {
     pub n: usize,
     data: Vec<i16>,
     panels: Vec<PanelI16>,
+    /// k-pair interleaved mirror of every full-width panel for the
+    /// `_mm256_madd_epi16` kernel: per k-pair `p`, 32 consecutive i16 hold
+    /// `[w[2p][j], w[2p+1][j]]` for the panel's 16 columns `j` (two ymm
+    /// loads: columns 0..8 then 8..16); an odd trailing `k` zero-pads the
+    /// high slot. Built once at pack time; on machines that never take the
+    /// SIMD path it costs only the one-time copy.
+    madd: Vec<i16>,
 }
 
 impl PackedMatrixI16 {
@@ -385,6 +462,7 @@ impl PackedMatrixI16 {
         assert_eq!(src.len(), k * n, "source shape mismatch");
         let mut data = Vec::with_capacity(k * n);
         let mut panels = Vec::new();
+        let mut madd = Vec::new();
         let mut j0 = 0;
         while j0 < n {
             let width = tile.min(n - j0);
@@ -392,17 +470,65 @@ impl PackedMatrixI16 {
             for kk in 0..k {
                 data.extend_from_slice(&src[kk * n + j0..kk * n + j0 + width]);
             }
-            panels.push(PanelI16 { off, j0, width });
+            // madd mirror only for panels at the SIMD tile width
+            let moff = if width == QGEMM_TILE {
+                let m0 = madd.len();
+                for p in 0..k.div_ceil(2) {
+                    for j in 0..width {
+                        madd.push(src[2 * p * n + j0 + j]);
+                        madd.push(if 2 * p + 1 < k {
+                            src[(2 * p + 1) * n + j0 + j]
+                        } else {
+                            0
+                        });
+                    }
+                }
+                m0
+            } else {
+                usize::MAX
+            };
+            panels.push(PanelI16 {
+                off,
+                j0,
+                width,
+                moff,
+            });
             j0 += width;
         }
-        PackedMatrixI16 { k, n, data, panels }
+        PackedMatrixI16 {
+            k,
+            n,
+            data,
+            panels,
+            madd,
+        }
     }
 
     /// `z += x @ W` for `rows` independent i16 rows (`x` is `(rows, k)`,
-    /// `z` is `(rows, n)` i64, both row-major) through the register-blocked
-    /// kernel. Exact integer accumulation — bit-identical to the naive
-    /// triple loop for any blocking.
+    /// `z` is `(rows, n)` i64, both row-major). Dispatches once per call:
+    /// the AVX2 `_mm256_madd_epi16` kernel when the CPU has it (and
+    /// `GWLSTM_FORCE_SCALAR` is unset), else the register-blocked scalar
+    /// kernel ([`PackedMatrixI16::gemm_acc_i64_scalar`]). Both paths
+    /// accumulate exactly in i64, so they are **bitwise identical** to the
+    /// naive triple loop — and to each other — at any shape
+    /// (`tests/fixed_parity.rs` proptests the equivalence at i16
+    /// extremes).
     pub fn gemm_acc_i64(&self, x: &[i16], rows: usize, z: &mut [i64]) {
+        assert_eq!(x.len(), rows * self.k, "x shape mismatch");
+        assert_eq!(z.len(), rows * self.n, "z shape mismatch");
+        #[cfg(target_arch = "x86_64")]
+        if super::simd::int_simd_available() {
+            self.gemm_madd(x, rows, z);
+            return;
+        }
+        self.gemm_acc_i64_scalar(x, rows, z);
+    }
+
+    /// The scalar reference kernel (the only path before the AVX2 kernel
+    /// landed): register-blocked i64 accumulation over the column panels.
+    /// Public so parity tests and the `quant/simd_vs_scalar_speedup` bench
+    /// can pin the SIMD path against it bitwise.
+    pub fn gemm_acc_i64_scalar(&self, x: &[i16], rows: usize, z: &mut [i64]) {
         assert_eq!(x.len(), rows * self.k, "x shape mismatch");
         assert_eq!(z.len(), rows * self.n, "z shape mismatch");
         for p in &self.panels {
@@ -417,6 +543,36 @@ impl PackedMatrixI16 {
             } else {
                 // Ragged panel (n % tile): row-wise fallback, never the
                 // hot shape.
+                self.panel_rowwise(panel, p.width, x, rows, z, p.j0);
+            }
+        }
+    }
+
+    /// AVX2 walk: full-width panels go through [`madd_block16`] against
+    /// the k-pair interleaved mirror, ragged panels keep the scalar
+    /// row-wise walk (exact either way, so mixing kernels per panel cannot
+    /// change a bit).
+    #[cfg(target_arch = "x86_64")]
+    fn gemm_madd(&self, x: &[i16], rows: usize, z: &mut [i64]) {
+        let kp = self.k.div_ceil(2);
+        for p in &self.panels {
+            if p.width == QGEMM_TILE {
+                let mirror = &self.madd[p.moff..p.moff + kp * 2 * QGEMM_TILE];
+                let mut r0 = 0;
+                while r0 < rows {
+                    let rb_n = QGEMM_SIMD_RB.min(rows - r0);
+                    // SAFETY: AVX2 presence was verified by the dispatcher
+                    // (`int_simd_available`); `mirror` holds `kp` k-pair
+                    // groups of 32 i16; `x` is `(rows, k)` and `z` is
+                    // `(rows, n)` row-major with `r0 + rb_n <= rows` and
+                    // `j0 + 16 <= n`; `1 <= rb_n <= QGEMM_SIMD_RB`.
+                    unsafe {
+                        madd_block16(mirror, self.k, self.n, x, z, r0, rb_n, p.j0);
+                    }
+                    r0 += rb_n;
+                }
+            } else {
+                let panel = &self.data[p.off..p.off + self.k * p.width];
                 self.panel_rowwise(panel, p.width, x, rows, z, p.j0);
             }
         }
@@ -468,6 +624,112 @@ impl PackedMatrixI16 {
             }
         }
     }
+}
+
+/// One `rb_n×16` block of the AVX2 `madd` GEMM: the paper's two-MACs-per-
+/// DSP trick in ymm form. Each k-pair `(x[2p], x[2p+1])` is broadcast as a
+/// packed i32 and `_mm256_madd_epi16`-ed against the pack-time interleaved
+/// weight mirror, producing 8 exact i32 pair-sums per ymm; those are
+/// widened to i64 **before** cross-k accumulation, so the reduction stays
+/// exact and bit-identical to [`PackedMatrixI16::gemm_acc_i64_scalar`].
+///
+/// The one wrap case of `madd`: both lane products `(-32768)²` sum to
+/// `+2^31`, which wraps to `i32::MIN`. Any legitimate pair sum is
+/// `>= -2·32768·32767 = -2147418112 > i32::MIN`, so a lane equal to
+/// `i32::MIN` *is* the wrap — [`widen_fix_i32x8`] repairs it branch-free
+/// during the widen.
+///
+/// # Safety
+/// Caller must have verified AVX2 (the [`PackedMatrixI16::gemm_acc_i64`]
+/// dispatcher does, via [`super::simd::int_simd_available`]) and must pass
+/// `mirror` with `k.div_ceil(2)` k-pair groups of `2·QGEMM_TILE` i16,
+/// `x` of `(rows, k)` and `z` of `(rows, n)` row-major with
+/// `r0 + rb_n <= rows`, `j0 + QGEMM_TILE <= n` and
+/// `1 <= rb_n <= QGEMM_SIMD_RB`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn madd_block16(
+    mirror: &[i16],
+    k: usize,
+    n: usize,
+    x: &[i16],
+    z: &mut [i64],
+    r0: usize,
+    rb_n: usize,
+    j0: usize,
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(1 <= rb_n && rb_n <= QGEMM_SIMD_RB);
+    let mp = mirror.as_ptr();
+    let xp = x.as_ptr();
+    // 4 i64x4 accumulators per row: columns j0+0..4, 4..8, 8..12, 12..16
+    let mut acc = [[_mm256_setzero_si256(); 4]; QGEMM_SIMD_RB];
+    for (rb, a) in acc.iter_mut().enumerate().take(rb_n) {
+        let zo = (r0 + rb) * n + j0;
+        for (q, av) in a.iter_mut().enumerate() {
+            *av = _mm256_loadu_si256(z.as_ptr().add(zo + 4 * q) as *const __m256i);
+        }
+    }
+    let wrap = _mm256_set1_epi32(i32::MIN);
+    let fix = _mm256_set1_epi64x(1i64 << 32);
+    for p in 0..k.div_ceil(2) {
+        // the k-pair's interleaved weights: columns 0..8 and 8..16
+        let w0 = _mm256_loadu_si256(mp.add(p * 2 * QGEMM_TILE) as *const __m256i);
+        let w1 = _mm256_loadu_si256(mp.add(p * 2 * QGEMM_TILE + QGEMM_TILE) as *const __m256i);
+        for (rb, a) in acc.iter_mut().enumerate().take(rb_n) {
+            let xrow = xp.add((r0 + rb) * k);
+            let x0 = *xrow.add(2 * p) as u16 as u32;
+            let x1 = if 2 * p + 1 < k {
+                *xrow.add(2 * p + 1) as u16 as u32
+            } else {
+                0
+            };
+            let xv = _mm256_set1_epi32(((x1 << 16) | x0) as i32);
+            let (lo0, hi0) = widen_fix_i32x8(_mm256_madd_epi16(xv, w0), wrap, fix);
+            let (lo1, hi1) = widen_fix_i32x8(_mm256_madd_epi16(xv, w1), wrap, fix);
+            a[0] = _mm256_add_epi64(a[0], lo0);
+            a[1] = _mm256_add_epi64(a[1], hi0);
+            a[2] = _mm256_add_epi64(a[2], lo1);
+            a[3] = _mm256_add_epi64(a[3], hi1);
+        }
+    }
+    for (rb, a) in acc.iter().enumerate().take(rb_n) {
+        let zo = (r0 + rb) * n + j0;
+        for (q, av) in a.iter().enumerate() {
+            _mm256_storeu_si256(z.as_mut_ptr().add(zo + 4 * q) as *mut __m256i, *av);
+        }
+    }
+}
+
+/// Widen one `madd` result's 8 i32 pair-sums to two i64×4 vectors,
+/// repairing the single possible wrap (`lane == i32::MIN` ⟺ both products
+/// were `(-32768)²` and the true sum is `+2^31`): the compare mask,
+/// sign-extended alongside the lanes and masked to `2^32`, is exactly the
+/// correction term (`-2^31 + 2^32 = +2^31`).
+///
+/// # Safety
+/// AVX2 must be available (callers are themselves
+/// `#[target_feature(enable = "avx2")]`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn widen_fix_i32x8(
+    m: std::arch::x86_64::__m256i,
+    wrap: std::arch::x86_64::__m256i,
+    fix: std::arch::x86_64::__m256i,
+) -> (std::arch::x86_64::__m256i, std::arch::x86_64::__m256i) {
+    use std::arch::x86_64::*;
+    let c = _mm256_cmpeq_epi32(m, wrap);
+    let lo = _mm256_add_epi64(
+        _mm256_cvtepi32_epi64(_mm256_castsi256_si128(m)),
+        _mm256_and_si256(_mm256_cvtepi32_epi64(_mm256_castsi256_si128(c)), fix),
+    );
+    let hi = _mm256_add_epi64(
+        _mm256_cvtepi32_epi64(_mm256_extracti128_si256(m, 1)),
+        _mm256_and_si256(_mm256_cvtepi32_epi64(_mm256_extracti128_si256(c, 1)), fix),
+    );
+    (lo, hi)
 }
 
 /// Mutable lockstep state for B concurrent quantized streams: `(B, Lh)`
@@ -569,6 +831,26 @@ impl FixedStreamState {
             l.h.fill(0);
             l.c.fill(0);
         }
+    }
+
+    /// The quantized tier's health predicate, replacing the f32 tier's
+    /// NaN sweep: integers can never go non-finite, so the failure mode
+    /// that actually exists here is a *railed* cell — `c` pinned at the
+    /// Q12.20 saturation limits across most of a layer, which means the
+    /// recurrence has lost its dynamic range and the stream's scores are
+    /// no longer meaningful. A row is flagged only when **more than half**
+    /// of some layer's cell lanes sit exactly on `i32::MIN`/`i32::MAX`;
+    /// isolated saturated lanes are normal under loud inputs (the format
+    /// is designed to clip) and must not quarantine a healthy stream.
+    pub fn row_is_saturated(&self, row: usize) -> bool {
+        self.layers.iter().any(|l| {
+            let c_row = &l.c[row * l.lh..(row + 1) * l.lh];
+            let railed = c_row
+                .iter()
+                .filter(|&&c| c == i32::MIN || c == i32::MAX)
+                .count();
+            2 * railed > l.lh
+        })
     }
 }
 
@@ -882,10 +1164,12 @@ impl FixedPackedAutoencoder {
     /// Zero-initialized resident state for `batch` lockstep streams. The
     /// returned [`StreamState`] carries **both** the authoritative
     /// quantized per-layer `(h, c)` (its `quant` field) and a dequantized
-    /// f32 mirror in `layers` — the mirror is what the tier-agnostic
-    /// machinery (finiteness sweeps, snapshot inspection, tests) reads;
-    /// it is refreshed after every stateful call and, being a
-    /// dequantization of finite integers, can never go non-finite.
+    /// f32 mirror in `layers` — the mirror is what snapshot inspection and
+    /// tier-agnostic tests read. It is **not** refreshed on the hot path:
+    /// [`StreamState::refresh_mirror`] dequantizes it lazily on
+    /// snapshot/restore paths only, and health sweeps read the integers
+    /// directly ([`FixedStreamState::row_is_saturated`] via
+    /// [`StreamState::row_is_healthy`]).
     pub fn zero_state(&self, batch: usize) -> StreamState {
         assert!(batch > 0, "batch must be positive");
         let lhs: Vec<usize> = self.layers.iter().map(|l| l.lh).collect();
@@ -907,9 +1191,11 @@ impl FixedPackedAutoencoder {
 
     /// Stateful continuation of B quantized streaming sessions: every
     /// layer continues from `state.quant` instead of zeros and writes the
-    /// final integer `(h, c)` back (then refreshes the f32 mirror).
-    /// Chunked == contiguous bitwise, as for the f32 engine — but here by
-    /// integer exactness rather than order preservation.
+    /// final integer `(h, c)` back. The dequantized f32 mirror is **not**
+    /// touched — callers that need it (snapshots) refresh lazily via
+    /// [`StreamState::refresh_mirror`]. Chunked == contiguous bitwise, as
+    /// for the f32 engine — but here by integer exactness rather than
+    /// order preservation.
     pub fn forward_batch_stateful(
         &self,
         windows: &[f32],
@@ -1022,20 +1308,11 @@ impl FixedPackedAutoencoder {
                 out[bt * self.d_out + o] = acc;
             }
         }
-        // Refresh the dequantized f32 mirror the tier-agnostic state
-        // machinery reads (always finite: it is a cast of live integers).
-        if let Some(st) = state.as_deref_mut() {
-            let StreamState { layers, quant, .. } = st;
-            let q = quant.as_ref().expect("checked above");
-            for (fl, ql) in layers.iter_mut().zip(&q.layers) {
-                for (dst, &src) in fl.h.iter_mut().zip(&ql.h) {
-                    *dst = q16_to_f32(src);
-                }
-                for (dst, &src) in fl.c.iter_mut().zip(&ql.c) {
-                    *dst = q32_to_f32(src);
-                }
-            }
-        }
+        // No f32-mirror refresh here: the quantized (h, c) are the
+        // authoritative state and integers can never go non-finite, so the
+        // per-call sweep would be pure cost. The mirror is refreshed lazily
+        // (StreamState::refresh_mirror) only on snapshot paths; health is
+        // checked on the integers (StreamState::row_is_healthy).
         out
     }
 }
@@ -1237,13 +1514,28 @@ mod tests {
     }
 
     #[test]
-    fn packed_autoencoder_state_mirror_stays_dequantized() {
+    fn packed_autoencoder_state_mirror_is_lazy() {
         let w = AutoencoderWeights::synthetic(29, "small");
         let eng = FixedPackedAutoencoder::from_weights(&w);
         let mut st = eng.zero_state(2);
         assert!(st.quant.is_some());
         let chunk = vec![0.3f32; 2 * 6];
         eng.forward_batch_stateful(&chunk, 2, &mut st);
+        // the hot path must NOT refresh the f32 mirror (still zeros) ...
+        assert!(st
+            .layers
+            .iter()
+            .all(|l| l.h.iter().chain(&l.c).all(|&v| v == 0.0)));
+        // ... while the authoritative integer state advanced
+        assert!(st
+            .quant
+            .as_ref()
+            .unwrap()
+            .layers
+            .iter()
+            .any(|l| l.h.iter().any(|&v| v != 0)));
+        // lazy refresh (the snapshot-path hook) dequantizes exactly
+        st.refresh_mirror();
         let q = st.quant.as_ref().unwrap();
         for (fl, ql) in st.layers.iter().zip(&q.layers) {
             for (&f, &qi) in fl.h.iter().zip(&ql.h) {
@@ -1260,16 +1552,120 @@ mod tests {
         assert_ne!(again, eng.forward_batch(&chunk, 2));
     }
 
+    #[test]
+    fn saturation_health_flags_railed_rows_only() {
+        let mut st = FixedStreamState::zeros(2, &[4, 6]);
+        assert!(!st.row_is_saturated(0));
+        // isolated railed lanes are normal clipping, not ill health
+        st.layers[1].c[6] = i32::MAX; // row 1, lane 0
+        st.layers[1].c[7] = i32::MIN; // row 1, lane 1
+        assert!(!st.row_is_saturated(1));
+        assert!(!st.row_is_saturated(0), "row 0 untouched");
+        // more than half of one layer's lanes railed => unhealthy
+        st.layers[1].c[8] = i32::MAX;
+        st.layers[1].c[9] = i32::MAX;
+        assert!(st.row_is_saturated(1));
+        assert!(!st.row_is_saturated(0));
+        // exactly half is still healthy (strict majority rule)
+        let mut half = FixedStreamState::zeros(1, &[4]);
+        half.layers[0].c[0] = i32::MIN;
+        half.layers[0].c[1] = i32::MAX;
+        assert!(!half.row_is_saturated(0));
+    }
+
+    #[test]
+    fn q40_to_q16_rounds_half_away_and_saturates() {
+        // (Q2.40 value, Q6.10 result): the 2^30 grid midpoint moves away
+        // from zero, mirrored for negatives, extremes clamp
+        let golden: [(i64, i16); 11] = [
+            (0, 0),
+            (1, 0),
+            ((1 << 29) - 1, 0),
+            (1 << 29, 1),
+            (3 << 29, 2),
+            (-((1 << 29) - 1), 0),
+            (-(1 << 29), -1),
+            (-(3 << 29), -2),
+            (1 << 40, 1024),
+            (-(1 << 40), -1024),
+            (i64::MAX / 2, i16::MAX),
+        ];
+        for &(v, want) in &golden {
+            assert_eq!(q40_to_q16(v), want, "q40_to_q16({v})");
+        }
+        assert_eq!(q40_to_q16(i64::MIN / 2), i16::MIN);
+    }
+
+    /// The `_mm256_madd_epi16` wrap edge: a k-pair where both products are
+    /// `(-32768)^2` sums to `+2^31`, which wraps the i32 pair-sum to
+    /// `i32::MIN`; the widen step must repair it. An all-extremes GEMM
+    /// hits that lane in every k-pair, so any miscompensation is
+    /// unmissable against the naive triple loop.
+    #[test]
+    fn gemm_survives_madd_wrap_edge() {
+        for &(rows, k, n) in &[(1usize, 2usize, 16usize), (3, 7, 16), (2, 8, 36)] {
+            let src = vec![i16::MIN; k * n];
+            let x = vec![i16::MIN; rows * k];
+            let m = PackedMatrixI16::pack(&src, k, n);
+            let mut z = vec![0i64; rows * n];
+            m.gemm_acc_i64(&x, rows, &mut z);
+            let want = k as i64 * (i16::MIN as i64 * i16::MIN as i64);
+            assert!(z.iter().all(|&v| v == want), "rows={rows} k={k} n={n}: {z:?}");
+            // and the scalar reference agrees bitwise
+            let mut zs = vec![0i64; rows * n];
+            m.gemm_acc_i64_scalar(&x, rows, &mut zs);
+            assert_eq!(z, zs);
+        }
+    }
+
+    #[test]
+    fn integer_gate_tail_tracks_f32_reference() {
+        // The integer tail and the frozen f32-round-trip tail may disagree
+        // only by activation *address* rounding — bound the drift tightly
+        // on a realistic pre-activation sweep.
+        let lut = SigmoidLut::default();
+        let lh = 24usize;
+        let mut rng = Rng::new(0x7A11);
+        for _ in 0..50 {
+            let z: Vec<i64> = (0..4 * lh)
+                .map(|_| (rng.gaussian() * 3.0 * (1 << 20) as f64) as i64)
+                .collect();
+            let mut c_int: Vec<i32> = (0..lh)
+                .map(|i| (((i as i64) - 12) << 18) as i32)
+                .collect();
+            let mut c_f32 = c_int.clone();
+            let mut h_int = vec![0i16; lh];
+            let mut h_f32 = vec![0i16; lh];
+            fused_gate_tail(&lut, &z, lh, &mut c_int, &mut h_int);
+            gate_tail_f32_reference(&lut, &z, lh, &mut c_f32, &mut h_f32);
+            for j in 0..lh {
+                assert!(
+                    (h_int[j] as i32 - h_f32[j] as i32).abs() <= 8,
+                    "h lane {j}: int {} vs f32 {}",
+                    h_int[j],
+                    h_f32[j]
+                );
+                assert!(
+                    (c_int[j] as i64 - c_f32[j] as i64).abs() <= 1 << 12,
+                    "c lane {j}: int {} vs f32 {}",
+                    c_int[j],
+                    c_f32[j]
+                );
+            }
+        }
+    }
+
     /// Cross-language golden for the pure-arithmetic gate tail — the exact
     /// integer algebra [`fused_gate_tail`] applies after the activations:
     /// truncating f32 -> Q1.20 gate cast, the two `>> 20` products
     /// (arithmetic shift: floors for negatives), saturating i32 cell add,
-    /// and the Q6.10 output quantizer. The activation step itself is pinned
-    /// separately (`act_lut` block-vs-scalar tests), so the golden replaces
-    /// `pwl_tanh(c_new)` with the identity `q32_to_f32(c_new)` — every
-    /// number below is reproducible in exact integer arithmetic, which is
-    /// what lets the numpy twin in `python/tests/test_quant.py` assert the
-    /// same tuples without sharing an exp() implementation.
+    /// and the [`q40_to_q16`] output narrowing. The activation step itself
+    /// is pinned separately (`act_lut` integer goldens), so the golden
+    /// replaces `pwl_tanh_q32(c_new)` with the identity (the Q12.20 cell
+    /// reused as the Q1.20 operand) — every number below is reproducible
+    /// in exact integer arithmetic, which is what lets the numpy twin in
+    /// `python/tests/test_quant.py` assert the same tuples without sharing
+    /// an exp() implementation.
     #[test]
     fn tail_algebra_cross_language_golden() {
         // (i_g, f_g, g_g, o_g, c_prev) -> (i_q, f_q, g_q, fc, ig, c_new, h)
@@ -1299,10 +1695,13 @@ mod tests {
             let i_q = (i_g * (1 << 20) as f32) as i64;
             let f_q = (f_g * (1 << 20) as f32) as i64;
             let g_q = (g_g * (1 << 20) as f32) as i64;
+            let o_q = (o_g * (1 << 20) as f32) as i64;
             let fc = (f_q * c_prev as i64) >> 20;
             let ig = (i_q * g_q) >> 20;
             let c_new = sat_i32(fc + ig);
-            let h = to_q16(o_g * q32_to_f32(c_new));
+            // identity-pinned tail output: pwl_tanh_q32(c_new) replaced by
+            // c_new itself, so only q40_to_q16's rounding is under test
+            let h = q40_to_q16(o_q * c_new as i64);
             assert_eq!(
                 (i_q, f_q, g_q, fc, ig, c_new, h),
                 want,

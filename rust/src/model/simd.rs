@@ -160,6 +160,58 @@ fn detect_fma() -> bool {
     false
 }
 
+/// Whether `GWLSTM_FORCE_SCALAR` is set (any value except `0`/empty):
+/// forces the scalar fallback in **every** SIMD dispatcher — the f32 FMA
+/// k-loop ([`kloop16`]) and the quantized tier's i16 `madd` kernel
+/// ([`crate::model::fixed::PackedMatrixI16::gemm_acc_i64`]) — so CI can
+/// exercise both dispatch arms on any machine. Read once and cached, like
+/// the CPU detection (a mid-run flip could split one logical computation
+/// across kernels).
+pub fn force_scalar() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let yes = std::env::var("GWLSTM_FORCE_SCALAR")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false);
+            CACHE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// Whether the integer AVX2 (`_mm256_madd_epi16`) kernel may run: AVX2
+/// detected and the scalar override ([`force_scalar`]) not set. Cached the
+/// same way as [`fma_available`]. Unlike the FMA dispatch this gates a
+/// **bitwise-identical** kernel — exact i64 accumulation — so which arm
+/// runs is unobservable in outputs, only in throughput.
+pub fn int_simd_available() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let yes = detect_avx2() && !force_scalar();
+            CACHE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_avx2() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_avx2() -> bool {
+    false
+}
+
 // ---------------------------------------------------------------------------
 // Register-blocked k-loops (the GEMM microkernel inner loops)
 // ---------------------------------------------------------------------------
@@ -270,8 +322,9 @@ pub unsafe fn kloop16_fma(
     }
 }
 
-/// Dispatching k-loop: FMA when the caller opts in AND the CPU has it,
-/// the exact portable loop otherwise. Sound to call from safe code: CPU
+/// Dispatching k-loop: FMA when the caller opts in AND the CPU has it
+/// AND the scalar override ([`force_scalar`]) is not set; the exact
+/// portable loop otherwise. Sound to call from safe code: CPU
 /// support is re-verified here (cached atomic load) and the slice-length
 /// preconditions of the unchecked kernel are asserted before dispatch, so
 /// a bogus `use_fma` or an undersized slice panics instead of executing
@@ -287,7 +340,7 @@ pub fn kloop16(
     use_fma: bool,
 ) {
     #[cfg(target_arch = "x86_64")]
-    if use_fma && fma_available() {
+    if use_fma && fma_available() && !force_scalar() {
         assert!(rb_n >= 1 && rb_n <= BLOCK_RB);
         assert!(panel.len() >= kdim * BLOCK_W);
         assert!(kdim == 0 || x.len() >= (rb_n - 1) * xstride + kdim);
@@ -544,6 +597,17 @@ mod tests {
                 let d = (exact[rb][j] - fast[rb][j]).abs();
                 assert!(d <= 1e-4, "rb={rb} j={j}: {d}");
             }
+        }
+    }
+
+    #[test]
+    fn dispatch_detection_stable_and_consistent() {
+        // cached detection must not flip mid-process, and the scalar
+        // override must win over CPU detection in the integer dispatch
+        assert_eq!(int_simd_available(), int_simd_available());
+        assert_eq!(force_scalar(), force_scalar());
+        if force_scalar() {
+            assert!(!int_simd_available(), "GWLSTM_FORCE_SCALAR must force the scalar arm");
         }
     }
 

@@ -199,6 +199,11 @@ impl StreamSession {
             Some(lg) => now.saturating_sub(lg.tick) >= every,
         };
         if due {
+            // Quantized tier: bring the lazily-maintained f32 mirror up to
+            // date before the state is frozen, so the checkpoint (and
+            // anything inspecting it) sees mirror == dequantized integers.
+            // No-op for f32 tiers.
+            self.state.refresh_mirror();
             self.last_good = Some(Box::new(LastGood {
                 state: self.state.clone(),
                 tick: now,
@@ -266,7 +271,11 @@ impl StreamSession {
     /// stopped ([`super::SessionRegistry::restore`]). Health bookkeeping
     /// (backoff, last-good checkpoint) is deliberately dropped: a restored
     /// session starts Healthy and re-earns its checkpoint.
-    pub fn into_snapshot(self) -> SessionSnapshot {
+    pub fn into_snapshot(mut self) -> SessionSnapshot {
+        // Lazy-mirror contract: snapshots are one of the two places the
+        // dequantized f32 mirror is actually read, so refresh it here (the
+        // other is the last-good checkpoint in `maybe_snapshot`).
+        self.state.refresh_mirror();
         SessionSnapshot {
             id: self.id,
             state: self.state,

@@ -502,3 +502,129 @@ fn cross_language_quantizer_goldens() {
     w.gemm_acc_i64(&[32767, -32768], 1, &mut z);
     assert_eq!(z, vec![2_147_418_120, -2_147_418_105, 65_542]);
 }
+
+/// One SIMD-vs-scalar GEMM parity case: a `(rows, k) x (k, n)` product on
+/// an extremes-heavy operand distribution.
+#[derive(Debug)]
+struct GemmCase {
+    rows: usize,
+    k: usize,
+    n: usize,
+    w: Vec<i16>,
+    x: Vec<i16>,
+}
+
+/// Extremes-heavy i16 draw: rails, alternating-sign rails (the worst case
+/// for the `madd` pair sums, including the `(-32768)^2` wrap edge), zero,
+/// and full-range random values.
+fn extreme_i16(d: &mut prop::Draw, i: usize) -> i16 {
+    match d.usize_in(0, 5) {
+        0 => i16::MAX,
+        1 => i16::MIN,
+        2 => {
+            if i % 2 == 0 {
+                i16::MAX
+            } else {
+                i16::MIN
+            }
+        }
+        3 => 0,
+        _ => d.usize_in(0, u16::MAX as usize) as u16 as i16,
+    }
+}
+
+#[test]
+fn prop_simd_gemm_reduction_bitwise_equals_scalar_at_i16_extremes() {
+    // Tentpole guard: the dispatched kernel (AVX2 `madd` when available)
+    // and the scalar register-blocked kernel must both equal the naive
+    // triple loop BITWISE — no tolerances — at i16 extremes, across ragged
+    // panel tails (n % 16), row remainders (rows % RB), and odd k (the
+    // zero-padded `madd` pair). On machines without AVX2, or under
+    // GWLSTM_FORCE_SCALAR=1, the dispatch arm degenerates to
+    // scalar-vs-scalar; ci.sh runs this suite once per dispatch arm so
+    // both kernels are exercised wherever the hardware allows.
+    prop::check_with(
+        prop::Config {
+            cases: 48,
+            ..Default::default()
+        },
+        "simd-i16-gemm-bitwise-parity",
+        |d| {
+            let rows = d.usize_in(1, 9); // crosses RB=4 and SIMD RB=2 remainders
+            let k = d.usize_in(1, 24); // odd k exercises the zero-padded pair
+            let n = d.usize_in(1, 48); // ragged tails + multiple full panels
+            let w: Vec<i16> = (0..k * n).map(|i| extreme_i16(d, i)).collect();
+            let x: Vec<i16> = (0..rows * k).map(|i| extreme_i16(d, i)).collect();
+            GemmCase { rows, k, n, w, x }
+        },
+        |c| {
+            let m = PackedMatrixI16::pack(&c.w, c.k, c.n);
+            // nonzero init: gemm ACCUMULATES into z
+            let mut z_dispatch = vec![-3i64; c.rows * c.n];
+            let mut z_scalar = vec![-3i64; c.rows * c.n];
+            m.gemm_acc_i64(&c.x, c.rows, &mut z_dispatch);
+            m.gemm_acc_i64_scalar(&c.x, c.rows, &mut z_scalar);
+            let mut want = vec![-3i64; c.rows * c.n];
+            for r in 0..c.rows {
+                for kk in 0..c.k {
+                    for j in 0..c.n {
+                        want[r * c.n + j] +=
+                            c.x[r * c.k + kk] as i64 * c.w[kk * c.n + j] as i64;
+                    }
+                }
+            }
+            if z_dispatch != want {
+                return Err(format!(
+                    "dispatched kernel diverged from naive at rows={} k={} n={}",
+                    c.rows, c.k, c.n
+                ));
+            }
+            if z_scalar != want {
+                return Err(format!(
+                    "scalar kernel diverged from naive at rows={} k={} n={}",
+                    c.rows, c.k, c.n
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantized_router_health_sweep_catches_nan_input_without_mirror() {
+    // Mirror-free health: the quantized tier's post-call sweep reads the
+    // integer state (saturation check) + score finiteness, never the f32
+    // mirror. A NaN input window quantizes into the integer datapath (to 0
+    // — integers cannot hold a NaN) but the MSE score against the raw
+    // window is NaN, so the quarantine path must still fire exactly as it
+    // did when the sweep read the mirror.
+    let w = AutoencoderWeights::synthetic(0xFB, "small");
+    let exe =
+        ModelExecutor::native_from_weights_policy(&w, "fixed_health", 8, MathPolicy::Quantized);
+    let cfg = StreamConfig {
+        hop: 8,
+        ..Default::default()
+    };
+    let mut router = StreamRouter::new(&exe, cfg).unwrap();
+    router.ingest(1, &[0.25f32; 8], 0);
+    let out = router.dispatch(&exe, 0).unwrap();
+    assert_eq!(out.len(), 1);
+    assert!(
+        !out[0].quarantined && out[0].score.is_finite(),
+        "healthy chunk must serve"
+    );
+    let mut poison = [0.25f32; 8];
+    poison[3] = f32::NAN;
+    router.ingest(1, &poison, 1);
+    let out = router.dispatch(&exe, 1).unwrap();
+    assert_eq!(out.len(), 1);
+    assert!(
+        out[0].quarantined,
+        "NaN input must still quarantine on the quantized tier"
+    );
+    assert!(out[0].score.is_nan(), "quarantined window reports NaN");
+    // the session recovers: the next clean chunk serves again
+    router.ingest(1, &[0.25f32; 8], 100);
+    let out = router.dispatch(&exe, 100).unwrap();
+    assert!(out.iter().all(|s| !s.quarantined), "recovery after backoff");
+}
